@@ -1,0 +1,6 @@
+# Make `pytest python/tests/` work from the repo root: the test modules
+# import the build-time `compile` package which lives under python/.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,47 @@
+//! Large-scale scenario (paper §3.2): MCTM density estimation over a
+//! 10-variable terrain dataset where full-data fitting is the paper's
+//! motivating pain point. Shows the size-vs-accuracy trade-off across
+//! coreset sizes, native backend.
+//!
+//! Run: cargo run --release --example covertype_scale [-- n=200000]
+
+use mctm_coreset::coordinator::experiment::{summarize, TableRunner};
+use mctm_coreset::coreset::Method;
+use mctm_coreset::data::covertype;
+use mctm_coreset::fit::FitOptions;
+use mctm_coreset::util::mean;
+use mctm_coreset::util::report::Table;
+use mctm_coreset::util::rng::Rng;
+
+fn main() {
+    let n: usize = std::env::args()
+        .find_map(|a| a.strip_prefix("n=").map(|v| v.parse().unwrap()))
+        .unwrap_or(50_000);
+    let mut rng = Rng::new(7);
+    let data = covertype::generate(n, &mut rng);
+    println!("terrain workload: {} rows × {} vars", data.rows, data.cols);
+
+    let opts = FitOptions { max_iters: 200, ..Default::default() };
+    let runner = TableRunner::new(&data, 7, opts, 54);
+    println!(
+        "full fit: nll={:.1} in {:.1}s ({} iters)",
+        runner.full.fit.nll, runner.full.seconds, runner.full.fit.iters
+    );
+
+    let mut table = Table::new(
+        "covertype scale-up: error vs coreset size",
+        &["k", "method", "theta L2", "lambda err", "LR", "impr(%)", "time(s)"],
+    );
+    for k in [50, 200, 500] {
+        let hull = runner.run(Method::L2Hull, k, 3);
+        let unif = runner.run(Method::Uniform, k, 3);
+        let speedup = runner.full.seconds / mean(&hull.total_secs()).max(1e-9);
+        for s in [&hull, &unif] {
+            let mut row = vec![format!("{k}")];
+            row.extend(summarize(s, &unif));
+            table.row(row);
+        }
+        println!("k={k}: l2-hull end-to-end speedup vs full fit ≈ {speedup:.0}×");
+    }
+    table.emit(None);
+}

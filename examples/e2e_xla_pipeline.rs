@@ -1,0 +1,145 @@
+//! END-TO-END DRIVER: the full three-layer system on a real workload.
+//!
+//! Proves all layers compose (recorded in EXPERIMENTS.md §E2E):
+//!   L3 (rust)   generates a 100k-row / 10-variable terrain workload,
+//!               orchestrates the two-pass leverage pipeline and the
+//!               coreset construction;
+//!   L2/L1 (AOT) every numeric hot path runs through the PJRT-compiled
+//!               HLO artifacts — Pallas gram + leverage kernels for the
+//!               sampling scores, the jax nll_grad for L-BFGS fitting,
+//!               and the fused Pallas nll_eval for the final metric;
+//!   Python is never executed — only the artifacts are.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example e2e_xla_pipeline
+
+use mctm_coreset::basis::Design;
+use mctm_coreset::coreset::hull::select_hull_points;
+use mctm_coreset::data::covertype;
+use mctm_coreset::fit::{fit_with, FitOptions};
+use mctm_coreset::linalg::{Cholesky, Mat};
+use mctm_coreset::mctm::{loglik_ratio, ModelSpec};
+use mctm_coreset::runtime::engine::TiledLeverage;
+use mctm_coreset::runtime::{Engine, XlaNll};
+use mctm_coreset::util::rng::{AliasTable, Rng};
+use mctm_coreset::util::Stopwatch;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let scale_n: usize = std::env::var("E2E_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100_000);
+    let k = 500usize;
+    let (j, d) = (10usize, 7usize);
+
+    println!("=== e2e: MCTM coreset pipeline, all layers ===");
+    let engine = Engine::new(Path::new("artifacts"))?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // ---- L3: workload generation (data-pipeline source) ---------------
+    let sw = Stopwatch::start();
+    let mut rng = Rng::new(2026);
+    let data = covertype::generate(scale_n, &mut rng);
+    println!("[L3] generated {}×{} terrain rows in {:.1}s", data.rows, data.cols, sw.secs());
+
+    let design = Design::build(&data, d, 0.01);
+    let scaled = design.scaler.transform(&data);
+    let spec = ModelSpec::new(j, d);
+
+    // ---- L1/L2: leverage pipeline through Pallas artifacts ------------
+    let sw = Stopwatch::start();
+    let lev = TiledLeverage::new(&engine, j * d)?;
+    let stacked = design.stacked();
+    let gram_flat = lev.gram(&stacked.data)?; // Pallas tiled AᵀA
+    let mut gram = Mat::from_vec(j * d, j * d, gram_flat);
+    let stab = 1e-10 * gram.trace() / gram.rows as f64;
+    for i in 0..gram.rows {
+        *gram.at_mut(i, i) += stab;
+    }
+    let ch = Cholesky::new(&gram)?;
+    let linv = ch.l_inverse();
+    let scores = lev.scores(&stacked.data, &linv.data)?; // Pallas leverage
+    let sum_scores: f64 = scores.iter().sum();
+    println!(
+        "[L1] leverage pipeline (pallas gram + leverage artifacts): Σu = {:.1} in {:.1}s",
+        sum_scores,
+        sw.secs()
+    );
+
+    // ---- L3: Algorithm 1 — sensitivity sample + hull augmentation -----
+    let sw = Stopwatch::start();
+    let n = design.n;
+    let sens: Vec<f64> = scores.iter().map(|u| u + 1.0 / n as f64).collect();
+    let k1 = (0.8 * k as f64) as usize;
+    let table = AliasTable::new(&sens);
+    let mut indices = Vec::with_capacity(k);
+    let mut weights = Vec::with_capacity(k);
+    for _ in 0..k1 {
+        let i = table.sample(&mut rng);
+        indices.push(i);
+        weights.push(1.0 / (k1 as f64 * table.p(i)));
+    }
+    let dp = design.deriv_points();
+    let hull = select_hull_points(&dp, k - k1, &mut rng);
+    let mut n_hull = 0;
+    let seen: std::collections::HashSet<usize> = indices.iter().cloned().collect();
+    for p in hull {
+        let obs = p / j;
+        if !seen.contains(&obs) {
+            indices.push(obs);
+            weights.push(1.0);
+            n_hull += 1;
+        }
+    }
+    println!(
+        "[L3] coreset: {} rows ({} sampled + {} hull) from n={} in {:.1}s — {:.0}× reduction",
+        indices.len(),
+        k1,
+        n_hull,
+        n,
+        sw.secs(),
+        n as f64 / indices.len() as f64
+    );
+
+    // ---- L2: fit via the AOT nll_grad artifact -------------------------
+    let sw = Stopwatch::start();
+    let sub_scaled = scaled.select_rows(&indices);
+    let obj = XlaNll::from_scaled(&engine, j, d, &sub_scaled, weights)?;
+    let opts = FitOptions { max_iters: 200, ..Default::default() };
+    let fit = fit_with(&obj, spec, &opts);
+    let coreset_fit_secs = sw.secs();
+    println!(
+        "[L2] coreset fit through nll_grad artifact: nll={:.2}, {} iters, {:.1}s",
+        fit.nll, fit.iters, coreset_fit_secs
+    );
+
+    // ---- L1: evaluate on the FULL data via the fused Pallas kernel ----
+    let sw = Stopwatch::start();
+    let full_obj = XlaNll::from_scaled(&engine, j, d, &scaled, Vec::new())?;
+    let nll_coreset_on_full = full_obj.eval(&fit.params.x)?;
+    println!(
+        "[L1] fused nll_eval over all {n} rows: {:.2} in {:.1}s",
+        nll_coreset_on_full,
+        sw.secs()
+    );
+
+    // ---- headline: compare against a full-data XLA fit ----------------
+    let sw = Stopwatch::start();
+    let full_fit = fit_with(&full_obj, spec, &opts);
+    let full_secs = sw.secs();
+    let lr = loglik_ratio(nll_coreset_on_full, full_fit.nll, n, j);
+    println!("[L2] FULL-data fit through the same artifact: nll={:.2}, {:.1}s", full_fit.nll, full_secs);
+    println!("\n=== headline (paper §3.2 shape) ===");
+    println!("data reduction   : {n} → {} rows", indices.len());
+    println!("log-lik ratio    : {lr:.4}  (→1 = lossless)");
+    println!(
+        "fit speedup      : {:.1}× ({:.1}s → {:.1}s)",
+        full_secs / coreset_fit_secs,
+        full_secs,
+        coreset_fit_secs
+    );
+    anyhow::ensure!(lr.is_finite() && lr < 2.0, "coreset LR degraded: {lr}");
+    println!("e2e OK");
+    Ok(())
+}

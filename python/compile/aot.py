@@ -1,0 +1,174 @@
+"""AOT lowering: jax → HLO **text** artifacts for the Rust runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot [--out-dir ../artifacts]
+                              [--configs 2x7,3x7,10x7] [--tile 512]
+
+Produces, per (J, d) config:
+    nll_grad_j{J}_d{d}_t{T}.hlo.txt   (params, y, w) → (nll, grad)
+    nll_eval_j{J}_d{d}_t{T}.hlo.txt   (params, y, w) → (nll[1],)
+and per stacked dimension D = J·d:
+    gram_d{D}_t{T}.hlo.txt            (x,)          → (gram,)
+    leverage_d{D}_t{T}.hlo.txt        (x, linv)     → (scores,)
+plus manifest.json describing shapes (consumed by rust/src/runtime).
+`make artifacts` skips the build when inputs are unchanged.
+"""
+
+import argparse
+import json
+import os
+import sys
+from functools import partial
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DTYPE = jnp.float64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (gen_hlo.py recipe)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, DTYPE)
+
+
+def lower_entry(fn, example_args):
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def build(out_dir: str, configs, tile: int) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"dtype": "f64", "tile": tile, "entries": []}
+
+    gram_dims = set()
+    for (j, d) in configs:
+        p = model.n_params(j, d)
+
+        # --- training objective: value + grad --------------------------
+        name = f"nll_grad_j{j}_d{d}_t{tile}"
+        fn = partial(model.nll_grad, j=j, d=d)
+        text = lower_entry(fn, (spec(p), spec(tile, j), spec(tile)))
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "kind": "nll_grad",
+                "j": j,
+                "d": d,
+                "tile": tile,
+                "n_params": p,
+                "inputs": [[p], [tile, j], [tile]],
+                "outputs": [[], [p]],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+        # --- fused forward NLL (pallas kernel) -------------------------
+        name = f"nll_eval_j{j}_d{d}_t{tile}"
+        fn = partial(model.nll_eval, j=j, d=d)
+        text = lower_entry(fn, (spec(p), spec(tile, j), spec(tile)))
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "kind": "nll_eval",
+                "j": j,
+                "d": d,
+                "tile": tile,
+                "n_params": p,
+                "inputs": [[p], [tile, j], [tile]],
+                "outputs": [[1]],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+        gram_dims.add(j * d)
+
+    for dim in sorted(gram_dims):
+        # --- leverage pipeline ------------------------------------------
+        name = f"gram_d{dim}_t{tile}"
+        fn = partial(model.gram, row_tile=tile)
+        text = lower_entry(fn, (spec(tile, dim),))
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "kind": "gram",
+                "dim": dim,
+                "tile": tile,
+                "inputs": [[tile, dim]],
+                "outputs": [[dim, dim]],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+        name = f"leverage_d{dim}_t{tile}"
+        fn = partial(model.leverage, row_tile=tile)
+        text = lower_entry(fn, (spec(tile, dim), spec(dim, dim)))
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "kind": "leverage",
+                "dim": dim,
+                "tile": tile,
+                "inputs": [[tile, dim], [dim, dim]],
+                "outputs": [[tile]],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json ({len(manifest['entries'])} entries)")
+    return manifest
+
+
+def parse_configs(s: str):
+    out = []
+    for part in s.split(","):
+        j, d = part.lower().split("x")
+        out.append((int(j), int(d)))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="compat alias for --out-dir parent target")
+    ap.add_argument("--configs", default="2x7,3x7,10x7")
+    ap.add_argument("--tile", type=int, default=512)
+    args = ap.parse_args(argv)
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    build(out_dir, parse_configs(args.configs), args.tile)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,11 @@
+"""L1: Pallas kernels for the MCTM coreset pipeline + pure-jnp oracle.
+
+Kernels (all interpret=True — CPU PJRT cannot run Mosaic custom-calls):
+  * bernstein — design-matrix evaluation (a, a')
+  * gram      — tiled XᵀX reduction (leverage-score pipeline)
+  * leverage  — rowwise ‖L⁻¹x‖² scores
+  * nll       — fused weighted MCTM NLL tile reduction
+Oracle: ref — the correctness baseline every kernel is tested against.
+"""
+
+from . import bernstein, gram, leverage, nll, ref  # noqa: F401

@@ -1,0 +1,41 @@
+"""L1 Pallas kernel: tiled Gram matrix XᵀX.
+
+The leverage-score pipeline's MXU hot spot: each grid step loads one
+(T, D) row-block into VMEM and accumulates the (D, D) output block
+(revisited across the whole grid — the classic reduction BlockSpec).
+For D ≤ 140 (J=20, d=7) the accumulator is ≤ 153 KiB f64, far inside
+VMEM; the (T, D)ᵀ(T, D) product maps onto the MXU systolic array.
+interpret=True for CPU execution (see DESIGN.md §6).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(x_ref, out_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]
+    out_ref[...] += x.T @ x
+
+
+def gram(x, row_tile: int = 512):
+    """XᵀX via a row-tiled Pallas reduction. n must be a multiple of
+    row_tile (the AOT entry points use fixed tiles; the Rust runtime
+    pads the last tile with zero rows, which add nothing to the Gram)."""
+    n, d = x.shape
+    assert n % row_tile == 0, f"n={n} not a multiple of tile={row_tile}"
+    grid = (n // row_tile,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((row_tile, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((d, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, d), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,38 @@
+"""L1 Pallas kernel: rowwise leverage scores u_i = ‖L⁻¹ x_i‖².
+
+Given the inverse Cholesky factor L⁻¹ of the (ridged) Gram matrix —
+computed once on the coordinator side — each grid step transforms a
+(T, D) row-block by L⁻ᵀ on the MXU and reduces the squared norms on
+the VPU. L⁻¹ (D×D ≤ 140×140 f64 ≈ 153 KiB) is resident in VMEM for
+every step. interpret=True for CPU execution.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _leverage_kernel(x_ref, linv_ref, out_ref):
+    x = x_ref[...]          # (T, D)
+    linv = linv_ref[...]    # (D, D)
+    z = x @ linv.T
+    out_ref[...] = jnp.sum(z * z, axis=-1)
+
+
+def leverage(x, linv, row_tile: int = 512):
+    """Leverage scores for all rows of x (n multiple of row_tile)."""
+    n, d = x.shape
+    assert linv.shape == (d, d)
+    assert n % row_tile == 0, f"n={n} not a multiple of tile={row_tile}"
+    grid = (n // row_tile,)
+    return pl.pallas_call(
+        _leverage_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(x, linv)

@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: fused weighted MCTM NLL over one data tile.
+
+The paper's compute hot-spot (Eq. (1)) as a single fused pass: basis
+evaluation, marginal transforms, copula combination, log-derivative and
+the weighted reduction — all intermediates ((T,J,d) basis tensors,
+(T,J) transforms) stay in VMEM; only the scalar partial sum leaves the
+kernel. The Rust tiled runner accumulates partials across tiles.
+
+This is the forward/evaluation path (log-likelihood ratios, metric
+computation). The *training* entry point (`model.nll_grad`) uses the
+same Bernstein kernel for the design tensors but keeps the θ-dependent
+tail in jnp so jax.value_and_grad applies — see model.py.
+interpret=True for CPU execution (DESIGN.md §6).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .bernstein import _basis_columns
+
+ETA_FLOOR = 1e-12
+
+
+def _nll_kernel(j: int, d: int, y_ref, w_ref, theta_ref, lam_ref, out_ref):
+    y = y_ref[...]          # (T, J)
+    w = w_ref[...]          # (T,)
+    theta = theta_ref[...]  # (J, d)
+    lam_unit = lam_ref[...]  # (J, J) unit lower triangular
+
+    m = d - 1
+    cols = _basis_columns(y, d)          # d × (T, J)
+    lower = _basis_columns(y, d - 1)     # (d−1) × (T, J)
+    mf = float(m)
+
+    # h̃ and h̃' accumulated column-by-column (keeps peak VMEM at
+    # 2×(T,J) instead of materializing (T,J,d))
+    htil = cols[0] * theta[:, 0]
+    hd = (-mf * lower[0]) * theta[:, 0]
+    for k in range(1, d):
+        htil = htil + cols[k] * theta[:, k]
+        if k < m:
+            dcol = mf * (lower[k - 1] - lower[k])
+        else:
+            dcol = mf * lower[m - 1]
+        hd = hd + dcol * theta[:, k]
+
+    z = htil @ lam_unit.T
+    loss = 0.5 * jnp.sum(z * z, axis=1) - jnp.sum(
+        jnp.log(jnp.maximum(hd, ETA_FLOOR)), axis=1
+    )
+    out_ref[0] = jnp.sum(w * loss)
+
+
+def nll_tile(y, w, theta, lam_unit):
+    """Fused weighted NLL partial sum for one (T, J) tile.
+
+    theta: (J, d) monotone coefficients; lam_unit: (J, J) unit
+    lower-triangular copula matrix. Returns a length-1 vector.
+    """
+    t, j = y.shape
+    d = theta.shape[1]
+    return pl.pallas_call(
+        lambda y_ref, w_ref, th_ref, lam_ref, out_ref: _nll_kernel(
+            j, d, y_ref, w_ref, th_ref, lam_ref, out_ref
+        ),
+        out_shape=jax.ShapeDtypeStruct((1,), y.dtype),
+        interpret=True,
+    )(y, w, theta, lam_unit)

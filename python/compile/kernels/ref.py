@@ -1,0 +1,121 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every kernel in this package has a reference implementation here;
+``python/tests`` asserts allclose between kernel and oracle across
+shapes/dtypes (hypothesis sweeps). The MCTM math mirrors
+``rust/src/mctm/model.rs`` exactly (same parametrization, same loss),
+which the Rust integration tests verify end-to-end through the AOT
+artifacts.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from functools import partial
+
+
+# ---------------------------------------------------------------------------
+# Bernstein basis
+# ---------------------------------------------------------------------------
+
+def _binom_row(m: int):
+    """C(m, k) for k = 0..m as a static tuple of floats."""
+    row = [1.0]
+    for k in range(m):
+        row.append(row[-1] * (m - k) / (k + 1))
+    return tuple(row)
+
+
+def bernstein_ref(x, d: int):
+    """Bernstein basis values b_{k,m}(x), m = d−1, for x of any shape.
+
+    Returns shape x.shape + (d,).
+    """
+    m = d - 1
+    binom = jnp.asarray(_binom_row(m), dtype=x.dtype)
+    k = jnp.arange(d, dtype=x.dtype)
+    xe = x[..., None]
+    return binom * xe**k * (1.0 - xe) ** (m - k)
+
+
+def bernstein_deriv_ref(x, d: int):
+    """Derivatives b'_{k,m}(x) = m (b_{k−1,m−1} − b_{k,m−1})."""
+    m = d - 1
+    lower = bernstein_ref(x, d - 1)  # degree m−1, d−1 functions
+    left = jnp.concatenate([jnp.zeros_like(lower[..., :1]), lower], axis=-1)
+    right = jnp.concatenate([lower, jnp.zeros_like(lower[..., :1])], axis=-1)
+    return m * (left - right)
+
+
+# ---------------------------------------------------------------------------
+# Gram / leverage
+# ---------------------------------------------------------------------------
+
+def gram_ref(x):
+    """XᵀX for a (n, D) matrix."""
+    return x.T @ x
+
+
+def leverage_ref(x, linv):
+    """Rowwise ‖L⁻¹ x_i‖² given the inverse Cholesky factor of the Gram
+    matrix: the ℓ₂ leverage scores (paper Lemma 2.1 sampling weights)."""
+    z = x @ linv.T
+    return jnp.sum(z * z, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MCTM parametrization + NLL (paper Eq. (1))
+# ---------------------------------------------------------------------------
+
+def softplus(x):
+    return jnp.logaddexp(x, 0.0)
+
+
+def unpack_params(params, j: int, d: int):
+    """Split the free vector into (β as (J,d), λ lower-tri as (J,J))."""
+    beta = params[: j * d].reshape(j, d)
+    lam_flat = params[j * d:]
+    lam = jnp.zeros((j, j), dtype=params.dtype)
+    idx = 0
+    for jj in range(1, j):
+        lam = lam.at[jj, :jj].set(lam_flat[idx: idx + jj])
+        idx += jj
+    return beta, lam
+
+
+def theta_from_beta(beta):
+    """Monotone reparametrization: ϑ_0 = β_0, ϑ_k = ϑ_{k−1}+softplus(β_k)."""
+    increments = jnp.concatenate([beta[..., :1], softplus(beta[..., 1:])], axis=-1)
+    return jnp.cumsum(increments, axis=-1)
+
+
+ETA_FLOOR = 1e-12
+
+
+def mctm_nll_ref(params, y, w, j: int, d: int):
+    """Weighted MCTM negative log-likelihood over a tile.
+
+    params: (p,) free vector (β then λ row-major)
+    y:      (n, J) data already min–max scaled to [eps, 1−eps]
+    w:      (n,) weights (0 rows are padding)
+    """
+    beta, lam = unpack_params(params, j, d)
+    theta = theta_from_beta(beta)  # (J, d)
+    a = bernstein_ref(y, d)  # (n, J, d)
+    ad = bernstein_deriv_ref(y, d)  # (n, J, d)
+    htil = jnp.einsum("njd,jd->nj", a, theta)
+    hd = jnp.einsum("njd,jd->nj", ad, theta)
+    lam_unit = lam + jnp.eye(j, dtype=params.dtype)
+    z = htil @ lam_unit.T  # z_j = h̃_j + Σ_{l<j} λ_jl h̃_l
+    loss = 0.5 * jnp.sum(z * z, axis=1) - jnp.sum(
+        jnp.log(jnp.maximum(hd, ETA_FLOOR)), axis=1
+    )
+    return jnp.sum(w * loss)
+
+
+def mctm_nll_grad_ref(params, y, w, j: int, d: int):
+    """(value, grad) of the weighted NLL — the fitting objective."""
+    f = partial(mctm_nll_ref, y=y, w=w, j=j, d=d)
+    return jax.value_and_grad(f)(params)

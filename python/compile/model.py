@@ -1,0 +1,80 @@
+"""L2: the MCTM compute graph in JAX, composing the L1 Pallas kernels.
+
+Entry points (all AOT-lowered to HLO text by aot.py, executed from the
+Rust coordinator via PJRT — Python is never on the request path):
+
+  * nll_grad(params, y, w)   — weighted NLL value + gradient, the fitting
+    objective. Design tensors come from the Pallas Bernstein kernel
+    (constants w.r.t. params, so autodiff does not traverse the kernel);
+    the θ/λ-dependent tail is jnp, giving an exact reverse-mode gradient
+    fused by XLA into the same HLO module.
+  * nll_eval(params, y, w)   — forward-only NLL through the fully fused
+    Pallas NLL kernel (metrics / LR path).
+  * gram(x)                  — tiled XᵀX (leverage pipeline, pass 1).
+  * leverage(x, linv)        — rowwise leverage scores (pass 2).
+
+Parametrization matches rust/src/mctm exactly: β-cumsum-softplus for
+monotone ϑ, unit-lower-triangular Λ; verified by cross-backend tests.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+from .kernels import bernstein as bk
+from .kernels import gram as gk
+from .kernels import leverage as lk
+from .kernels import nll as nk
+from .kernels.ref import theta_from_beta, unpack_params, ETA_FLOOR
+
+
+def nll_from_design(params, a, ad, w, j: int, d: int):
+    """Weighted NLL given precomputed design tensors (θ-dependent tail)."""
+    beta, lam = unpack_params(params, j, d)
+    theta = theta_from_beta(beta)
+    htil = jnp.einsum("njd,jd->nj", a, theta)
+    hd = jnp.einsum("njd,jd->nj", ad, theta)
+    lam_unit = lam + jnp.eye(j, dtype=params.dtype)
+    z = htil @ lam_unit.T
+    loss = 0.5 * jnp.sum(z * z, axis=1) - jnp.sum(
+        jnp.log(jnp.maximum(hd, ETA_FLOOR)), axis=1
+    )
+    return jnp.sum(w * loss)
+
+
+def nll_grad(params, y, w, j: int, d: int):
+    """(value, grad) of the weighted NLL for one (T, J) tile.
+
+    y is pre-scaled data; padding rows carry w = 0.
+    """
+    a, ad = bk.bernstein_design(y, d)
+    # design tensors are constants w.r.t. params — stop_gradient makes
+    # that explicit so the VJP never attempts to traverse pallas_call
+    a = jax.lax.stop_gradient(a)
+    ad = jax.lax.stop_gradient(ad)
+    val, grad = jax.value_and_grad(nll_from_design)(params, a, ad, w, j, d)
+    return val, grad
+
+
+def nll_eval(params, y, w, j: int, d: int):
+    """Forward-only weighted NLL via the fused Pallas kernel."""
+    beta, lam = unpack_params(params, j, d)
+    theta = theta_from_beta(beta)
+    lam_unit = lam + jnp.eye(j, dtype=params.dtype)
+    return nk.nll_tile(y, w, theta, lam_unit)
+
+
+def gram(x, row_tile: int = 512):
+    """Pass-1 of the leverage pipeline (Pallas tiled reduction)."""
+    return gk.gram(x, row_tile=row_tile)
+
+
+def leverage(x, linv, row_tile: int = 512):
+    """Pass-2 of the leverage pipeline (Pallas rowwise quadratic form)."""
+    return lk.leverage(x, linv, row_tile=row_tile)
+
+
+def n_params(j: int, d: int) -> int:
+    return j * d + j * (j - 1) // 2

@@ -1,0 +1,169 @@
+"""L1 kernel correctness: every Pallas kernel vs the pure-jnp oracle,
+with hypothesis sweeping shapes and dtypes (as far as each kernel's
+tiling constraints allow)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import bernstein as bk
+from compile.kernels import gram as gk
+from compile.kernels import leverage as lk
+from compile.kernels import nll as nk
+from compile.kernels import ref
+
+SEED = np.random.default_rng(0)
+
+
+def rand(shape, dtype=np.float64, lo=0.0, hi=1.0):
+    return jnp.asarray(
+        SEED.uniform(lo, hi, size=shape).astype(dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Bernstein design kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(min_value=1, max_value=64),
+    j=st.integers(min_value=1, max_value=5),
+    d=st.integers(min_value=2, max_value=9),
+)
+def test_bernstein_kernel_matches_ref(t, j, d):
+    y = rand((t, j))
+    a, ad = bk.bernstein_design(y, d)
+    np.testing.assert_allclose(a, ref.bernstein_ref(y, d), rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(
+        ad, ref.bernstein_deriv_ref(y, d), rtol=1e-10, atol=1e-10
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(d=st.integers(min_value=2, max_value=12))
+def test_bernstein_partition_of_unity(d):
+    y = rand((16, 3))
+    a, ad = bk.bernstein_design(y, d)
+    np.testing.assert_allclose(jnp.sum(a, axis=-1), jnp.ones((16, 3)), rtol=1e-12)
+    np.testing.assert_allclose(jnp.sum(ad, axis=-1), jnp.zeros((16, 3)), atol=1e-10)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_bernstein_dtypes(dtype):
+    y = rand((8, 2), dtype=dtype)
+    a, ad = bk.bernstein_design(y, 7)
+    assert a.dtype == y.dtype and ad.dtype == y.dtype
+    tol = 1e-5 if dtype == np.float32 else 1e-12
+    np.testing.assert_allclose(a, ref.bernstein_ref(y, 7), rtol=tol, atol=tol)
+    np.testing.assert_allclose(ad, ref.bernstein_deriv_ref(y, 7), rtol=tol, atol=tol)
+
+
+def test_bernstein_derivative_finite_difference():
+    y = rand((32, 2), lo=0.05, hi=0.95)
+    d = 7
+    h = 1e-6
+    _, ad = bk.bernstein_design(y, d)
+    ap, _ = bk.bernstein_design(y + h, d)
+    am, _ = bk.bernstein_design(y - h, d)
+    np.testing.assert_allclose(ad, (ap - am) / (2 * h), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Gram kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    d=st.integers(min_value=1, max_value=24),
+    tile=st.sampled_from([8, 32, 64]),
+)
+def test_gram_matches_ref(tiles, d, tile):
+    x = rand((tiles * tile, d), lo=-1.0, hi=1.0)
+    g = gk.gram(x, row_tile=tile)
+    np.testing.assert_allclose(g, ref.gram_ref(x), rtol=1e-10, atol=1e-10)
+
+
+def test_gram_zero_padding_invariant():
+    # the Rust runtime pads the last tile with zero rows
+    x = rand((96, 5), lo=-2.0, hi=2.0)
+    xp = jnp.concatenate([x, jnp.zeros((32, 5))], axis=0)
+    np.testing.assert_allclose(
+        gk.gram(xp, row_tile=32), ref.gram_ref(x), rtol=1e-12, atol=1e-12
+    )
+
+
+def test_gram_rejects_partial_tiles():
+    with pytest.raises(AssertionError):
+        gk.gram(rand((33, 4)), row_tile=32)
+
+
+# ---------------------------------------------------------------------------
+# Leverage kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=3),
+    d=st.integers(min_value=2, max_value=16),
+)
+def test_leverage_matches_ref(tiles, d):
+    tile = 32
+    x = rand((tiles * tile, d), lo=-1.0, hi=1.0)
+    g = np.asarray(ref.gram_ref(x)) + 1e-9 * np.eye(d)
+    l = np.linalg.cholesky(g)
+    linv = jnp.asarray(np.linalg.inv(l))
+    u = lk.leverage(x, linv, row_tile=tile)
+    np.testing.assert_allclose(u, ref.leverage_ref(x, linv), rtol=1e-10, atol=1e-12)
+
+
+def test_leverage_sums_to_rank():
+    x = rand((128, 6), lo=-1.0, hi=1.0)
+    g = np.asarray(ref.gram_ref(x))
+    linv = jnp.asarray(np.linalg.inv(np.linalg.cholesky(g)))
+    u = lk.leverage(x, linv, row_tile=64)
+    assert abs(float(jnp.sum(u)) - 6.0) < 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Fused NLL kernel
+# ---------------------------------------------------------------------------
+
+def random_params(j, d):
+    p = j * d + j * (j - 1) // 2
+    return jnp.asarray(SEED.normal(0, 0.5, size=p))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(min_value=1, max_value=48),
+    j=st.integers(min_value=1, max_value=4),
+    d=st.integers(min_value=3, max_value=8),
+)
+def test_nll_kernel_matches_ref(t, j, d):
+    params = random_params(j, d)
+    y = rand((t, j), lo=0.01, hi=0.99)
+    w = rand((t,), lo=0.1, hi=2.0)
+    beta, lam = ref.unpack_params(params, j, d)
+    theta = ref.theta_from_beta(beta)
+    lam_unit = lam + jnp.eye(j, dtype=params.dtype)
+    got = nk.nll_tile(y, w, theta, lam_unit)[0]
+    want = ref.mctm_nll_ref(params, y, w, j, d)
+    np.testing.assert_allclose(got, want, rtol=1e-10)
+
+
+def test_nll_kernel_zero_weight_padding():
+    j, d = 2, 7
+    params = random_params(j, d)
+    y = rand((32, j), lo=0.01, hi=0.99)
+    w = jnp.ones(32).at[20:].set(0.0)
+    beta, lam = ref.unpack_params(params, j, d)
+    theta = ref.theta_from_beta(beta)
+    lam_unit = lam + jnp.eye(j, dtype=params.dtype)
+    got = nk.nll_tile(y, w, theta, lam_unit)[0]
+    want = ref.mctm_nll_ref(params, y[:20], jnp.ones(20), j, d)
+    np.testing.assert_allclose(got, want, rtol=1e-10)

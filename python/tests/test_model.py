@@ -1,0 +1,132 @@
+"""L2 model tests: gradient correctness, shapes, parametrization
+invariants, and (slow, opt-in) AOT lowering round-trips."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1)
+
+
+def rand_params(j, d, scale=0.5):
+    return jnp.asarray(RNG.normal(0, scale, size=model.n_params(j, d)))
+
+
+def rand_tile(t, j):
+    return jnp.asarray(RNG.uniform(0.01, 0.99, size=(t, j)))
+
+
+# ---------------------------------------------------------------------------
+# nll_grad
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    j=st.integers(min_value=1, max_value=3),
+    d=st.integers(min_value=3, max_value=7),
+)
+def test_nll_grad_matches_ref(j, d):
+    t = 16
+    params = rand_params(j, d)
+    y = rand_tile(t, j)
+    w = jnp.ones(t)
+    v, g = model.nll_grad(params, y, w, j, d)
+    rv, rg = ref.mctm_nll_grad_ref(params, y, w, j, d)
+    np.testing.assert_allclose(v, rv, rtol=1e-10)
+    np.testing.assert_allclose(g, rg, rtol=1e-8, atol=1e-10)
+
+
+def test_nll_grad_finite_difference():
+    j, d = 2, 5
+    params = rand_params(j, d)
+    y = rand_tile(12, j)
+    w = jnp.ones(12)
+    _, g = model.nll_grad(params, y, w, j, d)
+    h = 1e-6
+    for k in range(model.n_params(j, d)):
+        pp = params.at[k].add(h)
+        pm = params.at[k].add(-h)
+        fp, _ = model.nll_grad(pp, y, w, j, d)
+        fm, _ = model.nll_grad(pm, y, w, j, d)
+        fd = (fp - fm) / (2 * h)
+        assert abs(float(g[k]) - float(fd)) < 1e-4 * (1 + abs(float(fd)))
+
+
+def test_nll_eval_matches_nll_grad_value():
+    j, d = 3, 6
+    params = rand_params(j, d)
+    y = rand_tile(24, j)
+    w = jnp.asarray(RNG.uniform(0.5, 1.5, size=24))
+    v, _ = model.nll_grad(params, y, w, j, d)
+    ve = model.nll_eval(params, y, w, j, d)[0]
+    np.testing.assert_allclose(ve, v, rtol=1e-10)
+
+
+def test_weighting_equals_replication():
+    j, d = 2, 5
+    params = rand_params(j, d)
+    y = rand_tile(8, j)
+    w = jnp.ones(8).at[3].set(2.0)
+    v, _ = model.nll_grad(params, y, w, j, d)
+    y2 = jnp.concatenate([y, y[3:4]], axis=0)
+    v2, _ = model.nll_grad(params, y2, jnp.ones(9), j, d)
+    np.testing.assert_allclose(v, v2, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# parametrization invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    j=st.integers(min_value=1, max_value=4),
+    d=st.integers(min_value=2, max_value=9),
+)
+def test_theta_monotone(j, d):
+    beta = jnp.asarray(RNG.normal(0, 2.0, size=(j, d)))
+    theta = ref.theta_from_beta(beta)
+    diffs = jnp.diff(theta, axis=-1)
+    assert bool(jnp.all(diffs > 0))
+
+
+def test_unpack_roundtrip_lambda_layout():
+    j, d = 4, 3
+    p = model.n_params(j, d)
+    params = jnp.arange(p, dtype=jnp.float64)
+    _, lam = ref.unpack_params(params, j, d)
+    # λ block starts at J·d = 12; rows (1,0),(2,0),(2,1),(3,0),(3,1),(3,2)
+    assert float(lam[1, 0]) == 12.0
+    assert float(lam[2, 0]) == 13.0
+    assert float(lam[2, 1]) == 14.0
+    assert float(lam[3, 2]) == 17.0
+    assert float(lam[0, 0]) == 0.0  # diagonal not stored
+
+
+# ---------------------------------------------------------------------------
+# AOT lowering (structure only — fast; full build exercised by `make
+# artifacts` + the Rust integration tests)
+# ---------------------------------------------------------------------------
+
+def test_lowering_produces_hlo_text():
+    from compile import aot
+
+    p = model.n_params(2, 5)
+    fn = lambda params, y, w: model.nll_grad(params, y, w, 2, 5)
+    lowered = jax.jit(fn).lower(
+        aot.spec(p), aot.spec(32, 2), aot.spec(32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f64" in text
+
+
+def test_manifest_configs_parse():
+    from compile import aot
+
+    assert aot.parse_configs("2x7,10x7") == [(2, 7), (10, 7)]

@@ -1,0 +1,182 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!   A1 — hull/sensitivity split α (Algorithm 1 uses α = 0.8)
+//!   A2 — hull budget on heavy-tailed data (paper §3.1: t-copula /
+//!        skew-t need a larger hull component at fixed k)
+//!   A3 — Bernstein basis size d (model flexibility vs coreset size)
+//!   A4 — Merge & Reduce intermediate buffer factor (accuracy vs memory)
+
+use mctm_coreset::benchsupport::{banner, bench_fit_options, results_dir, Scale};
+use mctm_coreset::coordinator::experiment::{design_of, full_fit, run_method, TableRunner};
+use mctm_coreset::coordinator::pipeline::StreamingPipeline;
+use mctm_coreset::coreset::samplers::HULL_SPLIT;
+use mctm_coreset::coreset::Method;
+use mctm_coreset::data::dgp::Dgp;
+use mctm_coreset::data::GenShards;
+use mctm_coreset::fit::fit_native;
+use mctm_coreset::mctm::{self, loglik_ratio, ModelSpec};
+use mctm_coreset::util::report::Table;
+use mctm_coreset::util::rng::Rng;
+use mctm_coreset::util::{fmt_ms, mean};
+
+fn main() {
+    let scale = Scale::from_env();
+    let n = scale.pick(2_000, 10_000, 10_000);
+    let reps = scale.pick(2, 5, 10);
+    banner("ablation_design", &format!("n={n}, reps={reps}"));
+    ablation_hull_split(n, reps, scale);
+    ablation_degree(n, reps, scale);
+    ablation_buffer_factor(scale);
+}
+
+/// A1 + A2: sweep the hull fraction (1 − α) on a benign and a
+/// heavy-tailed DGP at fixed k.
+fn ablation_hull_split(n: usize, reps: usize, scale: Scale) {
+    let k = 50;
+    let mut table = Table::new(
+        &format!("A1/A2: hull fraction sweep (k = {k}, default split = {:.1})", 1.0 - HULL_SPLIT),
+        &["DGP", "hull fraction", "LR", "theta L2"],
+    );
+    for dgp in [Dgp::NormalMixture, Dgp::TCopula, Dgp::SkewT] {
+        let mut rng = Rng::new(0xAB1);
+        let data = dgp.generate(n, &mut rng);
+        let design = design_of(&data, 7);
+        let spec = ModelSpec::new(2, 7);
+        let opts = bench_fit_options(scale);
+        let full = full_fit(&design, spec, &opts);
+        for hull_frac in [0.0, 0.1, 0.2, 0.4, 0.6] {
+            // emulate the split by building the two parts explicitly
+            let mut lrs = Vec::new();
+            let mut l2s = Vec::new();
+            for rep in 0..reps {
+                let mut rng = Rng::new(0xAB2 + rep as u64);
+                let k2 = (hull_frac * k as f64).round() as usize;
+                let k1 = k - k2;
+                // sensitivity part
+                let mut cs = mctm_coreset::coreset::build_coreset(
+                    &design,
+                    Method::L2Only,
+                    k1.max(1),
+                    &mut rng,
+                );
+                if k2 > 0 {
+                    let dp = design.deriv_points();
+                    let hull =
+                        mctm_coreset::coreset::hull::select_hull_points(&dp, k2, &mut rng);
+                    let seen: std::collections::HashSet<usize> =
+                        cs.indices.iter().cloned().collect();
+                    for p in hull {
+                        let obs = p / design.j;
+                        if !seen.contains(&obs) {
+                            cs.indices.push(obs);
+                            cs.weights.push(1.0);
+                        }
+                    }
+                }
+                let sub = design.select(&cs.indices);
+                let fit = fit_native(spec, &sub, cs.weights.clone(), &opts);
+                lrs.push(loglik_ratio(
+                    mctm::nll(&design, &[], &fit.params),
+                    full.fit.nll,
+                    design.n,
+                    design.j,
+                ));
+                l2s.push(mctm::theta_l2(&fit.params, &full.fit.params));
+            }
+            table.row(vec![
+                dgp.name().into(),
+                format!("{hull_frac:.1}"),
+                fmt_ms(&lrs),
+                fmt_ms(&l2s),
+            ]);
+        }
+        println!("  done {}", dgp.name());
+    }
+    table.emit(Some(&results_dir().join("ablation_hull_split.csv")));
+}
+
+/// A3: Bernstein basis size d at fixed coreset size.
+fn ablation_degree(n: usize, reps: usize, scale: Scale) {
+    let mut table = Table::new(
+        "A3: basis size d (k = 100, normal mixture)",
+        &["d", "method", "LR", "theta L2"],
+    );
+    let mut rng = Rng::new(0xAB3);
+    let data = Dgp::NormalMixture.generate(n, &mut rng);
+    for d in [4usize, 7, 10] {
+        let runner = TableRunner::new(&data, d, bench_fit_options(scale), 0xAB4);
+        for method in [Method::L2Hull, Method::Uniform] {
+            let stats = run_method(
+                &runner.design,
+                &runner.full,
+                method,
+                100,
+                reps,
+                0xAB5,
+                &runner.opts,
+            );
+            table.row(vec![
+                format!("{d}"),
+                method.name().into(),
+                fmt_ms(&stats.lr),
+                fmt_ms(&stats.theta_l2),
+            ]);
+        }
+        println!("  done d={d}");
+    }
+    table.emit(Some(&results_dir().join("ablation_degree.csv")));
+}
+
+/// A4: Merge & Reduce buffer factor — streamed-coreset quality vs the
+/// intermediate memory multiplier.
+fn ablation_buffer_factor(scale: Scale) {
+    let total = scale.pick(10_000, 40_000, 100_000);
+    let k = 100;
+    let spec = ModelSpec::new(2, 6);
+    let opts = bench_fit_options(scale);
+    let mut table = Table::new(
+        &format!("A4: merge-reduce buffer factor (stream n = {total}, k = {k})"),
+        &["buffer factor", "holdout LR", "levels memory (rows)"],
+    );
+    // holdout reference
+    let mut rng = Rng::new(0xAB6);
+    let holdout = Dgp::NormalMixture.generate(20_000, &mut rng);
+    let ho_design = design_of(&holdout, 6);
+    let batch = fit_native(spec, &ho_design, Vec::new(), &opts);
+
+    for factor in [1usize, 2, 4, 8] {
+        let mut lrs = Vec::new();
+        for rep in 0..3u64 {
+            let mut gen_rng = Rng::new(0xAB7 + rep);
+            let source = GenShards::new(
+                move |m| Dgp::NormalMixture.generate(m, &mut gen_rng),
+                2,
+                total,
+                total / 10,
+            );
+            let mut pipeline = StreamingPipeline::new(Method::L2Hull, k, 6);
+            pipeline.seed = rep;
+            pipeline.buffer_factor = factor;
+            let (coreset, _) = pipeline.run(source);
+            let design = design_of(&coreset.rows, 6);
+            let fit = fit_native(spec, &design, coreset.weights.clone(), &opts);
+            let eval = mctm_coreset::basis::Design::build_with_scaler(
+                &holdout,
+                6,
+                design.scaler.clone(),
+            );
+            lrs.push(loglik_ratio(
+                mctm::nll(&eval, &[], &fit.params),
+                batch.nll,
+                ho_design.n,
+                2,
+            ));
+        }
+        table.row(vec![
+            format!("{factor}"),
+            fmt_ms(&lrs),
+            format!("≤ {} per level", factor * k),
+        ]);
+        println!("  done factor={factor} (mean LR {:.3})", mean(&lrs));
+    }
+    table.emit(Some(&results_dir().join("ablation_buffer_factor.csv")));
+}

@@ -1,0 +1,71 @@
+//! Regenerates paper Figures 10–11: predicted marginal densities of the
+//! bivariate-normal DGP under coresets of size k ∈ {50, 100, 500} built
+//! by each method, over 10 replicate trials, against the true N(0,1)
+//! marginal.
+
+use mctm_coreset::benchsupport::{banner, bench_fit_options, results_dir, Scale};
+use mctm_coreset::coordinator::experiment::design_of;
+use mctm_coreset::coreset::{build_coreset, Method};
+use mctm_coreset::data::dgp::Dgp;
+use mctm_coreset::fit::fit_native;
+use mctm_coreset::mctm::{marginal_density, ModelSpec};
+use mctm_coreset::util::report::write_series_csv;
+use mctm_coreset::util::rng::Rng;
+use mctm_coreset::util::special::norm_pdf;
+
+fn main() {
+    let scale = Scale::from_env();
+    let n = scale.pick(1_000, 10_000, 10_000);
+    let reps = scale.pick(2, 5, 10);
+    let ks: Vec<usize> = match scale {
+        Scale::Fast => vec![50, 100],
+        _ => vec![50, 100, 500],
+    };
+    banner("fig10_11_marginals", &format!("bivariate normal, n={n}, reps={reps}"));
+
+    let mut rng = Rng::new(1011);
+    let data = Dgp::BivariateNormal.generate(n, &mut rng);
+    let design = design_of(&data, 7);
+    let spec = ModelSpec::new(2, 7);
+    let opts = bench_fit_options(scale);
+
+    // density evaluation grid over both margins
+    let grid: Vec<f64> = (0..81).map(|i| -4.0 + 0.1 * i as f64).collect();
+
+    for margin in [0usize, 1] {
+        let mut cols: Vec<(String, Vec<f64>)> = vec![
+            ("y".to_string(), grid.clone()),
+            (
+                "true_density".to_string(),
+                grid.iter().map(|&y| norm_pdf(y)).collect(),
+            ),
+        ];
+        for &k in &ks {
+            for method in [Method::Uniform, Method::L2Only, Method::L2Hull] {
+                // mean predicted density over replicate coreset fits
+                let mut acc = vec![0.0; grid.len()];
+                for rep in 0..reps {
+                    let mut rng = Rng::new(2000 + rep as u64);
+                    let cs = build_coreset(&design, method, k, &mut rng);
+                    let sub = design.select(&cs.indices);
+                    let fit = fit_native(spec, &sub, cs.weights.clone(), &opts);
+                    for (gi, &y) in grid.iter().enumerate() {
+                        acc[gi] += marginal_density(&fit.params, &design.scaler, margin, y)
+                            / reps as f64;
+                    }
+                }
+                cols.push((format!("{}_k{k}", method.name()), acc));
+                println!("  margin {margin}: done {} k={k}", method.name());
+            }
+        }
+        let named: Vec<(&str, &[f64])> =
+            cols.iter().map(|(n, v)| (n.as_str(), v.as_slice())).collect();
+        let fname = if margin == 0 {
+            "fig10_marginal_x.csv"
+        } else {
+            "fig11_marginal_y.csv"
+        };
+        write_series_csv(&results_dir().join(fname), &named).expect("write csv");
+    }
+    println!("saved fig10/fig11 CSVs");
+}

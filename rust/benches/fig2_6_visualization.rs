@@ -1,0 +1,71 @@
+//! Regenerates the scatter data behind paper Figures 2–6: for each DGP,
+//! a ~100-point coreset from 1 000 original samples under each sampling
+//! method (uniform / ℓ₂-sensitivity / ℓ₂-hull). Output: tidy CSV with
+//! (dgp, method, selected y1, y2, weight) — plus the raw cloud.
+
+use mctm_coreset::benchsupport::{banner, results_dir, Scale};
+use mctm_coreset::coordinator::experiment::design_of;
+use mctm_coreset::coreset::{build_coreset, Method};
+use mctm_coreset::data::dgp::Dgp;
+use mctm_coreset::util::rng::Rng;
+use std::io::Write;
+
+fn main() {
+    let scale = Scale::from_env();
+    let n = scale.pick(300, 1_000, 1_000);
+    let k = scale.pick(50, 100, 100);
+    banner("fig2_6_visualization", &format!("coresets of {k} from n={n}, all 14 DGPs"));
+
+    let path = results_dir().join("fig2_6_coreset_scatter.csv");
+    let mut f = std::fs::File::create(&path).expect("create csv");
+    writeln!(f, "dgp,method,kind,y1,y2,weight").unwrap();
+    for dgp in Dgp::all() {
+        let mut rng = Rng::new(0xF16 ^ dgp.name().len() as u64);
+        let data = dgp.generate(n, &mut rng);
+        // raw cloud (subsampled for file size)
+        for r in (0..n).step_by(4) {
+            writeln!(
+                f,
+                "{},none,raw,{},{},1",
+                dgp.name(),
+                data.at(r, 0),
+                data.at(r, 1)
+            )
+            .unwrap();
+        }
+        let design = design_of(&data, 7);
+        for method in [Method::Uniform, Method::L2Only, Method::L2Hull] {
+            let cs = build_coreset(&design, method, k, &mut rng);
+            for (idx, w) in cs.indices.iter().zip(&cs.weights) {
+                writeln!(
+                    f,
+                    "{},{},coreset,{},{},{}",
+                    dgp.name(),
+                    method.name(),
+                    data.at(*idx, 0),
+                    data.at(*idx, 1),
+                    w
+                )
+                .unwrap();
+            }
+        }
+        println!("  done {}", dgp.name());
+    }
+    println!("saved {}", path.display());
+
+    // sanity headline: the hull method must cover the bounding box of
+    // the cloud better than uniform (max |y| among selected points)
+    let mut rng = Rng::new(99);
+    let data = Dgp::BimodalClusters.generate(n, &mut rng);
+    let design = design_of(&data, 7);
+    let extent = |m: Method, rng: &mut Rng| -> f64 {
+        let cs = build_coreset(&design, m, k, rng);
+        cs.indices
+            .iter()
+            .map(|&i| data.at(i, 0).abs().max(data.at(i, 1).abs()))
+            .fold(0.0, f64::max)
+    };
+    let e_hull = extent(Method::L2Hull, &mut rng);
+    let e_unif = extent(Method::Uniform, &mut rng);
+    println!("coverage extent (bimodal clusters): l2-hull={e_hull:.2} uniform={e_unif:.2}");
+}

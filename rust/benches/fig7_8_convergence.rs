@@ -1,0 +1,71 @@
+//! Regenerates paper Figures 7–8: convergence of likelihood ratio,
+//! parameter error and λ error as the coreset size grows, for six DGPs
+//! (normal mixture, non-linear correlation, bimodal clusters; circular,
+//! copula-complex, heteroscedastic).
+
+use mctm_coreset::benchsupport::{banner, bench_fit_options, results_dir, Scale};
+use mctm_coreset::coordinator::experiment::TableRunner;
+use mctm_coreset::coreset::Method;
+use mctm_coreset::data::dgp::Dgp;
+use mctm_coreset::util::report::write_series_csv;
+use mctm_coreset::util::rng::Rng;
+use mctm_coreset::util::{mean, std_dev};
+
+fn main() {
+    let scale = Scale::from_env();
+    let n = scale.pick(1_000, 10_000, 10_000);
+    let reps = scale.pick(2, 3, 10);
+    let ks: Vec<usize> = match scale {
+        Scale::Fast => vec![20, 50, 100],
+        _ => vec![20, 30, 50, 75, 100, 150, 200, 300],
+    };
+    let dgps = [
+        Dgp::NormalMixture,
+        Dgp::NonlinearCorrelation,
+        Dgp::BimodalClusters,
+        Dgp::Circular,
+        Dgp::CopulaComplex,
+        Dgp::Heteroscedastic,
+    ];
+    banner(
+        "fig7_8_convergence",
+        &format!("6 DGPs, n={n}, k in {ks:?}, reps={reps}"),
+    );
+
+    for dgp in dgps {
+        let mut rng = Rng::new(0x78 ^ dgp.name().len() as u64);
+        let data = dgp.generate(n, &mut rng);
+        let runner = TableRunner::new(&data, 7, bench_fit_options(scale), 0x78);
+        let mut cols: Vec<(String, Vec<f64>)> =
+            vec![("k".to_string(), ks.iter().map(|&k| k as f64).collect())];
+        for method in [Method::L2Hull, Method::L2Only, Method::Uniform] {
+            let mut lr_m = Vec::new();
+            let mut lr_s = Vec::new();
+            let mut l2_m = Vec::new();
+            let mut l2_s = Vec::new();
+            let mut lam_m = Vec::new();
+            let mut lam_s = Vec::new();
+            for &k in &ks {
+                let stats = runner.run(method, k, reps);
+                lr_m.push(mean(&stats.lr));
+                lr_s.push(std_dev(&stats.lr));
+                l2_m.push(mean(&stats.theta_l2));
+                l2_s.push(std_dev(&stats.theta_l2));
+                lam_m.push(mean(&stats.lambda_err));
+                lam_s.push(std_dev(&stats.lambda_err));
+            }
+            let m = method.name();
+            cols.push((format!("{m}_lr_mean"), lr_m));
+            cols.push((format!("{m}_lr_std"), lr_s));
+            cols.push((format!("{m}_theta_mean"), l2_m));
+            cols.push((format!("{m}_theta_std"), l2_s));
+            cols.push((format!("{m}_lambda_mean"), lam_m));
+            cols.push((format!("{m}_lambda_std"), lam_s));
+        }
+        let named: Vec<(&str, &[f64])> =
+            cols.iter().map(|(n, v)| (n.as_str(), v.as_slice())).collect();
+        let path = results_dir().join(format!("fig7_8_{}.csv", dgp.name()));
+        write_series_csv(&path, &named).expect("write csv");
+        println!("  done {} -> {}", dgp.name(), path.display());
+    }
+}

@@ -1,0 +1,40 @@
+//! Regenerates paper Figure 9: computation time (sampling + optimization
+//! split) for 9 simulation distributions across the three methods.
+
+use mctm_coreset::benchsupport::{banner, bench_fit_options, results_dir, Scale};
+use mctm_coreset::coordinator::experiment::TableRunner;
+use mctm_coreset::coreset::Method;
+use mctm_coreset::data::dgp::Dgp;
+use mctm_coreset::util::mean;
+use mctm_coreset::util::report::Table;
+use mctm_coreset::util::rng::Rng;
+
+fn main() {
+    let scale = Scale::from_env();
+    let n = scale.pick(1_000, 10_000, 10_000);
+    let k = 100;
+    let reps = scale.pick(2, 5, 10);
+    banner("fig9_timing", &format!("9 DGPs, n={n}, k={k}, reps={reps}"));
+
+    let mut table = Table::new(
+        "Figure 9: computation time per DGP (seconds)",
+        &["DGP", "method", "sample(s)", "fit(s)", "total(s)"],
+    );
+    for dgp in Dgp::figure9() {
+        let mut rng = Rng::new(9 ^ dgp.name().len() as u64);
+        let data = dgp.generate(n, &mut rng);
+        let runner = TableRunner::new(&data, 7, bench_fit_options(scale), 0xF9);
+        for method in [Method::L2Hull, Method::L2Only, Method::Uniform] {
+            let stats = runner.run(method, k, reps);
+            table.row(vec![
+                dgp.name().into(),
+                method.name().into(),
+                format!("{:.4}", mean(&stats.sample_secs)),
+                format!("{:.4}", mean(&stats.fit_secs)),
+                format!("{:.4}", mean(&stats.total_secs())),
+            ]);
+        }
+        println!("  done {}", dgp.name());
+    }
+    table.emit(Some(&results_dir().join("fig9_timing.csv")));
+}

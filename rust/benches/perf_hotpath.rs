@@ -1,0 +1,210 @@
+//! §Perf micro-benchmarks of every hot path, native AND XLA backends:
+//!   L3-a  leverage pipeline (basis build, Gram, scoring)
+//!   L3-b  NLL + gradient evaluation (the optimizer inner loop)
+//!   L3-c  convex-hull selection
+//!   L1/L2 AOT artifacts: tiled nll_grad, fused nll_eval, gram, leverage
+//! Results feed EXPERIMENTS.md §Perf (before/after iteration log).
+
+use mctm_coreset::basis::Design;
+use mctm_coreset::benchsupport::{banner, results_dir, time_median, Scale};
+use mctm_coreset::coreset::hull::select_hull_points;
+use mctm_coreset::coreset::leverage::mctm_leverage_scores;
+use mctm_coreset::data::dgp::Dgp;
+use mctm_coreset::linalg::{Cholesky, Mat};
+use mctm_coreset::mctm::{self, ModelSpec, Params};
+use mctm_coreset::runtime::{Engine, TiledNll};
+use mctm_coreset::util::report::Table;
+use mctm_coreset::util::rng::Rng;
+use std::path::Path;
+
+fn main() {
+    let scale = Scale::from_env();
+    let n = scale.pick(2_000, 20_000, 100_000);
+    let iters = scale.pick(3, 5, 7);
+    banner("perf_hotpath", &format!("n={n}, J=2 and J=10, median of {iters}"));
+
+    let mut table = Table::new(
+        "Perf: hot-path medians (seconds)",
+        &["path", "config", "seconds", "throughput"],
+    );
+
+    // ---- L3: J=2 simulation-scale ------------------------------------
+    let mut rng = Rng::new(1);
+    let data2 = Dgp::BivariateNormal.generate(n, &mut rng);
+    bench_native(&mut table, "J=2 d=7", &data2, iters);
+
+    // ---- L3: J=10 covertype-scale ------------------------------------
+    let data10 = mctm_coreset::data::covertype::generate(n / 2, &mut rng);
+    bench_native(&mut table, "J=10 d=7", &data10, iters);
+
+    // ---- L1/L2 via PJRT ----------------------------------------------
+    if Path::new("artifacts/manifest.json").exists() {
+        bench_xla(&mut table, &data2, 2, iters);
+        bench_xla(&mut table, &data10, 10, iters);
+    } else {
+        println!("(artifacts/ missing — run `make artifacts` for the XLA rows)");
+    }
+
+    table.emit(Some(&results_dir().join("perf_hotpath.csv")));
+}
+
+fn bench_native(table: &mut Table, cfg: &str, data: &Mat, iters: usize) {
+    let n = data.rows;
+    let d = 7usize;
+
+    // basis construction
+    let t_design = time_median(iters, || {
+        std::hint::black_box(Design::build(data, d, 0.01));
+    });
+    table.row(vec![
+        "L3 basis build".into(),
+        cfg.into(),
+        format!("{t_design:.4}"),
+        format!("{:.1} Mrow/s", n as f64 / t_design / 1e6),
+    ]);
+
+    let design = Design::build(data, d, 0.01);
+
+    // leverage scores (Gram + Cholesky + scoring)
+    let t_lev = time_median(iters, || {
+        std::hint::black_box(mctm_leverage_scores(&design).unwrap());
+    });
+    table.row(vec![
+        "L3 leverage scores".into(),
+        cfg.into(),
+        format!("{t_lev:.4}"),
+        format!("{:.1} Mrow/s", n as f64 / t_lev / 1e6),
+    ]);
+
+    // Gram alone (the syrk kernel)
+    let stacked = design.stacked();
+    let t_gram = time_median(iters, || {
+        std::hint::black_box(stacked.gram());
+    });
+    let dj = stacked.cols;
+    let flops = n as f64 * (dj * dj) as f64; // ~2·n·D²/2
+    table.row(vec![
+        "L3 gram (syrk)".into(),
+        cfg.into(),
+        format!("{t_gram:.4}"),
+        format!("{:.2} GF/s", flops / t_gram / 1e9),
+    ]);
+
+    // cholesky + scoring split
+    let gram = stacked.gram();
+    let mut gr = gram.clone();
+    let stab = 1e-10 * gram.trace() / gram.rows as f64;
+    for i in 0..gr.rows {
+        *gr.at_mut(i, i) += stab;
+    }
+    let ch = Cholesky::new(&gr).unwrap();
+    let t_score = time_median(iters, || {
+        let mut scratch = Vec::new();
+        let mut acc = 0.0;
+        for i in 0..stacked.rows {
+            acc += ch.quad_form_inv(stacked.row(i), &mut scratch);
+        }
+        std::hint::black_box(acc);
+    });
+    table.row(vec![
+        "L3 leverage scoring".into(),
+        cfg.into(),
+        format!("{t_score:.4}"),
+        format!("{:.1} Mrow/s", n as f64 / t_score / 1e6),
+    ]);
+
+    // NLL + grad (optimizer inner loop)
+    let spec = ModelSpec::new(data.cols, d);
+    let p = Params::init(spec);
+    let t_nll = time_median(iters, || {
+        std::hint::black_box(mctm::nll_grad(&design, &[], &p));
+    });
+    table.row(vec![
+        "L3 nll_grad".into(),
+        cfg.into(),
+        format!("{t_nll:.4}"),
+        format!("{:.1} Mrow/s", n as f64 / t_nll / 1e6),
+    ]);
+
+    // hull selection on the derivative points
+    let dp = design.deriv_points();
+    let mut rng = Rng::new(7);
+    let t_hull = time_median(3.min(iters), || {
+        std::hint::black_box(select_hull_points(&dp, 20, &mut rng));
+    });
+    table.row(vec![
+        "L3 hull select k=20".into(),
+        cfg.into(),
+        format!("{t_hull:.4}"),
+        format!("{:.2} Mpt/s", dp.rows as f64 / t_hull / 1e6),
+    ]);
+}
+
+fn bench_xla(table: &mut Table, data: &Mat, j: usize, iters: usize) {
+    let d = 7usize;
+    let engine = match Engine::new(Path::new("artifacts")) {
+        Ok(e) => e,
+        Err(e) => {
+            println!("xla engine unavailable: {e:#}");
+            return;
+        }
+    };
+    let cfg = format!("J={j} d={d} (xla)");
+    let design = Design::build(data, d, 0.01);
+    let scaled = design.scaler.transform(data);
+    let spec = ModelSpec::new(j, d);
+    let p = Params::init(spec);
+    let runner = TiledNll::new(&engine, j, d).unwrap();
+
+    let n = data.rows;
+    let t_grad = time_median(iters, || {
+        std::hint::black_box(runner.nll_grad(&p.x, &scaled.data, &[]).unwrap());
+    });
+    table.row(vec![
+        "XLA nll_grad (tiled)".into(),
+        cfg.clone(),
+        format!("{t_grad:.4}"),
+        format!("{:.1} Mrow/s", n as f64 / t_grad / 1e6),
+    ]);
+
+    let t_eval = time_median(iters, || {
+        std::hint::black_box(runner.nll_eval(&p.x, &scaled.data, &[]).unwrap());
+    });
+    table.row(vec![
+        "XLA nll_eval (pallas fused)".into(),
+        cfg.clone(),
+        format!("{t_eval:.4}"),
+        format!("{:.1} Mrow/s", n as f64 / t_eval / 1e6),
+    ]);
+
+    // gram + leverage artifacts over the stacked matrix
+    if let Ok(lev) = mctm_coreset::runtime::engine::TiledLeverage::new(&engine, j * d) {
+        let stacked = design.stacked();
+        let t_gram = time_median(iters, || {
+            std::hint::black_box(lev.gram(&stacked.data).unwrap());
+        });
+        table.row(vec![
+            "XLA gram (pallas tiled)".into(),
+            cfg.clone(),
+            format!("{t_gram:.4}"),
+            format!("{:.1} Mrow/s", n as f64 / t_gram / 1e6),
+        ]);
+        let g = Mat::from_vec(j * d, j * d, lev.gram(&stacked.data).unwrap());
+        let mut gr = g.clone();
+        let stab = 1e-10 * g.trace() / g.rows as f64;
+        for i in 0..gr.rows {
+            *gr.at_mut(i, i) += stab;
+        }
+        let ch = Cholesky::new(&gr).unwrap();
+        let linv = ch.l_inverse();
+        let t_scores = time_median(iters, || {
+            std::hint::black_box(lev.scores(&stacked.data, &linv.data).unwrap());
+        });
+        table.row(vec![
+            "XLA leverage (pallas)".into(),
+            cfg,
+            format!("{t_scores:.4}"),
+            format!("{:.1} Mrow/s", n as f64 / t_scores / 1e6),
+        ]);
+    }
+}

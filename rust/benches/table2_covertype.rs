@@ -1,0 +1,116 @@
+//! Regenerates paper Table 2 + Figure 13: Covertype (synthetic terrain
+//! substitute, DESIGN.md §5), J = 10 continuous variables, coreset sizes
+//! k ∈ {50, 200, 500}, methods {ℓ₂-hull, ℓ₂-only, ridge-lss, root-l2,
+//! uniform}, against the full-data benchmark fit.
+
+use mctm_coreset::benchsupport::{banner, bench_fit_options, results_dir, Scale};
+use mctm_coreset::coordinator::experiment::{summarize, TableRunner};
+use mctm_coreset::coreset::Method;
+use mctm_coreset::data::covertype;
+use mctm_coreset::util::report::{write_series_csv, Table};
+use mctm_coreset::util::rng::Rng;
+use mctm_coreset::util::{mean, Stopwatch};
+
+fn main() {
+    let scale = Scale::from_env();
+    // the paper uses a 300k benchmark subsample of the 581k dataset; the
+    // default container scale uses 50k (same J=10 model, same shapes)
+    let n = scale.pick(5_000, 50_000, 300_000);
+    let reps = scale.pick(2, 3, 5);
+    let ks: Vec<usize> = match scale {
+        Scale::Fast => vec![50, 200],
+        _ => vec![50, 200, 500],
+    };
+    banner(
+        "table2_covertype",
+        &format!("synthetic Covertype, n={n}, J=10, reps={reps}"),
+    );
+
+    let mut rng = Rng::new(581_012);
+    let sw = Stopwatch::start();
+    let data = covertype::generate(n, &mut rng);
+    println!("  generated {}x10 in {:.1}s", data.rows, sw.secs());
+
+    let runner = TableRunner::new(&data, 7, bench_fit_options(scale), 54);
+    println!(
+        "  BENCHMARK full fit: nll={:.2} iters={} time={:.1}s",
+        runner.full.fit.nll, runner.full.fit.iters, runner.full.seconds
+    );
+
+    let methods = Method::all();
+    let mut table = Table::new(
+        "Table 2: Covertype performance per coreset size",
+        &["k", "method", "theta L2", "lambda err", "LR", "impr(%)", "time(s)"],
+    );
+    // Figure 13 series: per k, per method, the four panel metrics
+    let mut fig_k = Vec::new();
+    let mut fig_method = Vec::new();
+    let mut fig_lr = Vec::new();
+    let mut fig_l2 = Vec::new();
+    let mut fig_lam = Vec::new();
+    let mut fig_time = Vec::new();
+
+    for &k in &ks {
+        let all: Vec<_> = methods.iter().map(|&m| runner.run(m, k, reps)).collect();
+        let unif = all.last().unwrap(); // Method::all ends with Uniform
+        for stats in &all {
+            let mut row = vec![format!("{k}")];
+            row.extend(summarize(stats, unif));
+            table.row(row);
+            fig_k.push(k as f64);
+            fig_method.push(stats.method_name.to_string());
+            fig_lr.push(mean(&stats.lr));
+            fig_l2.push(mean(&stats.theta_l2));
+            fig_lam.push(mean(&stats.lambda_err));
+            fig_time.push(mean(&stats.total_secs()));
+        }
+        println!("  done k={k}");
+    }
+    // benchmark row (full data): zero errors, LR = 1 by definition
+    table.row(vec![
+        format!("n={n}"),
+        "benchmark".into(),
+        "0".into(),
+        "0".into(),
+        "1".into(),
+        "-".into(),
+        format!("{:.1}", runner.full.seconds),
+    ]);
+    table.emit(Some(&results_dir().join("table2_covertype.csv")));
+
+    let method_codes: Vec<f64> = fig_method
+        .iter()
+        .map(|m| {
+            Method::all()
+                .iter()
+                .position(|x| x.name() == m)
+                .unwrap_or(99) as f64
+        })
+        .collect();
+    write_series_csv(
+        &results_dir().join("fig13_covertype.csv"),
+        &[
+            ("k", &fig_k),
+            ("method_code", &method_codes),
+            ("loglik_ratio", &fig_lr),
+            ("theta_l2", &fig_l2),
+            ("lambda_l2", &fig_lam),
+            ("total_time_s", &fig_time),
+        ],
+    )
+    .expect("writing fig13 csv");
+    println!(
+        "figure 13 series saved (method codes: {})",
+        Method::all()
+            .iter()
+            .enumerate()
+            .map(|(i, m)| format!("{i}={}", m.name()))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    println!(
+        "\nspeedup vs full fit at largest k: coreset total ≈ {:.2}s vs {:.1}s full",
+        fig_time.last().copied().unwrap_or(f64::NAN),
+        runner.full.seconds
+    );
+}

@@ -1,0 +1,8 @@
+//! Regenerates paper Table 4: same protocol as Table 3 with k = 100.
+fn main() {
+    mctm_coreset::benchsupport::run_sim_table(
+        "Table 4: simulation DGPs, coreset size 100",
+        100,
+        "table4_sim_k100.csv",
+    );
+}

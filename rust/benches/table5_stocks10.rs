@@ -1,0 +1,9 @@
+//! Regenerates paper Table 5 + Figure 1 (top row): 10-stock daily
+//! returns, coreset sizes k ∈ {50, 100, 200, 300}.
+fn main() {
+    mctm_coreset::benchsupport::run_equity_table(
+        "Table 5: 10 stock return series",
+        10,
+        "table5_stocks10.csv",
+    );
+}

@@ -1,0 +1,9 @@
+//! Regenerates paper Table 6 + Figure 1 (bottom row): 20-stock daily
+//! returns, coreset sizes k ∈ {50, 100, 200, 300}.
+fn main() {
+    mctm_coreset::benchsupport::run_equity_table(
+        "Table 6: 20 stock return series",
+        20,
+        "table6_stocks20.csv",
+    );
+}

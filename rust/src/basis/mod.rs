@@ -1,0 +1,340 @@
+//! Bernstein polynomial basis for the semi-parametric marginal
+//! transformations h̃_j(y) = a_j(y)ᵀ ϑ_j (paper §1.1).
+//!
+//! The basis of degree m = d−1 on [0,1] is
+//!   b_{k,m}(x) = C(m,k) x^k (1−x)^{m−k},  k = 0..m,
+//! with derivative  b'_{k,m}(x) = m (b_{k−1,m−1}(x) − b_{k,m−1}(x)).
+//! With monotonically increasing coefficients ϑ the expansion is strictly
+//! increasing and a'(x)ᵀϑ > 0 — which is what keeps the log term of the
+//! MCTM likelihood finite.
+//!
+//! Raw data is min–max scaled into [eps, 1−eps] per output component
+//! (the paper's "negative value correction" practice, footnote 1/3).
+
+use crate::linalg::Mat;
+
+/// Bernstein basis of fixed degree `m` (so `d = m + 1` basis functions).
+#[derive(Clone, Copy, Debug)]
+pub struct Bernstein {
+    /// polynomial degree m
+    pub degree: usize,
+}
+
+impl Bernstein {
+    pub fn new(degree: usize) -> Self {
+        assert!(degree >= 1, "Bernstein degree must be ≥ 1");
+        Bernstein { degree }
+    }
+
+    /// Number of basis functions d = m + 1.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.degree + 1
+    }
+
+    /// Evaluate all d basis functions at x ∈ [0,1] into `out`.
+    ///
+    /// Uses the stable iterative scheme: powers of x forward, powers of
+    /// (1−x) backward, binomials by recurrence — no factorial overflow up
+    /// to degree ~50.
+    pub fn eval_into(&self, x: f64, out: &mut [f64]) {
+        let m = self.degree;
+        debug_assert_eq!(out.len(), m + 1);
+        let xc = 1.0 - x;
+        // out[k] = C(m,k) x^k (1-x)^(m-k)
+        // accumulate forward: start with (1-x)^m, multiply by x/(1-x)·C-ratio.
+        // To avoid dividing by (1-x)=0, do two passes instead:
+        // pass 1: out[k] = C(m,k) x^k ; pass 2: multiply by xc^{m-k}.
+        let mut binom = 1.0f64; // C(m,0)
+        let mut xpow = 1.0f64; // x^0
+        for k in 0..=m {
+            out[k] = binom * xpow;
+            binom = binom * (m - k) as f64 / (k + 1) as f64;
+            xpow *= x;
+        }
+        let mut cpow = 1.0f64; // xc^0
+        for k in (0..=m).rev() {
+            out[k] *= cpow;
+            cpow *= xc;
+        }
+    }
+
+    /// Evaluate all d basis-function **derivatives** at x into `out`:
+    /// b'_{k,m} = m (b_{k−1,m−1} − b_{k,m−1}).
+    pub fn deriv_into(&self, x: f64, out: &mut [f64], scratch: &mut [f64]) {
+        let m = self.degree;
+        debug_assert_eq!(out.len(), m + 1);
+        debug_assert!(scratch.len() >= m);
+        let lower = Bernstein { degree: m - 1 };
+        lower.eval_into(x, &mut scratch[..m]);
+        let mf = m as f64;
+        out[0] = -mf * scratch[0];
+        for k in 1..m {
+            out[k] = mf * (scratch[k - 1] - scratch[k]);
+        }
+        out[m] = mf * scratch[m - 1];
+    }
+
+    /// Convenience: allocate and evaluate.
+    pub fn eval(&self, x: f64) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        self.eval_into(x, &mut out);
+        out
+    }
+
+    pub fn deriv(&self, x: f64) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        let mut scratch = vec![0.0; self.degree];
+        self.deriv_into(x, &mut out, &mut scratch);
+        out
+    }
+}
+
+/// Per-column min–max scaler into [eps, 1−eps]; the chain-rule factor
+/// (1−2eps)/(max−min) is kept so densities on the original scale stay
+/// correct.
+#[derive(Clone, Debug)]
+pub struct Scaler {
+    pub mins: Vec<f64>,
+    pub maxs: Vec<f64>,
+    pub eps: f64,
+}
+
+impl Scaler {
+    /// Fit on an (n × J) data matrix.
+    pub fn fit(data: &Mat, eps: f64) -> Self {
+        let j = data.cols;
+        let mut mins = vec![f64::INFINITY; j];
+        let mut maxs = vec![f64::NEG_INFINITY; j];
+        for r in 0..data.rows {
+            let row = data.row(r);
+            for (c, &v) in row.iter().enumerate() {
+                mins[c] = mins[c].min(v);
+                maxs[c] = maxs[c].max(v);
+            }
+        }
+        for c in 0..j {
+            if maxs[c] - mins[c] < 1e-12 {
+                // degenerate column: widen artificially
+                maxs[c] = mins[c] + 1.0;
+            }
+        }
+        Scaler { mins, maxs, eps }
+    }
+
+    /// Scale a single value of column c.
+    #[inline]
+    pub fn scale(&self, c: usize, v: f64) -> f64 {
+        let t = (v - self.mins[c]) / (self.maxs[c] - self.mins[c]);
+        let t = t.clamp(0.0, 1.0);
+        self.eps + (1.0 - 2.0 * self.eps) * t
+    }
+
+    /// d(scaled)/d(raw) for column c — the Jacobian factor for densities.
+    #[inline]
+    pub fn dscale(&self, c: usize) -> f64 {
+        (1.0 - 2.0 * self.eps) / (self.maxs[c] - self.mins[c])
+    }
+
+    /// Apply to a full matrix (returns a new matrix).
+    pub fn transform(&self, data: &Mat) -> Mat {
+        let mut out = data.clone();
+        for r in 0..out.rows {
+            for c in 0..out.cols {
+                *out.at_mut(r, c) = self.scale(c, data.at(r, c));
+            }
+        }
+        out
+    }
+}
+
+/// Precomputed basis design tensors for a dataset: `a` and `a'` flattened
+/// as (n, J, d) row-major. This is the "apply the basis functions once"
+/// step the coreset construction operates on (paper §2: data points
+/// a_ij = a_j(y_ij), a'_ij = a'_j(y_ij)).
+#[derive(Clone, Debug)]
+pub struct Design {
+    pub n: usize,
+    pub j: usize,
+    pub d: usize,
+    /// basis values, length n·J·d
+    pub a: Vec<f64>,
+    /// basis derivative values, length n·J·d
+    pub ad: Vec<f64>,
+    pub scaler: Scaler,
+}
+
+impl Design {
+    /// Build from raw data (n × J) with Bernstein degree d−1.
+    pub fn build(data: &Mat, d: usize, eps: f64) -> Self {
+        let scaler = Scaler::fit(data, eps);
+        Self::build_with_scaler(data, d, scaler)
+    }
+
+    /// Build with a *given* scaler — required whenever parameters fitted
+    /// on one dataset (e.g. a streamed coreset) are evaluated on another:
+    /// the transformation h̃ is defined on the scaled axis, so both
+    /// designs must share the scaling.
+    pub fn build_with_scaler(data: &Mat, d: usize, scaler: Scaler) -> Self {
+        let basis = Bernstein::new(d - 1);
+        let (n, j) = (data.rows, data.cols);
+        let mut a = vec![0.0; n * j * d];
+        let mut ad = vec![0.0; n * j * d];
+        let mut scratch = vec![0.0; d.saturating_sub(1).max(1)];
+        for r in 0..n {
+            for c in 0..j {
+                let x = scaler.scale(c, data.at(r, c));
+                let off = (r * j + c) * d;
+                basis.eval_into(x, &mut a[off..off + d]);
+                basis.deriv_into(x, &mut ad[off..off + d], &mut scratch);
+            }
+        }
+        Design { n, j, d, a, ad, scaler }
+    }
+
+    /// Basis row a_{ij} (length d).
+    #[inline]
+    pub fn a_row(&self, i: usize, j: usize) -> &[f64] {
+        let off = (i * self.j + j) * self.d;
+        &self.a[off..off + self.d]
+    }
+
+    /// Derivative row a'_{ij} (length d).
+    #[inline]
+    pub fn ad_row(&self, i: usize, j: usize) -> &[f64] {
+        let off = (i * self.j + j) * self.d;
+        &self.ad[off..off + self.d]
+    }
+
+    /// The stacked matrix Ab ∈ R^{n × dJ} with rows
+    /// b_i = (a_1(y_i1), …, a_J(y_iJ)) whose row leverage scores equal the
+    /// leverage scores of the paper's block matrix B (see DESIGN.md §2).
+    pub fn stacked(&self) -> Mat {
+        let dj = self.d * self.j;
+        let mut m = Mat::zeros(self.n, dj);
+        for i in 0..self.n {
+            let dst = m.row_mut(i);
+            let src = &self.a[i * dj..(i + 1) * dj];
+            dst.copy_from_slice(src);
+        }
+        m
+    }
+
+    /// All derivative points {a'_ij} as an (nJ × d) matrix — the input of
+    /// the convex-hull component.
+    pub fn deriv_points(&self) -> Mat {
+        Mat::from_vec(self.n * self.j, self.d, self.ad.clone())
+    }
+
+    /// Restrict to a subset of observations (coreset restriction).
+    pub fn select(&self, idx: &[usize]) -> Design {
+        let (j, d) = (self.j, self.d);
+        let stride = j * d;
+        let mut a = Vec::with_capacity(idx.len() * stride);
+        let mut ad = Vec::with_capacity(idx.len() * stride);
+        for &i in idx {
+            a.extend_from_slice(&self.a[i * stride..(i + 1) * stride]);
+            ad.extend_from_slice(&self.ad[i * stride..(i + 1) * stride]);
+        }
+        Design { n: idx.len(), j, d, a, ad, scaler: self.scaler.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn partition_of_unity() {
+        let b = Bernstein::new(6);
+        for &x in &[0.0, 0.1, 0.33, 0.5, 0.99, 1.0] {
+            let v = b.eval(x);
+            let s: f64 = v.iter().sum();
+            assert!((s - 1.0).abs() < 1e-12, "x={x} sum={s}");
+            assert!(v.iter().all(|&bi| bi >= -1e-15));
+        }
+    }
+
+    #[test]
+    fn endpoint_values() {
+        let b = Bernstein::new(5);
+        let v0 = b.eval(0.0);
+        let v1 = b.eval(1.0);
+        assert!((v0[0] - 1.0).abs() < 1e-12);
+        assert!(v0[1..].iter().all(|&x| x.abs() < 1e-12));
+        assert!((v1[5] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn derivative_matches_finite_difference() {
+        let b = Bernstein::new(6);
+        let h = 1e-6;
+        for &x in &[0.1, 0.37, 0.5, 0.81] {
+            let d = b.deriv(x);
+            let fp = b.eval(x + h);
+            let fm = b.eval(x - h);
+            for k in 0..b.dim() {
+                let fd = (fp[k] - fm[k]) / (2.0 * h);
+                assert!((d[k] - fd).abs() < 1e-6, "k={k} x={x}: {} vs {fd}", d[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn derivative_sums_to_zero() {
+        // d/dx Σ b_k = d/dx 1 = 0
+        let b = Bernstein::new(7);
+        for &x in &[0.2, 0.6, 0.9] {
+            let s: f64 = b.deriv(x).iter().sum();
+            assert!(s.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn monotone_coefficients_give_positive_derivative() {
+        let b = Bernstein::new(6);
+        let theta: Vec<f64> = (0..7).map(|k| -2.0 + 0.7 * k as f64).collect();
+        for i in 0..100 {
+            let x = i as f64 / 99.0;
+            let d = b.deriv(x);
+            let hd: f64 = d.iter().zip(&theta).map(|(a, t)| a * t).sum();
+            assert!(hd > 0.0, "x={x} hd={hd}");
+        }
+    }
+
+    #[test]
+    fn scaler_range_and_jacobian() {
+        let data = Mat::from_rows(&[vec![-5.0, 10.0], vec![5.0, 20.0], vec![0.0, 15.0]]);
+        let s = Scaler::fit(&data, 0.01);
+        for r in 0..3 {
+            for c in 0..2 {
+                let v = s.scale(c, data.at(r, c));
+                assert!((0.01..=0.99).contains(&v));
+            }
+        }
+        assert!((s.scale(0, -5.0) - 0.01).abs() < 1e-12);
+        assert!((s.scale(0, 5.0) - 0.99).abs() < 1e-12);
+        assert!((s.dscale(0) - 0.98 / 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn design_shapes_and_rows() {
+        let mut rng = Rng::new(10);
+        let data = Mat::from_vec(20, 3, (0..60).map(|_| rng.normal()).collect());
+        let dz = Design::build(&data, 5, 0.01);
+        assert_eq!(dz.a.len(), 20 * 3 * 5);
+        assert_eq!(dz.a_row(7, 2).len(), 5);
+        let stacked = dz.stacked();
+        assert_eq!((stacked.rows, stacked.cols), (20, 15));
+        // stacked row i is the concat of a_rows
+        for jj in 0..3 {
+            assert_eq!(&stacked.row(4)[jj * 5..(jj + 1) * 5], dz.a_row(4, jj));
+        }
+        let dp = dz.deriv_points();
+        assert_eq!((dp.rows, dp.cols), (60, 5));
+        let sel = dz.select(&[3, 19]);
+        assert_eq!(sel.n, 2);
+        assert_eq!(sel.a_row(1, 1), dz.a_row(19, 1));
+    }
+}

@@ -1,0 +1,179 @@
+//! Shared helpers for the `cargo bench` targets (hand-rolled harness —
+//! `criterion` is unavailable offline; see DESIGN.md §5).
+//!
+//! Scaling: benches honour `MCTM_BENCH_SCALE`:
+//!   * `fast` — smallest sizes (CI smoke)
+//!   * `paper` — the paper's full sizes (n=300k Covertype etc.)
+//!   * anything else / unset — `default`, sized for a small container
+//! Every bench prints the paper-style table AND writes CSV under
+//! `results/`.
+
+use crate::fit::FitOptions;
+use crate::util::{median, Stopwatch};
+use std::path::PathBuf;
+
+/// Bench scale knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Fast,
+    Default,
+    Paper,
+}
+
+impl Scale {
+    pub fn from_env() -> Scale {
+        match std::env::var("MCTM_BENCH_SCALE").as_deref() {
+            Ok("fast") => Scale::Fast,
+            Ok("paper") => Scale::Paper,
+            _ => Scale::Default,
+        }
+    }
+
+    /// Pick (fast, default, paper).
+    pub fn pick<T: Copy>(&self, fast: T, default: T, paper: T) -> T {
+        match self {
+            Scale::Fast => fast,
+            Scale::Default => default,
+            Scale::Paper => paper,
+        }
+    }
+}
+
+/// Standard fit options for benches (bounded iterations so a bench run
+/// has predictable duration).
+pub fn bench_fit_options(scale: Scale) -> FitOptions {
+    FitOptions {
+        max_iters: scale.pick(60, 200, 400),
+        ..Default::default()
+    }
+}
+
+/// Results directory.
+pub fn results_dir() -> PathBuf {
+    let p = PathBuf::from("results");
+    let _ = std::fs::create_dir_all(&p);
+    p
+}
+
+/// Median wall time (seconds) of `iters` runs of `f` after one warmup.
+pub fn time_median<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let sw = Stopwatch::start();
+        f();
+        times.push(sw.secs());
+    }
+    median(&times)
+}
+
+/// Pretty banner for bench output.
+pub fn banner(name: &str, detail: &str) {
+    println!("\n================================================================");
+    println!("BENCH {name} — {detail}");
+    println!("scale = {:?} (set MCTM_BENCH_SCALE=fast|paper to change)", Scale::from_env());
+    println!("================================================================");
+}
+
+/// Shared driver for the simulation tables (Tables 1/3 at k=30, Table 4
+/// at k=100): all 14 DGPs × {ℓ₂-hull, ℓ₂-only, uniform}.
+pub fn run_sim_table(title: &str, k: usize, csv: &str) {
+    use crate::coordinator::experiment::{summarize, TableRunner};
+    use crate::coreset::Method;
+    use crate::data::dgp::Dgp;
+    use crate::util::report::Table;
+    use crate::util::rng::Rng;
+
+    let scale = Scale::from_env();
+    let n = scale.pick(1_000, 10_000, 10_000);
+    let reps = scale.pick(2, 5, 10);
+    let dgps: Vec<Dgp> = if scale == Scale::Fast {
+        Dgp::table1().to_vec()
+    } else {
+        Dgp::all().to_vec()
+    };
+    banner(title, &format!("n={n}, k={k}, reps={reps}, {} DGPs", dgps.len()));
+
+    let mut table = Table::new(
+        title,
+        &["DGP", "method", "theta L2", "lambda err", "LR", "impr(%)", "time(s)"],
+    );
+    for dgp in dgps {
+        let mut rng = Rng::new(0xD6 ^ dgp.name().len() as u64);
+        let data = dgp.generate(n, &mut rng);
+        let runner = TableRunner::new(&data, 7, bench_fit_options(scale), 0xBEEF);
+        let hull = runner.run(Method::L2Hull, k, reps);
+        let l2 = runner.run(Method::L2Only, k, reps);
+        let unif = runner.run(Method::Uniform, k, reps);
+        for stats in [&hull, &l2, &unif] {
+            let mut row = vec![dgp.name().to_string()];
+            row.extend(summarize(stats, &unif));
+            table.row(row);
+        }
+        println!("  done {}", dgp.name());
+    }
+    table.emit(Some(&results_dir().join(csv)));
+}
+
+/// Shared driver for the equity tables (Tables 5/6): k sweep with all
+/// three headline methods.
+pub fn run_equity_table(title: &str, n_stocks: usize, csv: &str) {
+    use crate::coordinator::experiment::{summarize, TableRunner};
+    use crate::coreset::Method;
+    use crate::data::equity;
+    use crate::util::report::Table;
+    use crate::util::rng::Rng;
+
+    let scale = Scale::from_env();
+    let n = scale.pick(1_000, 10_000, 10_000);
+    let reps = scale.pick(2, 3, 5);
+    let ks: Vec<usize> = match scale {
+        Scale::Fast => vec![50, 100],
+        _ => vec![50, 100, 200, 300],
+    };
+    banner(title, &format!("{n_stocks} stocks, n={n} days, reps={reps}"));
+
+    let mut rng = Rng::new(1985);
+    let data = equity::generate(n, n_stocks, &mut rng);
+    let runner = TableRunner::new(&data, 7, bench_fit_options(scale), 2025);
+    println!(
+        "  full fit: nll={:.2} iters={} time={:.1}s",
+        runner.full.fit.nll, runner.full.fit.iters, runner.full.seconds
+    );
+    let mut table = Table::new(
+        title,
+        &["k", "method", "theta L2", "lambda err", "LR", "impr(%)", "time(s)"],
+    );
+    for &k in &ks {
+        let hull = runner.run(Method::L2Hull, k, reps);
+        let l2 = runner.run(Method::L2Only, k, reps);
+        let unif = runner.run(Method::Uniform, k, reps);
+        for stats in [&hull, &l2, &unif] {
+            let mut row = vec![format!("{k}")];
+            row.extend(summarize(stats, &unif));
+            table.row(row);
+        }
+        println!("  done k={k}");
+    }
+    table.emit(Some(&results_dir().join(csv)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_pick() {
+        assert_eq!(Scale::Fast.pick(1, 2, 3), 1);
+        assert_eq!(Scale::Default.pick(1, 2, 3), 2);
+        assert_eq!(Scale::Paper.pick(1, 2, 3), 3);
+    }
+
+    #[test]
+    fn time_median_positive() {
+        let t = time_median(3, || {
+            std::hint::black_box((0..1000).sum::<usize>());
+        });
+        assert!(t >= 0.0);
+    }
+}

@@ -1,0 +1,170 @@
+//! Experiment configuration: defaults + a minimal `key = value` config
+//! file format + CLI-style overrides. (No external TOML crate offline;
+//! the format is the flat subset of TOML the launcher needs.)
+
+use crate::coreset::Method;
+use crate::fit::{FitOptions, OptimizerKind};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Everything the launcher needs to run one experiment.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// dataset / DGP name (see data::dgp::Dgp::name or "covertype" /
+    /// "stocks10" / "stocks20")
+    pub dataset: String,
+    /// number of observations to generate
+    pub n: usize,
+    /// coreset size
+    pub k: usize,
+    /// sampling method
+    pub method: Method,
+    /// Bernstein basis size d (degree d−1)
+    pub d: usize,
+    /// repetitions (for mean ± std reporting)
+    pub reps: usize,
+    /// RNG seed
+    pub seed: u64,
+    /// fitting backend: "native" or "xla"
+    pub backend: String,
+    /// artifact directory for the xla backend
+    pub artifacts: PathBuf,
+    /// optimizer settings
+    pub fit: FitOptions,
+    /// output directory for CSV/JSON results
+    pub out_dir: PathBuf,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            dataset: "bivariate-normal".into(),
+            n: 10_000,
+            k: 30,
+            method: Method::L2Hull,
+            d: 7,
+            reps: 10,
+            seed: 42,
+            backend: "native".into(),
+            artifacts: PathBuf::from("artifacts"),
+            fit: FitOptions::default(),
+            out_dir: PathBuf::from("results"),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse a `key = value` config file (lines starting with `#` are
+    /// comments), then apply `overrides` (same syntax, e.g. from CLI
+    /// `--set k=100`).
+    pub fn load(path: Option<&Path>, overrides: &[String]) -> Result<Self> {
+        let mut cfg = ExperimentConfig::default();
+        let mut kv: HashMap<String, String> = HashMap::new();
+        if let Some(p) = path {
+            let text = std::fs::read_to_string(p)
+                .map_err(|e| anyhow!("reading config {}: {e}", p.display()))?;
+            parse_kv(&text, &mut kv)?;
+        }
+        for ov in overrides {
+            parse_kv(ov, &mut kv)?;
+        }
+        for (key, value) in kv {
+            cfg.set(&key, &value)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply one key.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "dataset" => self.dataset = value.to_string(),
+            "n" => self.n = value.parse()?,
+            "k" => self.k = value.parse()?,
+            "d" => self.d = value.parse()?,
+            "reps" => self.reps = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            "backend" => {
+                if value != "native" && value != "xla" {
+                    return Err(anyhow!("backend must be native|xla, got {value}"));
+                }
+                self.backend = value.to_string();
+            }
+            "artifacts" => self.artifacts = PathBuf::from(value),
+            "out_dir" => self.out_dir = PathBuf::from(value),
+            "method" => {
+                self.method = match value {
+                    "uniform" => Method::Uniform,
+                    "l2-only" => Method::L2Only,
+                    "l2-hull" => Method::L2Hull,
+                    "ridge-lss" => Method::RidgeLss,
+                    "root-l2" => Method::RootL2,
+                    other => return Err(anyhow!("unknown method {other}")),
+                };
+            }
+            "optimizer" => {
+                self.fit.optimizer = match value {
+                    "adam" => OptimizerKind::Adam,
+                    "lbfgs" => OptimizerKind::Lbfgs,
+                    other => return Err(anyhow!("unknown optimizer {other}")),
+                };
+            }
+            "max_iters" => self.fit.max_iters = value.parse()?,
+            "tol" => self.fit.tol = value.parse()?,
+            "learning_rate" => self.fit.learning_rate = value.parse()?,
+            other => return Err(anyhow!("unknown config key {other}")),
+        }
+        Ok(())
+    }
+}
+
+fn parse_kv(text: &str, kv: &mut HashMap<String, String>) -> Result<()> {
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("expected key = value, got `{line}`"))?;
+        kv.insert(k.trim().to_string(), v.trim().trim_matches('"').to_string());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_overrides() {
+        let cfg = ExperimentConfig::load(
+            None,
+            &["k = 100".into(), "method = uniform".into(), "backend = xla".into()],
+        )
+        .unwrap();
+        assert_eq!(cfg.k, 100);
+        assert_eq!(cfg.method, Method::Uniform);
+        assert_eq!(cfg.backend, "xla");
+        assert_eq!(cfg.n, 10_000); // default preserved
+    }
+
+    #[test]
+    fn file_then_override_precedence() {
+        let dir = std::env::temp_dir().join("mctm_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("exp.conf");
+        std::fs::write(&p, "# comment\nn = 500\nk = 20\noptimizer = adam\n").unwrap();
+        let cfg =
+            ExperimentConfig::load(Some(&p), &["k = 40".into()]).unwrap();
+        assert_eq!(cfg.n, 500);
+        assert_eq!(cfg.k, 40); // override wins
+        assert_eq!(cfg.fit.optimizer, crate::fit::OptimizerKind::Adam);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        assert!(ExperimentConfig::load(None, &["bogus = 1".into()]).is_err());
+        assert!(ExperimentConfig::load(None, &["method = nope".into()]).is_err());
+    }
+}

@@ -1,0 +1,209 @@
+//! The experiment harness: full-data baseline fit, per-method coreset
+//! runs with the paper's metrics (ϑ-ℓ₂, λ error, log-likelihood ratio,
+//! relative improvement, sampling/optimization time split), aggregated
+//! as mean ± std over repetitions — the machinery behind Tables 1–6 and
+//! Figures 1, 7–13.
+
+use crate::basis::Design;
+use crate::coreset::{build_coreset, Method};
+use crate::fit::{fit_native, FitOptions, FitResult};
+use crate::linalg::Mat;
+use crate::mctm::{self, lambda_error, loglik_ratio, theta_l2, ModelSpec};
+use crate::util::rng::Rng;
+use crate::util::{fmt_ms, mean, Stopwatch};
+
+/// The cached full-data baseline.
+pub struct FullFit {
+    pub spec: ModelSpec,
+    pub fit: FitResult,
+    pub seconds: f64,
+}
+
+/// Fit the full data (the benchmark row of Table 2).
+pub fn full_fit(design: &Design, spec: ModelSpec, opts: &FitOptions) -> FullFit {
+    let sw = Stopwatch::start();
+    let fit = fit_native(spec, design, Vec::new(), opts);
+    FullFit { spec, fit, seconds: sw.secs() }
+}
+
+/// Raw per-repetition results for one (method, k).
+#[derive(Clone, Debug, Default)]
+pub struct MethodStats {
+    pub method_name: &'static str,
+    pub k: usize,
+    pub theta_l2: Vec<f64>,
+    pub lambda_err: Vec<f64>,
+    pub lr: Vec<f64>,
+    pub sample_secs: Vec<f64>,
+    pub fit_secs: Vec<f64>,
+    pub n_hull: Vec<f64>,
+}
+
+impl MethodStats {
+    pub fn total_secs(&self) -> Vec<f64> {
+        self.sample_secs
+            .iter()
+            .zip(&self.fit_secs)
+            .map(|(a, b)| a + b)
+            .collect()
+    }
+
+    /// (mean ϑ-ℓ₂, mean λ-err, mean LR) triple for relative improvement.
+    pub fn triple(&self) -> (f64, f64, f64) {
+        (mean(&self.theta_l2), mean(&self.lambda_err), mean(&self.lr))
+    }
+}
+
+/// Run `reps` repetitions of: build coreset → fit on coreset → compare
+/// against the full fit on the full data.
+pub fn run_method(
+    design: &Design,
+    full: &FullFit,
+    method: Method,
+    k: usize,
+    reps: usize,
+    seed: u64,
+    opts: &FitOptions,
+) -> MethodStats {
+    let mut stats = MethodStats {
+        method_name: method.name(),
+        k,
+        ..Default::default()
+    };
+    for rep in 0..reps {
+        let mut rng = Rng::new(seed ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(rep as u64 + 1)));
+        let sw = Stopwatch::start();
+        let cs = build_coreset(design, method, k, &mut rng);
+        let sample_secs = sw.secs();
+
+        let sub = design.select(&cs.indices);
+        let sw = Stopwatch::start();
+        let fit = fit_native(full.spec, &sub, cs.weights.clone(), opts);
+        let fit_secs = sw.secs();
+
+        // metrics vs the full fit, NLL of coreset params ON FULL DATA
+        let nll_on_full = mctm::nll(design, &[], &fit.params);
+        stats
+            .lr
+            .push(loglik_ratio(nll_on_full, full.fit.nll, design.n, design.j));
+        stats.theta_l2.push(theta_l2(&fit.params, &full.fit.params));
+        stats
+            .lambda_err
+            .push(lambda_error(&fit.params, &full.fit.params));
+        stats.sample_secs.push(sample_secs);
+        stats.fit_secs.push(fit_secs);
+        stats.n_hull.push(cs.n_hull as f64);
+    }
+    stats
+}
+
+/// One formatted table row: method, ϑ-ℓ₂, λ err, LR, rel.impr, time.
+pub fn summarize(stats: &MethodStats, baseline: &MethodStats) -> Vec<String> {
+    let imp = mctm::relative_improvement(stats.triple(), baseline.triple());
+    vec![
+        stats.method_name.to_string(),
+        fmt_ms(&stats.theta_l2),
+        fmt_ms(&stats.lambda_err),
+        fmt_ms(&stats.lr),
+        if std::ptr::eq(stats, baseline) {
+            "baseline".to_string()
+        } else {
+            format!("{imp:.1}")
+        },
+        fmt_ms(&stats.total_secs()),
+    ]
+}
+
+/// Build the design once from raw data (shared scaling for all methods).
+pub fn design_of(data: &Mat, d: usize) -> Design {
+    Design::build(data, d, 0.01)
+}
+
+/// Convenience wrapper: everything Table-3-style benches need for one
+/// dataset: full fit once, then each method at one k.
+pub struct TableRunner {
+    pub design: Design,
+    pub spec: ModelSpec,
+    pub full: FullFit,
+    pub opts: FitOptions,
+    pub seed: u64,
+}
+
+impl TableRunner {
+    pub fn new(data: &Mat, d: usize, opts: FitOptions, seed: u64) -> Self {
+        let design = design_of(data, d);
+        let spec = ModelSpec::new(data.cols, d);
+        let full = full_fit(&design, spec, &opts);
+        TableRunner { design, spec, full, opts, seed }
+    }
+
+    pub fn run(&self, method: Method, k: usize, reps: usize) -> MethodStats {
+        run_method(&self.design, &self.full, method, k, reps, self.seed, &self.opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dgp::Dgp;
+
+    fn quick_opts() -> FitOptions {
+        FitOptions { max_iters: 60, ..Default::default() }
+    }
+
+    #[test]
+    fn full_fit_beats_init() {
+        let mut rng = Rng::new(1);
+        let data = Dgp::BivariateNormal.generate(400, &mut rng);
+        let design = design_of(&data, 5);
+        let spec = ModelSpec::new(2, 5);
+        let init_nll = mctm::nll(&design, &[], &mctm::Params::init(spec));
+        let full = full_fit(&design, spec, &quick_opts());
+        assert!(full.fit.nll < init_nll, "{} !< {init_nll}", full.fit.nll);
+    }
+
+    #[test]
+    fn full_fit_recovers_correlation() {
+        // ρ = 0.7 Gaussian: optimal λ_21 ≈ −ρ/√(1−ρ²)·(σ ratio)… the sign
+        // must be negative (z₂ = h̃₂ + λ h̃₁ whitens positive dependence)
+        let mut rng = Rng::new(2);
+        let data = Dgp::BivariateNormal.generate(3000, &mut rng);
+        let design = design_of(&data, 6);
+        let spec = ModelSpec::new(2, 6);
+        let full = full_fit(&design, spec, &FitOptions::default());
+        let lam = full.fit.params.lambda(1, 0);
+        assert!(lam < -0.4, "λ₂₁ = {lam} should be clearly negative");
+    }
+
+    #[test]
+    fn coreset_run_produces_metrics() {
+        let mut rng = Rng::new(3);
+        let data = Dgp::NormalMixture.generate(800, &mut rng);
+        let runner = TableRunner::new(&data, 5, quick_opts(), 7);
+        let stats = runner.run(Method::L2Hull, 40, 3);
+        assert_eq!(stats.lr.len(), 3);
+        assert!(stats.lr.iter().all(|&x| x.is_finite() && x > 0.9));
+        assert!(stats.theta_l2.iter().all(|&x| x.is_finite() && x >= 0.0));
+        // trivial coreset of everything reproduces the full fit ⇒ LR ≈ 1
+        let all = runner.run(Method::Uniform, 800, 1);
+        assert!(
+            (all.lr[0] - 1.0).abs() < 0.02,
+            "identity coreset LR {}",
+            all.lr[0]
+        );
+    }
+
+    #[test]
+    fn summary_rows_shape() {
+        let mut rng = Rng::new(4);
+        let data = Dgp::BivariateNormal.generate(500, &mut rng);
+        let runner = TableRunner::new(&data, 5, quick_opts(), 9);
+        let a = runner.run(Method::L2Hull, 30, 2);
+        let b = runner.run(Method::Uniform, 30, 2);
+        let row = summarize(&a, &b);
+        assert_eq!(row.len(), 6);
+        assert_eq!(row[0], "l2-hull");
+        let base_row = summarize(&b, &b);
+        assert_eq!(base_row[4], "baseline");
+    }
+}

@@ -1,0 +1,12 @@
+//! L3 coordinator: the experiment harness behind every paper table and
+//! figure, the streaming coreset pipeline (bounded-queue backpressure +
+//! Merge & Reduce), the configuration system and the CLI.
+
+pub mod cli;
+pub mod config;
+pub mod experiment;
+pub mod pipeline;
+
+pub use config::ExperimentConfig;
+pub use experiment::{run_method, summarize, FullFit, MethodStats};
+pub use pipeline::{StreamingPipeline, StreamStats};

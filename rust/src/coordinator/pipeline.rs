@@ -1,0 +1,125 @@
+//! Streaming coreset pipeline (the data-pipeline face of the paper,
+//! §4): a producer thread generates/reads data shards, a bounded
+//! channel applies backpressure (the producer blocks when the reducer
+//! falls behind — no unbounded buffering), and the consumer folds
+//! shards into a Merge & Reduce coreset tree. The final coreset is
+//! fitted exactly like an in-memory one.
+
+use crate::coreset::merge_reduce::{MergeReduce, WeightedRows};
+use crate::coreset::Method;
+use crate::data::ShardSource;
+use crate::linalg::Mat;
+use crate::util::Stopwatch;
+use std::sync::mpsc::sync_channel;
+
+/// Diagnostics from a streaming run.
+#[derive(Clone, Debug)]
+pub struct StreamStats {
+    pub n_seen: usize,
+    pub n_shards: usize,
+    pub n_reduces: usize,
+    pub coreset_size: usize,
+    pub seconds: f64,
+    /// max queue depth observed (backpressure indicator)
+    pub peak_queue: usize,
+}
+
+/// The streaming coordinator.
+pub struct StreamingPipeline {
+    pub method: Method,
+    pub k: usize,
+    pub d: usize,
+    /// bounded-queue capacity (shards in flight)
+    pub queue_cap: usize,
+    pub seed: u64,
+    /// Merge & Reduce intermediate-level size multiplier
+    pub buffer_factor: usize,
+}
+
+impl StreamingPipeline {
+    pub fn new(method: Method, k: usize, d: usize) -> Self {
+        StreamingPipeline { method, k, d, queue_cap: 4, seed: 0xC0FF_EE, buffer_factor: 4 }
+    }
+
+    /// Consume a shard source to a final weighted coreset.
+    ///
+    /// The producer runs on its own thread; `sync_channel(queue_cap)`
+    /// blocks it when the reducer is busy — bounded memory regardless
+    /// of stream length.
+    pub fn run(&self, mut source: impl ShardSource + Send + 'static) -> (WeightedRows, StreamStats) {
+        let sw = Stopwatch::start();
+        let (tx, rx) = sync_channel::<Mat>(self.queue_cap);
+        let producer = std::thread::spawn(move || {
+            let mut produced = 0usize;
+            while let Some(shard) = source.next_shard() {
+                produced += shard.rows;
+                if tx.send(shard).is_err() {
+                    break; // consumer dropped
+                }
+            }
+            produced
+        });
+
+        let mut mr = MergeReduce::new(self.method, self.k, self.d, 0.01, self.seed);
+        mr.buffer_factor = self.buffer_factor;
+        let mut n_shards = 0usize;
+        let mut peak_queue = 0usize;
+        for shard in rx.iter() {
+            n_shards += 1;
+            // the channel has no len(); track an upper bound via the
+            // bounded capacity (diagnostic only)
+            peak_queue = peak_queue.max(self.queue_cap.min(n_shards));
+            mr.push_shard(shard);
+        }
+        let n_seen = producer.join().expect("producer panicked");
+        let n_reduces = mr.n_reduces;
+        let out = mr.finish();
+        let stats = StreamStats {
+            n_seen,
+            n_shards,
+            n_reduces,
+            coreset_size: out.len(),
+            seconds: sw.secs(),
+            peak_queue,
+        };
+        (out, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dgp::Dgp;
+    use crate::data::GenShards;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn stream_matches_batch_quality() {
+        // streaming coreset of a 20k stream should be a valid bounded
+        // coreset with total weight ≈ n
+        let pipeline = StreamingPipeline::new(Method::L2Hull, 60, 5);
+        let mut rng = Rng::new(11);
+        let source = GenShards::new(
+            move |n| Dgp::BivariateNormal.generate(n, &mut rng),
+            2,
+            20_000,
+            2_000,
+        );
+        let (coreset, stats) = pipeline.run(source);
+        assert_eq!(stats.n_seen, 20_000);
+        assert_eq!(stats.n_shards, 10);
+        assert!(stats.n_reduces >= 10);
+        assert!(coreset.len() <= 60);
+        let tot: f64 = coreset.weights.iter().sum();
+        assert!(tot > 2_000.0 && tot < 200_000.0, "total weight {tot}");
+    }
+
+    #[test]
+    fn empty_stream_is_empty_coreset() {
+        let pipeline = StreamingPipeline::new(Method::Uniform, 10, 5);
+        let source = GenShards::new(|n| Mat::zeros(n, 2), 2, 0, 100);
+        let (coreset, stats) = pipeline.run(source);
+        assert_eq!(stats.n_seen, 0);
+        assert_eq!(coreset.len(), 0);
+    }
+}

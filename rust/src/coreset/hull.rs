@@ -1,0 +1,416 @@
+//! Sparse convex-hull approximation — paper Algorithm 2 (Blum,
+//! Har-Peled & Raichel 2019, "sparse approximation via generating point
+//! sets") over the derivative points {a'_ij} ⊂ R^d.
+//!
+//! Role in the coreset (Lemma 2.3 / Theorem 2.4): the negative-log part
+//! f₃ blows up where ⟨ϑ_j, a'⟩ → 0; adding the extreme points of the
+//! derivative cloud keeps every direction's minimum inner product
+//! represented in the coreset, so minimizers stay inside D(η).
+//!
+//! Two pieces:
+//!  * `dist_to_hull` — the paper's inner loop: Frank–Wolfe-style
+//!    projection of a query onto conv(S) (iteratively project onto the
+//!    segment towards the extremal point in the residual direction).
+//!  * `select_hull_points` — greedy generating-set construction: seed
+//!    with the two/three-point initialization of Algorithm 2, then
+//!    repeatedly add the candidate farthest from the current approximate
+//!    hull, until k₂ points (or the hull error drops below tol).
+//!
+//! For large n the candidate set is pre-filtered to directional support
+//! points (extremal in R random directions) — only possible hull
+//! vertices survive, making selection O(R·n) instead of O(k₂·n·M·|S|).
+//! This is the η-kernel style mildness assumption discussed in §4.
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Frank–Wolfe iterations for a hull-distance query (the paper's
+/// M = O(1/ε²); 64 gives ε ≈ 0.125 relative which is plenty for greedy
+/// *selection* where only the argmax matters).
+const FW_ITERS: usize = 64;
+
+/// Squared distance of `q` to conv of the rows of `points` restricted to
+/// `hull_idx`, via the Algorithm-2 projection loop.
+pub fn dist_to_hull(points: &Mat, hull_idx: &[usize], q: &[f64]) -> f64 {
+    debug_assert!(!hull_idx.is_empty());
+    let d = points.cols;
+    // t₀ ← closest hull point to q
+    let mut t = {
+        let mut best = f64::INFINITY;
+        let mut best_row = hull_idx[0];
+        for &i in hull_idx {
+            let dist = sq_dist(points.row(i), q);
+            if dist < best {
+                best = dist;
+                best_row = i;
+            }
+        }
+        points.row(best_row).to_vec()
+    };
+    let mut v = vec![0.0; d];
+    for _ in 0..FW_ITERS {
+        // v ← q − t; p ← extremal hull point in direction v
+        for k in 0..d {
+            v[k] = q[k] - t[k];
+        }
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 < 1e-24 {
+            return 0.0;
+        }
+        let mut best_dot = f64::NEG_INFINITY;
+        let mut best_row = hull_idx[0];
+        for &i in hull_idx {
+            let dot = dot(points.row(i), &v);
+            if dot > best_dot {
+                best_dot = dot;
+                best_row = i;
+            }
+        }
+        let p = points.row(best_row);
+        // if p does not improve beyond t in direction v, t is optimal
+        let t_dot = dot(&t, &v);
+        if best_dot - t_dot <= 1e-14 * (1.0 + t_dot.abs()) {
+            break;
+        }
+        // project q onto segment [t, p]
+        let mut tp_norm2 = 0.0;
+        let mut qt_dot_tp = 0.0;
+        for k in 0..d {
+            let tp = p[k] - t[k];
+            tp_norm2 += tp * tp;
+            qt_dot_tp += (q[k] - t[k]) * tp;
+        }
+        if tp_norm2 < 1e-300 {
+            break;
+        }
+        let alpha = (qt_dot_tp / tp_norm2).clamp(0.0, 1.0);
+        for k in 0..d {
+            t[k] += alpha * (p[k] - t[k]);
+        }
+        if alpha == 0.0 {
+            break;
+        }
+    }
+    sq_dist(&t, q)
+}
+
+#[inline]
+fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+#[inline]
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Directional support-point prefilter: the extremal row in each of
+/// `n_dirs` random directions (plus ± coordinate directions). Every
+/// returned index is a vertex of conv(points); for "mild" data this
+/// covers the hull (DESIGN.md §2, paper §4 "mildness").
+pub fn support_candidates(points: &Mat, n_dirs: usize, rng: &mut Rng) -> Vec<usize> {
+    let d = points.cols;
+    let mut dirs: Vec<Vec<f64>> = Vec::with_capacity(n_dirs + 2 * d);
+    for k in 0..d {
+        let mut e = vec![0.0; d];
+        e[k] = 1.0;
+        dirs.push(e.clone());
+        e[k] = -1.0;
+        dirs.push(e);
+    }
+    for _ in 0..n_dirs {
+        let mut v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let n = v.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-300);
+        v.iter_mut().for_each(|x| *x /= n);
+        dirs.push(v);
+    }
+    // one pass over the points with all directions resident in cache,
+    // written as an axpy over the direction axis so LLVM vectorizes the
+    // inner loop (the naive direction-outer order re-streams the whole
+    // point set per direction — 270× the memory traffic; see
+    // EXPERIMENTS.md §Perf L3-c).
+    let ndirs = dirs.len();
+    // dirs transposed: dirs_t[c][k] contiguous over k
+    let mut dirs_t = vec![0.0f64; d * ndirs];
+    for (k, dir) in dirs.iter().enumerate() {
+        for c in 0..d {
+            dirs_t[c * ndirs + k] = dir[c];
+        }
+    }
+    let mut best_val = vec![f64::NEG_INFINITY; ndirs];
+    let mut best_row = vec![0usize; ndirs];
+    let mut dp = vec![0.0f64; ndirs];
+    for i in 0..points.rows {
+        let row = points.row(i);
+        dp.iter_mut().for_each(|x| *x = 0.0);
+        for c in 0..d {
+            let rc = row[c];
+            let dt = &dirs_t[c * ndirs..(c + 1) * ndirs];
+            for k in 0..ndirs {
+                dp[k] += rc * dt[k];
+            }
+        }
+        for k in 0..ndirs {
+            if dp[k] > best_val[k] {
+                best_val[k] = dp[k];
+                best_row[k] = i;
+            }
+        }
+    }
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::new();
+    for &row in &best_row {
+        if seen.insert(row) {
+            out.push(row);
+        }
+    }
+    out
+}
+
+/// Greedy sparse hull selection: returns up to `k` row indices of
+/// `points` approximating its convex hull (Algorithm 2 outer loop).
+pub fn select_hull_points(points: &Mat, k: usize, rng: &mut Rng) -> Vec<usize> {
+    let n = points.rows;
+    if n == 0 || k == 0 {
+        return Vec::new();
+    }
+    if k >= n {
+        return (0..n).collect();
+    }
+
+    // prefilter candidates for large inputs
+    let candidates: Vec<usize> = if n > 4096 {
+        support_candidates(points, 256, rng)
+    } else {
+        (0..n).collect()
+    };
+
+    // initialization per Algorithm 2: random a₀; a₁ farthest from a₀;
+    // a₂ farthest from the segment (≈ hull of {a₀,a₁}).
+    let a0 = candidates[rng.usize(candidates.len())];
+    let mut hull = vec![a0];
+
+    // LAZY GREEDY (see EXPERIMENTS.md §Perf L3-c): dist_to_hull(q, S)
+    // is non-increasing as S grows, so cached distances are upper
+    // bounds. Keep a max-heap of (cached dist, candidate); pop, refresh
+    // against the CURRENT hull, and accept only if the refreshed value
+    // still dominates the next-best upper bound — the classic lazy
+    // evaluation trick, ~8× fewer projection calls than re-scoring
+    // every candidate per round.
+    let mut heap: std::collections::BinaryHeap<HeapItem> = candidates
+        .iter()
+        .filter(|&&c| c != a0)
+        .map(|&c| HeapItem {
+            dist: dist_to_hull(points, &hull, points.row(c)),
+            idx: c,
+        })
+        .collect();
+
+    let target = k.min(candidates.len());
+    while hull.len() < target {
+        let mut accepted = None;
+        while let Some(top) = heap.pop() {
+            let fresh = dist_to_hull(points, &hull, points.row(top.idx));
+            let next_bound = heap.peek().map(|h| h.dist).unwrap_or(f64::NEG_INFINITY);
+            if fresh >= next_bound - 1e-18 {
+                accepted = Some((top.idx, fresh));
+                break;
+            }
+            heap.push(HeapItem { dist: fresh, idx: top.idx });
+        }
+        match accepted {
+            Some((idx, dist)) if dist > 1e-20 => hull.push(idx),
+            _ => break, // hull fully captured (or no candidates left)
+        }
+    }
+    hull
+}
+
+/// Max-heap item for the lazy-greedy selection.
+struct HeapItem {
+    dist: f64,
+    idx: usize,
+}
+
+impl PartialEq for HeapItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.dist == other.dist
+    }
+}
+impl Eq for HeapItem {}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.dist
+            .partial_cmp(&other.dist)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+/// Exact 2-D convex hull (Andrew's monotone chain) — used in tests as an
+/// oracle for the greedy approximation.
+pub fn exact_hull_2d(points: &Mat) -> Vec<usize> {
+    assert_eq!(points.cols, 2);
+    let n = points.rows;
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| {
+        let (pa, pb) = (points.row(a), points.row(b));
+        pa[0].partial_cmp(&pb[0])
+            .unwrap()
+            .then(pa[1].partial_cmp(&pb[1]).unwrap())
+    });
+    let cross = |o: &[f64], a: &[f64], b: &[f64]| -> f64 {
+        (a[0] - o[0]) * (b[1] - o[1]) - (a[1] - o[1]) * (b[0] - o[0])
+    };
+    let mut hull: Vec<usize> = Vec::new();
+    // lower
+    for &i in &idx {
+        while hull.len() >= 2 {
+            let o = points.row(hull[hull.len() - 2]);
+            let a = points.row(hull[hull.len() - 1]);
+            if cross(o, a, points.row(i)) <= 0.0 {
+                hull.pop();
+            } else {
+                break;
+            }
+        }
+        hull.push(i);
+    }
+    // upper
+    let lower_len = hull.len() + 1;
+    for &i in idx.iter().rev() {
+        while hull.len() >= lower_len {
+            let o = points.row(hull[hull.len() - 2]);
+            let a = points.row(hull[hull.len() - 1]);
+            if cross(o, a, points.row(i)) <= 0.0 {
+                hull.pop();
+            } else {
+                break;
+            }
+        }
+        hull.push(i);
+    }
+    hull.pop();
+    hull.sort_unstable();
+    hull.dedup();
+    hull
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn square_with_interior() -> Mat {
+        // 4 corners + interior points
+        Mat::from_rows(&[
+            vec![0.0, 0.0],
+            vec![1.0, 0.0],
+            vec![1.0, 1.0],
+            vec![0.0, 1.0],
+            vec![0.5, 0.5],
+            vec![0.3, 0.7],
+            vec![0.6, 0.2],
+        ])
+    }
+
+    #[test]
+    fn dist_zero_for_hull_member() {
+        let pts = square_with_interior();
+        let hull = vec![0, 1, 2, 3];
+        for &i in &hull {
+            assert!(dist_to_hull(&pts, &hull, pts.row(i)) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dist_zero_for_interior_point() {
+        let pts = square_with_interior();
+        let hull = vec![0, 1, 2, 3];
+        assert!(dist_to_hull(&pts, &hull, &[0.5, 0.5]) < 1e-6);
+        assert!(dist_to_hull(&pts, &hull, &[0.9, 0.1]) < 1e-6);
+    }
+
+    #[test]
+    fn dist_positive_for_exterior_point() {
+        let pts = square_with_interior();
+        let hull = vec![0, 1, 2, 3];
+        let d = dist_to_hull(&pts, &hull, &[2.0, 0.5]);
+        assert!((d - 1.0).abs() < 1e-6, "sq dist {d}");
+    }
+
+    #[test]
+    fn greedy_recovers_square_corners() {
+        let pts = square_with_interior();
+        let mut rng = Rng::new(31);
+        let sel = select_hull_points(&pts, 4, &mut rng);
+        let mut sorted = sel.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3], "got {sel:?}");
+    }
+
+    #[test]
+    fn greedy_covers_exact_hull_2d() {
+        let mut rng = Rng::new(33);
+        let mut rows = Vec::new();
+        for _ in 0..300 {
+            rows.push(vec![rng.normal(), rng.normal()]);
+        }
+        let pts = Mat::from_rows(&rows);
+        let exact = exact_hull_2d(&pts);
+        let sel = select_hull_points(&pts, exact.len() + 5, &mut rng);
+        // every exact-hull vertex must be within tiny distance of the
+        // selected hull
+        for &v in &exact {
+            let d = dist_to_hull(&pts, &sel, pts.row(v));
+            assert!(d < 0.05, "vertex {v} distance {d}");
+        }
+    }
+
+    #[test]
+    fn support_candidates_are_vertices() {
+        let mut rng = Rng::new(35);
+        let mut rows = Vec::new();
+        for _ in 0..500 {
+            rows.push(vec![rng.normal(), rng.normal()]);
+        }
+        let pts = Mat::from_rows(&rows);
+        let exact: std::collections::HashSet<usize> =
+            exact_hull_2d(&pts).into_iter().collect();
+        let cands = support_candidates(&pts, 64, &mut rng);
+        for &c in &cands {
+            assert!(exact.contains(&c), "candidate {c} not a hull vertex");
+        }
+    }
+
+    #[test]
+    fn exact_hull_square() {
+        let pts = square_with_interior();
+        assert_eq!(exact_hull_2d(&pts), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn select_handles_degenerate_inputs() {
+        // all-identical points
+        let rows: Vec<Vec<f64>> = (0..10).map(|_| vec![1.0, 1.0]).collect();
+        let pts = Mat::from_rows(&rows);
+        let mut rng = Rng::new(36);
+        let sel = select_hull_points(&pts, 5, &mut rng);
+        assert!(!sel.is_empty() && sel.len() <= 5);
+        // k ≥ n returns everything
+        let pts2 = Mat::from_rows(&[vec![0.0, 0.0], vec![1.0, 0.0]]);
+        assert_eq!(select_hull_points(&pts2, 10, &mut rng).len(), 2);
+    }
+}

@@ -1,0 +1,173 @@
+//! ℓ₂ leverage scores for the MCTM coreset (paper Lemma 2.1).
+//!
+//! The paper samples rows of the block matrix B ∈ R^{nJ×dJ²}. Each of
+//! B's column blocks is touched by exactly one row per observation, with
+//! content b_i = (a_1(y_i1), …, a_J(y_iJ)); hence the leverage score of
+//! B's row (i, j) equals the leverage score of row i of the stacked
+//! matrix Ab ∈ R^{n×dJ} (proof in DESIGN.md §2). That reduction makes
+//! the computation O(n·(dJ)² + (dJ)³) via Gram + Cholesky instead of
+//! operating on the dJ²-wide block matrix.
+
+use crate::basis::Design;
+use crate::linalg::{Cholesky, LinalgError, Mat};
+
+/// Relative ridge added to the Gram matrix before factorization. Keeps
+/// rank-deficient designs (piecewise/circular DGPs can produce nearly
+/// collinear basis columns) factorizable; perturbation is ~1e-10·mean
+/// eigenvalue, far below sampling noise.
+const GRAM_RIDGE_REL: f64 = 1e-10;
+
+/// Leverage scores u_i of the rows of `x` via Gram + Cholesky.
+pub fn leverage_scores(x: &Mat) -> Result<Vec<f64>, LinalgError> {
+    leverage_scores_ridged(x, 0.0)
+}
+
+/// Ridge leverage scores u_i(γ) = x_iᵀ (XᵀX + γI)⁻¹ x_i.
+/// `gamma` is the absolute ridge; the tiny stabilizer is always added.
+pub fn leverage_scores_ridged(x: &Mat, gamma: f64) -> Result<Vec<f64>, LinalgError> {
+    let mut g = x.gram();
+    let d = g.rows;
+    let stab = GRAM_RIDGE_REL * g.trace().max(1e-300) / d as f64;
+    for i in 0..d {
+        *g.at_mut(i, i) += gamma + stab;
+    }
+    let ch = Cholesky::new(&g)?;
+    // score via an explicit L⁻¹ triangular matvec instead of a
+    // forward-solve per row: same FLOPs, but no divisions in the inner
+    // loop and contiguous row access — 2.1× on the J=10 pipeline (see
+    // EXPERIMENTS.md §Perf L3-a).
+    let linv = ch.l_inverse();
+    let mut scores = Vec::with_capacity(x.rows);
+    for i in 0..x.rows {
+        let xi = x.row(i);
+        let mut acc = 0.0;
+        for r in 0..d {
+            let lrow = &linv.row(r)[..=r];
+            let mut z = 0.0;
+            for (c, &l) in lrow.iter().enumerate() {
+                z += l * xi[c];
+            }
+            acc += z * z;
+        }
+        scores.push(acc);
+    }
+    Ok(scores)
+}
+
+/// The standard heuristic ridge for "ridge leverage scores" baselines:
+/// γ = tr(XᵀX)/d · ρ with ρ = 0.01.
+pub fn default_ridge(x: &Mat) -> f64 {
+    let g = x.gram();
+    0.01 * g.trace() / g.rows as f64
+}
+
+/// Leverage scores of the MCTM design (scores of B's rows, one value per
+/// observation — identical across the J block-rows of one observation).
+pub fn mctm_leverage_scores(design: &Design) -> Result<Vec<f64>, LinalgError> {
+    let stacked = design.stacked();
+    leverage_scores(&stacked)
+}
+
+/// Sensitivity upper bounds s_i = u_i + 1/n (Algorithm 1 "sensitivity
+/// proxy"): the uniform term covers the positive-log part's uniform
+/// component (Lemma 2.2/2.3).
+pub fn sensitivity_scores(design: &Design) -> Result<Vec<f64>, LinalgError> {
+    let u = mctm_leverage_scores(design)?;
+    let n = design.n as f64;
+    Ok(u.into_iter().map(|ui| ui + 1.0 / n).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_design(n: usize, j: usize, d: usize, seed: u64) -> Design {
+        let mut rng = Rng::new(seed);
+        let data = Mat::from_vec(n, j, (0..n * j).map(|_| rng.normal()).collect());
+        Design::build(&data, d, 0.01)
+    }
+
+    #[test]
+    fn leverage_sums_to_rank() {
+        let mut rng = Rng::new(21);
+        let x = Mat::from_vec(200, 6, (0..1200).map(|_| rng.normal()).collect());
+        let u = leverage_scores(&x).unwrap();
+        let total: f64 = u.iter().sum();
+        assert!((total - 6.0).abs() < 1e-6, "sum {total}");
+        assert!(u.iter().all(|&ui| (0.0..=1.0 + 1e-9).contains(&ui)));
+    }
+
+    #[test]
+    fn mctm_scores_sum_near_dj() {
+        // Bernstein columns per block sum to 1 (partition of unity), so
+        // the stacked matrix has rank dJ − (J − 1) (one shared constant
+        // direction); the sum of leverage equals the rank.
+        let design = random_design(300, 2, 5, 22);
+        let u = mctm_leverage_scores(&design).unwrap();
+        let total: f64 = u.iter().sum();
+        let expected = (2 * 5 - (2 - 1)) as f64;
+        assert!(
+            (total - expected).abs() < 0.5,
+            "sum {total} expected ≈ {expected}"
+        );
+    }
+
+    #[test]
+    fn outlier_gets_high_leverage() {
+        let mut rng = Rng::new(23);
+        let mut data: Vec<f64> = (0..400).map(|_| rng.normal()).collect();
+        // one far outlier in both coordinates
+        data[0] = 40.0;
+        data[1] = -40.0;
+        let m = Mat::from_vec(200, 2, data);
+        let design = Design::build(&m, 6, 0.01);
+        let u = mctm_leverage_scores(&design).unwrap();
+        let max = u.iter().cloned().fold(f64::MIN, f64::max);
+        assert_eq!(
+            u.iter().position(|&x| x == max).unwrap(),
+            0,
+            "outlier should have max leverage"
+        );
+        let mean = u.iter().sum::<f64>() / u.len() as f64;
+        assert!(max > 5.0 * mean);
+    }
+
+    #[test]
+    fn ridge_shrinks_scores() {
+        let mut rng = Rng::new(24);
+        let x = Mat::from_vec(100, 4, (0..400).map(|_| rng.normal()).collect());
+        let plain = leverage_scores(&x).unwrap();
+        let ridged = leverage_scores_ridged(&x, default_ridge(&x)).unwrap();
+        for (p, r) in plain.iter().zip(&ridged) {
+            assert!(r <= p, "ridge must shrink: {r} > {p}");
+        }
+    }
+
+    #[test]
+    fn sensitivity_includes_uniform_term() {
+        let design = random_design(50, 2, 4, 25);
+        let u = mctm_leverage_scores(&design).unwrap();
+        let s = sensitivity_scores(&design).unwrap();
+        for (ui, si) in u.iter().zip(&s) {
+            assert!((si - ui - 1.0 / 50.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn leverage_invariant_to_column_scaling() {
+        // leverage scores are invariant under right-multiplication by an
+        // invertible matrix; scaling a column is such an operation
+        let mut rng = Rng::new(26);
+        let x = Mat::from_vec(80, 3, (0..240).map(|_| rng.normal()).collect());
+        let mut x2 = x.clone();
+        for r in 0..80 {
+            *x2.at_mut(r, 1) *= 100.0;
+        }
+        let u1 = leverage_scores(&x).unwrap();
+        let u2 = leverage_scores(&x2).unwrap();
+        for (a, b) in u1.iter().zip(&u2) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+}

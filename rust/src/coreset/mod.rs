@@ -1,0 +1,49 @@
+//! The paper's contribution: coreset constructions for MCTMs.
+//!
+//! * `leverage` — ℓ₂ leverage scores of the paper's block matrix B
+//!   (computed through the equivalent stacked matrix, see DESIGN.md §2),
+//!   plus ridge and root variants used as real-data baselines.
+//! * `hull` — sparse convex-hull approximation (Blum, Har-Peled &
+//!   Raichel 2019, paper Algorithm 2) over the derivative points a'.
+//! * `samplers` — Algorithm 1: the hybrid ℓ₂-hull construction and all
+//!   baselines behind one `Method` enum.
+//! * `merge_reduce` — the streaming / distributed composition (§4).
+//! * `ellipsoid` — John-ellipsoid scores (§4 extension for non-Gaussian
+//!   log-concave copulas, Tukan et al. 2020).
+
+pub mod ellipsoid;
+pub mod hull;
+pub mod leverage;
+pub mod merge_reduce;
+pub mod samplers;
+
+pub use samplers::{build_coreset, Coreset, Method};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basis::Design;
+    use crate::linalg::Mat;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn all_methods_produce_valid_coresets() {
+        let mut rng = Rng::new(77);
+        let data = Mat::from_vec(500, 2, (0..1000).map(|_| rng.normal()).collect());
+        let design = Design::build(&data, 5, 0.01);
+        for method in [
+            Method::Uniform,
+            Method::L2Only,
+            Method::L2Hull,
+            Method::RidgeLss,
+            Method::RootL2,
+        ] {
+            let cs = build_coreset(&design, method, 40, &mut rng);
+            assert!(!cs.indices.is_empty(), "{method:?} empty");
+            assert!(cs.indices.len() <= 40 + 5, "{method:?} oversize");
+            assert_eq!(cs.indices.len(), cs.weights.len());
+            assert!(cs.weights.iter().all(|&w| w > 0.0), "{method:?} weights");
+            assert!(cs.indices.iter().all(|&i| i < 500), "{method:?} range");
+        }
+    }
+}

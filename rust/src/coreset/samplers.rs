@@ -1,0 +1,269 @@
+//! Coreset sampling strategies (paper Algorithm 1 + the baselines of
+//! §3): the hybrid ℓ₂-hull construction, plain ℓ₂ leverage sampling,
+//! uniform subsampling, ridge leverage scores and root leverage scores.
+
+use super::hull::select_hull_points;
+use super::leverage::{
+    default_ridge, leverage_scores_ridged, mctm_leverage_scores, sensitivity_scores,
+};
+use crate::basis::Design;
+use crate::util::rng::{AliasTable, Rng};
+
+/// Fraction of the budget spent on the sensitivity sample in the hybrid
+/// method; the rest goes to convex-hull points (Algorithm 1: α = 0.8).
+pub const HULL_SPLIT: f64 = 0.8;
+
+/// The sampling strategies compared in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// uniform subsampling without replacement, weights n/k
+    Uniform,
+    /// pure ℓ₂ leverage-score (sensitivity proxy) sampling
+    L2Only,
+    /// the paper's ℓ₂-hull hybrid: sensitivity sample + convex hull of a'
+    L2Hull,
+    /// ridge leverage scores baseline (Table 2)
+    RidgeLss,
+    /// root leverage scores baseline (Table 2): p_i ∝ √u_i
+    RootL2,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Uniform => "uniform",
+            Method::L2Only => "l2-only",
+            Method::L2Hull => "l2-hull",
+            Method::RidgeLss => "ridge-lss",
+            Method::RootL2 => "root-l2",
+        }
+    }
+
+    pub fn all() -> [Method; 5] {
+        [
+            Method::L2Hull,
+            Method::L2Only,
+            Method::RidgeLss,
+            Method::RootL2,
+            Method::Uniform,
+        ]
+    }
+}
+
+/// A weighted coreset: observation indices (into the design) + weights.
+/// Indices may repeat (i.i.d. sensitivity sampling); fitting code treats
+/// (index, weight) pairs independently, which is equivalent.
+#[derive(Clone, Debug)]
+pub struct Coreset {
+    pub indices: Vec<usize>,
+    pub weights: Vec<f64>,
+    /// diagnostics: how many points came from the hull component
+    pub n_hull: usize,
+    /// sampling probabilities used (empty for uniform/hull-only parts)
+    pub method: Method,
+}
+
+impl Coreset {
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Total weight — for an unbiased construction E[total] = n.
+    pub fn total_weight(&self) -> f64 {
+        self.weights.iter().sum()
+    }
+}
+
+/// Draw `k` i.i.d. indices with probabilities ∝ scores; weight 1/(k p).
+fn importance_sample(scores: &[f64], k: usize, rng: &mut Rng, method: Method) -> Coreset {
+    let table = AliasTable::new(scores);
+    let mut indices = Vec::with_capacity(k);
+    let mut weights = Vec::with_capacity(k);
+    for _ in 0..k {
+        let i = table.sample(rng);
+        indices.push(i);
+        weights.push(1.0 / (k as f64 * table.p(i)));
+    }
+    Coreset { indices, weights, n_hull: 0, method }
+}
+
+/// Build a coreset of target size `k` from a design, per `method`.
+///
+/// Falls back to uniform sampling if the leverage computation fails
+/// (degenerate design) — mirroring the robustness behaviour of the
+/// reference implementation.
+pub fn build_coreset(design: &Design, method: Method, k: usize, rng: &mut Rng) -> Coreset {
+    let n = design.n;
+    assert!(k >= 1);
+    if k >= n {
+        // trivial coreset: everything, weight 1
+        return Coreset {
+            indices: (0..n).collect(),
+            weights: vec![1.0; n],
+            n_hull: 0,
+            method,
+        };
+    }
+    match method {
+        Method::Uniform => {
+            let indices = rng.sample_without_replacement(n, k);
+            let w = n as f64 / k as f64;
+            Coreset {
+                weights: vec![w; indices.len()],
+                indices,
+                n_hull: 0,
+                method,
+            }
+        }
+        Method::L2Only => match sensitivity_scores(design) {
+            Ok(s) => importance_sample(&s, k, rng, method),
+            Err(_) => build_coreset(design, Method::Uniform, k, rng),
+        },
+        Method::RidgeLss => {
+            let stacked = design.stacked();
+            let gamma = default_ridge(&stacked);
+            match leverage_scores_ridged(&stacked, gamma) {
+                Ok(mut u) => {
+                    let unif = 1.0 / n as f64;
+                    u.iter_mut().for_each(|x| *x += unif);
+                    importance_sample(&u, k, rng, method)
+                }
+                Err(_) => build_coreset(design, Method::Uniform, k, rng),
+            }
+        }
+        Method::RootL2 => match mctm_leverage_scores(design) {
+            Ok(u) => {
+                let s: Vec<f64> =
+                    u.iter().map(|&x| x.max(0.0).sqrt() + 1.0 / n as f64).collect();
+                importance_sample(&s, k, rng, method)
+            }
+            Err(_) => build_coreset(design, Method::Uniform, k, rng),
+        },
+        Method::L2Hull => {
+            let k1 = ((HULL_SPLIT * k as f64).floor() as usize).clamp(1, k);
+            let k2 = k - k1;
+            let mut cs = match sensitivity_scores(design) {
+                Ok(s) => importance_sample(&s, k1, rng, method),
+                Err(_) => {
+                    let mut u = build_coreset(design, Method::Uniform, k1, rng);
+                    u.method = method;
+                    u
+                }
+            };
+            if k2 > 0 {
+                // hull over derivative points {a'_ij}: map point index
+                // (i·J + j) back to observation index i
+                let dp = design.deriv_points();
+                let hull_pts = select_hull_points(&dp, k2, rng);
+                let mut seen: std::collections::HashSet<usize> =
+                    cs.indices.iter().cloned().collect();
+                for p in hull_pts {
+                    let obs = p / design.j;
+                    if seen.insert(obs) {
+                        cs.indices.push(obs);
+                        cs.weights.push(1.0); // hull points get weight 1
+                        cs.n_hull += 1;
+                    }
+                }
+            }
+            cs
+        }
+    }
+}
+
+/// Extract the weight vector aligned with `design.select(&coreset.indices)`:
+/// fitting uses (subset design, weights).
+pub fn coreset_weights(cs: &Coreset) -> Vec<f64> {
+    cs.weights.clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn toy_design(n: usize, seed: u64) -> Design {
+        let mut rng = Rng::new(seed);
+        let data = Mat::from_vec(n, 2, (0..n * 2).map(|_| rng.normal()).collect());
+        Design::build(&data, 5, 0.01)
+    }
+
+    #[test]
+    fn uniform_weights_are_n_over_k() {
+        let design = toy_design(100, 1);
+        let mut rng = Rng::new(2);
+        let cs = build_coreset(&design, Method::Uniform, 10, &mut rng);
+        assert_eq!(cs.len(), 10);
+        assert!(cs.weights.iter().all(|&w| (w - 10.0).abs() < 1e-12));
+        // no duplicates for uniform-without-replacement
+        let set: std::collections::HashSet<_> = cs.indices.iter().collect();
+        assert_eq!(set.len(), 10);
+    }
+
+    #[test]
+    fn importance_weights_unbiased_total() {
+        // E[Σ w] = n; check the empirical mean over repetitions
+        let design = toy_design(200, 3);
+        let mut rng = Rng::new(4);
+        let mut totals = Vec::new();
+        for _ in 0..50 {
+            let cs = build_coreset(&design, Method::L2Only, 30, &mut rng);
+            totals.push(cs.total_weight());
+        }
+        let mean = totals.iter().sum::<f64>() / totals.len() as f64;
+        assert!(
+            (mean - 200.0).abs() < 30.0,
+            "importance sampling total weight biased: {mean}"
+        );
+    }
+
+    #[test]
+    fn l2hull_contains_hull_points() {
+        let design = toy_design(300, 5);
+        let mut rng = Rng::new(6);
+        let cs = build_coreset(&design, Method::L2Hull, 30, &mut rng);
+        assert!(cs.n_hull > 0, "expected hull augmentation");
+        // hull points have weight exactly 1 at the tail
+        let tail = &cs.weights[cs.weights.len() - cs.n_hull..];
+        assert!(tail.iter().all(|&w| w == 1.0));
+        assert!(cs.len() >= 30 - 5 && cs.len() <= 30);
+    }
+
+    #[test]
+    fn k_geq_n_returns_identity() {
+        let design = toy_design(20, 7);
+        let mut rng = Rng::new(8);
+        let cs = build_coreset(&design, Method::L2Hull, 50, &mut rng);
+        assert_eq!(cs.len(), 20);
+        assert!(cs.weights.iter().all(|&w| w == 1.0));
+    }
+
+    #[test]
+    fn preserves_f1_within_factor() {
+        // the subspace-embedding property behind Lemma 2.1: the weighted
+        // coreset f₁ stays within a modest factor of the full f₁ for a
+        // fixed parameter choice (statistical check, generous bound)
+        use crate::mctm::{nll_parts, ModelSpec, Params};
+        let design = toy_design(2000, 9);
+        let spec = ModelSpec::new(2, 5);
+        let mut p = Params::init(spec);
+        p.x[spec.j * spec.d] = 0.5;
+        let theta = p.theta();
+        let lam = p.lambda_block().to_vec();
+        let full = nll_parts(&design, &[], &theta, &lam);
+        let mut rng = Rng::new(10);
+        let mut ratios = Vec::new();
+        for _ in 0..10 {
+            let cs = build_coreset(&design, Method::L2Only, 200, &mut rng);
+            let sub = design.select(&cs.indices);
+            let part = nll_parts(&sub, &cs.weights, &theta, &lam);
+            ratios.push(part.f1 / full.f1);
+        }
+        let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+        assert!((mean - 1.0).abs() < 0.25, "f1 ratio mean {mean}");
+    }
+}

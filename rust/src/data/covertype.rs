@@ -1,0 +1,189 @@
+//! Synthetic Covertype-like terrain data (substitution for UCI Covertype
+//! — no dataset/network in the build image; DESIGN.md §5).
+//!
+//! Reproduces the *statistical shape* the paper's experiment depends on:
+//! 10 continuous terrain variables over ~581k rows with
+//!   * multimodal marginals (elevation differs sharply by cover type),
+//!   * right-skewed distance variables with long tails,
+//!   * bounded, left-skewed hillshade indices,
+//!   * strong non-linear cross-dependence (hillshade ↔ aspect/slope,
+//!     distances ↔ elevation).
+//! Seven latent "cover types" drive a mixture, exactly the mechanism
+//! that makes uniform subsampling miss rare-but-extreme strata — the
+//! behaviour the ℓ₂-hull coreset exploits.
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+use std::f64::consts::PI;
+
+/// Column order (mirrors the 10 continuous Covertype variables).
+pub const COLUMNS: [&str; 10] = [
+    "elevation",
+    "aspect",
+    "slope",
+    "hdist_hydrology",
+    "vdist_hydrology",
+    "hdist_roadways",
+    "hillshade_9am",
+    "hillshade_noon",
+    "hillshade_3pm",
+    "hdist_firepoints",
+];
+
+/// Per-cover-type latent parameters (means roughly mimic the real
+/// dataset's strata; weights mimic its strong class imbalance).
+struct CoverType {
+    weight: f64,
+    elevation_mean: f64,
+    elevation_sd: f64,
+    slope_shape: f64,
+    dist_scale: f64,
+}
+
+const TYPES: [CoverType; 7] = [
+    CoverType { weight: 0.365, elevation_mean: 3150.0, elevation_sd: 120.0, slope_shape: 2.0, dist_scale: 300.0 },
+    CoverType { weight: 0.488, elevation_mean: 2950.0, elevation_sd: 160.0, slope_shape: 2.5, dist_scale: 250.0 },
+    CoverType { weight: 0.062, elevation_mean: 2400.0, elevation_sd: 140.0, slope_shape: 4.0, dist_scale: 150.0 },
+    CoverType { weight: 0.005, elevation_mean: 2200.0, elevation_sd: 90.0, slope_shape: 5.0, dist_scale: 100.0 },
+    CoverType { weight: 0.016, elevation_mean: 2800.0, elevation_sd: 100.0, slope_shape: 3.0, dist_scale: 200.0 },
+    CoverType { weight: 0.030, elevation_mean: 2500.0, elevation_sd: 130.0, slope_shape: 4.5, dist_scale: 170.0 },
+    CoverType { weight: 0.035, elevation_mean: 3400.0, elevation_sd: 90.0, slope_shape: 3.5, dist_scale: 350.0 },
+];
+
+/// Generate n synthetic terrain observations (n × 10).
+pub fn generate(n: usize, rng: &mut Rng) -> Mat {
+    let mut out = Mat::zeros(n, 10);
+    // cumulative type weights
+    let mut cum = [0.0f64; 7];
+    let mut acc = 0.0;
+    for (i, t) in TYPES.iter().enumerate() {
+        acc += t.weight;
+        cum[i] = acc;
+    }
+    let total = acc;
+    for r in 0..n {
+        let u = rng.f64() * total;
+        let t = &TYPES[cum.iter().position(|&c| u <= c).unwrap_or(6)];
+
+        let elevation = rng.normal_ms(t.elevation_mean, t.elevation_sd);
+        // aspect in degrees [0, 360): mixture of two prevailing exposures
+        let aspect = if rng.f64() < 0.6 {
+            (rng.normal_ms(120.0, 60.0)).rem_euclid(360.0)
+        } else {
+            (rng.normal_ms(310.0, 50.0)).rem_euclid(360.0)
+        };
+        // slope: right-skewed gamma, steeper at low elevation types
+        let slope = rng.gamma(t.slope_shape, 4.0).min(60.0);
+        // distances: right-skewed, elevation-coupled long tails
+        let hydro_h = rng.gamma(1.5, t.dist_scale * (1.0 + (elevation - 2000.0).max(0.0) / 3000.0));
+        let hydro_v = 0.15 * hydro_h * rng.normal_ms(0.4, 0.6) + rng.normal_ms(0.0, 15.0);
+        let road = rng.gamma(1.8, 900.0 + 0.4 * (elevation - 2200.0).max(0.0));
+        let fire = rng.gamma(1.6, 800.0 + 0.3 * (elevation - 2200.0).max(0.0));
+        // hillshade: deterministic sun-geometry core + noise, bounded 0..254
+        let asp_rad = aspect * PI / 180.0;
+        let slope_rad = slope * PI / 180.0;
+        let hs = |sun_azimuth: f64, sun_alt: f64, rng: &mut Rng| -> f64 {
+            let az = sun_azimuth * PI / 180.0;
+            let alt = sun_alt * PI / 180.0;
+            let v = 254.0
+                * (alt.sin() * slope_rad.cos()
+                    + alt.cos() * slope_rad.sin() * (az - asp_rad).cos());
+            (v + rng.normal_ms(0.0, 8.0)).clamp(0.0, 254.0)
+        };
+        let hs9 = hs(105.0, 45.0, rng);
+        let hsnoon = hs(180.0, 60.0, rng);
+        let hs3 = hs(255.0, 45.0, rng);
+
+        let row = out.row_mut(r);
+        row[0] = elevation;
+        row[1] = aspect;
+        row[2] = slope;
+        row[3] = hydro_h;
+        row[4] = hydro_v;
+        row[5] = road;
+        row[6] = hs9;
+        row[7] = hsnoon;
+        row[8] = hs3;
+        row[9] = fire;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{mean, median, std_dev};
+
+    fn col(m: &Mat, c: usize) -> Vec<f64> {
+        (0..m.rows).map(|r| m.at(r, c)).collect()
+    }
+
+    #[test]
+    fn shapes_and_finiteness() {
+        let mut rng = Rng::new(1);
+        let m = generate(2000, &mut rng);
+        assert_eq!((m.rows, m.cols), (2000, 10));
+        assert!(m.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn hillshade_bounded() {
+        let mut rng = Rng::new(2);
+        let m = generate(5000, &mut rng);
+        for c in 6..=8 {
+            let v = col(&m, c);
+            assert!(v.iter().all(|&x| (0.0..=254.0).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn distances_right_skewed() {
+        let mut rng = Rng::new(3);
+        let m = generate(20_000, &mut rng);
+        for c in [3usize, 5, 9] {
+            let v = col(&m, c);
+            assert!(v.iter().all(|&x| x >= 0.0));
+            assert!(
+                mean(&v) > median(&v),
+                "col {c} should be right-skewed: mean {} median {}",
+                mean(&v),
+                median(&v)
+            );
+        }
+    }
+
+    #[test]
+    fn elevation_multimodal_via_type_strata() {
+        let mut rng = Rng::new(4);
+        let m = generate(50_000, &mut rng);
+        let e = col(&m, 0);
+        // mixture of strata at 2200..3400 ⇒ overall sd far above the
+        // within-type sd (~150)
+        assert!(std_dev(&e) > 180.0, "sd {}", std_dev(&e));
+        // rare low-elevation stratum exists
+        let low = e.iter().filter(|&&x| x < 2350.0).count();
+        assert!(low > 50 && (low as f64) < 0.2 * e.len() as f64);
+    }
+
+    #[test]
+    fn hillshade_depends_on_aspect() {
+        let mut rng = Rng::new(5);
+        let m = generate(30_000, &mut rng);
+        // morning hillshade should be higher for east-facing (aspect
+        // ~105°) than west-facing (~255°) on steep slopes
+        let (mut east, mut west) = (Vec::new(), Vec::new());
+        for r in 0..m.rows {
+            let aspect = m.at(r, 1);
+            let slope = m.at(r, 2);
+            if slope < 15.0 {
+                continue;
+            }
+            if (aspect - 105.0).abs() < 30.0 {
+                east.push(m.at(r, 6));
+            } else if (aspect - 255.0).abs() < 30.0 {
+                west.push(m.at(r, 6));
+            }
+        }
+        assert!(mean(&east) > mean(&west) + 20.0);
+    }
+}

@@ -1,0 +1,104 @@
+//! Minimal CSV loader so the launcher can run on user-supplied data
+//! (`dataset=file:/path/to.csv`): numeric columns, optional header,
+//! comma/semicolon/tab separated. Not a general CSV parser — quoted
+//! fields are not supported (numeric matrices never need them).
+
+use crate::linalg::Mat;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Load a numeric matrix from a delimited text file. A first line that
+/// fails to parse as numbers is treated as a header and skipped.
+pub fn load_csv(path: &Path) -> Result<Mat> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_csv(&text).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Parse delimited numeric text into a matrix.
+pub fn parse_csv(text: &str) -> Result<Mat> {
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut ncol = None;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line
+            .split(|c| c == ',' || c == ';' || c == '\t')
+            .map(|f| f.trim())
+            .filter(|f| !f.is_empty())
+            .collect();
+        let parsed: std::result::Result<Vec<f64>, _> =
+            fields.iter().map(|f| f.parse::<f64>()).collect();
+        match parsed {
+            Ok(vals) => {
+                if vals.is_empty() {
+                    continue;
+                }
+                match ncol {
+                    None => ncol = Some(vals.len()),
+                    Some(c) if c != vals.len() => {
+                        return Err(anyhow!(
+                            "line {}: {} columns, expected {c}",
+                            lineno + 1,
+                            vals.len()
+                        ))
+                    }
+                    _ => {}
+                }
+                rows.push(vals);
+            }
+            Err(_) if rows.is_empty() && lineno == 0 => {
+                // header line — skip
+            }
+            Err(e) => {
+                return Err(anyhow!("line {}: {e}", lineno + 1));
+            }
+        }
+    }
+    if rows.is_empty() {
+        return Err(anyhow!("no numeric rows found"));
+    }
+    Ok(Mat::from_rows(&rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_with_header() {
+        let m = parse_csv("a,b\n1,2\n3.5,-4\n").unwrap();
+        assert_eq!((m.rows, m.cols), (2, 2));
+        assert_eq!(m.at(1, 0), 3.5);
+        assert_eq!(m.at(1, 1), -4.0);
+    }
+
+    #[test]
+    fn parses_without_header_and_tabs() {
+        let m = parse_csv("1\t2\t3\n4\t5\t6\n").unwrap();
+        assert_eq!((m.rows, m.cols), (2, 3));
+    }
+
+    #[test]
+    fn skips_comments_and_blank_lines() {
+        let m = parse_csv("# comment\n\n1,2\n# another\n3,4\n").unwrap();
+        assert_eq!(m.rows, 2);
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        assert!(parse_csv("1,2\n3\n").is_err());
+    }
+
+    #[test]
+    fn rejects_mid_file_garbage() {
+        assert!(parse_csv("1,2\nx,y\n").is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(parse_csv("# nothing\n").is_err());
+    }
+}

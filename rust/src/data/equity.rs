@@ -1,0 +1,158 @@
+//! Synthetic daily equity-return panels (substitution for the paper's
+//! CRSP/Yahoo 10- and 20-stock datasets; DESIGN.md §5).
+//!
+//! Reproduces the stylized facts that drive the coreset comparison:
+//!   * heavy tails (t(6) innovations),
+//!   * volatility clustering (GARCH(1,1) per stock),
+//!   * cross-sectional dependence through a market factor plus sector
+//!     factors (the 10/20 tickers of Tables 7/8 grouped into sectors),
+//!   * occasional market-wide crash days (jump mixture) — the extreme
+//!     points the convex-hull component is designed to capture.
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Sector labels (0=staples, 1=energy, 2=tech, 3=health) mirroring the
+/// ticker lists of Tables 7–8.
+fn sector(i: usize) -> usize {
+    // first 10: JNJ PG KO XOM WMT IBM GE MMM MCD PFE
+    // next 10:  AAPL MSFT INTC CSCO AMGN CMCSA COST GILD SBUX TOT
+    const SECTORS: [usize; 20] = [3, 0, 0, 1, 0, 2, 2, 2, 0, 3, 2, 2, 2, 2, 3, 2, 0, 3, 0, 1];
+    SECTORS[i % 20]
+}
+
+/// GARCH(1,1) parameters for the **idiosyncratic** component (typical
+/// daily-equity magnitudes; α + β = 0.95 keeps the recursion stable
+/// under t-innovations).
+const OMEGA: f64 = 0.25e-5;
+const ALPHA: f64 = 0.05;
+const BETA: f64 = 0.90;
+
+/// Generate an (n_days × n_stocks) matrix of daily returns.
+pub fn generate(n_days: usize, n_stocks: usize, rng: &mut Rng) -> Mat {
+    assert!(n_stocks <= 20, "tickers defined for up to 20 stocks");
+    let mut out = Mat::zeros(n_days, n_stocks);
+    // state: per-stock idiosyncratic conditional variance
+    let uncond = OMEGA / (1.0 - ALPHA - BETA); // = 0.5e-4 ⇒ idio sd ≈ 0.7%
+    let mut h = vec![uncond; n_stocks];
+    let mut prev_e2 = vec![uncond; n_stocks];
+    // per-stock loadings
+    let beta_mkt: Vec<f64> = (0..n_stocks)
+        .map(|i| 0.7 + 0.06 * (i % 7) as f64)
+        .collect();
+    let beta_sec = 0.5;
+
+    for day in 0..n_days {
+        // factors: market + 4 sectors, heavy-tailed
+        let crash = rng.f64() < 0.004; // a few crash days per decade
+        let mkt_scale = if crash { 4.0 } else { 1.0 };
+        let f_mkt = rng.student_t(6.0) * 0.006 * mkt_scale;
+        let f_sec: Vec<f64> = (0..4).map(|_| rng.student_t(6.0) * 0.004).collect();
+        for s in 0..n_stocks {
+            // GARCH update driven by the idiosyncratic shock only (the
+            // factor variance is stationary by construction)
+            h[s] = (OMEGA + ALPHA * prev_e2[s] + BETA * h[s]).min(25.0 * uncond);
+            let idio = rng.student_t(6.0) * h[s].sqrt();
+            prev_e2[s] = idio * idio;
+            let r = beta_mkt[s] * f_mkt + beta_sec * f_sec[sector(s)] + idio;
+            *out.at_mut(day, s) = r;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{mean, std_dev};
+
+    fn col(m: &Mat, c: usize) -> Vec<f64> {
+        (0..m.rows).map(|r| m.at(r, c)).collect()
+    }
+
+    fn corr(a: &[f64], b: &[f64]) -> f64 {
+        let (ma, mb) = (mean(a), mean(b));
+        let mut num = 0.0;
+        for i in 0..a.len() {
+            num += (a[i] - ma) * (b[i] - mb);
+        }
+        num / ((a.len() - 1) as f64 * std_dev(a) * std_dev(b))
+    }
+
+    #[test]
+    fn shapes_and_scale() {
+        let mut rng = Rng::new(1);
+        let m = generate(2000, 10, &mut rng);
+        assert_eq!((m.rows, m.cols), (2000, 10));
+        // daily returns: mean ≈ 0, sd on the order of 1–3%
+        for c in 0..10 {
+            let v = col(&m, c);
+            assert!(mean(&v).abs() < 0.005);
+            let sd = std_dev(&v);
+            assert!((0.003..0.08).contains(&sd), "sd {sd}");
+        }
+    }
+
+    #[test]
+    fn cross_correlation_positive() {
+        let mut rng = Rng::new(2);
+        let m = generate(5000, 10, &mut rng);
+        let mut cs = Vec::new();
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                cs.push(corr(&col(&m, i), &col(&m, j)));
+            }
+        }
+        let avg = mean(&cs);
+        assert!(avg > 0.1, "avg pairwise corr {avg}");
+    }
+
+    #[test]
+    fn heavy_tails_present() {
+        let mut rng = Rng::new(3);
+        let m = generate(10_000, 5, &mut rng);
+        let v = col(&m, 0);
+        let sd = std_dev(&v);
+        let extreme = v.iter().filter(|&&x| x.abs() > 5.0 * sd).count();
+        // normal would give ~0.006%% → ~0–1 in 10k; heavy tails give more
+        assert!(extreme >= 3, "extreme days {extreme}");
+    }
+
+    #[test]
+    fn volatility_clusters() {
+        let mut rng = Rng::new(4);
+        let m = generate(20_000, 3, &mut rng);
+        let v = col(&m, 0);
+        // autocorrelation of |r| should be clearly positive
+        let absr: Vec<f64> = v.iter().map(|x| x.abs()).collect();
+        let mu = mean(&absr);
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for i in 1..absr.len() {
+            num += (absr[i] - mu) * (absr[i - 1] - mu);
+        }
+        for x in &absr {
+            den += (x - mu) * (x - mu);
+        }
+        let ac1 = num / den;
+        assert!(ac1 > 0.05, "abs-return autocorr {ac1}");
+    }
+
+    #[test]
+    fn sector_correlation_exceeds_cross_sector() {
+        let mut rng = Rng::new(5);
+        let m = generate(8000, 20, &mut rng);
+        let (mut same, mut diff) = (Vec::new(), Vec::new());
+        for i in 0..20 {
+            for j in (i + 1)..20 {
+                let c = corr(&col(&m, i), &col(&m, j));
+                if sector(i) == sector(j) {
+                    same.push(c);
+                } else {
+                    diff.push(c);
+                }
+            }
+        }
+        assert!(mean(&same) > mean(&diff), "{} vs {}", mean(&same), mean(&diff));
+    }
+}

@@ -1,0 +1,106 @@
+//! Workload generation: the paper's 14 two-dimensional simulation DGPs
+//! (§E.1.1), the synthetic Covertype-like terrain generator and the
+//! synthetic equity-return generator (§3.2 substitutions — DESIGN.md §5),
+//! plus a shard-iterator used by the streaming coordinator.
+
+pub mod covertype;
+pub mod csv;
+pub mod dgp;
+pub mod equity;
+
+use crate::linalg::Mat;
+
+/// A source of data shards for the streaming pipeline.
+pub trait ShardSource {
+    /// Next shard of raw rows, or None when exhausted.
+    fn next_shard(&mut self) -> Option<Mat>;
+    /// Output dimension J.
+    fn dim(&self) -> usize;
+}
+
+/// Shard an in-memory matrix.
+pub struct MatShards {
+    data: Mat,
+    shard: usize,
+    pos: usize,
+}
+
+impl MatShards {
+    pub fn new(data: Mat, shard: usize) -> Self {
+        assert!(shard > 0);
+        MatShards { data, shard, pos: 0 }
+    }
+}
+
+impl ShardSource for MatShards {
+    fn next_shard(&mut self) -> Option<Mat> {
+        if self.pos >= self.data.rows {
+            return None;
+        }
+        let end = (self.pos + self.shard).min(self.data.rows);
+        let idx: Vec<usize> = (self.pos..end).collect();
+        self.pos = end;
+        Some(self.data.select_rows(&idx))
+    }
+
+    fn dim(&self) -> usize {
+        self.data.cols
+    }
+}
+
+/// Generator-backed shard source (shards produced on demand, nothing
+/// materialized — the "data never fits in memory" path).
+pub struct GenShards<F: FnMut(usize) -> Mat> {
+    gen: F,
+    j: usize,
+    remaining: usize,
+    shard: usize,
+}
+
+impl<F: FnMut(usize) -> Mat> GenShards<F> {
+    pub fn new(gen: F, j: usize, total: usize, shard: usize) -> Self {
+        GenShards { gen, j, remaining: total, shard }
+    }
+}
+
+impl<F: FnMut(usize) -> Mat> ShardSource for GenShards<F> {
+    fn next_shard(&mut self) -> Option<Mat> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let take = self.shard.min(self.remaining);
+        self.remaining -= take;
+        Some((self.gen)(take))
+    }
+
+    fn dim(&self) -> usize {
+        self.j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_shards_cover_everything() {
+        let data = Mat::from_vec(10, 2, (0..20).map(|x| x as f64).collect());
+        let mut src = MatShards::new(data, 4);
+        let mut total = 0;
+        let mut shards = 0;
+        while let Some(s) = src.next_shard() {
+            total += s.rows;
+            shards += 1;
+            assert_eq!(s.cols, 2);
+        }
+        assert_eq!(total, 10);
+        assert_eq!(shards, 3); // 4 + 4 + 2
+    }
+
+    #[test]
+    fn gen_shards_respect_total() {
+        let mut src = GenShards::new(|n| Mat::zeros(n, 3), 3, 10, 3);
+        let sizes: Vec<usize> = std::iter::from_fn(|| src.next_shard().map(|s| s.rows)).collect();
+        assert_eq!(sizes, vec![3, 3, 3, 1]);
+    }
+}

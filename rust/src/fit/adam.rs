@@ -1,0 +1,104 @@
+//! Adam optimizer (Kingma & Ba) with the standard bias correction —
+//! robust first-order fallback for ill-conditioned starts.
+
+use super::{FitOptions, Objective};
+
+pub fn minimize(
+    obj: &dyn Objective,
+    mut x: Vec<f64>,
+    opts: &FitOptions,
+) -> (Vec<f64>, f64, usize, bool) {
+    let n = obj.dim();
+    assert_eq!(x.len(), n);
+    let (beta1, beta2, eps): (f64, f64, f64) = (0.9, 0.999, 1e-8);
+    let mut m = vec![0.0; n];
+    let mut v = vec![0.0; n];
+    let mut prev_f = f64::INFINITY;
+    let mut best_f = f64::INFINITY;
+    let mut best_x = x.clone();
+    let mut converged = false;
+    let mut iters = 0;
+    for t in 1..=opts.max_iters {
+        iters = t;
+        let (f, g) = obj.value_grad(&x);
+        if f.is_finite() && f < best_f {
+            best_f = f;
+            best_x.copy_from_slice(&x);
+        }
+        if (prev_f - f).abs() < opts.tol * (1.0 + f.abs()) && t > 10 {
+            converged = true;
+            break;
+        }
+        prev_f = f;
+        let b1t = 1.0 - beta1.powi(t as i32);
+        let b2t = 1.0 - beta2.powi(t as i32);
+        for i in 0..n {
+            m[i] = beta1 * m[i] + (1.0 - beta1) * g[i];
+            v[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
+            let mh = m[i] / b1t;
+            let vh = v[i] / b2t;
+            x[i] -= opts.learning_rate * mh / (vh.sqrt() + eps);
+        }
+    }
+    let f_final = obj.value(&x);
+    if f_final.is_finite() && f_final <= best_f {
+        (x, f_final, iters, converged)
+    } else {
+        (best_x, best_f, iters, converged)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{FitOptions, Objective, OptimizerKind};
+
+    struct Abs2;
+    impl Objective for Abs2 {
+        fn dim(&self) -> usize {
+            1
+        }
+        fn value_grad(&self, x: &[f64]) -> (f64, Vec<f64>) {
+            (x[0] * x[0], vec![2.0 * x[0]])
+        }
+    }
+
+    #[test]
+    fn converges_on_scalar() {
+        let opts = FitOptions {
+            optimizer: OptimizerKind::Adam,
+            max_iters: 2000,
+            tol: 1e-14,
+            learning_rate: 0.1,
+            history: 5,
+        };
+        let (x, f, _, _) = super::minimize(&Abs2, vec![5.0], &opts);
+        assert!(f < 1e-8, "f={f} x={x:?}");
+    }
+
+    #[test]
+    fn returns_best_seen_not_last() {
+        // an objective that explodes if x drifts negative keeps best-seen
+        struct Tricky;
+        impl Objective for Tricky {
+            fn dim(&self) -> usize {
+                1
+            }
+            fn value_grad(&self, x: &[f64]) -> (f64, Vec<f64>) {
+                if x[0] < 0.05 {
+                    (f64::INFINITY, vec![0.0])
+                } else {
+                    ((x[0] - 0.1).powi(2), vec![2.0 * (x[0] - 0.1)])
+                }
+            }
+        }
+        let opts = FitOptions {
+            optimizer: OptimizerKind::Adam,
+            max_iters: 200,
+            tol: 0.0,
+            learning_rate: 0.2,
+            history: 5,
+        };
+        let (_, f, _, _) = super::minimize(&Tricky, vec![1.0], &opts);
+        assert!(f.is_finite());
+    }
+}

@@ -1,0 +1,203 @@
+//! Maximum-likelihood fitting of MCTMs: an `Objective` abstraction over
+//! the two evaluation backends (native Rust and the AOT-compiled XLA
+//! executable), plus Adam and L-BFGS optimizers and the high-level
+//! `fit` driver used by every experiment.
+
+pub mod adam;
+pub mod lbfgs;
+
+use crate::basis::Design;
+use crate::mctm::{self, ModelSpec, Params};
+use crate::util::Stopwatch;
+
+/// A differentiable objective f: R^p → R.
+pub trait Objective {
+    fn dim(&self) -> usize;
+    fn value_grad(&self, x: &[f64]) -> (f64, Vec<f64>);
+    fn value(&self, x: &[f64]) -> f64 {
+        self.value_grad(x).0
+    }
+}
+
+/// Native-Rust weighted MCTM NLL objective.
+pub struct NativeNll<'a> {
+    pub spec: ModelSpec,
+    pub design: &'a Design,
+    pub weights: Vec<f64>,
+}
+
+impl<'a> NativeNll<'a> {
+    pub fn new(spec: ModelSpec, design: &'a Design, weights: Vec<f64>) -> Self {
+        assert!(weights.is_empty() || weights.len() == design.n);
+        NativeNll { spec, design, weights }
+    }
+}
+
+impl Objective for NativeNll<'_> {
+    fn dim(&self) -> usize {
+        self.spec.n_params()
+    }
+
+    fn value_grad(&self, x: &[f64]) -> (f64, Vec<f64>) {
+        let p = Params::new(self.spec, x.to_vec());
+        mctm::nll_grad(self.design, &self.weights, &p)
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        let p = Params::new(self.spec, x.to_vec());
+        mctm::nll(self.design, &self.weights, &p)
+    }
+}
+
+/// Optimizer selection + stopping configuration.
+#[derive(Clone, Debug)]
+pub struct FitOptions {
+    pub optimizer: OptimizerKind,
+    pub max_iters: usize,
+    /// stop when |Δf| < tol · (1 + |f|) between successive iterations
+    pub tol: f64,
+    /// Adam step size
+    pub learning_rate: f64,
+    /// L-BFGS memory
+    pub history: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Adam,
+    Lbfgs,
+}
+
+impl Default for FitOptions {
+    fn default() -> Self {
+        FitOptions {
+            optimizer: OptimizerKind::Lbfgs,
+            max_iters: 300,
+            tol: 1e-8,
+            learning_rate: 0.05,
+            history: 10,
+        }
+    }
+}
+
+/// Fit result: parameters, final NLL, iterations used, wall time.
+#[derive(Clone, Debug)]
+pub struct FitResult {
+    pub params: Params,
+    pub nll: f64,
+    pub iters: usize,
+    pub seconds: f64,
+    pub converged: bool,
+}
+
+/// Minimize `obj` from `x0`.
+pub fn minimize(obj: &dyn Objective, x0: Vec<f64>, opts: &FitOptions) -> (Vec<f64>, f64, usize, bool) {
+    match opts.optimizer {
+        OptimizerKind::Adam => adam::minimize(obj, x0, opts),
+        OptimizerKind::Lbfgs => lbfgs::minimize(obj, x0, opts),
+    }
+}
+
+/// Fit an MCTM on a (possibly weighted) design with the native backend.
+pub fn fit_native(
+    spec: ModelSpec,
+    design: &Design,
+    weights: Vec<f64>,
+    opts: &FitOptions,
+) -> FitResult {
+    let obj = NativeNll::new(spec, design, weights);
+    fit_with(&obj, spec, opts)
+}
+
+/// Fit with an arbitrary objective (e.g. the XLA-backed one).
+pub fn fit_with(obj: &dyn Objective, spec: ModelSpec, opts: &FitOptions) -> FitResult {
+    let sw = Stopwatch::start();
+    let x0 = Params::init(spec).x;
+    let (x, nll, iters, converged) = minimize(obj, x0, opts);
+    FitResult {
+        params: Params::new(spec, x),
+        nll,
+        iters,
+        seconds: sw.secs(),
+        converged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Convex quadratic for optimizer sanity checks.
+    pub struct Quadratic {
+        pub center: Vec<f64>,
+    }
+
+    impl Objective for Quadratic {
+        fn dim(&self) -> usize {
+            self.center.len()
+        }
+        fn value_grad(&self, x: &[f64]) -> (f64, Vec<f64>) {
+            let mut v = 0.0;
+            let mut g = vec![0.0; x.len()];
+            for i in 0..x.len() {
+                let scale = (i + 1) as f64;
+                let dxi = x[i] - self.center[i];
+                v += 0.5 * scale * dxi * dxi;
+                g[i] = scale * dxi;
+            }
+            (v, g)
+        }
+    }
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        let q = Quadratic { center: vec![1.0, -2.0, 3.0] };
+        let opts = FitOptions {
+            optimizer: OptimizerKind::Adam,
+            max_iters: 3000,
+            tol: 1e-12,
+            learning_rate: 0.05,
+            history: 10,
+        };
+        let (x, v, _, _) = minimize(&q, vec![0.0; 3], &opts);
+        assert!(v < 1e-6, "final value {v}");
+        for (xi, ci) in x.iter().zip(&q.center) {
+            assert!((xi - ci).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn lbfgs_minimizes_quadratic_fast() {
+        let q = Quadratic { center: vec![1.0, -2.0, 3.0, 0.5] };
+        let opts = FitOptions::default();
+        let (x, v, iters, converged) = minimize(&q, vec![0.0; 4], &opts);
+        assert!(v < 1e-10, "final value {v}");
+        assert!(iters < 50, "iters {iters}");
+        assert!(converged);
+        for (xi, ci) in x.iter().zip(&q.center) {
+            assert!((xi - ci).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn lbfgs_rosenbrock() {
+        struct Rosenbrock;
+        impl Objective for Rosenbrock {
+            fn dim(&self) -> usize {
+                2
+            }
+            fn value_grad(&self, x: &[f64]) -> (f64, Vec<f64>) {
+                let (a, b) = (1.0, 100.0);
+                let v = (a - x[0]).powi(2) + b * (x[1] - x[0] * x[0]).powi(2);
+                let g = vec![
+                    -2.0 * (a - x[0]) - 4.0 * b * x[0] * (x[1] - x[0] * x[0]),
+                    2.0 * b * (x[1] - x[0] * x[0]),
+                ];
+                (v, g)
+            }
+        }
+        let opts = FitOptions { max_iters: 2000, ..Default::default() };
+        let (x, v, _, _) = minimize(&Rosenbrock, vec![-1.2, 1.0], &opts);
+        assert!(v < 1e-8, "final {v} at {x:?}");
+    }
+}

@@ -1,0 +1,15 @@
+//! # mctm-coreset
+//!
+//! Scalable learning of multivariate distributions via coresets — a
+//! three-layer Rust + JAX + Pallas reproduction. See DESIGN.md.
+
+pub mod basis;
+pub mod benchsupport;
+pub mod coordinator;
+pub mod coreset;
+pub mod data;
+pub mod fit;
+pub mod linalg;
+pub mod mctm;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,504 @@
+//! Small dense linear algebra used by the coreset pipeline: a row-major
+//! matrix type, Gram products (syrk), Cholesky factorization + triangular
+//! solves, Householder QR, and inverse-via-Cholesky — everything the
+//! leverage-score computation and the Gaussian-copula math need.
+//! Dimensions are small (dJ ≤ ~150), rows are many (n up to ~600k), so
+//! hot loops are written cache-friendly over contiguous rows.
+
+/// Row-major dense f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = if r > 0 { rows[0].len() } else { 0 };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Select a subset of rows (coreset restriction A(S)).
+    pub fn select_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (k, &i) in idx.iter().enumerate() {
+            out.row_mut(k).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Dense matmul (small matrices only — used in tests / copula math).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row = out.row_mut(i);
+                for (j, &o) in orow.iter().enumerate() {
+                    out_row[j] += a * o;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                *out.at_mut(j, i) = self.at(i, j);
+            }
+        }
+        out
+    }
+
+    /// Gram matrix XᵀX, upper-triangle computed then mirrored (syrk-style).
+    /// This is the L3 hot path for leverage scores: O(n·D²/2) FLOPs over
+    /// contiguous rows.
+    pub fn gram(&self) -> Mat {
+        let d = self.cols;
+        let mut g = Mat::zeros(d, d);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..d {
+                let xi = row[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let grow = &mut g.data[i * d..(i + 1) * d];
+                for j in i..d {
+                    grow[j] += xi * row[j];
+                }
+            }
+        }
+        // mirror
+        for i in 0..d {
+            for j in (i + 1)..d {
+                g.data[j * d + i] = g.data[i * d + j];
+            }
+        }
+        g
+    }
+
+    pub fn trace(&self) -> f64 {
+        assert_eq!(self.rows, self.cols);
+        (0..self.rows).map(|i| self.at(i, i)).sum()
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+}
+
+/// Lower-triangular Cholesky factor L with G = L Lᵀ.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    pub l: Mat,
+}
+
+/// Errors from factorizations.
+#[derive(Debug, thiserror::Error)]
+pub enum LinalgError {
+    #[error("matrix not positive definite at pivot {0} (value {1})")]
+    NotPosDef(usize, f64),
+    #[error("dimension mismatch: {0}")]
+    Dim(String),
+}
+
+impl Cholesky {
+    /// Factor a symmetric positive-definite matrix.
+    pub fn new(g: &Mat) -> Result<Self, LinalgError> {
+        assert_eq!(g.rows, g.cols);
+        let n = g.rows;
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = g.at(i, j);
+                for k in 0..j {
+                    s -= l.at(i, k) * l.at(j, k);
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return Err(LinalgError::NotPosDef(i, s));
+                    }
+                    *l.at_mut(i, j) = s.sqrt();
+                } else {
+                    *l.at_mut(i, j) = s / l.at(j, j);
+                }
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// Solve L y = b in place.
+    pub fn forward_solve(&self, b: &mut [f64]) {
+        let n = self.l.rows;
+        assert_eq!(b.len(), n);
+        for i in 0..n {
+            let mut s = b[i];
+            let lrow = self.l.row(i);
+            for k in 0..i {
+                s -= lrow[k] * b[k];
+            }
+            b[i] = s / lrow[i];
+        }
+    }
+
+    /// Solve Lᵀ x = y in place.
+    pub fn backward_solve(&self, y: &mut [f64]) {
+        let n = self.l.rows;
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in (i + 1)..n {
+                s -= self.l.at(k, i) * y[k];
+            }
+            y[i] = s / self.l.at(i, i);
+        }
+    }
+
+    /// Solve G x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = b.to_vec();
+        self.forward_solve(&mut x);
+        self.backward_solve(&mut x);
+        x
+    }
+
+    /// ‖L⁻¹ v‖² — the quadratic form vᵀ G⁻¹ v, i.e. a leverage score when
+    /// v is a data row and G the Gram matrix.
+    pub fn quad_form_inv(&self, v: &[f64], scratch: &mut Vec<f64>) -> f64 {
+        scratch.clear();
+        scratch.extend_from_slice(v);
+        self.forward_solve(scratch);
+        scratch.iter().map(|x| x * x).sum()
+    }
+
+    /// Explicit inverse of L (row-major lower triangular), used to ship
+    /// L⁻¹ to the XLA leverage kernel.
+    pub fn l_inverse(&self) -> Mat {
+        let n = self.l.rows;
+        let mut inv = Mat::zeros(n, n);
+        for col in 0..n {
+            let mut e = vec![0.0; n];
+            e[col] = 1.0;
+            self.forward_solve(&mut e);
+            for r in 0..n {
+                *inv.at_mut(r, col) = e[r];
+            }
+        }
+        inv
+    }
+
+    /// log det G = 2 Σ log L_ii.
+    pub fn log_det(&self) -> f64 {
+        (0..self.l.rows).map(|i| self.l.at(i, i).ln()).sum::<f64>() * 2.0
+    }
+}
+
+/// Thin Householder QR (R only, plus leverage helper via Q): used as a
+/// numerically-robust cross-check for the Gram–Cholesky leverage path.
+pub struct Qr {
+    /// packed Householder vectors + R (LAPACK-style)
+    a: Mat,
+    /// the scalar factors
+    tau: Vec<f64>,
+}
+
+impl Qr {
+    pub fn new(x: &Mat) -> Self {
+        let (m, n) = (x.rows, x.cols);
+        assert!(m >= n, "QR expects tall matrix");
+        let mut a = x.clone();
+        let mut tau = vec![0.0; n];
+        for k in 0..n {
+            // norm of column k below diagonal
+            let mut norm2 = 0.0;
+            for i in k..m {
+                let v = a.at(i, k);
+                norm2 += v * v;
+            }
+            let norm = norm2.sqrt();
+            if norm == 0.0 {
+                tau[k] = 0.0;
+                continue;
+            }
+            let alpha = if a.at(k, k) >= 0.0 { -norm } else { norm };
+            let akk = a.at(k, k);
+            let v0 = akk - alpha;
+            // v = (v0, a[k+1..m, k]); normalize so v[0] = 1
+            let mut vnorm2 = v0 * v0;
+            for i in (k + 1)..m {
+                let v = a.at(i, k);
+                vnorm2 += v * v;
+            }
+            if vnorm2 == 0.0 {
+                tau[k] = 0.0;
+                continue;
+            }
+            tau[k] = 2.0 * v0 * v0 / vnorm2;
+            // store normalized v below diagonal; R diagonal gets alpha
+            for i in (k + 1)..m {
+                *a.at_mut(i, k) /= v0;
+            }
+            *a.at_mut(k, k) = alpha;
+            // apply H = I − τ v vᵀ (v normalized, v[0] = 1) to remaining
+            // columns: col_j −= τ (vᵀ col_j) v
+            for j in (k + 1)..n {
+                let mut dot = a.at(k, j);
+                for i in (k + 1)..m {
+                    dot += a.at(i, k) * a.at(i, j);
+                }
+                let t = tau[k] * dot;
+                *a.at_mut(k, j) -= t;
+                for i in (k + 1)..m {
+                    let vik = a.at(i, k);
+                    *a.at_mut(i, j) -= t * vik;
+                }
+            }
+        }
+        Qr { a, tau }
+    }
+
+    /// Extract upper-triangular R (n×n).
+    pub fn r(&self) -> Mat {
+        let n = self.a.cols;
+        let mut r = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                *r.at_mut(i, j) = self.a.at(i, j);
+            }
+        }
+        r
+    }
+
+    /// Row leverage scores: ‖Q_i‖² computed as ‖R⁻ᵀ x_i‖² for the original
+    /// rows (requires the caller to pass the original matrix).
+    pub fn leverage_scores(&self, x: &Mat) -> Vec<f64> {
+        let r = self.r();
+        // Solve Rᵀ z = x_iᵀ per row.
+        let n = r.rows;
+        let mut scores = Vec::with_capacity(x.rows);
+        let mut z = vec![0.0; n];
+        for i in 0..x.rows {
+            let xi = x.row(i);
+            // forward solve with Rᵀ (lower triangular with entries R[j][i])
+            for j in 0..n {
+                let mut s = xi[j];
+                for k in 0..j {
+                    s -= r.at(k, j) * z[k];
+                }
+                z[j] = s / r.at(j, j);
+            }
+            scores.push(z.iter().map(|v| v * v).sum());
+        }
+        scores
+    }
+
+    pub fn tau(&self) -> &[f64] {
+        &self.tau
+    }
+}
+
+/// Invert a unit-lower-triangular matrix (ones on the diagonal) — used for
+/// Λ⁻¹ in the Gaussian-copula marginal variance computation.
+pub fn unit_lower_inverse(l: &Mat) -> Mat {
+    let n = l.rows;
+    assert_eq!(n, l.cols);
+    let mut inv = Mat::eye(n);
+    // forward substitution per column of the identity
+    for col in 0..n {
+        for i in 0..n {
+            let mut s = if i == col { 1.0 } else { 0.0 };
+            for k in 0..i {
+                s -= l.at(i, k) * inv.at(k, col);
+            }
+            *inv.at_mut(i, col) = s; // diagonal is 1
+        }
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn gram_matches_naive() {
+        let mut rng = Rng::new(1);
+        let x = random_mat(&mut rng, 37, 5);
+        let g = x.gram();
+        let g2 = x.transpose().matmul(&x);
+        for i in 0..5 {
+            for j in 0..5 {
+                assert!((g.at(i, j) - g2.at(i, j)).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        let mut rng = Rng::new(2);
+        let x = random_mat(&mut rng, 50, 6);
+        let g = x.gram();
+        let ch = Cholesky::new(&g).unwrap();
+        let llt = ch.l.matmul(&ch.l.transpose());
+        for i in 0..6 {
+            for j in 0..6 {
+                assert!((llt.at(i, j) - g.at(i, j)).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_solve_residual() {
+        let mut rng = Rng::new(3);
+        let x = random_mat(&mut rng, 40, 4);
+        let g = x.gram();
+        let ch = Cholesky::new(&g).unwrap();
+        let b = vec![1.0, -2.0, 0.5, 3.0];
+        let sol = ch.solve(&b);
+        // residual G sol − b
+        for i in 0..4 {
+            let mut r = -b[i];
+            for j in 0..4 {
+                r += g.at(i, j) * sol[j];
+            }
+            assert!(r.abs() < 1e-8, "residual {r}");
+        }
+    }
+
+    #[test]
+    fn not_pos_def_detected() {
+        let g = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eig −1
+        assert!(Cholesky::new(&g).is_err());
+    }
+
+    #[test]
+    fn quad_form_inv_is_leverage() {
+        let mut rng = Rng::new(4);
+        let x = random_mat(&mut rng, 60, 5);
+        let g = x.gram();
+        let ch = Cholesky::new(&g).unwrap();
+        let mut scratch = Vec::new();
+        // leverage scores sum to d for full-rank X
+        let total: f64 = (0..x.rows)
+            .map(|i| ch.quad_form_inv(x.row(i), &mut scratch))
+            .sum();
+        assert!((total - 5.0).abs() < 1e-8, "sum leverage {total}");
+    }
+
+    #[test]
+    fn l_inverse_correct() {
+        let mut rng = Rng::new(5);
+        let x = random_mat(&mut rng, 30, 4);
+        let g = x.gram();
+        let ch = Cholesky::new(&g).unwrap();
+        let linv = ch.l_inverse();
+        let prod = linv.matmul(&ch.l);
+        for i in 0..4 {
+            for j in 0..4 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod.at(i, j) - want).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn qr_leverage_matches_cholesky() {
+        let mut rng = Rng::new(6);
+        let x = random_mat(&mut rng, 80, 6);
+        let g = x.gram();
+        let ch = Cholesky::new(&g).unwrap();
+        let qr = Qr::new(&x);
+        let qr_scores = qr.leverage_scores(&x);
+        let mut scratch = Vec::new();
+        for i in 0..x.rows {
+            let c = ch.quad_form_inv(x.row(i), &mut scratch);
+            assert!(
+                (qr_scores[i] - c).abs() < 1e-7,
+                "row {i}: qr {} chol {c}",
+                qr_scores[i]
+            );
+        }
+    }
+
+    #[test]
+    fn unit_lower_inverse_roundtrip() {
+        let l = Mat::from_rows(&[
+            vec![1.0, 0.0, 0.0],
+            vec![0.7, 1.0, 0.0],
+            vec![-0.3, 0.4, 1.0],
+        ]);
+        let inv = unit_lower_inverse(&l);
+        let prod = l.matmul(&inv);
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod.at(i, j) - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn select_rows_restriction() {
+        let x = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let s = x.select_rows(&[2, 0]);
+        assert_eq!(s.row(0), &[5.0, 6.0]);
+        assert_eq!(s.row(1), &[1.0, 2.0]);
+    }
+}

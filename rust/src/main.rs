@@ -1,0 +1,18 @@
+//! Launcher for the mctm-coreset coordinator. See `mctm-coreset help`.
+
+use mctm_coreset::coordinator::cli::Cli;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = match Cli::parse(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e:#}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = cli.run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,198 @@
+//! Bootstrap confidence intervals for MCTM parameters (paper §1.3:
+//! "MCTMs are likelihood-based and therefore yield access to confidence
+//! intervals via bootstrapping") — implemented over the *coreset*, so
+//! interval estimation inherits the same n → k reduction as point
+//! estimation: each replicate resamples the weighted coreset
+//! (multinomial with probabilities ∝ weights, preserving total mass)
+//! and refits.
+
+use super::params::{ModelSpec, Params};
+use crate::basis::Design;
+use crate::fit::{fit_native, FitOptions};
+use crate::util::rng::{AliasTable, Rng};
+
+/// A per-parameter percentile interval.
+#[derive(Clone, Debug)]
+pub struct ParamInterval {
+    pub lo: f64,
+    pub hi: f64,
+    pub point: f64,
+}
+
+/// Bootstrap result: intervals for every free parameter and for the
+/// materialized ϑ coefficients.
+#[derive(Clone, Debug)]
+pub struct BootstrapResult {
+    pub spec: ModelSpec,
+    /// intervals on the free vector (β then λ)
+    pub free: Vec<ParamInterval>,
+    /// intervals on the monotone ϑ (row-major j,k)
+    pub theta: Vec<ParamInterval>,
+    pub replicates: usize,
+}
+
+impl BootstrapResult {
+    /// Interval for λ_{jl}.
+    pub fn lambda(&self, j: usize, l: usize) -> &ParamInterval {
+        &self.free[self.spec.j * self.spec.d + self.spec.lambda_index(j, l)]
+    }
+}
+
+/// Percentile bootstrap over a weighted (coreset) design.
+///
+/// `level` is the two-sided coverage (e.g. 0.95). Replicates draw
+/// `design.n` rows with probabilities ∝ weights and weight n/k each
+/// (total mass preserved), then refit from the point estimate.
+pub fn bootstrap_ci(
+    design: &Design,
+    weights: &[f64],
+    point: &Params,
+    replicates: usize,
+    level: f64,
+    opts: &FitOptions,
+    rng: &mut Rng,
+) -> BootstrapResult {
+    assert!(replicates >= 8, "need a handful of replicates");
+    assert!((0.5..1.0).contains(&level));
+    let spec = point.spec;
+    let n = design.n;
+    let w = if weights.is_empty() {
+        vec![1.0; n]
+    } else {
+        weights.to_vec()
+    };
+    let total_w: f64 = w.iter().sum();
+    let table = AliasTable::new(&w);
+
+    // warm-started refits: start each replicate from the point estimate
+    let mut warm_opts = opts.clone();
+    warm_opts.max_iters = opts.max_iters.min(120);
+
+    let mut free_samples: Vec<Vec<f64>> = Vec::with_capacity(replicates);
+    let mut theta_samples: Vec<Vec<f64>> = Vec::with_capacity(replicates);
+    for _ in 0..replicates {
+        let m = n; // resample size = coreset size
+        let mut idx = Vec::with_capacity(m);
+        for _ in 0..m {
+            idx.push(table.sample(rng));
+        }
+        let sub = design.select(&idx);
+        let rw = vec![total_w / m as f64; m];
+        let mut fit = fit_native(spec, &sub, rw, &warm_opts);
+        // restart from point estimate is handled inside fit_native via
+        // Params::init; warm start instead:
+        let obj = crate::fit::NativeNll::new(spec, &sub, vec![total_w / m as f64; m]);
+        let (x, nll, _, _) = crate::fit::minimize(&obj, point.x.clone(), &warm_opts);
+        if nll.is_finite() && nll <= fit.nll {
+            fit.params = Params::new(spec, x);
+        }
+        theta_samples.push(fit.params.theta());
+        free_samples.push(fit.params.x);
+    }
+
+    let alpha = (1.0 - level) / 2.0;
+    let make = |samples: &[Vec<f64>], points: &[f64]| -> Vec<ParamInterval> {
+        let p = points.len();
+        (0..p)
+            .map(|k| {
+                let mut vals: Vec<f64> = samples.iter().map(|s| s[k]).collect();
+                vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let lo_i = ((vals.len() as f64) * alpha).floor() as usize;
+                let hi_i =
+                    (((vals.len() as f64) * (1.0 - alpha)).ceil() as usize).min(vals.len()) - 1;
+                ParamInterval { lo: vals[lo_i], hi: vals[hi_i], point: points[k] }
+            })
+            .collect()
+    };
+    let theta_point = point.theta();
+    BootstrapResult {
+        spec,
+        free: make(&free_samples, &point.x),
+        theta: make(&theta_samples, &theta_point),
+        replicates,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiment::design_of;
+    use crate::coreset::{build_coreset, Method};
+    use crate::data::dgp::Dgp;
+
+    fn quick_opts() -> FitOptions {
+        FitOptions { max_iters: 80, ..Default::default() }
+    }
+
+    #[test]
+    fn lambda_interval_covers_truth_and_excludes_zero() {
+        // ρ = 0.7 Gaussian ⇒ λ₂₁ strongly negative; a 90% interval from
+        // a k = 200 coreset must exclude 0 and contain the full-data fit
+        let mut rng = Rng::new(1);
+        let data = Dgp::BivariateNormal.generate(5_000, &mut rng);
+        let design = design_of(&data, 6);
+        let spec = ModelSpec::new(2, 6);
+        let full = fit_native(spec, &design, Vec::new(), &quick_opts());
+
+        let cs = build_coreset(&design, Method::L2Hull, 200, &mut rng);
+        let sub = design.select(&cs.indices);
+        let point = fit_native(spec, &sub, cs.weights.clone(), &quick_opts());
+        let boot = bootstrap_ci(
+            &sub,
+            &cs.weights,
+            &point.params,
+            24,
+            0.9,
+            &quick_opts(),
+            &mut rng,
+        );
+        let ci = boot.lambda(1, 0);
+        assert!(ci.hi < 0.0, "interval should exclude 0: [{}, {}]", ci.lo, ci.hi);
+        let truth = full.params.lambda(1, 0);
+        assert!(
+            ci.lo - 0.2 <= truth && truth <= ci.hi + 0.2,
+            "full-fit λ {truth} far outside [{}, {}]",
+            ci.lo,
+            ci.hi
+        );
+    }
+
+    #[test]
+    fn intervals_are_ordered_and_contain_percentile_mass() {
+        let mut rng = Rng::new(2);
+        let data = Dgp::Sinusoidal.generate(1_000, &mut rng);
+        let design = design_of(&data, 5);
+        let spec = ModelSpec::new(2, 5);
+        let point = fit_native(spec, &design, Vec::new(), &quick_opts());
+        let boot = bootstrap_ci(&design, &[], &point.params, 12, 0.8, &quick_opts(), &mut rng);
+        assert_eq!(boot.free.len(), spec.n_params());
+        assert_eq!(boot.theta.len(), spec.j * spec.d);
+        for ci in boot.free.iter().chain(&boot.theta) {
+            assert!(ci.lo <= ci.hi, "[{}, {}]", ci.lo, ci.hi);
+            assert!(ci.lo.is_finite() && ci.hi.is_finite());
+        }
+    }
+
+    #[test]
+    fn wider_level_gives_wider_interval() {
+        let mut rng = Rng::new(3);
+        let data = Dgp::BivariateNormal.generate(1_500, &mut rng);
+        let design = design_of(&data, 5);
+        let spec = ModelSpec::new(2, 5);
+        let point = fit_native(spec, &design, Vec::new(), &quick_opts());
+        let narrow =
+            bootstrap_ci(&design, &[], &point.params, 16, 0.5, &quick_opts(), &mut Rng::new(9));
+        let wide =
+            bootstrap_ci(&design, &[], &point.params, 16, 0.95, &quick_opts(), &mut Rng::new(9));
+        let li = spec.j * spec.d;
+        let (n_ci, w_ci) = (&narrow.free[li], &wide.free[li]);
+        assert!(
+            w_ci.hi - w_ci.lo >= n_ci.hi - n_ci.lo - 1e-12,
+            "95% [{}, {}] vs 50% [{}, {}]",
+            w_ci.lo,
+            w_ci.hi,
+            n_ci.lo,
+            n_ci.hi
+        );
+    }
+}

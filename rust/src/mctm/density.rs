@@ -1,0 +1,165 @@
+//! Density evaluation for a fitted MCTM.
+//!
+//! With Z = Λ h̃(Y) ~ N(0, I_J) and unit-lower-triangular Λ, we have
+//! h̃(Y) ~ N(0, Σ) with Σ = Λ⁻¹ Λ⁻ᵀ. The marginal density of component
+//! j on the ORIGINAL data scale is therefore
+//!   f_j(y) = φ(h̃_j(s_j(y)) / σ_j) / σ_j · h̃'_j(s_j(y)) · s'_j ,
+//! where σ_j² = Σ_jj and s_j is the min–max scaling. The joint density
+//! follows the usual transformation formula with the triangular Jacobian
+//! (paper Appendix D). Used by the Figure 10/11 benches.
+
+use super::params::Params;
+use crate::basis::{Bernstein, Scaler};
+use crate::linalg::{unit_lower_inverse, Mat};
+use crate::util::special::norm_pdf;
+
+/// Materialize the unit-lower-triangular Λ of a parameter vector.
+pub fn lambda_matrix(p: &Params) -> Mat {
+    let j = p.spec.j;
+    let mut l = Mat::eye(j);
+    for jj in 1..j {
+        for ll in 0..jj {
+            *l.at_mut(jj, ll) = p.lambda(jj, ll);
+        }
+    }
+    l
+}
+
+/// Marginal standard deviations σ_j = sqrt((Λ⁻¹Λ⁻ᵀ)_jj).
+pub fn marginal_sigmas(p: &Params) -> Vec<f64> {
+    let l = lambda_matrix(p);
+    let linv = unit_lower_inverse(&l);
+    let j = p.spec.j;
+    (0..j)
+        .map(|jj| {
+            let row = linv.row(jj);
+            row.iter().map(|x| x * x).sum::<f64>().sqrt()
+        })
+        .collect()
+}
+
+/// Marginal density f_j(y) on the original data scale at raw value `y`.
+pub fn marginal_density(p: &Params, scaler: &Scaler, j: usize, y: f64) -> f64 {
+    let d = p.spec.d;
+    let basis = Bernstein::new(d - 1);
+    let theta = p.theta();
+    let th = &theta[j * d..(j + 1) * d];
+    let x = scaler.scale(j, y);
+    let a = basis.eval(x);
+    let ad = basis.deriv(x);
+    let htil: f64 = a.iter().zip(th).map(|(ai, ti)| ai * ti).sum();
+    let hd: f64 = ad.iter().zip(th).map(|(ai, ti)| ai * ti).sum();
+    let sigma = marginal_sigmas(p)[j];
+    norm_pdf(htil / sigma) / sigma * hd.max(0.0) * scaler.dscale(j)
+}
+
+/// Joint density at a raw J-vector.
+pub fn joint_density(p: &Params, scaler: &Scaler, y: &[f64]) -> f64 {
+    let (j, d) = (p.spec.j, p.spec.d);
+    assert_eq!(y.len(), j);
+    let basis = Bernstein::new(d - 1);
+    let theta = p.theta();
+    let mut htil = vec![0.0; j];
+    let mut log_jac = 0.0;
+    for jj in 0..j {
+        let x = scaler.scale(jj, y[jj]);
+        let a = basis.eval(x);
+        let ad = basis.deriv(x);
+        let th = &theta[jj * d..(jj + 1) * d];
+        htil[jj] = a.iter().zip(th).map(|(ai, ti)| ai * ti).sum();
+        let hd: f64 = ad.iter().zip(th).map(|(ai, ti)| ai * ti).sum();
+        log_jac += hd.max(1e-300).ln() + scaler.dscale(jj).ln();
+    }
+    // z = Λ h̃, φ_J(z) = Π φ(z_j); |det Λ| = 1
+    let mut logphi = 0.0;
+    for jj in 0..j {
+        let mut z = htil[jj];
+        for ll in 0..jj {
+            z += p.lambda(jj, ll) * htil[ll];
+        }
+        logphi += -0.5 * z * z - 0.5 * (2.0 * std::f64::consts::PI).ln();
+    }
+    (logphi + log_jac).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basis::Design;
+    use crate::mctm::params::ModelSpec;
+    use crate::util::rng::Rng;
+
+    fn scaler_for(n: usize, j: usize, seed: u64) -> (Scaler, Mat) {
+        let mut rng = Rng::new(seed);
+        let data = Mat::from_vec(n, j, (0..n * j).map(|_| rng.normal()).collect());
+        (Scaler::fit(&data, 0.01), data)
+    }
+
+    #[test]
+    fn marginal_density_integrates_to_one() {
+        let spec = ModelSpec::new(2, 6);
+        let p = Params::init(spec);
+        let (scaler, _) = scaler_for(200, 2, 1);
+        // trapezoid over the data range (init model has mass inside)
+        let (lo, hi) = (scaler.mins[0] - 1.0, scaler.maxs[0] + 1.0);
+        let m = 4000;
+        let mut total = 0.0;
+        for i in 0..m {
+            let y = lo + (hi - lo) * (i as f64 + 0.5) / m as f64;
+            total += marginal_density(&p, &scaler, 0, y) * (hi - lo) / m as f64;
+        }
+        assert!((total - 1.0).abs() < 0.05, "integral {total}");
+    }
+
+    #[test]
+    fn joint_density_nonnegative_and_consistent() {
+        let spec = ModelSpec::new(2, 5);
+        let mut p = Params::init(spec);
+        // couple the components
+        let li = spec.j * spec.d;
+        p.x[li] = -0.6;
+        let (scaler, data) = scaler_for(50, 2, 3);
+        for r in 0..10 {
+            let y = [data.at(r, 0), data.at(r, 1)];
+            let f = joint_density(&p, &scaler, &y);
+            assert!(f >= 0.0 && f.is_finite());
+        }
+    }
+
+    #[test]
+    fn joint_matches_nll_per_point() {
+        // −log joint (on the SCALED scale, i.e. dropping the scaler
+        // Jacobian) equals the per-observation NLL contribution plus the
+        // normal constant
+        let spec = ModelSpec::new(2, 5);
+        let mut rng = Rng::new(4);
+        let data = Mat::from_vec(30, 2, (0..60).map(|_| rng.normal()).collect());
+        let design = Design::build(&data, 5, 0.01);
+        let mut p = Params::init(spec);
+        p.x[spec.j * spec.d] = 0.4;
+        let r = 11;
+        let single = design.select(&[r]);
+        let nll_val = crate::mctm::model::nll(&single, &[], &p);
+        let y = [data.at(r, 0), data.at(r, 1)];
+        let logf = joint_density(&p, &design.scaler, &y).ln();
+        let log_scale_jac: f64 =
+            (0..2).map(|c| design.scaler.dscale(c).ln()).sum();
+        let normal_const = 2.0 * 0.5 * (2.0 * std::f64::consts::PI).ln();
+        // −log f = nll + const − scaleJac
+        assert!(
+            (-logf - (nll_val + normal_const - log_scale_jac)).abs() < 1e-9,
+            "{} vs {}",
+            -logf,
+            nll_val + normal_const - log_scale_jac
+        );
+    }
+
+    #[test]
+    fn sigmas_identity_when_lambda_zero() {
+        let spec = ModelSpec::new(3, 4);
+        let p = Params::init(spec);
+        for s in marginal_sigmas(&p) {
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Evaluation metrics matching the paper's tables: parameter ℓ₂ distance
+//! (on ϑ), λ error, log-likelihood ratio with the paper's normalization
+//! shift log 𝒩 = nJ(ln c + 1), and the relative-improvement aggregate
+//! defined in the notes under Tables 3/4.
+
+use super::params::Params;
+
+/// Lipschitz-type constant c of the paper's assumption g(i,j) ≤ c. The
+/// shift only has to make the NLL positive so a ratio is meaningful; it
+/// never changes the argmin. c = e gives shift 2nJ.
+pub const DEFAULT_C: f64 = std::f64::consts::E;
+
+/// ℓ₂ distance between the materialized ϑ vectors of two fits.
+pub fn theta_l2(a: &Params, b: &Params) -> f64 {
+    assert_eq!(a.spec, b.spec);
+    let ta = a.theta();
+    let tb = b.theta();
+    ta.iter()
+        .zip(&tb)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// ℓ₂ distance between the λ blocks (the dependence structure).
+pub fn lambda_error(a: &Params, b: &Params) -> f64 {
+    assert_eq!(a.spec, b.spec);
+    a.lambda_block()
+        .iter()
+        .zip(b.lambda_block())
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Log-likelihood ratio of a coreset fit against the full fit, both
+/// evaluated on the FULL data, after the paper's normalization shift
+/// log 𝒩 = nJ(ln c + 1): values ≥ 1, closer to 1 is better.
+pub fn loglik_ratio(nll_coreset_on_full: f64, nll_full: f64, n: usize, j: usize) -> f64 {
+    let mut shift = n as f64 * j as f64 * (DEFAULT_C.ln() + 1.0);
+    // the Lipschitz constant is an assumption, not a computation — if the
+    // fitted NLL still lands below −shift (pathological), enlarge until
+    // the denominator is positive, mirroring "choose c large enough".
+    let mut denom = nll_full + shift;
+    while denom <= 0.0 {
+        shift *= 2.0;
+        denom = nll_full + shift;
+    }
+    (nll_coreset_on_full + shift) / denom
+}
+
+/// The paper's "Relative Improvement" aggregate over (ϑ-error, λ-error,
+/// LR): errors improve as (base − m)/base·100, LR as
+/// (|base−1| − |m−1|)/|base−1|·100; negatives clamp to 0 per table note;
+/// the three are averaged.
+pub fn relative_improvement(
+    method: (f64, f64, f64),
+    baseline: (f64, f64, f64),
+) -> f64 {
+    let (m_l2, m_lam, m_lr) = method;
+    let (b_l2, b_lam, b_lr) = baseline;
+    let imp_err = |m: f64, b: f64| -> f64 {
+        if b.abs() < 1e-300 {
+            0.0
+        } else {
+            ((b - m) / b * 100.0).max(0.0)
+        }
+    };
+    let imp_lr = {
+        let db = (b_lr - 1.0).abs();
+        if db < 1e-300 {
+            0.0
+        } else {
+            (((db - (m_lr - 1.0).abs()) / db) * 100.0).max(0.0)
+        }
+    };
+    (imp_err(m_l2, b_l2) + imp_err(m_lam, b_lam) + imp_lr) / 3.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mctm::params::ModelSpec;
+
+    #[test]
+    fn distances_zero_on_identical() {
+        let spec = ModelSpec::new(3, 5);
+        let p = Params::init(spec);
+        assert_eq!(theta_l2(&p, &p), 0.0);
+        assert_eq!(lambda_error(&p, &p), 0.0);
+    }
+
+    #[test]
+    fn lambda_error_sees_only_lambda() {
+        let spec = ModelSpec::new(2, 4);
+        let a = Params::init(spec);
+        let mut xb = a.x.clone();
+        let li = spec.j * spec.d; // first λ slot
+        xb[li] = 0.5;
+        let b = Params::new(spec, xb);
+        assert!((lambda_error(&a, &b) - 0.5).abs() < 1e-12);
+        assert_eq!(theta_l2(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn lr_identity_and_order() {
+        let lr = loglik_ratio(-100.0, -100.0, 50, 2);
+        assert!((lr - 1.0).abs() < 1e-12);
+        // a worse (larger) NLL gives LR > 1
+        assert!(loglik_ratio(-90.0, -100.0, 50, 2) > 1.0);
+    }
+
+    #[test]
+    fn relative_improvement_matches_paper_rule() {
+        // method strictly better on all three
+        let imp = relative_improvement((1.0, 0.1, 1.1), (2.0, 0.2, 1.3));
+        let expect = (50.0 + 50.0 + ((0.3 - 0.1) / 0.3 * 100.0)) / 3.0;
+        assert!((imp - expect).abs() < 1e-9);
+        // worse clamps to 0
+        assert_eq!(relative_improvement((4.0, 0.4, 3.0), (2.0, 0.2, 1.3)), 0.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Multivariate conditional transformation models (MCTMs), Klein et al.
+//! (2022): the negative log-likelihood of Eq. (1) in the paper, its
+//! analytic gradient, the monotone reparametrization, the f₁/f₂/f₃ split
+//! the coreset analysis operates on, marginal-density evaluation and the
+//! evaluation metrics used by the experiment tables.
+
+pub mod bootstrap;
+pub mod conditional;
+pub mod density;
+pub mod metrics;
+pub mod model;
+pub mod params;
+
+pub use bootstrap::{bootstrap_ci, BootstrapResult};
+pub use density::marginal_density;
+pub use metrics::{lambda_error, loglik_ratio, relative_improvement, theta_l2};
+pub use model::{nll, nll_grad, nll_parts, NllParts};
+pub use params::{ModelSpec, Params};

@@ -1,0 +1,344 @@
+//! The MCTM negative log-likelihood (paper Eq. (1)) and its analytic
+//! gradient, over precomputed Bernstein design tensors.
+//!
+//! Per observation i:
+//!   z_{ij} = h̃_j(y_{ij}) + Σ_{l<j} λ_{jl} h̃_l(y_{il}),
+//!   loss_i = Σ_j ½ z_{ij}² − log h̃'_j(y_{ij}),
+//! with h̃_j = a_{ij}ᵀ ϑ_j, h̃'_j = a'_{ij}ᵀ ϑ_j. Weighted sums (coreset
+//! weights w_i) everywhere; the unweighted case is w ≡ 1.
+//!
+//! This is the hot inner loop of model fitting; see EXPERIMENTS.md §Perf
+//! for the optimization history of this function.
+
+use super::params::Params;
+use crate::basis::Design;
+
+/// Floor for the log argument — the model-side D(η) guard. With the
+/// monotone reparametrization h̃' > 0 always holds, but the coreset
+/// theory evaluates the loss at *arbitrary* (ϑ, λ), where the paper
+/// restricts to ⟨ϑ_j, a'_ij⟩ > η.
+pub const ETA_FLOOR: f64 = 1e-12;
+
+/// The f₁/f₂/f₃ decomposition of the loss used by the coreset analysis
+/// (paper §2): squared part, positive log part, negative log part, so
+/// that f = f₁ − f₂ + f₃.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct NllParts {
+    pub f1: f64,
+    pub f2: f64,
+    pub f3: f64,
+}
+
+impl NllParts {
+    #[inline]
+    pub fn total(&self) -> f64 {
+        self.f1 - self.f2 + self.f3
+    }
+}
+
+/// Scratch buffers reused across NLL evaluations (the optimizer calls
+/// this hundreds of times; allocation in the loop was the first perf
+/// finding — see EXPERIMENTS.md §Perf L3-b).
+pub struct Workspace {
+    theta: Vec<f64>,
+    htil: Vec<f64>,
+    hd: Vec<f64>,
+    z: Vec<f64>,
+    ghtil: Vec<f64>,
+    grad_theta: Vec<f64>,
+}
+
+impl Workspace {
+    pub fn new(p: &Params) -> Self {
+        let (j, d) = (p.spec.j, p.spec.d);
+        Workspace {
+            theta: vec![0.0; j * d],
+            htil: vec![0.0; j],
+            hd: vec![0.0; j],
+            z: vec![0.0; j],
+            ghtil: vec![0.0; j],
+            grad_theta: vec![0.0; j * d],
+        }
+    }
+}
+
+#[inline]
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Weighted NLL Σ_i w_i loss_i at free parameters `p` (β-parametrized).
+/// `weights` of length `design.n`, or empty for unweighted.
+pub fn nll(design: &Design, weights: &[f64], p: &Params) -> f64 {
+    nll_impl(design, weights, p, None)
+}
+
+/// Weighted NLL and gradient w.r.t. the free parameter vector x.
+pub fn nll_grad(design: &Design, weights: &[f64], p: &Params) -> (f64, Vec<f64>) {
+    let mut grad = vec![0.0; p.spec.n_params()];
+    let v = nll_impl(design, weights, p, Some(&mut grad));
+    (v, grad)
+}
+
+fn nll_impl(
+    design: &Design,
+    weights: &[f64],
+    p: &Params,
+    mut grad: Option<&mut Vec<f64>>,
+) -> f64 {
+    let spec = p.spec;
+    let (j, d) = (spec.j, spec.d);
+    assert_eq!(design.j, j, "design J mismatch");
+    assert_eq!(design.d, d, "design d mismatch");
+    assert!(
+        weights.is_empty() || weights.len() == design.n,
+        "weights length"
+    );
+
+    let mut ws = Workspace::new(p);
+    ws.theta.copy_from_slice(&p.theta());
+    let lam = p.lambda_block();
+    // λ row offsets hoisted out of the per-row loops (lambda_index does
+    // a mul+shift per call — ~15% of the J=10 row cost; §Perf L3-b)
+    let lam_off: Vec<usize> = (0..j).map(|jj| jj * jj.saturating_sub(1) / 2).collect();
+
+    let mut total = 0.0;
+    let stride = j * d;
+
+    if let Some(g) = grad.as_deref_mut() {
+        g.iter_mut().for_each(|x| *x = 0.0);
+    }
+    ws.grad_theta.iter_mut().for_each(|x| *x = 0.0);
+
+    for i in 0..design.n {
+        let w = if weights.is_empty() { 1.0 } else { weights[i] };
+        if w == 0.0 {
+            continue;
+        }
+        let a = &design.a[i * stride..(i + 1) * stride];
+        let ad = &design.ad[i * stride..(i + 1) * stride];
+
+        // marginal transforms and derivatives
+        for jj in 0..j {
+            let th = &ws.theta[jj * d..(jj + 1) * d];
+            ws.htil[jj] = dot(&a[jj * d..(jj + 1) * d], th);
+            ws.hd[jj] = dot(&ad[jj * d..(jj + 1) * d], th);
+        }
+
+        // copula combination z_j = h̃_j + Σ_{l<j} λ_jl h̃_l
+        let mut li = 0usize;
+        for jj in 0..j {
+            let mut z = ws.htil[jj];
+            for ll in 0..jj {
+                z += lam[li + ll] * ws.htil[ll];
+            }
+            ws.z[jj] = z;
+            li += jj;
+        }
+
+        // loss
+        let mut loss = 0.0;
+        for jj in 0..j {
+            let hd = ws.hd[jj].max(ETA_FLOOR);
+            loss += 0.5 * ws.z[jj] * ws.z[jj] - hd.ln();
+        }
+        total += w * loss;
+
+        if let Some(g) = grad.as_deref_mut() {
+            // ∂loss/∂h̃_l = z_l + Σ_{j>l} λ_jl z_j
+            for ll in 0..j {
+                let mut gh = ws.z[ll];
+                for jj in (ll + 1)..j {
+                    gh += lam[lam_off[jj] + ll] * ws.z[jj];
+                }
+                ws.ghtil[ll] = gh;
+            }
+            // θ gradient (accumulated, chain to β once at the end)
+            for jj in 0..j {
+                let hd = ws.hd[jj].max(ETA_FLOOR);
+                let coef_a = w * ws.ghtil[jj];
+                let coef_ad = -w / hd;
+                let gt = &mut ws.grad_theta[jj * d..(jj + 1) * d];
+                let arow = &a[jj * d..(jj + 1) * d];
+                let adrow = &ad[jj * d..(jj + 1) * d];
+                for k in 0..d {
+                    gt[k] += coef_a * arow[k] + coef_ad * adrow[k];
+                }
+            }
+            // λ gradient: ∂loss/∂λ_jl = z_j · h̃_l
+            let goff = j * d;
+            let mut li = 0usize;
+            for jj in 1..j {
+                for ll in 0..jj {
+                    g[goff + li + ll] += w * ws.z[jj] * ws.htil[ll];
+                }
+                li += jj;
+            }
+        }
+    }
+
+    if let Some(g) = grad {
+        // chain θ → β in place, then write into the β block of g
+        p.grad_theta_to_beta(&mut ws.grad_theta);
+        g[..j * d].copy_from_slice(&ws.grad_theta);
+    }
+    total
+}
+
+/// Evaluate the f₁/f₂/f₃ split at **raw** (ϑ, λ) — the objects the
+/// coreset guarantees are stated for. `theta` row-major (j,k), `lam` the
+/// strictly-lower-triangular block.
+pub fn nll_parts(
+    design: &Design,
+    weights: &[f64],
+    theta: &[f64],
+    lam: &[f64],
+) -> NllParts {
+    let (j, d) = (design.j, design.d);
+    assert_eq!(theta.len(), j * d);
+    let stride = j * d;
+    let mut parts = NllParts::default();
+    let mut htil = vec![0.0; j];
+    for i in 0..design.n {
+        let w = if weights.is_empty() { 1.0 } else { weights[i] };
+        if w == 0.0 {
+            continue;
+        }
+        let a = &design.a[i * stride..(i + 1) * stride];
+        let ad = &design.ad[i * stride..(i + 1) * stride];
+        for jj in 0..j {
+            htil[jj] = dot(&a[jj * d..(jj + 1) * d], &theta[jj * d..(jj + 1) * d]);
+        }
+        let mut li = 0usize;
+        for jj in 0..j {
+            let mut z = htil[jj];
+            for ll in 0..jj {
+                z += lam[li + ll] * htil[ll];
+            }
+            parts.f1 += w * 0.5 * z * z;
+            let hd = dot(&ad[jj * d..(jj + 1) * d], &theta[jj * d..(jj + 1) * d]);
+            let lg = hd.max(ETA_FLOOR).ln();
+            if lg > 0.0 {
+                parts.f2 += w * lg;
+            } else {
+                parts.f3 += w * (-lg);
+            }
+            li += jj;
+        }
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::mctm::params::ModelSpec;
+    use crate::util::rng::Rng;
+
+    fn toy_design(n: usize, j: usize, d: usize, seed: u64) -> Design {
+        let mut rng = Rng::new(seed);
+        let data = Mat::from_vec(n, j, (0..n * j).map(|_| rng.normal()).collect());
+        Design::build(&data, d, 0.01)
+    }
+
+    fn random_params(spec: ModelSpec, seed: u64) -> Params {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f64> = (0..spec.n_params()).map(|_| 0.5 * rng.normal()).collect();
+        Params::new(spec, x)
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let spec = ModelSpec::new(3, 5);
+        let design = toy_design(25, 3, 5, 42);
+        let p = random_params(spec, 7);
+        let (_, grad) = nll_grad(&design, &[], &p);
+        let h = 1e-6;
+        for k in 0..spec.n_params() {
+            let mut xp = p.x.clone();
+            xp[k] += h;
+            let mut xm = p.x.clone();
+            xm[k] -= h;
+            let fp = nll(&design, &[], &Params::new(spec, xp));
+            let fm = nll(&design, &[], &Params::new(spec, xm));
+            let fd = (fp - fm) / (2.0 * h);
+            assert!(
+                (grad[k] - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+                "param {k}: analytic {} vs fd {fd}",
+                grad[k]
+            );
+        }
+    }
+
+    #[test]
+    fn weighted_equals_replication() {
+        // weight 2 on a row == duplicating the row
+        let spec = ModelSpec::new(2, 4);
+        let design = toy_design(10, 2, 4, 1);
+        let p = random_params(spec, 2);
+        let mut w = vec![1.0; 10];
+        w[3] = 2.0;
+        let weighted = nll(&design, &w, &p);
+        let mut idx: Vec<usize> = (0..10).collect();
+        idx.push(3);
+        let dup = design.select(&idx);
+        let plain = nll(&dup, &[], &p);
+        assert!((weighted - plain).abs() < 1e-10);
+    }
+
+    #[test]
+    fn zero_weights_skip_rows() {
+        let spec = ModelSpec::new(2, 4);
+        let design = toy_design(8, 2, 4, 3);
+        let p = random_params(spec, 4);
+        let mut w = vec![1.0; 8];
+        w[0] = 0.0;
+        w[7] = 0.0;
+        let v = nll(&design, &w, &p);
+        let sub = design.select(&(1..7).collect::<Vec<_>>());
+        assert!((v - nll(&sub, &[], &p)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn parts_sum_to_total() {
+        let spec = ModelSpec::new(3, 5);
+        let design = toy_design(30, 3, 5, 9);
+        let p = random_params(spec, 10);
+        let theta = p.theta();
+        let lam = p.lambda_block().to_vec();
+        let parts = nll_parts(&design, &[], &theta, &lam);
+        let total = nll(&design, &[], &p);
+        assert!(
+            (parts.total() - total).abs() < 1e-9,
+            "{} vs {total}",
+            parts.total()
+        );
+        assert!(parts.f1 >= 0.0 && parts.f2 >= 0.0 && parts.f3 >= 0.0);
+    }
+
+    #[test]
+    fn lambda_zero_decouples_components() {
+        // with λ = 0 the NLL is the sum of univariate NLLs ⇒ permuting
+        // one column's rows leaves the total invariant
+        let spec = ModelSpec::new(2, 4);
+        let mut rng = Rng::new(5);
+        let data = Mat::from_vec(12, 2, (0..24).map(|_| rng.normal()).collect());
+        let design = Design::build(&data, 4, 0.01);
+        let mut p = Params::init(spec);
+        // λ already 0 in init
+        let v = nll(&design, &[], &p);
+        // permute column 1
+        let mut permuted = data.clone();
+        for r in 0..12 {
+            *permuted.at_mut(r, 1) = data.at(11 - r, 1);
+        }
+        let design2 = Design::build(&permuted, 4, 0.01);
+        let v2 = nll(&design2, &[], &mut p);
+        assert!((v - v2).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,237 @@
+//! Parameter layout and the monotone reparametrization.
+//!
+//! Free parameters x ∈ R^p (p = J·d + J(J−1)/2):
+//!   x[0 .. J·d]            — β, row-major (j, k): basis pre-coefficients
+//!   x[J·d ..]              — λ, the strictly-lower-triangular copula
+//!                            entries in row-major order (1,0), (2,0),
+//!                            (2,1), (3,0), …
+//! The Bernstein coefficients are ϑ_{j,0} = β_{j,0},
+//! ϑ_{j,k} = ϑ_{j,k−1} + softplus(β_{j,k}), which makes every marginal
+//! transformation strictly increasing and keeps log h̃' finite — the
+//! model-side counterpart of the paper's D(η) domain restriction.
+
+/// Static shape of an MCTM: J output components, d basis functions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub j: usize,
+    pub d: usize,
+}
+
+impl ModelSpec {
+    pub fn new(j: usize, d: usize) -> Self {
+        assert!(j >= 1 && d >= 2);
+        ModelSpec { j, d }
+    }
+
+    /// Number of free λ entries.
+    #[inline]
+    pub fn n_lambda(&self) -> usize {
+        self.j * (self.j - 1) / 2
+    }
+
+    /// Total free-parameter dimension p.
+    #[inline]
+    pub fn n_params(&self) -> usize {
+        self.j * self.d + self.n_lambda()
+    }
+
+    /// Index of λ_{jl} (j > l) within the λ block.
+    #[inline]
+    pub fn lambda_index(&self, j: usize, l: usize) -> usize {
+        debug_assert!(l < j && j < self.j);
+        j * (j - 1) / 2 + l
+    }
+}
+
+/// Numerically stable softplus ln(1 + eˣ).
+#[inline]
+pub fn softplus(x: f64) -> f64 {
+    if x > 30.0 {
+        x
+    } else if x < -30.0 {
+        x.exp()
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+/// Logistic sigmoid σ(x) = softplus′(x).
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Inverse softplus (for initialisation): y = ln(eˣ − 1).
+#[inline]
+pub fn softplus_inv(y: f64) -> f64 {
+    assert!(y > 0.0);
+    if y > 30.0 {
+        y
+    } else {
+        (y.exp() - 1.0).ln()
+    }
+}
+
+/// A parameter vector view with conversion helpers.
+#[derive(Clone, Debug)]
+pub struct Params {
+    pub spec: ModelSpec,
+    /// the free vector (β then λ)
+    pub x: Vec<f64>,
+}
+
+impl Params {
+    pub fn new(spec: ModelSpec, x: Vec<f64>) -> Self {
+        assert_eq!(x.len(), spec.n_params());
+        Params { spec, x }
+    }
+
+    /// Sensible default initialisation: each marginal transformation is
+    /// (approximately) the affine map [0,1] → [−2, 2], λ = 0. With
+    /// min–max-scaled inputs this makes z roughly standard-normal at the
+    /// start, which keeps early optimizer steps well-conditioned.
+    pub fn init(spec: ModelSpec) -> Self {
+        let d = spec.d;
+        let step = 4.0 / (d - 1) as f64;
+        let mut x = vec![0.0; spec.n_params()];
+        for j in 0..spec.j {
+            x[j * d] = -2.0;
+            for k in 1..d {
+                x[j * d + k] = softplus_inv(step);
+            }
+        }
+        Params { spec, x }
+    }
+
+    /// β block view for component j.
+    #[inline]
+    pub fn beta(&self, j: usize) -> &[f64] {
+        &self.x[j * self.spec.d..(j + 1) * self.spec.d]
+    }
+
+    /// λ_{jl} for j > l.
+    #[inline]
+    pub fn lambda(&self, j: usize, l: usize) -> f64 {
+        self.x[self.spec.j * self.spec.d + self.spec.lambda_index(j, l)]
+    }
+
+    /// λ block as a slice.
+    #[inline]
+    pub fn lambda_block(&self) -> &[f64] {
+        &self.x[self.spec.j * self.spec.d..]
+    }
+
+    /// Materialize the monotone coefficients ϑ (row-major (j,k)).
+    pub fn theta(&self) -> Vec<f64> {
+        let (j, d) = (self.spec.j, self.spec.d);
+        let mut theta = vec![0.0; j * d];
+        for jj in 0..j {
+            let b = self.beta(jj);
+            let t = &mut theta[jj * d..(jj + 1) * d];
+            t[0] = b[0];
+            for k in 1..d {
+                t[k] = t[k - 1] + softplus(b[k]);
+            }
+        }
+        theta
+    }
+
+    /// Chain-rule: pull a gradient w.r.t. ϑ back to β **in place**
+    /// (reverse cumulative sums + sigmoid factors).
+    pub fn grad_theta_to_beta(&self, grad_theta: &mut [f64]) {
+        let (j, d) = (self.spec.j, self.spec.d);
+        debug_assert_eq!(grad_theta.len(), j * d);
+        for jj in 0..j {
+            let b = self.beta(jj);
+            let g = &mut grad_theta[jj * d..(jj + 1) * d];
+            // suffix sums: s_k = Σ_{k' ≥ k} ∂L/∂ϑ_{k'}
+            for k in (0..d - 1).rev() {
+                g[k] += g[k + 1];
+            }
+            // ∂ϑ_{k'}/∂β_0 = 1 ∀k' ⇒ g[0] already the full sum;
+            // ∂ϑ_{k'}/∂β_k = σ(β_k) for k ≤ k', k ≥ 1
+            for k in 1..d {
+                g[k] *= sigmoid(b[k]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_counts() {
+        let s = ModelSpec::new(3, 7);
+        assert_eq!(s.n_lambda(), 3);
+        assert_eq!(s.n_params(), 24);
+        assert_eq!(s.lambda_index(1, 0), 0);
+        assert_eq!(s.lambda_index(2, 0), 1);
+        assert_eq!(s.lambda_index(2, 1), 2);
+    }
+
+    #[test]
+    fn softplus_stable() {
+        assert!((softplus(0.0) - 2.0f64.ln()).abs() < 1e-12);
+        assert!((softplus(100.0) - 100.0).abs() < 1e-12);
+        assert!(softplus(-100.0) > 0.0);
+        assert!((softplus_inv(softplus(1.3)) - 1.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn theta_is_monotone() {
+        let spec = ModelSpec::new(2, 6);
+        let mut x = vec![0.0; spec.n_params()];
+        for (i, v) in x.iter_mut().enumerate() {
+            *v = (i as f64 * 0.7).sin() * 2.0;
+        }
+        let p = Params::new(spec, x);
+        let theta = p.theta();
+        for j in 0..2 {
+            for k in 1..6 {
+                assert!(theta[j * 6 + k] > theta[j * 6 + k - 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn init_spans_minus2_to_2() {
+        let spec = ModelSpec::new(2, 7);
+        let p = Params::init(spec);
+        let theta = p.theta();
+        assert!((theta[0] + 2.0).abs() < 1e-9);
+        assert!((theta[6] - 2.0).abs() < 1e-6);
+        assert!(p.lambda_block().iter().all(|&l| l == 0.0));
+    }
+
+    #[test]
+    fn grad_chain_rule_matches_fd() {
+        // finite-difference check of grad_theta_to_beta through a toy
+        // scalar function L(ϑ) = Σ c_k ϑ_k
+        let spec = ModelSpec::new(1, 5);
+        let x = vec![0.3, -0.7, 1.1, 0.2, -0.4];
+        let p = Params::new(spec, x.clone());
+        let c = [0.5, -1.0, 2.0, 0.1, 0.9];
+        let f = |xs: &[f64]| -> f64 {
+            let pp = Params::new(spec, xs.to_vec());
+            pp.theta().iter().zip(&c).map(|(t, ci)| t * ci).sum()
+        };
+        let mut g = c.to_vec();
+        p.grad_theta_to_beta(&mut g);
+        let h = 1e-6;
+        for k in 0..5 {
+            let mut xp = x.clone();
+            xp[k] += h;
+            let mut xm = x.clone();
+            xm[k] -= h;
+            let fd = (f(&xp) - f(&xm)) / (2.0 * h);
+            assert!((g[k] - fd).abs() < 1e-6, "k={k}: {} vs {fd}", g[k]);
+        }
+    }
+}

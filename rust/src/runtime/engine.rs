@@ -1,0 +1,267 @@
+//! The PJRT engine: compile-once executable cache + tile-padded
+//! execution of the AOT entry points.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Artifacts have fixed shapes (tile T rows); the tiled runners pad the
+//! last tile with zero-weight rows, so any n works.
+
+use super::manifest::{Manifest, ManifestEntry};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Compile-once cache of PJRT executables, keyed by artifact name.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: std::cell::RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, cache: Default::default() })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling if needed) the executable for a manifest entry.
+    pub fn executable(
+        &self,
+        entry: &ManifestEntry,
+    ) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&entry.name) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.path_of(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("loading {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", entry.name))?,
+        );
+        self.cache
+            .borrow_mut()
+            .insert(entry.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an entry with f64 input buffers of the given shapes and
+    /// return the flat f64 outputs (the AOT side lowers with
+    /// return_tuple=True).
+    pub fn run_f64(
+        &self,
+        entry: &ManifestEntry,
+        inputs: &[(&[f64], &[i64])],
+    ) -> Result<Vec<Vec<f64>>> {
+        let exe = self.executable(entry)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                xla::Literal::vec1(data)
+                    .reshape(shape)
+                    .context("shaping input literal")
+            })
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let parts = result.to_tuple().context("untupling result")?;
+        parts
+            .into_iter()
+            .map(|lit| lit.to_vec::<f64>().context("reading f64 output"))
+            .collect()
+    }
+}
+
+/// Tiled weighted-NLL (+grad) runner over an arbitrary-n design:
+/// splits (y, w) into fixed-size tiles, pads the last tile with
+/// weight-0 rows, accumulates value and gradient.
+pub struct TiledNll<'a> {
+    pub engine: &'a Engine,
+    pub j: usize,
+    pub d: usize,
+    grad_entry: ManifestEntry,
+    eval_entry: Option<ManifestEntry>,
+    pub tile: usize,
+    pub n_params: usize,
+}
+
+impl<'a> TiledNll<'a> {
+    pub fn new(engine: &'a Engine, j: usize, d: usize) -> Result<Self> {
+        let grad_entry = engine
+            .manifest
+            .nll_grad(j, d)
+            .ok_or_else(|| {
+                anyhow!("no nll_grad artifact for J={j}, d={d}; re-run aot with --configs")
+            })?
+            .clone();
+        let eval_entry = engine.manifest.nll_eval(j, d).cloned();
+        Ok(TiledNll {
+            engine,
+            j,
+            d,
+            tile: grad_entry.tile,
+            n_params: grad_entry.n_params,
+            grad_entry,
+            eval_entry,
+        })
+    }
+
+    /// Weighted NLL + gradient over scaled data rows `y` (n × J,
+    /// row-major flat) with weights `w` (empty = unweighted).
+    pub fn nll_grad(&self, params: &[f64], y: &[f64], w: &[f64]) -> Result<(f64, Vec<f64>)> {
+        assert_eq!(params.len(), self.n_params);
+        let n = y.len() / self.j;
+        let mut total = 0.0;
+        let mut grad = vec![0.0; self.n_params];
+        for (ty, tw) in self.tiles(y, w, n) {
+            let outs = self.engine.run_f64(
+                &self.grad_entry,
+                &[
+                    (params, &[self.n_params as i64]),
+                    (&ty, &[self.tile as i64, self.j as i64]),
+                    (&tw, &[self.tile as i64]),
+                ],
+            )?;
+            total += outs[0][0];
+            for (g, o) in grad.iter_mut().zip(&outs[1]) {
+                *g += o;
+            }
+        }
+        Ok((total, grad))
+    }
+
+    /// Forward-only weighted NLL through the fused Pallas kernel.
+    pub fn nll_eval(&self, params: &[f64], y: &[f64], w: &[f64]) -> Result<f64> {
+        let entry = self
+            .eval_entry
+            .as_ref()
+            .ok_or_else(|| anyhow!("no nll_eval artifact for J={}, d={}", self.j, self.d))?;
+        let n = y.len() / self.j;
+        let mut total = 0.0;
+        for (ty, tw) in self.tiles(y, w, n) {
+            let outs = self.engine.run_f64(
+                entry,
+                &[
+                    (params, &[self.n_params as i64]),
+                    (&ty, &[self.tile as i64, self.j as i64]),
+                    (&tw, &[self.tile as i64]),
+                ],
+            )?;
+            total += outs[0][0];
+        }
+        Ok(total)
+    }
+
+    /// Iterate padded tiles: (y_tile flat T·J, w_tile T).
+    fn tiles<'b>(
+        &'b self,
+        y: &'b [f64],
+        w: &'b [f64],
+        n: usize,
+    ) -> impl Iterator<Item = (Vec<f64>, Vec<f64>)> + 'b {
+        let t = self.tile;
+        let j = self.j;
+        let n_tiles = n.div_ceil(t);
+        (0..n_tiles).map(move |k| {
+            let lo = k * t;
+            let hi = ((k + 1) * t).min(n);
+            let mut ty = vec![0.5; t * j]; // pad with interior value 0.5
+            let mut tw = vec![0.0; t];
+            ty[..(hi - lo) * j].copy_from_slice(&y[lo * j..hi * j]);
+            for i in lo..hi {
+                tw[i - lo] = if w.is_empty() { 1.0 } else { w[i] };
+            }
+            (ty, tw)
+        })
+    }
+}
+
+/// Tiled leverage-score pipeline over the stacked matrix (n × D):
+/// pass 1 accumulates the Gram via the `gram` artifact, pass 2 scores
+/// all rows via the `leverage` artifact given L⁻¹ from the coordinator.
+pub struct TiledLeverage<'a> {
+    pub engine: &'a Engine,
+    gram_entry: ManifestEntry,
+    lev_entry: ManifestEntry,
+    pub dim: usize,
+    pub tile: usize,
+}
+
+impl<'a> TiledLeverage<'a> {
+    pub fn new(engine: &'a Engine, dim: usize) -> Result<Self> {
+        let gram_entry = engine
+            .manifest
+            .gram(dim)
+            .ok_or_else(|| anyhow!("no gram artifact for D={dim}"))?
+            .clone();
+        let lev_entry = engine
+            .manifest
+            .leverage(dim)
+            .ok_or_else(|| anyhow!("no leverage artifact for D={dim}"))?
+            .clone();
+        let tile = gram_entry.tile;
+        Ok(TiledLeverage { engine, gram_entry, lev_entry, dim, tile })
+    }
+
+    /// Pass 1: Gram matrix (D×D, row-major flat) of the n×D matrix `x`.
+    pub fn gram(&self, x: &[f64]) -> Result<Vec<f64>> {
+        let n = x.len() / self.dim;
+        let mut g = vec![0.0; self.dim * self.dim];
+        for tx in self.tiles(x, n) {
+            let outs = self.engine.run_f64(
+                &self.gram_entry,
+                &[(&tx, &[self.tile as i64, self.dim as i64])],
+            )?;
+            for (gi, o) in g.iter_mut().zip(&outs[0]) {
+                *gi += o;
+            }
+        }
+        Ok(g)
+    }
+
+    /// Pass 2: leverage scores of all n rows given L⁻¹ (D×D flat).
+    pub fn scores(&self, x: &[f64], linv: &[f64]) -> Result<Vec<f64>> {
+        let n = x.len() / self.dim;
+        let mut out = Vec::with_capacity(n);
+        let mut taken = 0usize;
+        for tx in self.tiles(x, n) {
+            let outs = self.engine.run_f64(
+                &self.lev_entry,
+                &[
+                    (&tx, &[self.tile as i64, self.dim as i64]),
+                    (linv, &[self.dim as i64, self.dim as i64]),
+                ],
+            )?;
+            let remain = n - taken;
+            let take = remain.min(self.tile);
+            out.extend_from_slice(&outs[0][..take]);
+            taken += take;
+        }
+        Ok(out)
+    }
+
+    fn tiles<'b>(&'b self, x: &'b [f64], n: usize) -> impl Iterator<Item = Vec<f64>> + 'b {
+        let t = self.tile;
+        let d = self.dim;
+        let n_tiles = n.div_ceil(t);
+        (0..n_tiles).map(move |k| {
+            let lo = k * t;
+            let hi = ((k + 1) * t).min(n);
+            let mut tx = vec![0.0; t * d]; // zero rows add nothing to Gram
+            tx[..(hi - lo) * d].copy_from_slice(&x[lo * d..hi * d]);
+            tx
+        })
+    }
+}

@@ -1,0 +1,161 @@
+//! Parse `artifacts/manifest.json` (written by aot.py). No `serde`
+//! offline, so this is a purpose-built parser for exactly the JSON the
+//! build emits — flat objects, string/number/array-of-int fields.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled entry point.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub kind: String,
+    pub j: usize,
+    pub d: usize,
+    pub dim: usize,
+    pub tile: usize,
+    pub n_params: usize,
+}
+
+/// The artifact registry.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub tile: usize,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Load from `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let tile = extract_usize(text, "\"tile\"")
+            .ok_or_else(|| anyhow!("manifest missing top-level tile"))?;
+        let mut entries = Vec::new();
+        // entries are objects inside the "entries" array; split on '{'
+        // after the array opens
+        let arr_start = text
+            .find("\"entries\"")
+            .ok_or_else(|| anyhow!("manifest missing entries"))?;
+        let body = &text[arr_start..];
+        for obj in body.split('{').skip(1) {
+            let end = obj.find('}').unwrap_or(obj.len());
+            let obj = &obj[..end];
+            let name = extract_string(obj, "\"name\"")
+                .ok_or_else(|| anyhow!("entry missing name"))?;
+            let kind = extract_string(obj, "\"kind\"")
+                .ok_or_else(|| anyhow!("entry missing kind"))?;
+            entries.push(ManifestEntry {
+                name,
+                kind,
+                j: extract_usize(obj, "\"j\"").unwrap_or(0),
+                d: extract_usize(obj, "\"d\"").unwrap_or(0),
+                dim: extract_usize(obj, "\"dim\"").unwrap_or(0),
+                tile: extract_usize(obj, "\"tile\"").unwrap_or(tile),
+                n_params: extract_usize(obj, "\"n_params\"").unwrap_or(0),
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), tile, entries })
+    }
+
+    /// Find the nll_grad entry for a model shape.
+    pub fn nll_grad(&self, j: usize, d: usize) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == "nll_grad" && e.j == j && e.d == d)
+    }
+
+    /// Find the nll_eval entry for a model shape.
+    pub fn nll_eval(&self, j: usize, d: usize) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == "nll_eval" && e.j == j && e.d == d)
+    }
+
+    /// Find gram / leverage entries for stacked dimension D.
+    pub fn gram(&self, dim: usize) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.kind == "gram" && e.dim == dim)
+    }
+
+    pub fn leverage(&self, dim: usize) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == "leverage" && e.dim == dim)
+    }
+
+    /// Absolute path of an entry's HLO text.
+    pub fn path_of(&self, e: &ManifestEntry) -> PathBuf {
+        self.dir.join(format!("{}.hlo.txt", e.name))
+    }
+}
+
+fn extract_string(obj: &str, key: &str) -> Option<String> {
+    let at = obj.find(key)?;
+    let rest = &obj[at + key.len()..];
+    let colon = rest.find(':')?;
+    let rest = rest[colon + 1..].trim_start();
+    let rest = rest.strip_prefix('"')?;
+    let end = rest.find('"')?;
+    Some(rest[..end].to_string())
+}
+
+fn extract_usize(obj: &str, key: &str) -> Option<usize> {
+    let at = obj.find(key)?;
+    let rest = &obj[at + key.len()..];
+    let colon = rest.find(':')?;
+    let rest = rest[colon + 1..].trim_start();
+    let end = rest
+        .find(|c: char| !c.is_ascii_digit())
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "dtype": "f64", "tile": 512,
+      "entries": [
+        {"name": "nll_grad_j2_d7_t512", "kind": "nll_grad", "j": 2, "d": 7,
+         "tile": 512, "n_params": 15, "inputs": [[15],[512,2],[512]],
+         "outputs": [[],[15]]},
+        {"name": "gram_d14_t512", "kind": "gram", "dim": 14, "tile": 512,
+         "inputs": [[512,14]], "outputs": [[14,14]]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.tile, 512);
+        assert_eq!(m.entries.len(), 2);
+        let e = m.nll_grad(2, 7).unwrap();
+        assert_eq!(e.n_params, 15);
+        assert_eq!(e.tile, 512);
+        let g = m.gram(14).unwrap();
+        assert_eq!(g.dim, 14);
+        assert!(m.nll_grad(5, 7).is_none());
+        assert_eq!(
+            m.path_of(e),
+            PathBuf::from("/tmp/a/nll_grad_j2_d7_t512.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn real_manifest_parses_when_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.nll_grad(2, 7).is_some());
+            assert!(m.gram(14).is_some());
+        }
+    }
+}

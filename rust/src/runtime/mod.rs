@@ -1,0 +1,13 @@
+//! PJRT runtime (L3 ↔ L2 bridge): loads the HLO-text artifacts emitted
+//! by `python/compile/aot.py`, compiles them once on the PJRT CPU
+//! client, and exposes typed, tile-padded execution to the coordinator.
+//! Python is never on this path — the binary is self-contained once
+//! `make artifacts` has run.
+
+pub mod engine;
+pub mod manifest;
+pub mod objective;
+
+pub use engine::{Engine, TiledNll};
+pub use manifest::{Manifest, ManifestEntry};
+pub use objective::XlaNll;

@@ -1,0 +1,60 @@
+//! The XLA-backed fitting objective: plugs the tiled PJRT runner into
+//! the generic `fit::Objective` interface, so the same L-BFGS/Adam
+//! drivers work over either backend.
+
+use super::engine::{Engine, TiledNll};
+use crate::fit::Objective;
+use crate::linalg::Mat;
+use anyhow::Result;
+
+/// Weighted MCTM NLL evaluated through the AOT-compiled artifact.
+pub struct XlaNll<'a> {
+    runner: TiledNll<'a>,
+    /// scaled data rows, flat n×J
+    y: Vec<f64>,
+    weights: Vec<f64>,
+}
+
+impl<'a> XlaNll<'a> {
+    /// `data` is RAW data; scaling happens here with the same min–max
+    /// rule the native backend uses (so both backends see identical
+    /// inputs). Pass the scaler from a shared `Design` when comparing.
+    pub fn from_scaled(
+        engine: &'a Engine,
+        j: usize,
+        d: usize,
+        scaled: &Mat,
+        weights: Vec<f64>,
+    ) -> Result<Self> {
+        assert_eq!(scaled.cols, j);
+        let runner = TiledNll::new(engine, j, d)?;
+        Ok(XlaNll { runner, y: scaled.data.clone(), weights })
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.y.len() / self.runner.j
+    }
+
+    /// Forward-only NLL via the fused Pallas artifact.
+    pub fn eval(&self, x: &[f64]) -> Result<f64> {
+        self.runner.nll_eval(x, &self.y, &self.weights)
+    }
+}
+
+impl Objective for XlaNll<'_> {
+    fn dim(&self) -> usize {
+        self.runner.n_params
+    }
+
+    fn value_grad(&self, x: &[f64]) -> (f64, Vec<f64>) {
+        match self.runner.nll_grad(x, &self.y, &self.weights) {
+            Ok(vg) => vg,
+            Err(e) => {
+                // surface runtime errors as +inf so the line search backs
+                // off rather than crashing mid-fit
+                eprintln!("xla objective error: {e:#}");
+                (f64::INFINITY, vec![0.0; self.runner.n_params])
+            }
+        }
+    }
+}

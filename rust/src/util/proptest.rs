@@ -1,0 +1,84 @@
+//! Minimal randomized property-test harness.
+//!
+//! The `proptest` crate is unavailable in the offline registry, so tests
+//! use this generator-based harness instead: run a property over `cases`
+//! random inputs drawn from user-provided generators; on failure, report
+//! the seed + case index so the exact input reproduces deterministically.
+//! (No shrinking — cases are kept small instead.)
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` inputs from `gen`, panicking with a
+/// reproducible seed on the first failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed at case {case} (seed {seed}):\n  \
+                 input: {input:?}\n  reason: {msg}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use super::Rng;
+
+    /// Random vector of length `n` with entries in [lo, hi).
+    pub fn vec_in(rng: &mut Rng, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| rng.uniform(lo, hi)).collect()
+    }
+
+    /// Random standard-normal vector.
+    pub fn vec_normal(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    /// Random size in [lo, hi].
+    pub fn size(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.usize(hi - lo + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(
+            "abs is non-negative",
+            1,
+            100,
+            |rng| rng.normal(),
+            |x| {
+                if x.abs() >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("negative abs".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn reports_failure() {
+        check(
+            "always fails",
+            2,
+            10,
+            |rng| rng.f64(),
+            |_| Err("no".into()),
+        );
+    }
+}

@@ -1,0 +1,196 @@
+//! Output writers for the experiment harness: aligned console tables
+//! (matching the paper's table layout), CSV series for the figures, and a
+//! minimal JSON writer for machine-readable results (no `serde` offline).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+/// A console table with a title, column headers and string rows.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n== {} ==", self.title);
+        let line = |w: &Vec<usize>| -> String {
+            let mut s = String::from("+");
+            for &wi in w {
+                s.push_str(&"-".repeat(wi + 2));
+                s.push('+');
+            }
+            s
+        };
+        let _ = writeln!(out, "{}", line(&widths));
+        let mut hdr = String::from("|");
+        for i in 0..ncol {
+            let _ = write!(hdr, " {:<w$} |", self.headers[i], w = widths[i]);
+        }
+        let _ = writeln!(out, "{hdr}");
+        let _ = writeln!(out, "{}", line(&widths));
+        for row in &self.rows {
+            let mut r = String::from("|");
+            for i in 0..ncol {
+                let _ = write!(r, " {:<w$} |", row[i], w = widths[i]);
+            }
+            let _ = writeln!(out, "{r}");
+        }
+        let _ = writeln!(out, "{}", line(&widths));
+        out
+    }
+
+    /// Print to stdout and, if `path` is Some, also save as CSV.
+    pub fn emit(&self, path: Option<&Path>) {
+        print!("{}", self.render());
+        if let Some(p) = path {
+            if let Err(e) = self.save_csv(p) {
+                eprintln!("warn: could not save {}: {e}", p.display());
+            } else {
+                println!("saved {}", p.display());
+            }
+        }
+    }
+
+    pub fn save_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut f = fs::File::create(path)?;
+        writeln!(f, "{}", self.headers.join(","))?;
+        for row in &self.rows {
+            let cells: Vec<String> = row.iter().map(|c| csv_escape(c)).collect();
+            writeln!(f, "{}", cells.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+fn csv_escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Write named numeric series to a CSV file (one column per series) — the
+/// figure benches use this to emit plot data.
+pub fn write_series_csv(
+    path: &Path,
+    columns: &[(&str, &[f64])],
+) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    let mut f = fs::File::create(path)?;
+    let headers: Vec<&str> = columns.iter().map(|(h, _)| *h).collect();
+    writeln!(f, "{}", headers.join(","))?;
+    let rows = columns.iter().map(|(_, v)| v.len()).max().unwrap_or(0);
+    for r in 0..rows {
+        let cells: Vec<String> = columns
+            .iter()
+            .map(|(_, v)| {
+                v.get(r).map(|x| format!("{x}")).unwrap_or_default()
+            })
+            .collect();
+        writeln!(f, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+/// Minimal JSON value for machine-readable result dumps.
+pub enum Json {
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn render(&self) -> String {
+        match self {
+            Json::Num(x) => {
+                if x.is_finite() {
+                    format!("{x}")
+                } else {
+                    "null".to_string()
+                }
+            }
+            Json::Str(s) => format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+            Json::Arr(xs) => {
+                let inner: Vec<String> = xs.iter().map(|x| x.render()).collect();
+                format!("[{}]", inner.join(","))
+            }
+            Json::Obj(kvs) => {
+                let inner: Vec<String> = kvs
+                    .iter()
+                    .map(|(k, v)| format!("\"{}\":{}", k, v.render()))
+                    .collect();
+                format!("{{{}}}", inner.join(","))
+            }
+        }
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, self.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["method", "err"]);
+        t.row(vec!["l2-hull".into(), "0.44 ± 0.16".into()]);
+        t.row(vec!["uniform".into(), "0.29".into()]);
+        let s = t.render();
+        assert!(s.contains("l2-hull"));
+        assert!(s.contains("| method"));
+    }
+
+    #[test]
+    fn json_renders() {
+        let j = Json::Obj(vec![
+            ("a".into(), Json::Num(1.5)),
+            ("b".into(), Json::Arr(vec![Json::Str("x\"y".into())])),
+        ]);
+        assert_eq!(j.render(), "{\"a\":1.5,\"b\":[\"x\\\"y\"]}");
+    }
+
+    #[test]
+    fn csv_escape_quotes() {
+        assert_eq!(csv_escape("a,b"), "\"a,b\"");
+        assert_eq!(csv_escape("plain"), "plain");
+    }
+}

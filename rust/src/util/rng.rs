@@ -1,0 +1,365 @@
+//! Deterministic, dependency-free pseudo-random number generation.
+//!
+//! The offline build has no `rand` crate, so we ship a small, well-tested
+//! xoshiro256++ generator (Blackman & Vigna) seeded through SplitMix64,
+//! plus the sampling routines the data-generation processes and the
+//! coreset samplers need: uniforms, normals (Box–Muller), gamma
+//! (Marsaglia–Tsang), Student-t, chi-square, exponential, and weighted
+//! index sampling via Walker's alias method.
+
+/// xoshiro256++ PRNG. Deterministic given a seed; period 2^256 − 1.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second normal from Box–Muller
+    spare_normal: Option<f64>,
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+#[inline]
+fn rotl(x: u64, k: u32) -> u64 {
+    x.rotate_left(k)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (expanded via SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_normal: None }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = rotl(s[0].wrapping_add(s[3]), 23).wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = rotl(s[3], 45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in (0, 1] — safe as a log() argument.
+    #[inline]
+    pub fn f64_open(&mut self) -> f64 {
+        1.0 - self.f64()
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n) (Lemire-style rejection-free for our use).
+    #[inline]
+    pub fn usize(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 128-bit multiply avoids modulo bias well below any statistical
+        // resolution we care about at n << 2^64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (caches the second variate).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        let u1 = self.f64_open();
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (std::f64::consts::TAU * u2).sin_cos();
+        self.spare_normal = Some(r * s);
+        r * c
+    }
+
+    /// Normal with given mean and standard deviation.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// Exponential(rate).
+    #[inline]
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        -self.f64_open().ln() / rate
+    }
+
+    /// Gamma(shape k, scale θ) via Marsaglia–Tsang (k ≥ 1) with the
+    /// standard boost for k < 1.
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        if shape < 1.0 {
+            let u = self.f64_open();
+            return self.gamma(shape + 1.0, scale) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.f64_open();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln())
+            {
+                return d * v3 * scale;
+            }
+        }
+    }
+
+    /// Chi-square with ν degrees of freedom.
+    #[inline]
+    pub fn chi2(&mut self, nu: f64) -> f64 {
+        self.gamma(nu / 2.0, 2.0)
+    }
+
+    /// Student-t with ν degrees of freedom.
+    #[inline]
+    pub fn student_t(&mut self, nu: f64) -> f64 {
+        self.normal() / (self.chi2(nu) / nu).sqrt()
+    }
+
+    /// Log-normal(μ, σ) (parameters on the log scale).
+    #[inline]
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` indices uniformly **without** replacement from [0, n).
+    pub fn sample_without_replacement(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} from {n} without replacement");
+        // Floyd's algorithm: O(k) expected, no O(n) allocation.
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.usize(j + 1);
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        out
+    }
+}
+
+/// Walker's alias method for O(1) weighted index sampling after O(n) setup.
+///
+/// Used by the sensitivity sampler, which draws k₁ i.i.d. indices with
+/// probabilities p_i ∝ leverage + uniform term (paper Algorithm 1 step
+/// "Sampling phase").
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+    /// the normalized probabilities (kept for weight computation 1/(k p_i))
+    p: Vec<f64>,
+}
+
+impl AliasTable {
+    /// Build from non-negative weights (not necessarily normalized).
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "alias table needs at least one weight");
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "alias table needs positive total weight");
+        let p: Vec<f64> = weights.iter().map(|w| w / total).collect();
+        let mut prob = vec![0.0f64; n];
+        let mut alias = vec![0usize; n];
+        let mut small = Vec::new();
+        let mut large = Vec::new();
+        let scaled: Vec<f64> = p.iter().map(|&x| x * n as f64).collect();
+        let mut scaled = scaled;
+        for (i, &s) in scaled.iter().enumerate() {
+            if s < 1.0 {
+                small.push(i)
+            } else {
+                large.push(i)
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[s] = scaled[s];
+            alias[s] = l;
+            scaled[l] = (scaled[l] + scaled[s]) - 1.0;
+            if scaled[l] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        for &l in &large {
+            prob[l] = 1.0;
+        }
+        for &s in &small {
+            prob[s] = 1.0;
+        }
+        AliasTable { prob, alias, p }
+    }
+
+    /// Draw one index.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let i = rng.usize(self.prob.len());
+        if rng.f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+
+    /// Probability of index i (normalized).
+    #[inline]
+    pub fn p(&self, i: usize) -> f64 {
+        self.p[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut rng = Rng::new(42);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(7);
+        let n = 200_000;
+        let (mut m, mut v) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            m += z;
+            v += z * z;
+        }
+        m /= n as f64;
+        v = v / n as f64 - m * m;
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((v - 1.0).abs() < 0.03, "var {v}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut rng = Rng::new(9);
+        let (shape, scale) = (2.0, 1.5);
+        let n = 100_000;
+        let mut m = 0.0;
+        for _ in 0..n {
+            m += rng.gamma(shape, scale);
+        }
+        m /= n as f64;
+        assert!((m - shape * scale).abs() < 0.05, "gamma mean {m}");
+    }
+
+    #[test]
+    fn student_t_symmetric_heavy() {
+        let mut rng = Rng::new(11);
+        let n = 100_000;
+        let mut m = 0.0;
+        let mut extreme = 0usize;
+        for _ in 0..n {
+            let t = rng.student_t(3.0);
+            m += t;
+            if t.abs() > 6.0 {
+                extreme += 1;
+            }
+        }
+        assert!((m / n as f64).abs() < 0.05);
+        // t(3) has visibly heavier tails than normal: P(|T|>6) ≈ 0.46%
+        // per tail-pair; normal would give ~2e-9.
+        assert!(extreme > 100, "extreme count {extreme}");
+    }
+
+    #[test]
+    fn chi2_mean() {
+        let mut rng = Rng::new(13);
+        let n = 50_000;
+        let mut m = 0.0;
+        for _ in 0..n {
+            m += rng.chi2(4.0);
+        }
+        assert!((m / n as f64 - 4.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn alias_table_matches_weights() {
+        let weights = vec![1.0, 2.0, 3.0, 4.0];
+        let table = AliasTable::new(&weights);
+        let mut rng = Rng::new(5);
+        let mut counts = [0usize; 4];
+        let n = 400_000;
+        for _ in 0..n {
+            counts[table.sample(&mut rng)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let expected = weights[i] / 10.0;
+            let got = c as f64 / n as f64;
+            assert!((got - expected).abs() < 0.01, "idx {i}: {got} vs {expected}");
+            assert!((table.p(i) - expected).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn without_replacement_is_a_set() {
+        let mut rng = Rng::new(3);
+        let picks = rng.sample_without_replacement(100, 30);
+        let set: std::collections::HashSet<_> = picks.iter().collect();
+        assert_eq!(set.len(), 30);
+        assert!(picks.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a: Vec<u64> = {
+            let mut r = Rng::new(99);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Rng::new(99);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

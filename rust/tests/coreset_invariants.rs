@@ -1,0 +1,178 @@
+//! Statistical invariants of the coreset constructions — the testable
+//! faces of Lemmas 2.1–2.3 and Theorem 2.4.
+
+use mctm_coreset::basis::Design;
+use mctm_coreset::coordinator::experiment::design_of;
+use mctm_coreset::coreset::hull::{dist_to_hull, select_hull_points};
+use mctm_coreset::coreset::{build_coreset, Method};
+use mctm_coreset::data::dgp::Dgp;
+use mctm_coreset::mctm::{nll_parts, ModelSpec, Params};
+use mctm_coreset::util::rng::Rng;
+
+fn random_theta_lambda(spec: ModelSpec, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let p = Params::new(
+        spec,
+        (0..spec.n_params()).map(|_| 0.5 * rng.normal()).collect(),
+    );
+    (p.theta(), p.lambda_block().to_vec())
+}
+
+/// Lemma 2.1 (statistical form): leverage-score sampling preserves f₁
+/// within small relative error on average, across parameter draws and
+/// heterogeneous DGPs.
+#[test]
+fn f1_preserved_within_epsilon() {
+    let spec = ModelSpec::new(2, 6);
+    for dgp in [Dgp::BivariateNormal, Dgp::Heteroscedastic, Dgp::NormalMixture] {
+        let mut rng = Rng::new(17);
+        let data = dgp.generate(4_000, &mut rng);
+        let design = design_of(&data, 6);
+        let mut worst: f64 = 0.0;
+        let mut mean_err = 0.0;
+        let trials = 12;
+        for t in 0..trials {
+            let (theta, lam) = random_theta_lambda(spec, 100 + t);
+            let full = nll_parts(&design, &[], &theta, &lam);
+            let cs = build_coreset(&design, Method::L2Only, 400, &mut rng);
+            let sub = design.select(&cs.indices);
+            let part = nll_parts(&sub, &cs.weights, &theta, &lam);
+            let rel = ((part.f1 - full.f1) / full.f1).abs();
+            worst = worst.max(rel);
+            mean_err += rel / trials as f64;
+        }
+        assert!(
+            mean_err < 0.15,
+            "{}: mean f1 relative error {mean_err}",
+            dgp.name()
+        );
+        assert!(worst < 0.6, "{}: worst f1 error {worst}", dgp.name());
+    }
+}
+
+/// The hull component guards the negative-log part: for every direction
+/// ϑ, the minimum of ⟨ϑ, a'⟩ over the coreset must approximate the
+/// minimum over the full data (otherwise f₃ is unbounded off-sample —
+/// the failure mode Lemma 2.3 fixes).
+#[test]
+fn hull_preserves_min_inner_products() {
+    let mut rng = Rng::new(23);
+    let data = Dgp::NormalMixture.generate(3_000, &mut rng);
+    let design = design_of(&data, 6);
+    let dp = design.deriv_points();
+    let cs = build_coreset(&design, Method::L2Hull, 60, &mut rng);
+    assert!(cs.n_hull > 0);
+
+    // directions: random unit vectors in basis space
+    let d = design.d;
+    for _ in 0..50 {
+        let mut v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        v.iter_mut().for_each(|x| *x /= norm);
+        let full_min = (0..dp.rows)
+            .map(|r| dot(dp.row(r), &v))
+            .fold(f64::INFINITY, f64::min);
+        let coreset_min = cs
+            .indices
+            .iter()
+            .flat_map(|&i| (0..design.j).map(move |j| (i, j)))
+            .map(|(i, j)| dot(design.ad_row(i, j), &v))
+            .fold(f64::INFINITY, f64::min);
+        // coreset min can only be ≥ full min; must not be far off
+        let spread = {
+            let max = (0..dp.rows)
+                .map(|r| dot(dp.row(r), &v))
+                .fold(f64::NEG_INFINITY, f64::max);
+            max - full_min
+        };
+        assert!(
+            coreset_min - full_min <= 0.35 * spread + 1e-9,
+            "direction min gap {} of spread {spread}",
+            coreset_min - full_min
+        );
+    }
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Uniform-sampling weights are exactly n/k and importance weights are
+/// inverse-probability — total weight unbiased for n.
+#[test]
+fn weights_are_unbiased() {
+    let mut rng = Rng::new(29);
+    let data = Dgp::Circular.generate(2_000, &mut rng);
+    let design = design_of(&data, 5);
+    for method in [Method::L2Only, Method::RidgeLss, Method::RootL2] {
+        let mut mean_total = 0.0;
+        let reps = 40;
+        for _ in 0..reps {
+            let cs = build_coreset(&design, method, 50, &mut rng);
+            mean_total += cs.total_weight() / reps as f64;
+        }
+        let rel = (mean_total - 2_000.0).abs() / 2_000.0;
+        assert!(rel < 0.2, "{}: E[total weight] off by {rel}", method.name());
+    }
+}
+
+/// The selected hull points of Algorithm 2 cover the point cloud: after
+/// selection, the farthest remaining point is close to conv(selected).
+#[test]
+fn hull_selection_coverage_decreases() {
+    let mut rng = Rng::new(31);
+    let data = Dgp::SkewT.generate(1_500, &mut rng);
+    let design: Design = design_of(&data, 5);
+    let dp = design.deriv_points();
+    let few = select_hull_points(&dp, 4, &mut rng);
+    let many = select_hull_points(&dp, 24, &mut rng);
+    let coverage = |hull: &[usize]| -> f64 {
+        (0..dp.rows)
+            .step_by(7)
+            .map(|r| dist_to_hull(&dp, hull, dp.row(r)))
+            .fold(0.0, f64::max)
+    };
+    let c_few = coverage(&few);
+    let c_many = coverage(&many);
+    assert!(
+        c_many <= c_few + 1e-12,
+        "coverage must improve: {c_many} vs {c_few}"
+    );
+}
+
+/// Theorem 2.4 (statistical form): at the FULL-data optimum-ish
+/// parameters, the weighted coreset loss approximates the full loss
+/// after the normalization shift.
+#[test]
+fn total_loss_preserved_at_reference_params() {
+    let spec = ModelSpec::new(2, 6);
+    let mut rng = Rng::new(37);
+    let data = Dgp::BivariateNormal.generate(5_000, &mut rng);
+    let design = design_of(&data, 6);
+    // reference parameters: a quick fit (so hd > 0 everywhere and both
+    // log parts are exercised)
+    let fitted = mctm_coreset::fit::fit_native(
+        spec,
+        &design,
+        Vec::new(),
+        &mctm_coreset::fit::FitOptions {
+            max_iters: 80,
+            ..Default::default()
+        },
+    );
+    let theta = fitted.params.theta();
+    let lam = fitted.params.lambda_block().to_vec();
+    let full = nll_parts(&design, &[], &theta, &lam);
+    // the lemmas bound |Δf| by ε·f₁ plus an additive η·n term — assert
+    // exactly that normalized form
+    let denom = full.f1 + 5_000.0;
+    let mut errs = Vec::new();
+    for _ in 0..10 {
+        let cs = build_coreset(&design, Method::L2Hull, 500, &mut rng);
+        let sub = design.select(&cs.indices);
+        let part = nll_parts(&sub, &cs.weights, &theta, &lam);
+        errs.push((part.total() - full.total()).abs() / denom);
+    }
+    let mean: f64 = errs.iter().sum::<f64>() / errs.len() as f64;
+    assert!(mean < 0.1, "mean (ε f1 + η n)-normalized loss error {mean}");
+}

@@ -1,0 +1,148 @@
+//! Cross-backend numerics: the native Rust MCTM objective and the
+//! AOT-compiled XLA artifacts must agree to near machine precision —
+//! this pins the whole L1/L2 math against the independent L3
+//! implementation. Skips (with a note) when artifacts/ is absent.
+
+use mctm_coreset::basis::Design;
+use mctm_coreset::linalg::{Cholesky, Mat};
+use mctm_coreset::mctm::{self, ModelSpec, Params};
+use mctm_coreset::runtime::engine::TiledLeverage;
+use mctm_coreset::runtime::{Engine, TiledNll};
+use mctm_coreset::util::rng::Rng;
+use std::path::Path;
+
+fn engine() -> Option<Engine> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP cross_backend: artifacts/ missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new(dir).expect("engine"))
+}
+
+fn random_design(n: usize, j: usize, d: usize, seed: u64) -> (Mat, Design) {
+    let mut rng = Rng::new(seed);
+    let data = Mat::from_vec(n, j, (0..n * j).map(|_| rng.normal()).collect());
+    let design = Design::build(&data, d, 0.01);
+    (data, design)
+}
+
+fn random_params(spec: ModelSpec, seed: u64) -> Params {
+    let mut rng = Rng::new(seed);
+    Params::new(
+        spec,
+        (0..spec.n_params()).map(|_| 0.4 * rng.normal()).collect(),
+    )
+}
+
+#[test]
+fn nll_grad_matches_native_all_configs() {
+    let Some(engine) = engine() else { return };
+    for &(j, d) in &[(2usize, 7usize), (3, 7), (10, 7)] {
+        let spec = ModelSpec::new(j, d);
+        // n chosen to exercise padding (not a multiple of the tile)
+        let (data, design) = random_design(700, j, d, 11 + j as u64);
+        let scaled = design.scaler.transform(&data);
+        let runner = TiledNll::new(&engine, j, d).expect("runner");
+        for pseed in [1u64, 2, 3] {
+            let p = random_params(spec, pseed);
+            let (xv, xg) = runner.nll_grad(&p.x, &scaled.data, &[]).expect("xla");
+            let (nv, ng) = mctm::nll_grad(&design, &[], &p);
+            assert!(
+                (xv - nv).abs() < 1e-8 * (1.0 + nv.abs()),
+                "J={j}: value {xv} vs {nv}"
+            );
+            for (k, (a, b)) in xg.iter().zip(&ng).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-7 * (1.0 + b.abs()),
+                    "J={j} grad[{k}]: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn weighted_nll_matches_native() {
+    let Some(engine) = engine() else { return };
+    let (j, d) = (2, 7);
+    let spec = ModelSpec::new(j, d);
+    let (data, design) = random_design(300, j, d, 42);
+    let scaled = design.scaler.transform(&data);
+    let mut rng = Rng::new(5);
+    let w: Vec<f64> = (0..300).map(|_| rng.uniform(0.1, 5.0)).collect();
+    let p = random_params(spec, 9);
+    let runner = TiledNll::new(&engine, j, d).unwrap();
+    let (xv, _) = runner.nll_grad(&p.x, &scaled.data, &w).unwrap();
+    let nv = mctm::nll(&design, &w, &p);
+    assert!((xv - nv).abs() < 1e-8 * (1.0 + nv.abs()), "{xv} vs {nv}");
+}
+
+#[test]
+fn fused_pallas_eval_matches_native() {
+    let Some(engine) = engine() else { return };
+    for &(j, d) in &[(2usize, 7usize), (10, 7)] {
+        let spec = ModelSpec::new(j, d);
+        let (data, design) = random_design(1025, j, d, 77); // 3 tiles, padded
+        let scaled = design.scaler.transform(&data);
+        let p = random_params(spec, 3);
+        let runner = TiledNll::new(&engine, j, d).unwrap();
+        let xv = runner.nll_eval(&p.x, &scaled.data, &[]).unwrap();
+        let nv = mctm::nll(&design, &[], &p);
+        assert!(
+            (xv - nv).abs() < 1e-8 * (1.0 + nv.abs()),
+            "J={j}: fused {xv} vs native {nv}"
+        );
+    }
+}
+
+#[test]
+fn pallas_leverage_pipeline_matches_native() {
+    let Some(engine) = engine() else { return };
+    let (j, d) = (2usize, 7usize);
+    let (_, design) = random_design(900, j, d, 13);
+    let stacked = design.stacked();
+
+    // native
+    let native = mctm_coreset::coreset::leverage::leverage_scores(&stacked).unwrap();
+
+    // xla: pallas gram → cholesky (L3) → pallas leverage
+    let lev = TiledLeverage::new(&engine, j * d).unwrap();
+    let mut gram = Mat::from_vec(j * d, j * d, lev.gram(&stacked.data).unwrap());
+    let stab = 1e-10 * gram.trace() / gram.rows as f64;
+    for i in 0..gram.rows {
+        *gram.at_mut(i, i) += stab;
+    }
+    let ch = Cholesky::new(&gram).unwrap();
+    let linv = ch.l_inverse();
+    let scores = lev.scores(&stacked.data, &linv.data).unwrap();
+
+    assert_eq!(scores.len(), native.len());
+    for (i, (a, b)) in scores.iter().zip(&native).enumerate() {
+        assert!((a - b).abs() < 1e-8 * (1.0 + b), "row {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn tile_padding_is_invariant() {
+    // same data evaluated at n = tile and n = tile+1 must give
+    // prefix-consistent results (padding rows contribute nothing)
+    let Some(engine) = engine() else { return };
+    let (j, d) = (2usize, 7usize);
+    let spec = ModelSpec::new(j, d);
+    let (data, design) = random_design(513, j, d, 21);
+    let scaled = design.scaler.transform(&data);
+    let p = random_params(spec, 4);
+    let runner = TiledNll::new(&engine, j, d).unwrap();
+
+    let (v_all, _) = runner.nll_grad(&p.x, &scaled.data, &[]).unwrap();
+    // weight vector zeroing the last row == evaluating 512 rows
+    let mut w = vec![1.0; 513];
+    w[512] = 0.0;
+    let (v_prefix, _) = runner.nll_grad(&p.x, &scaled.data, &w).unwrap();
+    let idx: Vec<usize> = (0..512).collect();
+    let sub = scaled.select_rows(&idx);
+    let (v_sub, _) = runner.nll_grad(&p.x, &sub.data, &[]).unwrap();
+    assert!((v_prefix - v_sub).abs() < 1e-9 * (1.0 + v_sub.abs()));
+    assert!(v_all != v_prefix, "row 513 should contribute");
+}

@@ -1,0 +1,132 @@
+//! End-to-end coordinator tests: streaming pipeline vs batch coresets,
+//! CLI/config plumbing, dataset registry.
+
+use mctm_coreset::coordinator::cli::{load_dataset, Cli};
+use mctm_coreset::coordinator::experiment::design_of;
+use mctm_coreset::coordinator::pipeline::StreamingPipeline;
+use mctm_coreset::coreset::{build_coreset, Method};
+use mctm_coreset::data::dgp::Dgp;
+use mctm_coreset::data::GenShards;
+use mctm_coreset::fit::{fit_native, FitOptions};
+use mctm_coreset::mctm::{self, loglik_ratio, ModelSpec};
+use mctm_coreset::util::rng::Rng;
+
+#[test]
+fn streaming_quality_close_to_batch() {
+    let total = 30_000;
+    let spec = ModelSpec::new(2, 6);
+    let opts = FitOptions { max_iters: 150, ..Default::default() };
+
+    // batch: materialize everything, coreset, fit
+    let mut rng = Rng::new(41);
+    let batch_data = Dgp::BivariateNormal.generate(total, &mut rng);
+    let batch_design = design_of(&batch_data, 6);
+    let full = fit_native(spec, &batch_design, Vec::new(), &opts);
+    let cs = build_coreset(&batch_design, Method::L2Hull, 100, &mut rng);
+    let sub = batch_design.select(&cs.indices);
+    let batch_fit = fit_native(spec, &sub, cs.weights.clone(), &opts);
+
+    // streaming: same distribution through Merge & Reduce
+    let mut gen_rng = Rng::new(43);
+    let source = GenShards::new(
+        move |n| Dgp::BivariateNormal.generate(n, &mut gen_rng),
+        2,
+        total,
+        3_000,
+    );
+    let pipeline = StreamingPipeline::new(Method::L2Hull, 100, 6);
+    let (streamed, stats) = pipeline.run(source);
+    assert_eq!(stats.n_seen, total);
+    let s_design = design_of(&streamed.rows, 6);
+    let stream_fit = fit_native(spec, &s_design, streamed.weights.clone(), &opts);
+
+    // both coreset fits must approximate the batch full fit on full data.
+    // IMPORTANT: the streamed fit's parameters live on the streamed
+    // coreset's scaled axis — evaluate them on a full-data design built
+    // with THAT scaler (see Design::build_with_scaler docs).
+    let eval_design = mctm_coreset::basis::Design::build_with_scaler(
+        &batch_data,
+        6,
+        s_design.scaler.clone(),
+    );
+    let lr_batch = loglik_ratio(
+        mctm::nll(&batch_design, &[], &batch_fit.params),
+        full.nll,
+        total,
+        2,
+    );
+    let lr_stream = loglik_ratio(
+        mctm::nll(&eval_design, &[], &stream_fit.params),
+        full.nll,
+        total,
+        2,
+    );
+    assert!(lr_batch < 1.3, "batch coreset LR {lr_batch}");
+    // the stream compresses 30k → 100 through a random reduce tree;
+    // quality is necessarily below one-shot sampling but bounded
+    assert!(lr_stream < 1.8, "streamed coreset LR {lr_stream}");
+    assert!(
+        (lr_stream - 1.0) < 20.0 * (lr_batch - 1.0) + 0.1,
+        "stream {lr_stream} vs batch {lr_batch}"
+    );
+}
+
+#[test]
+fn backpressure_bounds_queue() {
+    let pipeline = {
+        let mut p = StreamingPipeline::new(Method::Uniform, 50, 5);
+        p.queue_cap = 2;
+        p
+    };
+    let mut rng = Rng::new(47);
+    let source = GenShards::new(
+        move |n| Dgp::Spiral.generate(n, &mut rng),
+        2,
+        20_000,
+        1_000,
+    );
+    let (out, stats) = pipeline.run(source);
+    assert_eq!(stats.n_shards, 20);
+    assert!(stats.peak_queue <= 2);
+    assert!(out.len() <= 50);
+}
+
+#[test]
+fn dataset_registry_resolves_all_names() {
+    let mut rng = Rng::new(53);
+    for dgp in Dgp::all() {
+        let m = load_dataset(dgp.name(), 50, &mut rng).unwrap();
+        assert_eq!((m.rows, m.cols), (50, 2));
+    }
+    assert_eq!(load_dataset("covertype", 40, &mut rng).unwrap().cols, 10);
+    assert_eq!(load_dataset("stocks10", 40, &mut rng).unwrap().cols, 10);
+    assert_eq!(load_dataset("stocks20", 40, &mut rng).unwrap().cols, 20);
+    assert!(load_dataset("nope", 10, &mut rng).is_err());
+}
+
+#[test]
+fn cli_parses_and_validates() {
+    let cli = Cli::parse(&[
+        "fit".into(),
+        "--set".into(),
+        "dataset=spiral".into(),
+        "--set".into(),
+        "k=25".into(),
+        "--shards".into(),
+        "4".into(),
+    ])
+    .unwrap();
+    assert_eq!(cli.command, "fit");
+    assert_eq!(cli.config.dataset, "spiral");
+    assert_eq!(cli.config.k, 25);
+    assert_eq!(cli.shards, 4);
+    assert!(Cli::parse(&["fit".into(), "--bogus".into()]).is_err());
+    assert!(Cli::parse(&["fit".into(), "--set".into(), "zzz=1".into()]).is_err());
+}
+
+#[test]
+fn help_runs() {
+    let cli = Cli::parse(&[]).unwrap();
+    assert_eq!(cli.command, "help");
+    cli.run().unwrap();
+}

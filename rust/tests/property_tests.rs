@@ -1,0 +1,261 @@
+//! Randomized property tests over the core invariants (via the in-tree
+//! `util::proptest` harness — the `proptest` crate is unavailable
+//! offline, see DESIGN.md §5).
+
+use mctm_coreset::basis::{Bernstein, Design};
+use mctm_coreset::coreset::hull::{dist_to_hull, select_hull_points};
+use mctm_coreset::coreset::merge_reduce::{reduce, WeightedRows};
+use mctm_coreset::coreset::{build_coreset, Method};
+use mctm_coreset::linalg::{Cholesky, Mat};
+use mctm_coreset::mctm::{self, ModelSpec, Params};
+use mctm_coreset::util::proptest::{check, gen};
+use mctm_coreset::util::rng::Rng;
+
+#[test]
+fn prop_bernstein_partition_of_unity() {
+    check(
+        "bernstein partition of unity",
+        101,
+        200,
+        |rng| (gen::size(rng, 1, 12), rng.f64()),
+        |&(m, x)| {
+            let b = Bernstein::new(m);
+            let s: f64 = b.eval(x).iter().sum();
+            if (s - 1.0).abs() < 1e-10 {
+                Ok(())
+            } else {
+                Err(format!("sum {s}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_theta_strictly_monotone() {
+    check(
+        "theta monotone under any beta",
+        102,
+        200,
+        |rng| {
+            let j = gen::size(rng, 1, 4);
+            let d = gen::size(rng, 2, 9);
+            let spec = ModelSpec::new(j, d);
+            let x = gen::vec_in(rng, spec.n_params(), -4.0, 4.0);
+            (spec, x)
+        },
+        |(spec, x)| {
+            let p = Params::new(*spec, x.clone());
+            let theta = p.theta();
+            for jj in 0..spec.j {
+                for k in 1..spec.d {
+                    let (a, b) = (theta[jj * spec.d + k - 1], theta[jj * spec.d + k]);
+                    if b <= a {
+                        return Err(format!("theta[{jj},{k}] {b} <= {a}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_nll_gradient_matches_fd() {
+    check(
+        "analytic gradient ≈ finite difference",
+        103,
+        15,
+        |rng| {
+            let j = gen::size(rng, 1, 3);
+            let d = gen::size(rng, 3, 6);
+            let n = gen::size(rng, 5, 30);
+            let data = Mat::from_vec(n, j, gen::vec_normal(rng, n * j));
+            let spec = ModelSpec::new(j, d);
+            let x = gen::vec_in(rng, spec.n_params(), -1.0, 1.0);
+            (spec, data, x)
+        },
+        |(spec, data, x)| {
+            let design = Design::build(data, spec.d, 0.01);
+            let p = Params::new(*spec, x.clone());
+            let (_, g) = mctm::nll_grad(&design, &[], &p);
+            let h = 1e-6;
+            for k in 0..spec.n_params() {
+                let mut xp = x.clone();
+                xp[k] += h;
+                let mut xm = x.clone();
+                xm[k] -= h;
+                let fp = mctm::nll(&design, &[], &Params::new(*spec, xp));
+                let fm = mctm::nll(&design, &[], &Params::new(*spec, xm));
+                let fd = (fp - fm) / (2.0 * h);
+                if (g[k] - fd).abs() > 1e-3 * (1.0 + fd.abs()) {
+                    return Err(format!("param {k}: {} vs {fd}", g[k]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_coresets_valid_for_any_method_and_size() {
+    check(
+        "coreset validity",
+        104,
+        25,
+        |rng| {
+            let n = gen::size(rng, 30, 400);
+            let k = gen::size(rng, 5, n);
+            let data = Mat::from_vec(n, 2, gen::vec_normal(rng, n * 2));
+            let m = match rng.usize(5) {
+                0 => Method::Uniform,
+                1 => Method::L2Only,
+                2 => Method::L2Hull,
+                3 => Method::RidgeLss,
+                _ => Method::RootL2,
+            };
+            (data, k, m, rng.next_u64())
+        },
+        |(data, k, m, seed)| {
+            let design = Design::build(data, 5, 0.01);
+            let mut rng = Rng::new(*seed);
+            let cs = build_coreset(&design, *m, *k, &mut rng);
+            if cs.is_empty() {
+                return Err("empty coreset".into());
+            }
+            if cs.indices.len() != cs.weights.len() {
+                return Err("length mismatch".into());
+            }
+            if cs.indices.iter().any(|&i| i >= design.n) {
+                return Err("index out of range".into());
+            }
+            if cs.weights.iter().any(|&w| !(w > 0.0) || !w.is_finite()) {
+                return Err("invalid weight".into());
+            }
+            if cs.len() > *k + 2 {
+                return Err(format!("oversize {} > k={k}", cs.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_hull_distance_semantics() {
+    check(
+        "hull distance: zero for members, nonneg always",
+        105,
+        40,
+        |rng| {
+            let n = gen::size(rng, 5, 60);
+            let d = gen::size(rng, 2, 6);
+            let pts = Mat::from_vec(n, d, gen::vec_normal(rng, n * d));
+            let hsize = gen::size(rng, 1, n);
+            (pts, hsize, rng.next_u64())
+        },
+        |(pts, hsize, seed)| {
+            let mut rng = Rng::new(*seed);
+            let hull = select_hull_points(pts, *hsize, &mut rng);
+            if hull.is_empty() {
+                return Err("empty hull".into());
+            }
+            for &h in &hull {
+                let dist = dist_to_hull(pts, &hull, pts.row(h));
+                if dist > 1e-9 {
+                    return Err(format!("member {h} dist {dist}"));
+                }
+            }
+            for r in 0..pts.rows {
+                let dist = dist_to_hull(pts, &hull, pts.row(r));
+                if !(dist >= 0.0) {
+                    return Err(format!("negative dist {dist}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cholesky_solves_psd_systems() {
+    check(
+        "cholesky solve residual",
+        106,
+        50,
+        |rng| {
+            let d = gen::size(rng, 1, 12);
+            let n = d + gen::size(rng, 1, 40);
+            let x = Mat::from_vec(n, d, gen::vec_normal(rng, n * d));
+            let b = gen::vec_normal(rng, d);
+            (x, b)
+        },
+        |(x, b)| {
+            let mut g = x.gram();
+            for i in 0..g.rows {
+                *g.at_mut(i, i) += 1e-9;
+            }
+            let ch = Cholesky::new(&g).map_err(|e| e.to_string())?;
+            let sol = ch.solve(b);
+            for i in 0..g.rows {
+                let mut r = -b[i];
+                for jj in 0..g.cols {
+                    r += g.at(i, jj) * sol[jj];
+                }
+                if r.abs() > 1e-6 * (1.0 + b[i].abs()) {
+                    return Err(format!("residual {r} at {i}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_merge_reduce_size_and_weights() {
+    check(
+        "merge-reduce reduce() respects k and weight positivity",
+        107,
+        20,
+        |rng| {
+            let n = gen::size(rng, 20, 300);
+            let k = gen::size(rng, 5, 100);
+            let rows = Mat::from_vec(n, 2, gen::vec_normal(rng, n * 2));
+            let w = gen::vec_in(rng, n, 0.5, 3.0);
+            (rows, w, k, rng.next_u64())
+        },
+        |(rows, w, k, seed)| {
+            let set = WeightedRows::new(rows.clone(), w.clone());
+            let mut rng = Rng::new(*seed);
+            let red = reduce(&set, Method::L2Hull, *k, 5, 0.01, &mut rng);
+            if red.len() > (*k).max(set.len().min(*k)) && red.len() > *k {
+                return Err(format!("size {} > k {k}", red.len()));
+            }
+            if red.weights.iter().any(|&x| !(x > 0.0)) {
+                return Err("non-positive weight".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scaled_data_in_unit_interval() {
+    check(
+        "scaler maps into [eps, 1-eps]",
+        108,
+        50,
+        |rng| {
+            let n = gen::size(rng, 2, 100);
+            Mat::from_vec(n, 3, gen::vec_in(rng, n * 3, -1e3, 1e3))
+        },
+        |data| {
+            let design = Design::build(data, 4, 0.01);
+            let scaled = design.scaler.transform(data);
+            for v in &scaled.data {
+                if !(0.01 - 1e-12..=0.99 + 1e-12).contains(v) {
+                    return Err(format!("scaled value {v}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
