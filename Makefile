@@ -1,0 +1,35 @@
+# Build / verify entry points. The Rust package lives under rust/; the
+# AOT artifact builder (JAX/Pallas) under python/compile/.
+
+CARGO ?= cargo
+MANIFEST := rust/Cargo.toml
+
+.PHONY: build test check fmt clippy bench-quick bench-perf artifacts
+
+build:
+	$(CARGO) build --release --manifest-path $(MANIFEST)
+
+test:
+	$(CARGO) test -q --manifest-path $(MANIFEST)
+
+fmt:
+	$(CARGO) fmt --manifest-path $(MANIFEST) -- --check
+
+clippy:
+	$(CARGO) clippy --manifest-path $(MANIFEST) --all-targets -- -D warnings
+
+# The tier-1 gate: formatting, lints as errors, full test suite.
+check: fmt clippy test
+
+# Hot-path microbench at the smallest scale (CI smoke): serial vs
+# parallel medians for basis build, leverage, gram, nll_grad.
+bench-quick:
+	MCTM_BENCH_SCALE=fast $(CARGO) bench --manifest-path $(MANIFEST) --bench perf_hotpath
+
+# Full-scale hot-path bench (feeds EXPERIMENTS.md §Perf).
+bench-perf:
+	$(CARGO) bench --manifest-path $(MANIFEST) --bench perf_hotpath
+
+# AOT-compile the XLA/Pallas artifacts consumed by the PJRT runtime.
+artifacts:
+	cd python/compile && python3 aot.py --out-dir ../../artifacts

@@ -3,6 +3,8 @@
 //!   L3-b  NLL + gradient evaluation (the optimizer inner loop)
 //!   L3-c  convex-hull selection
 //!   L1/L2 AOT artifacts: tiled nll_grad, fused nll_eval, gram, leverage
+//! Each parallel-ported path is timed at thread counts {1, 2, 4, max}
+//! (serial-vs-parallel medians + scaling); `MCTM_THREADS` pins the max.
 //! Results feed EXPERIMENTS.md §Perf (before/after iteration log).
 
 use mctm_coreset::basis::Design;
@@ -13,6 +15,7 @@ use mctm_coreset::data::dgp::Dgp;
 use mctm_coreset::linalg::{Cholesky, Mat};
 use mctm_coreset::mctm::{self, ModelSpec, Params};
 use mctm_coreset::runtime::{Engine, TiledNll};
+use mctm_coreset::util::parallel;
 use mctm_coreset::util::report::Table;
 use mctm_coreset::util::rng::Rng;
 use std::path::Path;
@@ -21,21 +24,25 @@ fn main() {
     let scale = Scale::from_env();
     let n = scale.pick(2_000, 20_000, 100_000);
     let iters = scale.pick(3, 5, 7);
-    banner("perf_hotpath", &format!("n={n}, J=2 and J=10, median of {iters}"));
+    let max_threads = parallel::threads();
+    banner(
+        "perf_hotpath",
+        &format!("n={n}, J=2 and J=10, median of {iters}, serial vs parallel"),
+    );
 
     let mut table = Table::new(
-        "Perf: hot-path medians (seconds)",
-        &["path", "config", "seconds", "throughput"],
+        "Perf: hot-path medians (seconds), scaling over threads",
+        &["path", "config", "threads", "seconds", "speedup", "throughput"],
     );
 
     // ---- L3: J=2 simulation-scale ------------------------------------
     let mut rng = Rng::new(1);
     let data2 = Dgp::BivariateNormal.generate(n, &mut rng);
-    bench_native(&mut table, "J=2 d=7", &data2, iters);
+    bench_native(&mut table, "J=2 d=7", &data2, iters, max_threads);
 
     // ---- L3: J=10 covertype-scale ------------------------------------
     let data10 = mctm_coreset::data::covertype::generate(n / 2, &mut rng);
-    bench_native(&mut table, "J=10 d=7", &data10, iters);
+    bench_native(&mut table, "J=10 d=7", &data10, iters, max_threads);
 
     // ---- L1/L2 via PJRT ----------------------------------------------
     if Path::new("artifacts/manifest.json").exists() {
@@ -45,52 +52,114 @@ fn main() {
         println!("(artifacts/ missing — run `make artifacts` for the XLA rows)");
     }
 
+    // leave the global pool at the benchmark's max for any later code
+    parallel::set_threads(max_threads);
     table.emit(Some(&results_dir().join("perf_hotpath.csv")));
 }
 
-fn bench_native(table: &mut Table, cfg: &str, data: &Mat, iters: usize) {
+/// Thread counts to sweep: 1, 2, 4, …, up to the configured max.
+fn thread_sweep(max: usize) -> Vec<usize> {
+    let mut v = vec![1usize, 2, 4, max];
+    v.retain(|&t| t <= max);
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// Time `f` at each thread count and append one table row per count,
+/// with speedup relative to the single-thread median.
+fn bench_scaling<F: FnMut()>(
+    table: &mut Table,
+    path: &str,
+    cfg: &str,
+    iters: usize,
+    max_threads: usize,
+    throughput: impl Fn(f64) -> String,
+    mut f: F,
+) {
+    let mut serial = f64::NAN;
+    for &t in &thread_sweep(max_threads) {
+        parallel::set_threads(t);
+        let sec = time_median(iters, &mut f);
+        if t == 1 {
+            serial = sec;
+        }
+        table.row(vec![
+            path.into(),
+            cfg.into(),
+            format!("{t}"),
+            format!("{sec:.4}"),
+            format!("{:.2}x", serial / sec),
+            throughput(sec),
+        ]);
+    }
+}
+
+fn bench_native(table: &mut Table, cfg: &str, data: &Mat, iters: usize, max_threads: usize) {
     let n = data.rows;
     let d = 7usize;
 
     // basis construction
-    let t_design = time_median(iters, || {
-        std::hint::black_box(Design::build(data, d, 0.01));
-    });
-    table.row(vec![
-        "L3 basis build".into(),
-        cfg.into(),
-        format!("{t_design:.4}"),
-        format!("{:.1} Mrow/s", n as f64 / t_design / 1e6),
-    ]);
+    bench_scaling(
+        table,
+        "L3 basis build",
+        cfg,
+        iters,
+        max_threads,
+        |s| format!("{:.1} Mrow/s", n as f64 / s / 1e6),
+        || {
+            std::hint::black_box(Design::build(data, d, 0.01));
+        },
+    );
 
     let design = Design::build(data, d, 0.01);
 
-    // leverage scores (Gram + Cholesky + scoring)
-    let t_lev = time_median(iters, || {
-        std::hint::black_box(mctm_leverage_scores(&design).unwrap());
-    });
-    table.row(vec![
-        "L3 leverage scores".into(),
-        cfg.into(),
-        format!("{t_lev:.4}"),
-        format!("{:.1} Mrow/s", n as f64 / t_lev / 1e6),
-    ]);
+    // leverage pipeline (Gram + Cholesky + scoring)
+    bench_scaling(
+        table,
+        "L3 leverage scores",
+        cfg,
+        iters,
+        max_threads,
+        |s| format!("{:.1} Mrow/s", n as f64 / s / 1e6),
+        || {
+            std::hint::black_box(mctm_leverage_scores(&design).unwrap());
+        },
+    );
 
-    // Gram alone (the syrk kernel)
+    // Gram alone (the blocked syrk kernel)
     let stacked = design.stacked();
-    let t_gram = time_median(iters, || {
-        std::hint::black_box(stacked.gram());
-    });
     let dj = stacked.cols;
     let flops = n as f64 * (dj * dj) as f64; // ~2·n·D²/2
-    table.row(vec![
-        "L3 gram (syrk)".into(),
-        cfg.into(),
-        format!("{t_gram:.4}"),
-        format!("{:.2} GF/s", flops / t_gram / 1e9),
-    ]);
+    bench_scaling(
+        table,
+        "L3 gram (syrk)",
+        cfg,
+        iters,
+        max_threads,
+        |s| format!("{:.2} GF/s", flops / s / 1e9),
+        || {
+            std::hint::black_box(stacked.gram());
+        },
+    );
 
-    // cholesky + scoring split
+    // NLL + grad (optimizer inner loop)
+    let spec = ModelSpec::new(data.cols, d);
+    let p = Params::init(spec);
+    bench_scaling(
+        table,
+        "L3 nll_grad",
+        cfg,
+        iters,
+        max_threads,
+        |s| format!("{:.1} Mrow/s", n as f64 / s / 1e6),
+        || {
+            std::hint::black_box(mctm::nll_grad(&design, &[], &p));
+        },
+    );
+
+    // cholesky + scoring split (serial kernel — reference row)
+    parallel::set_threads(1);
     let gram = stacked.gram();
     let mut gr = gram.clone();
     let stab = 1e-10 * gram.trace() / gram.rows as f64;
@@ -107,26 +176,15 @@ fn bench_native(table: &mut Table, cfg: &str, data: &Mat, iters: usize) {
         std::hint::black_box(acc);
     });
     table.row(vec![
-        "L3 leverage scoring".into(),
+        "L3 scoring (quad_form ref)".into(),
         cfg.into(),
+        "1".into(),
         format!("{t_score:.4}"),
+        "1.00x".into(),
         format!("{:.1} Mrow/s", n as f64 / t_score / 1e6),
     ]);
 
-    // NLL + grad (optimizer inner loop)
-    let spec = ModelSpec::new(data.cols, d);
-    let p = Params::init(spec);
-    let t_nll = time_median(iters, || {
-        std::hint::black_box(mctm::nll_grad(&design, &[], &p));
-    });
-    table.row(vec![
-        "L3 nll_grad".into(),
-        cfg.into(),
-        format!("{t_nll:.4}"),
-        format!("{:.1} Mrow/s", n as f64 / t_nll / 1e6),
-    ]);
-
-    // hull selection on the derivative points
+    // hull selection on the derivative points (not parallel-ported yet)
     let dp = design.deriv_points();
     let mut rng = Rng::new(7);
     let t_hull = time_median(3.min(iters), || {
@@ -135,11 +193,17 @@ fn bench_native(table: &mut Table, cfg: &str, data: &Mat, iters: usize) {
     table.row(vec![
         "L3 hull select k=20".into(),
         cfg.into(),
+        "1".into(),
         format!("{t_hull:.4}"),
+        "1.00x".into(),
         format!("{:.2} Mpt/s", dp.rows as f64 / t_hull / 1e6),
     ]);
+    parallel::set_threads(max_threads);
 }
 
+/// XLA rows degrade gracefully at every step: a missing PJRT runtime
+/// (stub build), a missing artifact entry, or a runtime error prints a
+/// note and skips — the bench must never panic because L1/L2 is absent.
 fn bench_xla(table: &mut Table, data: &Mat, j: usize, iters: usize) {
     let d = 7usize;
     let engine = match Engine::new(Path::new("artifacts")) {
@@ -154,57 +218,104 @@ fn bench_xla(table: &mut Table, data: &Mat, j: usize, iters: usize) {
     let scaled = design.scaler.transform(data);
     let spec = ModelSpec::new(j, d);
     let p = Params::init(spec);
-    let runner = TiledNll::new(&engine, j, d).unwrap();
+    let runner = match TiledNll::new(&engine, j, d) {
+        Ok(r) => r,
+        Err(e) => {
+            println!("xla nll runner unavailable: {e:#}");
+            return;
+        }
+    };
 
     let n = data.rows;
-    let t_grad = time_median(iters, || {
-        std::hint::black_box(runner.nll_grad(&p.x, &scaled.data, &[]).unwrap());
-    });
-    table.row(vec![
-        "XLA nll_grad (tiled)".into(),
-        cfg.clone(),
-        format!("{t_grad:.4}"),
-        format!("{:.1} Mrow/s", n as f64 / t_grad / 1e6),
-    ]);
+    match runner.nll_grad(&p.x, &scaled.data, &[]) {
+        Ok(_) => {
+            let t_grad = time_median(iters, || {
+                std::hint::black_box(runner.nll_grad(&p.x, &scaled.data, &[]).unwrap());
+            });
+            table.row(vec![
+                "XLA nll_grad (tiled)".into(),
+                cfg.clone(),
+                "1".into(),
+                format!("{t_grad:.4}"),
+                "1.00x".into(),
+                format!("{:.1} Mrow/s", n as f64 / t_grad / 1e6),
+            ]);
+        }
+        Err(e) => println!("xla nll_grad failed: {e:#}"),
+    }
 
-    let t_eval = time_median(iters, || {
-        std::hint::black_box(runner.nll_eval(&p.x, &scaled.data, &[]).unwrap());
-    });
-    table.row(vec![
-        "XLA nll_eval (pallas fused)".into(),
-        cfg.clone(),
-        format!("{t_eval:.4}"),
-        format!("{:.1} Mrow/s", n as f64 / t_eval / 1e6),
-    ]);
+    match runner.nll_eval(&p.x, &scaled.data, &[]) {
+        Ok(_) => {
+            let t_eval = time_median(iters, || {
+                std::hint::black_box(runner.nll_eval(&p.x, &scaled.data, &[]).unwrap());
+            });
+            table.row(vec![
+                "XLA nll_eval (pallas fused)".into(),
+                cfg.clone(),
+                "1".into(),
+                format!("{t_eval:.4}"),
+                "1.00x".into(),
+                format!("{:.1} Mrow/s", n as f64 / t_eval / 1e6),
+            ]);
+        }
+        Err(e) => println!("xla nll_eval unavailable: {e:#}"),
+    }
 
     // gram + leverage artifacts over the stacked matrix
-    if let Ok(lev) = mctm_coreset::runtime::engine::TiledLeverage::new(&engine, j * d) {
-        let stacked = design.stacked();
-        let t_gram = time_median(iters, || {
-            std::hint::black_box(lev.gram(&stacked.data).unwrap());
-        });
-        table.row(vec![
-            "XLA gram (pallas tiled)".into(),
-            cfg.clone(),
-            format!("{t_gram:.4}"),
-            format!("{:.1} Mrow/s", n as f64 / t_gram / 1e6),
-        ]);
-        let g = Mat::from_vec(j * d, j * d, lev.gram(&stacked.data).unwrap());
-        let mut gr = g.clone();
-        let stab = 1e-10 * g.trace() / g.rows as f64;
-        for i in 0..gr.rows {
-            *gr.at_mut(i, i) += stab;
+    let lev = match mctm_coreset::runtime::engine::TiledLeverage::new(&engine, j * d) {
+        Ok(l) => l,
+        Err(e) => {
+            println!("xla leverage runner unavailable: {e:#}");
+            return;
         }
-        let ch = Cholesky::new(&gr).unwrap();
-        let linv = ch.l_inverse();
-        let t_scores = time_median(iters, || {
-            std::hint::black_box(lev.scores(&stacked.data, &linv.data).unwrap());
-        });
-        table.row(vec![
-            "XLA leverage (pallas)".into(),
-            cfg,
-            format!("{t_scores:.4}"),
-            format!("{:.1} Mrow/s", n as f64 / t_scores / 1e6),
-        ]);
+    };
+    let stacked = design.stacked();
+    let g = match lev.gram(&stacked.data) {
+        Ok(g) => g,
+        Err(e) => {
+            println!("xla gram failed: {e:#}");
+            return;
+        }
+    };
+    let t_gram = time_median(iters, || {
+        std::hint::black_box(lev.gram(&stacked.data).unwrap());
+    });
+    table.row(vec![
+        "XLA gram (pallas tiled)".into(),
+        cfg.clone(),
+        "1".into(),
+        format!("{t_gram:.4}"),
+        "1.00x".into(),
+        format!("{:.1} Mrow/s", n as f64 / t_gram / 1e6),
+    ]);
+    let g = Mat::from_vec(j * d, j * d, g);
+    let mut gr = g.clone();
+    let stab = 1e-10 * g.trace() / g.rows as f64;
+    for i in 0..gr.rows {
+        *gr.at_mut(i, i) += stab;
+    }
+    let ch = match Cholesky::new(&gr) {
+        Ok(c) => c,
+        Err(e) => {
+            println!("xla gram not factorizable: {e}");
+            return;
+        }
+    };
+    let linv = ch.l_inverse();
+    match lev.scores(&stacked.data, &linv.data) {
+        Ok(_) => {
+            let t_scores = time_median(iters, || {
+                std::hint::black_box(lev.scores(&stacked.data, &linv.data).unwrap());
+            });
+            table.row(vec![
+                "XLA leverage (pallas)".into(),
+                cfg,
+                "1".into(),
+                format!("{t_scores:.4}"),
+                "1.00x".into(),
+                format!("{:.1} Mrow/s", n as f64 / t_scores / 1e6),
+            ]);
+        }
+        Err(e) => println!("xla leverage scores failed: {e:#}"),
     }
 }

@@ -12,6 +12,7 @@
 //! (the paper's "negative value correction" practice, footnote 1/3).
 
 use crate::linalg::Mat;
+use crate::util::parallel::{Pool, ROW_CHUNK};
 
 /// Bernstein basis of fixed degree `m` (so `d = m + 1` basis functions).
 #[derive(Clone, Copy, Debug)]
@@ -171,23 +172,49 @@ impl Design {
         Self::build_with_scaler(data, d, scaler)
     }
 
+    /// [`Design::build`] on an explicit pool.
+    pub fn build_on(data: &Mat, d: usize, eps: f64, pool: &Pool) -> Self {
+        let scaler = Scaler::fit(data, eps);
+        Self::build_with_scaler_on(data, d, scaler, pool)
+    }
+
     /// Build with a *given* scaler — required whenever parameters fitted
     /// on one dataset (e.g. a streamed coreset) are evaluated on another:
     /// the transformation h̃ is defined on the scaled axis, so both
     /// designs must share the scaling.
     pub fn build_with_scaler(data: &Mat, d: usize, scaler: Scaler) -> Self {
+        Self::build_with_scaler_on(data, d, scaler, &Pool::current())
+    }
+
+    /// [`Design::build_with_scaler`] on an explicit pool. Every row's
+    /// basis values depend only on that row, so row shards fill disjoint
+    /// chunks of `a`/`ad` with per-worker scratch — output is identical
+    /// for any thread count.
+    pub fn build_with_scaler_on(data: &Mat, d: usize, scaler: Scaler, pool: &Pool) -> Self {
         let basis = Bernstein::new(d - 1);
         let (n, j) = (data.rows, data.cols);
         let mut a = vec![0.0; n * j * d];
         let mut ad = vec![0.0; n * j * d];
-        let mut scratch = vec![0.0; d.saturating_sub(1).max(1)];
-        for r in 0..n {
-            for c in 0..j {
-                let x = scaler.scale(c, data.at(r, c));
-                let off = (r * j + c) * d;
-                basis.eval_into(x, &mut a[off..off + d]);
-                basis.deriv_into(x, &mut ad[off..off + d], &mut scratch);
-            }
+        let stride = j * d;
+        if stride > 0 {
+            let items: Vec<(&mut [f64], &mut [f64])> = a
+                .chunks_mut(ROW_CHUNK * stride)
+                .zip(ad.chunks_mut(ROW_CHUNK * stride))
+                .collect();
+            pool.for_items(items, |ci, (a_chunk, ad_chunk)| {
+                let lo = ci * ROW_CHUNK;
+                let rows = a_chunk.len() / stride;
+                let mut scratch = vec![0.0; d.saturating_sub(1).max(1)];
+                for off in 0..rows {
+                    let r = lo + off;
+                    for c in 0..j {
+                        let x = scaler.scale(c, data.at(r, c));
+                        let at = off * stride + c * d;
+                        basis.eval_into(x, &mut a_chunk[at..at + d]);
+                        basis.deriv_into(x, &mut ad_chunk[at..at + d], &mut scratch);
+                    }
+                }
+            });
         }
         Design { n, j, d, a, ad, scaler }
     }

@@ -72,6 +72,10 @@ pub fn banner(name: &str, detail: &str) {
     println!("\n================================================================");
     println!("BENCH {name} — {detail}");
     println!("scale = {:?} (set MCTM_BENCH_SCALE=fast|paper to change)", Scale::from_env());
+    println!(
+        "threads = {} (set MCTM_THREADS=N to pin the worker count)",
+        crate::util::parallel::threads()
+    );
     println!("================================================================");
 }
 

@@ -4,7 +4,8 @@
 
 use crate::coreset::Method;
 use crate::fit::{FitOptions, OptimizerKind};
-use anyhow::{anyhow, Result};
+use crate::anyhow;
+use crate::util::error::Result;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -34,6 +35,10 @@ pub struct ExperimentConfig {
     pub fit: FitOptions,
     /// output directory for CSV/JSON results
     pub out_dir: PathBuf,
+    /// worker threads for the parallel kernels; 0 = auto (MCTM_THREADS
+    /// env var if set, else available parallelism). Thread count never
+    /// changes results — kernels are deterministic by construction.
+    pub threads: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -50,6 +55,7 @@ impl Default for ExperimentConfig {
             artifacts: PathBuf::from("artifacts"),
             fit: FitOptions::default(),
             out_dir: PathBuf::from("results"),
+            threads: 0,
         }
     }
 }
@@ -109,6 +115,7 @@ impl ExperimentConfig {
                     other => return Err(anyhow!("unknown optimizer {other}")),
                 };
             }
+            "threads" => self.threads = value.parse()?,
             "max_iters" => self.fit.max_iters = value.parse()?,
             "tol" => self.fit.tol = value.parse()?,
             "learning_rate" => self.fit.learning_rate = value.parse()?,

@@ -1,16 +1,24 @@
 //! Streaming coreset pipeline (the data-pipeline face of the paper,
 //! §4): a producer thread generates/reads data shards, a bounded
-//! channel applies backpressure (the producer blocks when the reducer
-//! falls behind — no unbounded buffering), and the consumer folds
-//! shards into a Merge & Reduce coreset tree. The final coreset is
-//! fitted exactly like an in-memory one.
+//! channel applies backpressure (the producer blocks when the reducers
+//! fall behind — no unbounded buffering), and a **fan-out of consumer
+//! workers** leaf-reduces shards in parallel before a single reducer
+//! folds them into the Merge & Reduce coreset tree. Each shard's leaf
+//! reduce uses an RNG seeded by (pipeline seed, shard sequence number)
+//! and leaves are folded in sequence order through a reorder buffer, so
+//! the final coreset is identical for any number of consumers. The
+//! final coreset is fitted exactly like an in-memory one.
 
-use crate::coreset::merge_reduce::{MergeReduce, WeightedRows};
+use crate::coreset::merge_reduce::{reduce_with, MergeReduce, WeightedRows};
 use crate::coreset::Method;
 use crate::data::ShardSource;
 use crate::linalg::Mat;
+use crate::util::parallel;
+use crate::util::rng::Rng;
 use crate::util::Stopwatch;
+use std::collections::BTreeMap;
 use std::sync::mpsc::sync_channel;
+use std::sync::{Condvar, Mutex};
 
 /// Diagnostics from a streaming run.
 #[derive(Clone, Debug)]
@@ -20,8 +28,12 @@ pub struct StreamStats {
     pub n_reduces: usize,
     pub coreset_size: usize,
     pub seconds: f64,
-    /// max queue depth observed (backpressure indicator)
+    /// upper bound on the shard-queue depth (backpressure indicator:
+    /// never exceeds `queue_cap` — the bounded channel guarantees it)
     pub peak_queue: usize,
+    /// max reorder-buffer depth observed: how far the fastest consumer
+    /// ran ahead of the in-order tree reducer (≤ queue_cap + consumers)
+    pub peak_reorder: usize,
 }
 
 /// The streaming coordinator.
@@ -34,27 +46,46 @@ pub struct StreamingPipeline {
     pub seed: u64,
     /// Merge & Reduce intermediate-level size multiplier
     pub buffer_factor: usize,
+    /// consumer workers running leaf reduces in parallel (defaults to
+    /// the global worker count; results do not depend on this)
+    pub consumers: usize,
 }
 
 impl StreamingPipeline {
     pub fn new(method: Method, k: usize, d: usize) -> Self {
-        StreamingPipeline { method, k, d, queue_cap: 4, seed: 0xC0FF_EE, buffer_factor: 4 }
+        StreamingPipeline {
+            method,
+            k,
+            d,
+            queue_cap: 4,
+            seed: 0xC0FF_EE,
+            buffer_factor: 4,
+            consumers: parallel::threads(),
+        }
     }
 
     /// Consume a shard source to a final weighted coreset.
     ///
     /// The producer runs on its own thread; `sync_channel(queue_cap)`
-    /// blocks it when the reducer is busy — bounded memory regardless
-    /// of stream length.
+    /// blocks it when the reducers are busy — bounded memory regardless
+    /// of stream length. Consumers pull shards from the shared channel,
+    /// leaf-reduce them with deterministic per-shard RNGs, and send the
+    /// leaves to the in-order tree reducer.
     pub fn run(&self, mut source: impl ShardSource + Send + 'static) -> (WeightedRows, StreamStats) {
         let sw = Stopwatch::start();
-        let (tx, rx) = sync_channel::<Mat>(self.queue_cap);
+        let consumers = self.consumers.max(1);
+        let (shard_tx, shard_rx) = sync_channel::<(usize, Mat)>(self.queue_cap);
         let producer = std::thread::spawn(move || {
             let mut produced = 0usize;
-            while let Some(shard) = source.next_shard() {
-                produced += shard.rows;
-                if tx.send(shard).is_err() {
-                    break; // consumer dropped
+            for seq in 0usize.. {
+                match source.next_shard() {
+                    Some(shard) => {
+                        produced += shard.rows;
+                        if shard_tx.send((seq, shard)).is_err() {
+                            break; // consumers dropped
+                        }
+                    }
+                    None => break,
                 }
             }
             produced
@@ -62,15 +93,91 @@ impl StreamingPipeline {
 
         let mut mr = MergeReduce::new(self.method, self.k, self.d, 0.01, self.seed);
         mr.buffer_factor = self.buffer_factor;
+        // reducer-side merges run concurrently with busy consumers — the
+        // consumers are the parallelism, so the tree reduces stay serial
+        mr.pool = crate::util::parallel::Pool::new(1);
+        let k_buffer = self.buffer_factor * self.k;
+        let (method, d, base_seed) = (self.method, self.d, self.seed);
+
         let mut n_shards = 0usize;
-        let mut peak_queue = 0usize;
-        for shard in rx.iter() {
-            n_shards += 1;
-            // the channel has no len(); track an upper bound via the
-            // bounded capacity (diagnostic only)
-            peak_queue = peak_queue.max(self.queue_cap.min(n_shards));
-            mr.push_shard(shard);
-        }
+        let mut peak_reorder = 0usize;
+        let shard_rx = Mutex::new(shard_rx);
+        let (leaf_tx, leaf_rx) =
+            sync_channel::<(usize, WeightedRows, usize)>(self.queue_cap + consumers);
+        // Bounded reorder window: a consumer may not start reducing a
+        // shard more than `window` sequence numbers ahead of the
+        // in-order reducer, so the reorder buffer — and with it total
+        // memory — stays bounded even when one early shard is slow and
+        // the other consumers race ahead. The consumer holding the
+        // next-to-fold sequence never waits (seq < folded + window),
+        // so the window cannot deadlock.
+        let window = self.queue_cap + consumers;
+        let progress = (Mutex::new(0usize), Condvar::new());
+        std::thread::scope(|s| {
+            for _ in 0..consumers {
+                let shard_rx = &shard_rx;
+                let leaf_tx = leaf_tx.clone();
+                let progress = &progress;
+                s.spawn(move || loop {
+                    // recv under the lock serializes the *take*, not the
+                    // reduce — workers overlap on the expensive part
+                    let msg = shard_rx.lock().expect("shard queue poisoned").recv();
+                    match msg {
+                        Ok((seq, shard)) => {
+                            {
+                                let (folded, cv) = progress;
+                                let mut guard = folded.lock().expect("progress poisoned");
+                                while seq >= *guard + window {
+                                    guard = cv.wait(guard).expect("progress poisoned");
+                                }
+                            }
+                            let n_raw = shard.rows;
+                            let mut rng = Rng::new(shard_seed(base_seed, seq));
+                            // the consumers ARE the parallelism — run the
+                            // kernels inside the leaf reduce serially so
+                            // threads aren't nested/oversubscribed
+                            let leaf = reduce_with(
+                                &WeightedRows::new(shard, vec![1.0; n_raw]),
+                                method,
+                                k_buffer,
+                                d,
+                                0.01,
+                                &mut rng,
+                                &crate::util::parallel::Pool::new(1),
+                            );
+                            if leaf_tx.send((seq, leaf, n_raw)).is_err() {
+                                break;
+                            }
+                        }
+                        Err(_) => break, // producer done, channel drained
+                    }
+                });
+            }
+            drop(leaf_tx); // only worker clones remain
+
+            // reorder buffer: fold leaves into the tree in shard order,
+            // so the merge RNG stream is independent of scheduling
+            let mut pending: BTreeMap<usize, (WeightedRows, usize)> = BTreeMap::new();
+            let mut next_seq = 0usize;
+            for (seq, leaf, n_raw) in leaf_rx.iter() {
+                n_shards += 1;
+                pending.insert(seq, (leaf, n_raw));
+                peak_reorder = peak_reorder.max(pending.len());
+                if pending.contains_key(&next_seq) {
+                    while let Some((leaf, n_raw)) = pending.remove(&next_seq) {
+                        mr.push_reduced(leaf, n_raw);
+                        next_seq += 1;
+                    }
+                    // publish progress and wake consumers waiting on the
+                    // reorder window
+                    let (folded, cv) = &progress;
+                    *folded.lock().expect("progress poisoned") = next_seq;
+                    cv.notify_all();
+                }
+            }
+            assert!(pending.is_empty(), "lost shard sequence numbers");
+        });
+
         let n_seen = producer.join().expect("producer panicked");
         let n_reduces = mr.n_reduces;
         let out = mr.finish();
@@ -80,10 +187,20 @@ impl StreamingPipeline {
             n_reduces,
             coreset_size: out.len(),
             seconds: sw.secs(),
-            peak_queue,
+            // the bounded channel caps in-flight shards at queue_cap;
+            // report the same conservative bound the serial reducer did
+            peak_queue: self.queue_cap.min(n_shards),
+            peak_reorder,
         };
         (out, stats)
     }
+}
+
+/// Deterministic per-shard RNG seed: mixes the pipeline seed with the
+/// shard's sequence number (SplitMix-style odd multiplier) so shard
+/// reduces are independent of which worker runs them and of each other.
+fn shard_seed(base: u64, seq: usize) -> u64 {
+    base ^ (seq as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
 #[cfg(test)]
@@ -112,6 +229,31 @@ mod tests {
         assert!(coreset.len() <= 60);
         let tot: f64 = coreset.weights.iter().sum();
         assert!(tot > 2_000.0 && tot < 200_000.0, "total weight {tot}");
+    }
+
+    #[test]
+    fn consumer_fanout_is_deterministic() {
+        // identical stream, 1 vs 8 consumers → bit-identical coreset:
+        // per-shard RNGs are seeded by sequence number and leaves fold
+        // in order through the reorder buffer
+        let make_source = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            GenShards::new(
+                move |n| Dgp::BivariateNormal.generate(n, &mut rng),
+                2,
+                8_000,
+                1_000,
+            )
+        };
+        let mut p1 = StreamingPipeline::new(Method::L2Hull, 40, 5);
+        p1.consumers = 1;
+        let mut p8 = StreamingPipeline::new(Method::L2Hull, 40, 5);
+        p8.consumers = 8;
+        let (c1, s1) = p1.run(make_source(99));
+        let (c8, s8) = p8.run(make_source(99));
+        assert_eq!(s1.n_seen, s8.n_seen);
+        assert_eq!(c1.weights, c8.weights);
+        assert_eq!(c1.rows.data, c8.rows.data);
     }
 
     #[test]

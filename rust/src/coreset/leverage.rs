@@ -10,6 +10,7 @@
 
 use crate::basis::Design;
 use crate::linalg::{Cholesky, LinalgError, Mat};
+use crate::util::parallel::{Pool, ROW_CHUNK};
 
 /// Relative ridge added to the Gram matrix before factorization. Keeps
 /// rank-deficient designs (piecewise/circular DGPs can produce nearly
@@ -25,7 +26,19 @@ pub fn leverage_scores(x: &Mat) -> Result<Vec<f64>, LinalgError> {
 /// Ridge leverage scores u_i(γ) = x_iᵀ (XᵀX + γI)⁻¹ x_i.
 /// `gamma` is the absolute ridge; the tiny stabilizer is always added.
 pub fn leverage_scores_ridged(x: &Mat, gamma: f64) -> Result<Vec<f64>, LinalgError> {
-    let mut g = x.gram();
+    leverage_scores_ridged_with(x, gamma, &Pool::current())
+}
+
+/// [`leverage_scores_ridged`] on an explicit pool. The Gram pass is
+/// row-sharded with a deterministic tree reduction and the scoring pass
+/// writes disjoint row chunks, so scores are bit-identical for any
+/// thread count; each worker reuses the one shared L⁻¹.
+pub fn leverage_scores_ridged_with(
+    x: &Mat,
+    gamma: f64,
+    pool: &Pool,
+) -> Result<Vec<f64>, LinalgError> {
+    let mut g = x.gram_with(pool);
     let d = g.rows;
     let stab = GRAM_RIDGE_REL * g.trace().max(1e-300) / d as f64;
     for i in 0..d {
@@ -35,22 +48,27 @@ pub fn leverage_scores_ridged(x: &Mat, gamma: f64) -> Result<Vec<f64>, LinalgErr
     // score via an explicit L⁻¹ triangular matvec instead of a
     // forward-solve per row: same FLOPs, but no divisions in the inner
     // loop and contiguous row access — 2.1× on the J=10 pipeline (see
-    // EXPERIMENTS.md §Perf L3-a).
+    // EXPERIMENTS.md §Perf L3-a). Each score depends only on its own
+    // row, so the row shards write disjoint output chunks.
     let linv = ch.l_inverse();
-    let mut scores = Vec::with_capacity(x.rows);
-    for i in 0..x.rows {
-        let xi = x.row(i);
-        let mut acc = 0.0;
-        for r in 0..d {
-            let lrow = &linv.row(r)[..=r];
-            let mut z = 0.0;
-            for (c, &l) in lrow.iter().enumerate() {
-                z += l * xi[c];
+    let mut scores = vec![0.0; x.rows];
+    let items: Vec<&mut [f64]> = scores.chunks_mut(ROW_CHUNK).collect();
+    pool.for_items(items, |ci, chunk| {
+        let lo = ci * ROW_CHUNK;
+        for (off, out) in chunk.iter_mut().enumerate() {
+            let xi = x.row(lo + off);
+            let mut acc = 0.0;
+            for r in 0..d {
+                let lrow = &linv.row(r)[..=r];
+                let mut z = 0.0;
+                for (c, &l) in lrow.iter().enumerate() {
+                    z += l * xi[c];
+                }
+                acc += z * z;
             }
-            acc += z * z;
+            *out = acc;
         }
-        scores.push(acc);
-    }
+    });
     Ok(scores)
 }
 
@@ -64,15 +82,33 @@ pub fn default_ridge(x: &Mat) -> f64 {
 /// Leverage scores of the MCTM design (scores of B's rows, one value per
 /// observation — identical across the J block-rows of one observation).
 pub fn mctm_leverage_scores(design: &Design) -> Result<Vec<f64>, LinalgError> {
+    mctm_leverage_scores_with(design, &Pool::current())
+}
+
+/// [`mctm_leverage_scores`] on an explicit pool (used by callers that
+/// already provide their own parallelism, e.g. the streaming consumers
+/// pass `Pool::new(1)` to avoid nested fan-out).
+pub fn mctm_leverage_scores_with(
+    design: &Design,
+    pool: &Pool,
+) -> Result<Vec<f64>, LinalgError> {
     let stacked = design.stacked();
-    leverage_scores(&stacked)
+    leverage_scores_ridged_with(&stacked, 0.0, pool)
 }
 
 /// Sensitivity upper bounds s_i = u_i + 1/n (Algorithm 1 "sensitivity
 /// proxy"): the uniform term covers the positive-log part's uniform
 /// component (Lemma 2.2/2.3).
 pub fn sensitivity_scores(design: &Design) -> Result<Vec<f64>, LinalgError> {
-    let u = mctm_leverage_scores(design)?;
+    sensitivity_scores_with(design, &Pool::current())
+}
+
+/// [`sensitivity_scores`] on an explicit pool.
+pub fn sensitivity_scores_with(
+    design: &Design,
+    pool: &Pool,
+) -> Result<Vec<f64>, LinalgError> {
+    let u = mctm_leverage_scores_with(design, pool)?;
     let n = design.n as f64;
     Ok(u.into_iter().map(|ui| ui + 1.0 / n).collect())
 }

@@ -12,6 +12,7 @@
 use super::samplers::Method;
 use crate::basis::Design;
 use crate::linalg::Mat;
+use crate::util::parallel::Pool;
 use crate::util::rng::Rng;
 
 /// A weighted set of raw observations (rows on the original data scale).
@@ -59,17 +60,32 @@ pub fn reduce(
     eps: f64,
     rng: &mut Rng,
 ) -> WeightedRows {
+    reduce_with(set, method, k, d, eps, rng, &Pool::current())
+}
+
+/// [`reduce`] on an explicit pool: callers that already fan out (the
+/// streaming consumers) pass `Pool::new(1)` so the basis/leverage
+/// kernels inside don't nest another layer of worker threads.
+pub fn reduce_with(
+    set: &WeightedRows,
+    method: Method,
+    k: usize,
+    d: usize,
+    eps: f64,
+    rng: &mut Rng,
+    pool: &Pool,
+) -> WeightedRows {
     if set.len() <= k {
         return set.clone();
     }
-    let design = Design::build(&set.rows, d, eps);
+    let design = Design::build_on(&set.rows, d, eps, pool);
     let n = set.len();
 
     // per-row sensitivity scores for the chosen method (uniform falls
     // back to s ≡ 1)
     let sens: Vec<f64> = match method {
         Method::Uniform => vec![1.0; n],
-        _ => crate::coreset::leverage::sensitivity_scores(&design)
+        _ => crate::coreset::leverage::sensitivity_scores_with(&design, pool)
             .unwrap_or_else(|_| vec![1.0; n]),
     };
     let hull_budget = if method == Method::L2Hull {
@@ -132,6 +148,11 @@ pub struct MergeReduce {
     pub n_reduces: usize,
     /// intermediate-level size multiplier (accuracy vs memory)
     pub buffer_factor: usize,
+    /// pool for the kernels inside this accumulator's reduces; callers
+    /// that fan out around the accumulator (the streaming pipeline)
+    /// set `Pool::new(1)` so reducer-side merges don't pile a second
+    /// layer of workers on top of busy consumer threads
+    pub pool: Pool,
 }
 
 impl MergeReduce {
@@ -146,6 +167,7 @@ impl MergeReduce {
             n_seen: 0,
             n_reduces: 0,
             buffer_factor: 4,
+            pool: Pool::current(),
         }
     }
 
@@ -159,16 +181,28 @@ impl MergeReduce {
 
     /// Insert one shard of raw rows (weight 1 each).
     pub fn push_shard(&mut self, rows: Mat) {
-        self.n_seen += rows.rows;
-        let w = vec![1.0; rows.rows];
-        let mut carry = reduce(
+        let n_raw = rows.rows;
+        let w = vec![1.0; n_raw];
+        let leaf = reduce_with(
             &WeightedRows::new(rows, w),
             self.method,
             self.k_buffer(),
             self.d,
             self.eps,
             &mut self.rng,
+            &self.pool,
         );
+        self.push_reduced(leaf, n_raw);
+    }
+
+    /// Insert a shard that was already leaf-reduced (to `k_buffer()`
+    /// rows) elsewhere — the entry point for the parallel streaming
+    /// consumers, which run the leaf reduce on worker threads with
+    /// per-shard RNGs and hand the results back in shard order.
+    /// `n_raw` is the raw row count the leaf represents.
+    pub fn push_reduced(&mut self, leaf: WeightedRows, n_raw: usize) {
+        self.n_seen += n_raw;
+        let mut carry = leaf;
         self.n_reduces += 1;
         let mut level = 0usize;
         loop {
@@ -183,13 +217,14 @@ impl MergeReduce {
                 }
                 Some(existing) => {
                     let merged = existing.merge(carry);
-                    carry = reduce(
+                    carry = reduce_with(
                         &merged,
                         self.method,
                         self.k_buffer(),
                         self.d,
                         self.eps,
                         &mut self.rng,
+                        &self.pool,
                     );
                     self.n_reduces += 1;
                     level += 1;
@@ -209,7 +244,7 @@ impl MergeReduce {
         }
         let acc = acc.unwrap_or_else(|| WeightedRows::new(Mat::zeros(0, 0), vec![]));
         if acc.len() > self.k {
-            reduce(&acc, self.method, self.k, self.d, self.eps, &mut self.rng)
+            reduce_with(&acc, self.method, self.k, self.d, self.eps, &mut self.rng, &self.pool)
         } else {
             acc
         }

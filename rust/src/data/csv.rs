@@ -4,7 +4,8 @@
 //! fields are not supported (numeric matrices never need them).
 
 use crate::linalg::Mat;
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::util::error::{Context, Result};
 use std::path::Path;
 
 /// Load a numeric matrix from a delimited text file. A first line that

@@ -3,7 +3,12 @@
 //! solves, Householder QR, and inverse-via-Cholesky — everything the
 //! leverage-score computation and the Gaussian-copula math need.
 //! Dimensions are small (dJ ≤ ~150), rows are many (n up to ~600k), so
-//! hot loops are written cache-friendly over contiguous rows.
+//! hot loops are written cache-friendly over contiguous rows, blocked
+//! four rows at a time, and row-sharded across the deterministic worker
+//! pool (`util::parallel`): fixed chunking + tree reduction keep results
+//! bit-identical for any thread count.
+
+use crate::util::parallel::{add_assign, tree_reduce, Pool, ROW_CHUNK};
 
 /// Row-major dense f64 matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -71,23 +76,28 @@ impl Mat {
         out
     }
 
-    /// Dense matmul (small matrices only — used in tests / copula math).
+    /// Dense matmul, blocked four output rows at a time (each pass over
+    /// `other`'s rows feeds four accumulator rows, quartering the reload
+    /// traffic of the naive triple loop) and row-sharded on the pool for
+    /// tall left factors. Every output row is produced by exactly one
+    /// chunk with a fixed k-order, so results don't depend on the thread
+    /// count.
     pub fn matmul(&self, other: &Mat) -> Mat {
+        self.matmul_with(other, &Pool::current())
+    }
+
+    /// [`Mat::matmul`] on an explicit pool.
+    pub fn matmul_with(&self, other: &Mat, pool: &Pool) -> Mat {
         assert_eq!(self.cols, other.rows);
         let mut out = Mat::zeros(self.rows, other.cols);
-        for i in 0..self.rows {
-            for k in 0..self.cols {
-                let a = self.at(i, k);
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = other.row(k);
-                let out_row = out.row_mut(i);
-                for (j, &o) in orow.iter().enumerate() {
-                    out_row[j] += a * o;
-                }
-            }
+        let nc = other.cols;
+        if nc == 0 || self.rows == 0 {
+            return out;
         }
+        let items: Vec<&mut [f64]> = out.data.chunks_mut(ROW_CHUNK * nc).collect();
+        pool.for_items(items, |ci, chunk| {
+            matmul_row_block(self, other, ci * ROW_CHUNK, chunk);
+        });
         out
     }
 
@@ -103,23 +113,29 @@ impl Mat {
 
     /// Gram matrix XᵀX, upper-triangle computed then mirrored (syrk-style).
     /// This is the L3 hot path for leverage scores: O(n·D²/2) FLOPs over
-    /// contiguous rows.
+    /// contiguous rows, blocked four rows per accumulator pass and
+    /// row-sharded on the pool. Per-chunk partial Grams are combined by
+    /// a fixed-shape tree reduction, so the result is bit-identical for
+    /// any thread count (see EXPERIMENTS.md §Perf).
     pub fn gram(&self) -> Mat {
+        self.gram_with(&Pool::current())
+    }
+
+    /// [`Mat::gram`] on an explicit pool (the determinism tests compare
+    /// `Pool::new(1)` against larger pools).
+    pub fn gram_with(&self, pool: &Pool) -> Mat {
         let d = self.cols;
-        let mut g = Mat::zeros(d, d);
-        for r in 0..self.rows {
-            let row = self.row(r);
-            for i in 0..d {
-                let xi = row[i];
-                if xi == 0.0 {
-                    continue;
-                }
-                let grow = &mut g.data[i * d..(i + 1) * d];
-                for j in i..d {
-                    grow[j] += xi * row[j];
-                }
-            }
-        }
+        let partials = pool.map_chunks(self.rows, ROW_CHUNK, |_, r| {
+            let mut g = vec![0.0; d * d];
+            gram_upper_block(self, r.start, r.end, &mut g);
+            g
+        });
+        let upper = tree_reduce(partials, |mut a, b| {
+            add_assign(&mut a, &b);
+            a
+        })
+        .unwrap_or_else(|| vec![0.0; d * d]);
+        let mut g = Mat::from_vec(d, d, upper);
         // mirror
         for i in 0..d {
             for j in (i + 1)..d {
@@ -140,20 +156,97 @@ impl Mat {
     }
 }
 
+/// Upper-triangular syrk accumulation over rows `[lo, hi)` of `x` into
+/// the flat d×d buffer `g`, four rows per pass: each load of the
+/// accumulator row `g[i·d..]` absorbs four rank-1 updates instead of
+/// one. Summation order is fixed by the row range alone.
+fn gram_upper_block(x: &Mat, lo: usize, hi: usize, g: &mut [f64]) {
+    let d = x.cols;
+    let mut r = lo;
+    while r + 4 <= hi {
+        let (r0, r1, r2, r3) = (x.row(r), x.row(r + 1), x.row(r + 2), x.row(r + 3));
+        for i in 0..d {
+            let (a0, a1, a2, a3) = (r0[i], r1[i], r2[i], r3[i]);
+            if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                continue;
+            }
+            let grow = &mut g[i * d..(i + 1) * d];
+            for j in i..d {
+                grow[j] += a0 * r0[j] + a1 * r1[j] + a2 * r2[j] + a3 * r3[j];
+            }
+        }
+        r += 4;
+    }
+    while r < hi {
+        let row = x.row(r);
+        for i in 0..d {
+            let xi = row[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let grow = &mut g[i * d..(i + 1) * d];
+            for j in i..d {
+                grow[j] += xi * row[j];
+            }
+        }
+        r += 1;
+    }
+}
+
+/// Product rows `[row0, row0 + chunk_rows)` of `a·b` into `out` (flat,
+/// width `b.cols`), four output rows per pass over `b` so each loaded
+/// `b` row feeds four accumulators. Per-row k-order matches the naive
+/// triple loop, so each output row is bit-identical to the serial
+/// product no matter how chunks are scheduled.
+fn matmul_row_block(a: &Mat, b: &Mat, row0: usize, out: &mut [f64]) {
+    let nc = b.cols;
+    let rows = out.len() / nc;
+    let mut bi = 0usize;
+    while bi < rows {
+        let blk = (rows - bi).min(4);
+        for k in 0..a.cols {
+            let brow = b.row(k);
+            for r in 0..blk {
+                let aik = a.at(row0 + bi + r, k);
+                if aik == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[(bi + r) * nc..(bi + r + 1) * nc];
+                for (j, &bv) in brow.iter().enumerate() {
+                    orow[j] += aik * bv;
+                }
+            }
+        }
+        bi += blk;
+    }
+}
+
 /// Lower-triangular Cholesky factor L with G = L Lᵀ.
 #[derive(Clone, Debug)]
 pub struct Cholesky {
     pub l: Mat,
 }
 
-/// Errors from factorizations.
-#[derive(Debug, thiserror::Error)]
+/// Errors from factorizations (`thiserror` is unavailable offline, so
+/// Display/Error are hand-rolled).
+#[derive(Debug)]
 pub enum LinalgError {
-    #[error("matrix not positive definite at pivot {0} (value {1})")]
     NotPosDef(usize, f64),
-    #[error("dimension mismatch: {0}")]
     Dim(String),
 }
+
+impl std::fmt::Display for LinalgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LinalgError::NotPosDef(pivot, value) => {
+                write!(f, "matrix not positive definite at pivot {pivot} (value {value})")
+            }
+            LinalgError::Dim(msg) => write!(f, "dimension mismatch: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for LinalgError {}
 
 impl Cholesky {
     /// Factor a symmetric positive-definite matrix.
@@ -490,6 +583,41 @@ mod tests {
             for j in 0..3 {
                 let want = if i == j { 1.0 } else { 0.0 };
                 assert!((prod.at(i, j) - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn gram_and_matmul_bit_identical_across_pools() {
+        let mut rng = Rng::new(123);
+        // > ROW_CHUNK rows so the work really spans several chunks
+        let x = random_mat(&mut rng, 3 * ROW_CHUNK + 17, 9);
+        let b = random_mat(&mut rng, 9, 6);
+        let g1 = x.gram_with(&Pool::new(1));
+        let m1 = x.matmul_with(&b, &Pool::new(1));
+        for t in [2, 8] {
+            let gt = x.gram_with(&Pool::new(t));
+            let mt = x.matmul_with(&b, &Pool::new(t));
+            for (a, c) in g1.data.iter().zip(&gt.data) {
+                assert_eq!(a.to_bits(), c.to_bits(), "gram differs at {t} threads");
+            }
+            for (a, c) in m1.data.iter().zip(&mt.data) {
+                assert_eq!(a.to_bits(), c.to_bits(), "matmul differs at {t} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_gram_matches_naive_large() {
+        let mut rng = Rng::new(77);
+        // odd row count exercises the 4-row remainder path across chunks
+        let x = random_mat(&mut rng, ROW_CHUNK + 5, 7);
+        let g = x.gram();
+        let g2 = x.transpose().matmul(&x);
+        for i in 0..7 {
+            for j in 0..7 {
+                let denom = 1.0 + g2.at(i, j).abs();
+                assert!((g.at(i, j) - g2.at(i, j)).abs() / denom < 1e-10);
             }
         }
     }

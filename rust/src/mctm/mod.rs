@@ -14,5 +14,7 @@ pub mod params;
 pub use bootstrap::{bootstrap_ci, BootstrapResult};
 pub use density::marginal_density;
 pub use metrics::{lambda_error, loglik_ratio, relative_improvement, theta_l2};
-pub use model::{nll, nll_grad, nll_parts, NllParts};
+pub use model::{
+    nll, nll_grad, nll_grad_with, nll_parts, nll_parts_with, nll_with, NllParts,
+};
 pub use params::{ModelSpec, Params};

@@ -12,6 +12,7 @@
 
 use super::params::Params;
 use crate::basis::Design;
+use crate::util::parallel::{add_assign, tree_reduce, Pool, ROW_CHUNK};
 
 /// Floor for the log argument — the model-side D(η) guard. With the
 /// monotone reparametrization h̃' > 0 always holds, but the coreset
@@ -36,30 +37,36 @@ impl NllParts {
     }
 }
 
-/// Scratch buffers reused across NLL evaluations (the optimizer calls
-/// this hundreds of times; allocation in the loop was the first perf
-/// finding — see EXPERIMENTS.md §Perf L3-b).
+/// Per-worker scratch buffers reused across the rows of one shard (the
+/// optimizer calls the NLL hundreds of times; allocation in the inner
+/// loop was the first perf finding — see EXPERIMENTS.md §Perf L3-b).
+/// Each worker of the row-sharded evaluation owns one `Workspace`, so
+/// the shards never contend on scratch memory.
 pub struct Workspace {
-    theta: Vec<f64>,
     htil: Vec<f64>,
     hd: Vec<f64>,
     z: Vec<f64>,
     ghtil: Vec<f64>,
-    grad_theta: Vec<f64>,
 }
 
 impl Workspace {
-    pub fn new(p: &Params) -> Self {
-        let (j, d) = (p.spec.j, p.spec.d);
+    pub fn new(j: usize) -> Self {
         Workspace {
-            theta: vec![0.0; j * d],
             htil: vec![0.0; j],
             hd: vec![0.0; j],
             z: vec![0.0; j],
             ghtil: vec![0.0; j],
-            grad_theta: vec![0.0; j * d],
         }
     }
+}
+
+/// Per-chunk partial of the weighted NLL and its gradient; merged by a
+/// fixed-shape tree reduction so accumulation order — and therefore the
+/// result, bit for bit — is independent of the thread count.
+struct NllPartial {
+    total: f64,
+    grad_theta: Vec<f64>,
+    grad_lambda: Vec<f64>,
 }
 
 #[inline]
@@ -74,21 +81,41 @@ fn dot(a: &[f64], b: &[f64]) -> f64 {
 /// Weighted NLL Σ_i w_i loss_i at free parameters `p` (β-parametrized).
 /// `weights` of length `design.n`, or empty for unweighted.
 pub fn nll(design: &Design, weights: &[f64], p: &Params) -> f64 {
-    nll_impl(design, weights, p, None)
+    nll_with(design, weights, p, &Pool::current())
+}
+
+/// [`nll`] on an explicit pool.
+pub fn nll_with(design: &Design, weights: &[f64], p: &Params, pool: &Pool) -> f64 {
+    nll_impl(design, weights, p, None, pool)
 }
 
 /// Weighted NLL and gradient w.r.t. the free parameter vector x.
 pub fn nll_grad(design: &Design, weights: &[f64], p: &Params) -> (f64, Vec<f64>) {
+    nll_grad_with(design, weights, p, &Pool::current())
+}
+
+/// [`nll_grad`] on an explicit pool.
+pub fn nll_grad_with(
+    design: &Design,
+    weights: &[f64],
+    p: &Params,
+    pool: &Pool,
+) -> (f64, Vec<f64>) {
     let mut grad = vec![0.0; p.spec.n_params()];
-    let v = nll_impl(design, weights, p, Some(&mut grad));
+    let v = nll_impl(design, weights, p, Some(&mut grad), pool);
     (v, grad)
 }
 
+/// Row-sharded evaluation: each chunk of rows is processed by one
+/// worker with its own `Workspace` and accumulates a private
+/// (`total`, ∂θ, ∂λ) partial; partials merge by fixed-shape tree
+/// reduction, and θ → β chaining happens once on the merged gradient.
 fn nll_impl(
     design: &Design,
     weights: &[f64],
     p: &Params,
-    mut grad: Option<&mut Vec<f64>>,
+    grad: Option<&mut Vec<f64>>,
+    pool: &Pool,
 ) -> f64 {
     let spec = p.spec;
     let (j, d) = (spec.j, spec.d);
@@ -99,94 +126,111 @@ fn nll_impl(
         "weights length"
     );
 
-    let mut ws = Workspace::new(p);
-    ws.theta.copy_from_slice(&p.theta());
+    let theta = p.theta();
     let lam = p.lambda_block();
     // λ row offsets hoisted out of the per-row loops (lambda_index does
     // a mul+shift per call — ~15% of the J=10 row cost; §Perf L3-b)
     let lam_off: Vec<usize> = (0..j).map(|jj| jj * jj.saturating_sub(1) / 2).collect();
 
-    let mut total = 0.0;
+    let want_grad = grad.is_some();
+    let n_lam = spec.n_lambda();
     let stride = j * d;
 
-    if let Some(g) = grad.as_deref_mut() {
-        g.iter_mut().for_each(|x| *x = 0.0);
-    }
-    ws.grad_theta.iter_mut().for_each(|x| *x = 0.0);
-
-    for i in 0..design.n {
-        let w = if weights.is_empty() { 1.0 } else { weights[i] };
-        if w == 0.0 {
-            continue;
-        }
-        let a = &design.a[i * stride..(i + 1) * stride];
-        let ad = &design.ad[i * stride..(i + 1) * stride];
-
-        // marginal transforms and derivatives
-        for jj in 0..j {
-            let th = &ws.theta[jj * d..(jj + 1) * d];
-            ws.htil[jj] = dot(&a[jj * d..(jj + 1) * d], th);
-            ws.hd[jj] = dot(&ad[jj * d..(jj + 1) * d], th);
-        }
-
-        // copula combination z_j = h̃_j + Σ_{l<j} λ_jl h̃_l
-        let mut li = 0usize;
-        for jj in 0..j {
-            let mut z = ws.htil[jj];
-            for ll in 0..jj {
-                z += lam[li + ll] * ws.htil[ll];
+    let partials = pool.map_chunks(design.n, ROW_CHUNK, |_, range| {
+        let mut ws = Workspace::new(j);
+        let mut part = NllPartial {
+            total: 0.0,
+            grad_theta: vec![0.0; if want_grad { j * d } else { 0 }],
+            grad_lambda: vec![0.0; if want_grad { n_lam } else { 0 }],
+        };
+        for i in range {
+            let w = if weights.is_empty() { 1.0 } else { weights[i] };
+            if w == 0.0 {
+                continue;
             }
-            ws.z[jj] = z;
-            li += jj;
-        }
+            let a = &design.a[i * stride..(i + 1) * stride];
+            let ad = &design.ad[i * stride..(i + 1) * stride];
 
-        // loss
-        let mut loss = 0.0;
-        for jj in 0..j {
-            let hd = ws.hd[jj].max(ETA_FLOOR);
-            loss += 0.5 * ws.z[jj] * ws.z[jj] - hd.ln();
-        }
-        total += w * loss;
-
-        if let Some(g) = grad.as_deref_mut() {
-            // ∂loss/∂h̃_l = z_l + Σ_{j>l} λ_jl z_j
-            for ll in 0..j {
-                let mut gh = ws.z[ll];
-                for jj in (ll + 1)..j {
-                    gh += lam[lam_off[jj] + ll] * ws.z[jj];
-                }
-                ws.ghtil[ll] = gh;
-            }
-            // θ gradient (accumulated, chain to β once at the end)
+            // marginal transforms and derivatives
             for jj in 0..j {
-                let hd = ws.hd[jj].max(ETA_FLOOR);
-                let coef_a = w * ws.ghtil[jj];
-                let coef_ad = -w / hd;
-                let gt = &mut ws.grad_theta[jj * d..(jj + 1) * d];
-                let arow = &a[jj * d..(jj + 1) * d];
-                let adrow = &ad[jj * d..(jj + 1) * d];
-                for k in 0..d {
-                    gt[k] += coef_a * arow[k] + coef_ad * adrow[k];
-                }
+                let th = &theta[jj * d..(jj + 1) * d];
+                ws.htil[jj] = dot(&a[jj * d..(jj + 1) * d], th);
+                ws.hd[jj] = dot(&ad[jj * d..(jj + 1) * d], th);
             }
-            // λ gradient: ∂loss/∂λ_jl = z_j · h̃_l
-            let goff = j * d;
+
+            // copula combination z_j = h̃_j + Σ_{l<j} λ_jl h̃_l
             let mut li = 0usize;
-            for jj in 1..j {
+            for jj in 0..j {
+                let mut z = ws.htil[jj];
                 for ll in 0..jj {
-                    g[goff + li + ll] += w * ws.z[jj] * ws.htil[ll];
+                    z += lam[li + ll] * ws.htil[ll];
                 }
+                ws.z[jj] = z;
                 li += jj;
             }
+
+            // loss
+            let mut loss = 0.0;
+            for jj in 0..j {
+                let hd = ws.hd[jj].max(ETA_FLOOR);
+                loss += 0.5 * ws.z[jj] * ws.z[jj] - hd.ln();
+            }
+            part.total += w * loss;
+
+            if want_grad {
+                // ∂loss/∂h̃_l = z_l + Σ_{j>l} λ_jl z_j
+                for ll in 0..j {
+                    let mut gh = ws.z[ll];
+                    for jj in (ll + 1)..j {
+                        gh += lam[lam_off[jj] + ll] * ws.z[jj];
+                    }
+                    ws.ghtil[ll] = gh;
+                }
+                // θ gradient (accumulated, chained to β once at the end)
+                for jj in 0..j {
+                    let hd = ws.hd[jj].max(ETA_FLOOR);
+                    let coef_a = w * ws.ghtil[jj];
+                    let coef_ad = -w / hd;
+                    let gt = &mut part.grad_theta[jj * d..(jj + 1) * d];
+                    let arow = &a[jj * d..(jj + 1) * d];
+                    let adrow = &ad[jj * d..(jj + 1) * d];
+                    for k in 0..d {
+                        gt[k] += coef_a * arow[k] + coef_ad * adrow[k];
+                    }
+                }
+                // λ gradient: ∂loss/∂λ_jl = z_j · h̃_l
+                let mut li = 0usize;
+                for jj in 1..j {
+                    for ll in 0..jj {
+                        part.grad_lambda[li + ll] += w * ws.z[jj] * ws.htil[ll];
+                    }
+                    li += jj;
+                }
+            }
         }
-    }
+        part
+    });
+
+    let merged = tree_reduce(partials, |mut x, y| {
+        x.total += y.total;
+        add_assign(&mut x.grad_theta, &y.grad_theta);
+        add_assign(&mut x.grad_lambda, &y.grad_lambda);
+        x
+    })
+    .unwrap_or_else(|| NllPartial {
+        total: 0.0,
+        grad_theta: vec![0.0; if want_grad { j * d } else { 0 }],
+        grad_lambda: vec![0.0; if want_grad { n_lam } else { 0 }],
+    });
 
     if let Some(g) = grad {
-        // chain θ → β in place, then write into the β block of g
-        p.grad_theta_to_beta(&mut ws.grad_theta);
-        g[..j * d].copy_from_slice(&ws.grad_theta);
+        // chain θ → β on the merged partial, then assemble g = (β, λ)
+        let mut gt = merged.grad_theta;
+        p.grad_theta_to_beta(&mut gt);
+        g[..j * d].copy_from_slice(&gt);
+        g[j * d..].copy_from_slice(&merged.grad_lambda);
     }
-    total
+    merged.total
 }
 
 /// Evaluate the f₁/f₂/f₃ split at **raw** (ϑ, λ) — the objects the
@@ -198,39 +242,64 @@ pub fn nll_parts(
     theta: &[f64],
     lam: &[f64],
 ) -> NllParts {
+    nll_parts_with(design, weights, theta, lam, &Pool::current())
+}
+
+/// [`nll_parts`] on an explicit pool: row shards accumulate private
+/// f₁/f₂/f₃ partials which merge in fixed tree order, so the split is
+/// bit-identical for any thread count.
+pub fn nll_parts_with(
+    design: &Design,
+    weights: &[f64],
+    theta: &[f64],
+    lam: &[f64],
+    pool: &Pool,
+) -> NllParts {
     let (j, d) = (design.j, design.d);
     assert_eq!(theta.len(), j * d);
+    assert!(
+        weights.is_empty() || weights.len() == design.n,
+        "weights length"
+    );
     let stride = j * d;
-    let mut parts = NllParts::default();
-    let mut htil = vec![0.0; j];
-    for i in 0..design.n {
-        let w = if weights.is_empty() { 1.0 } else { weights[i] };
-        if w == 0.0 {
-            continue;
-        }
-        let a = &design.a[i * stride..(i + 1) * stride];
-        let ad = &design.ad[i * stride..(i + 1) * stride];
-        for jj in 0..j {
-            htil[jj] = dot(&a[jj * d..(jj + 1) * d], &theta[jj * d..(jj + 1) * d]);
-        }
-        let mut li = 0usize;
-        for jj in 0..j {
-            let mut z = htil[jj];
-            for ll in 0..jj {
-                z += lam[li + ll] * htil[ll];
+    let partials = pool.map_chunks(design.n, ROW_CHUNK, |_, range| {
+        let mut parts = NllParts::default();
+        let mut htil = vec![0.0; j];
+        for i in range {
+            let w = if weights.is_empty() { 1.0 } else { weights[i] };
+            if w == 0.0 {
+                continue;
             }
-            parts.f1 += w * 0.5 * z * z;
-            let hd = dot(&ad[jj * d..(jj + 1) * d], &theta[jj * d..(jj + 1) * d]);
-            let lg = hd.max(ETA_FLOOR).ln();
-            if lg > 0.0 {
-                parts.f2 += w * lg;
-            } else {
-                parts.f3 += w * (-lg);
+            let a = &design.a[i * stride..(i + 1) * stride];
+            let ad = &design.ad[i * stride..(i + 1) * stride];
+            for jj in 0..j {
+                htil[jj] = dot(&a[jj * d..(jj + 1) * d], &theta[jj * d..(jj + 1) * d]);
             }
-            li += jj;
+            let mut li = 0usize;
+            for jj in 0..j {
+                let mut z = htil[jj];
+                for ll in 0..jj {
+                    z += lam[li + ll] * htil[ll];
+                }
+                parts.f1 += w * 0.5 * z * z;
+                let hd = dot(&ad[jj * d..(jj + 1) * d], &theta[jj * d..(jj + 1) * d]);
+                let lg = hd.max(ETA_FLOOR).ln();
+                if lg > 0.0 {
+                    parts.f2 += w * lg;
+                } else {
+                    parts.f3 += w * (-lg);
+                }
+                li += jj;
+            }
         }
-    }
-    parts
+        parts
+    });
+    tree_reduce(partials, |a, b| NllParts {
+        f1: a.f1 + b.f1,
+        f2: a.f2 + b.f2,
+        f3: a.f3 + b.f3,
+    })
+    .unwrap_or_default()
 }
 
 #[cfg(test)]

@@ -5,19 +5,32 @@
 //! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
 //! Artifacts have fixed shapes (tile T rows); the tiled runners pad the
 //! last tile with zero-weight rows, so any n works.
+//!
+//! The `xla` crate is not available in the offline registry, so the
+//! whole PJRT surface is behind the `xla` cargo feature. Without it a
+//! stub `Engine` with the same signatures is compiled whose constructor
+//! reports "runtime unavailable" — every caller (CLI `check`, the xla
+//! backend, the benches) already degrades gracefully on that error.
 
 use super::manifest::{Manifest, ManifestEntry};
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
+use crate::anyhow;
+use crate::util::error::Result;
 use std::path::Path;
 
+#[cfg(feature = "xla")]
+use crate::util::error::Context;
+#[cfg(feature = "xla")]
+use std::collections::HashMap;
+
 /// Compile-once cache of PJRT executables, keyed by artifact name.
+#[cfg(feature = "xla")]
 pub struct Engine {
     client: xla::PjRtClient,
     pub manifest: Manifest,
     cache: std::cell::RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
 }
 
+#[cfg(feature = "xla")]
 impl Engine {
     /// Create a CPU engine over an artifact directory.
     pub fn new(artifact_dir: &Path) -> Result<Self> {
@@ -84,9 +97,49 @@ impl Engine {
     }
 }
 
+/// Stub engine compiled when the `xla` feature is off: same public
+/// surface, but the constructor always reports the runtime as
+/// unavailable (and the methods are therefore unreachable at runtime).
+#[cfg(not(feature = "xla"))]
+pub struct Engine {
+    pub manifest: Manifest,
+}
+
+#[cfg(not(feature = "xla"))]
+impl Engine {
+    /// Always fails: the binary was built without the `xla` feature.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let _ = artifact_dir;
+        Err(anyhow!(
+            "PJRT runtime unavailable: built without the `xla` cargo feature \
+             (rebuild with `--features xla` in an environment that has the xla crate)"
+        ))
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (xla feature disabled)".to_string()
+    }
+
+    pub fn executable(&self, entry: &ManifestEntry) -> Result<()> {
+        Err(anyhow!("cannot compile {}: built without the `xla` feature", entry.name))
+    }
+
+    pub fn run_f64(
+        &self,
+        entry: &ManifestEntry,
+        inputs: &[(&[f64], &[i64])],
+    ) -> Result<Vec<Vec<f64>>> {
+        let _ = inputs;
+        Err(anyhow!("cannot run {}: built without the `xla` feature", entry.name))
+    }
+}
+
 /// Tiled weighted-NLL (+grad) runner over an arbitrary-n design:
 /// splits (y, w) into fixed-size tiles, pads the last tile with
-/// weight-0 rows, accumulates value and gradient.
+/// weight-0 rows, accumulates value and gradient. Tiles are built
+/// lazily one at a time (peak memory stays O(tile), not O(n)); the
+/// padding is memcpy-bound and PJRT execution is single-threaded, so
+/// there is nothing for the worker pool to win here.
 pub struct TiledNll<'a> {
     pub engine: &'a Engine,
     pub j: usize,
@@ -125,7 +178,7 @@ impl<'a> TiledNll<'a> {
         let n = y.len() / self.j;
         let mut total = 0.0;
         let mut grad = vec![0.0; self.n_params];
-        for (ty, tw) in self.tiles(y, w, n) {
+        for (ty, tw) in self.build_tiles(y, w, n) {
             let outs = self.engine.run_f64(
                 &self.grad_entry,
                 &[
@@ -150,7 +203,7 @@ impl<'a> TiledNll<'a> {
             .ok_or_else(|| anyhow!("no nll_eval artifact for J={}, d={}", self.j, self.d))?;
         let n = y.len() / self.j;
         let mut total = 0.0;
-        for (ty, tw) in self.tiles(y, w, n) {
+        for (ty, tw) in self.build_tiles(y, w, n) {
             let outs = self.engine.run_f64(
                 entry,
                 &[
@@ -164,8 +217,8 @@ impl<'a> TiledNll<'a> {
         Ok(total)
     }
 
-    /// Iterate padded tiles: (y_tile flat T·J, w_tile T).
-    fn tiles<'b>(
+    /// Iterate padded tiles lazily: (y_tile flat T·J, w_tile T).
+    fn build_tiles<'b>(
         &'b self,
         y: &'b [f64],
         w: &'b [f64],
@@ -219,7 +272,7 @@ impl<'a> TiledLeverage<'a> {
     pub fn gram(&self, x: &[f64]) -> Result<Vec<f64>> {
         let n = x.len() / self.dim;
         let mut g = vec![0.0; self.dim * self.dim];
-        for tx in self.tiles(x, n) {
+        for tx in self.build_tiles(x, n) {
             let outs = self.engine.run_f64(
                 &self.gram_entry,
                 &[(&tx, &[self.tile as i64, self.dim as i64])],
@@ -236,7 +289,7 @@ impl<'a> TiledLeverage<'a> {
         let n = x.len() / self.dim;
         let mut out = Vec::with_capacity(n);
         let mut taken = 0usize;
-        for tx in self.tiles(x, n) {
+        for tx in self.build_tiles(x, n) {
             let outs = self.engine.run_f64(
                 &self.lev_entry,
                 &[
@@ -252,14 +305,16 @@ impl<'a> TiledLeverage<'a> {
         Ok(out)
     }
 
-    fn tiles<'b>(&'b self, x: &'b [f64], n: usize) -> impl Iterator<Item = Vec<f64>> + 'b {
+    /// Iterate padded tiles lazily (zero rows add nothing to the Gram
+    /// and score as 0); peak memory stays O(tile).
+    fn build_tiles<'b>(&'b self, x: &'b [f64], n: usize) -> impl Iterator<Item = Vec<f64>> + 'b {
         let t = self.tile;
         let d = self.dim;
         let n_tiles = n.div_ceil(t);
         (0..n_tiles).map(move |k| {
             let lo = k * t;
             let hi = ((k + 1) * t).min(n);
-            let mut tx = vec![0.0; t * d]; // zero rows add nothing to Gram
+            let mut tx = vec![0.0; t * d];
             tx[..(hi - lo) * d].copy_from_slice(&x[lo * d..hi * d]);
             tx
         })

@@ -2,7 +2,8 @@
 //! offline, so this is a purpose-built parser for exactly the JSON the
 //! build emits — flat objects, string/number/array-of-int fields.
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::util::error::{Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One AOT-compiled entry point.

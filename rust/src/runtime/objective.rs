@@ -5,7 +5,7 @@
 use super::engine::{Engine, TiledNll};
 use crate::fit::Objective;
 use crate::linalg::Mat;
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Weighted MCTM NLL evaluated through the AOT-compiled artifact.
 pub struct XlaNll<'a> {

@@ -1,0 +1,142 @@
+//! Minimal `anyhow`-style error handling (the `anyhow` crate is
+//! unavailable in the offline registry): a string-chain error type, a
+//! `Result` alias, a `Context` extension trait for `Result`/`Option`,
+//! and the `anyhow!` macro. The API mirrors the subset of `anyhow` the
+//! coordinator and runtime use, so call sites read identically.
+
+use std::fmt;
+
+/// A chain of human-readable error messages, outermost first.
+pub struct Error {
+    msgs: Vec<String>,
+}
+
+impl Error {
+    /// Build from a single message (what `anyhow!` expands to).
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msgs: vec![m.to_string()] }
+    }
+
+    /// Prepend a context message (outermost-first chain order).
+    pub fn context(mut self, m: impl fmt::Display) -> Self {
+        self.msgs.insert(0, m.to_string());
+        self
+    }
+
+    /// The full `outer: inner: …` chain.
+    pub fn chain(&self) -> String {
+        self.msgs.join(": ")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` renders the whole chain, like anyhow
+            write!(f, "{}", self.chain())
+        } else {
+            write!(f, "{}", self.msgs.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain())
+    }
+}
+
+// Blanket conversion so `?` works on std error types (io, parse, …)
+// and in-tree errors like `LinalgError`. `Error` itself deliberately
+// does NOT implement `std::error::Error`, exactly like `anyhow::Error`,
+// so this blanket impl cannot overlap the reflexive `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        Error { msgs }
+    }
+}
+
+/// Drop-in alias matching `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(|| ..)` to
+/// `Result` and `Option`, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        // `{:#}` so a wrapped `Error`'s existing chain survives intact
+        self.map_err(|e| Error::msg(format!("{e:#}")).context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{e:#}")).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Format-style error constructor, compatible with `anyhow::anyhow!`.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn chain_renders_outermost_first() {
+        let e = fails_io().unwrap_err();
+        let full = format!("{e:#}");
+        assert!(full.starts_with("reading config: "), "chain: {full}");
+        // plain display is the outermost message only
+        assert_eq!(format!("{e}"), "reading config");
+    }
+
+    #[test]
+    fn macro_and_question_mark() {
+        fn parse(v: &str) -> Result<usize> {
+            if v.is_empty() {
+                return Err(crate::anyhow!("empty value"));
+            }
+            Ok(v.parse()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(format!("{:#}", parse("").unwrap_err()).contains("empty value"));
+        assert!(format!("{:#}", parse("x").unwrap_err()).contains("invalid digit"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.with_context(|| format!("missing {}", "field")).unwrap_err();
+        assert_eq!(format!("{e:#}"), "missing field");
+    }
+}

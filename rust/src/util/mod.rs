@@ -1,7 +1,10 @@
 //! Shared utilities: RNG + distributions, special functions, summary
-//! statistics, a stopwatch, CSV/report writers and a tiny randomized
-//! property-test harness (the `proptest` crate is unavailable offline).
+//! statistics, a stopwatch, CSV/report writers, error handling, the
+//! deterministic thread pool, and a tiny randomized property-test
+//! harness (the `proptest` crate is unavailable offline).
 
+pub mod error;
+pub mod parallel;
 pub mod proptest;
 pub mod report;
 pub mod rng;

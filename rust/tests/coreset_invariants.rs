@@ -4,9 +4,11 @@
 use mctm_coreset::basis::Design;
 use mctm_coreset::coordinator::experiment::design_of;
 use mctm_coreset::coreset::hull::{dist_to_hull, select_hull_points};
+use mctm_coreset::coreset::leverage::{leverage_scores_ridged_with, sensitivity_scores};
 use mctm_coreset::coreset::{build_coreset, Method};
 use mctm_coreset::data::dgp::Dgp;
 use mctm_coreset::mctm::{nll_parts, ModelSpec, Params};
+use mctm_coreset::util::parallel::Pool;
 use mctm_coreset::util::rng::Rng;
 
 fn random_theta_lambda(spec: ModelSpec, seed: u64) -> (Vec<f64>, Vec<f64>) {
@@ -138,6 +140,38 @@ fn hull_selection_coverage_decreases() {
         c_many <= c_few + 1e-12,
         "coverage must improve: {c_many} vs {c_few}"
     );
+}
+
+/// The sampling probabilities feeding Algorithm 1 must not depend on
+/// scheduling: the whole sensitivity pipeline (basis build → Gram →
+/// Cholesky → scoring) is bit-reproducible run to run, and the leverage
+/// kernel is bit-identical between the serial reference and any worker
+/// count — at a realistic DGP scale that spans several row shards.
+#[test]
+fn sensitivity_pipeline_deterministic_across_threads() {
+    let mut rng = Rng::new(53);
+    let data = Dgp::NormalMixture.generate(5_000, &mut rng);
+    let design = design_of(&data, 6);
+
+    let s1 = sensitivity_scores(&design).unwrap();
+    let s2 = sensitivity_scores(&design).unwrap();
+    assert_eq!(s1.len(), s2.len());
+    for (a, b) in s1.iter().zip(&s2) {
+        assert_eq!(a.to_bits(), b.to_bits(), "sensitivity scores not reproducible");
+    }
+
+    let stacked = design.stacked();
+    let reference = leverage_scores_ridged_with(&stacked, 0.0, &Pool::new(1)).unwrap();
+    for t in [2usize, 4, 8] {
+        let got = leverage_scores_ridged_with(&stacked, 0.0, &Pool::new(t)).unwrap();
+        for (i, (a, b)) in reference.iter().zip(&got).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "leverage row {i} differs between 1 and {t} threads"
+            );
+        }
+    }
 }
 
 /// Theorem 2.4 (statistical form): at the FULL-data optimum-ish

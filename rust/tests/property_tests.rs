@@ -2,14 +2,28 @@
 //! `util::proptest` harness — the `proptest` crate is unavailable
 //! offline, see DESIGN.md §5).
 
-use mctm_coreset::basis::{Bernstein, Design};
+use mctm_coreset::basis::{Bernstein, Design, Scaler};
 use mctm_coreset::coreset::hull::{dist_to_hull, select_hull_points};
+use mctm_coreset::coreset::leverage::leverage_scores_ridged_with;
 use mctm_coreset::coreset::merge_reduce::{reduce, WeightedRows};
 use mctm_coreset::coreset::{build_coreset, Method};
 use mctm_coreset::linalg::{Cholesky, Mat};
 use mctm_coreset::mctm::{self, ModelSpec, Params};
+use mctm_coreset::util::parallel::{Pool, ROW_CHUNK};
 use mctm_coreset::util::proptest::{check, gen};
 use mctm_coreset::util::rng::Rng;
+
+fn bits_eq(a: &[f64], b: &[f64]) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("index {i}: {x:e} vs {y:e} differ bitwise"));
+        }
+    }
+    Ok(())
+}
 
 #[test]
 fn prop_bernstein_partition_of_unity() {
@@ -231,6 +245,109 @@ fn prop_merge_reduce_size_and_weights() {
             }
             if red.weights.iter().any(|&x| !(x > 0.0)) {
                 return Err("non-positive weight".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_parallel_leverage_bit_identical_and_reproducible() {
+    // the parallel leverage kernel must equal the serial reference
+    // (Pool::new(1)) bit for bit at any thread count, and repeated runs
+    // at the same thread count must reproduce exactly
+    check(
+        "leverage scores: parallel == serial, bitwise",
+        109,
+        4,
+        |rng| {
+            // span several ROW_CHUNK shards, with a ragged tail
+            let n = ROW_CHUNK * gen::size(rng, 1, 3) + gen::size(rng, 0, 500);
+            let d = gen::size(rng, 3, 10);
+            Mat::from_vec(n, d, gen::vec_normal(rng, n * d))
+        },
+        |x| {
+            let reference =
+                leverage_scores_ridged_with(x, 0.0, &Pool::new(1)).map_err(|e| e.to_string())?;
+            for t in [1usize, 2, 8] {
+                let got = leverage_scores_ridged_with(x, 0.0, &Pool::new(t))
+                    .map_err(|e| e.to_string())?;
+                bits_eq(&got, &reference).map_err(|e| format!("threads={t}: {e}"))?;
+                let again = leverage_scores_ridged_with(x, 0.0, &Pool::new(t))
+                    .map_err(|e| e.to_string())?;
+                bits_eq(&again, &got).map_err(|e| format!("rerun threads={t}: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_parallel_nll_parts_and_grad_bit_identical() {
+    // f1/f2/f3, the total NLL and the full gradient from the sharded
+    // kernels must be bit-identical to the serial reference at any
+    // thread count (weighted case included)
+    check(
+        "NLL parts + gradient: parallel == serial, bitwise",
+        110,
+        3,
+        |rng| {
+            let j = gen::size(rng, 2, 3);
+            let d = gen::size(rng, 4, 6);
+            let n = ROW_CHUNK * gen::size(rng, 1, 2) + gen::size(rng, 1, 300);
+            let data = Mat::from_vec(n, j, gen::vec_normal(rng, n * j));
+            let spec = ModelSpec::new(j, d);
+            let x = gen::vec_in(rng, spec.n_params(), -1.0, 1.0);
+            let w = gen::vec_in(rng, n, 0.1, 2.0);
+            (spec, data, x, w)
+        },
+        |(spec, data, x, w)| {
+            let design = Design::build(data, spec.d, 0.01);
+            let p = Params::new(*spec, x.clone());
+            let theta = p.theta();
+            let lam = p.lambda_block().to_vec();
+            let serial = Pool::new(1);
+            let ref_parts = mctm::nll_parts_with(&design, w, &theta, &lam, &serial);
+            let (ref_v, ref_g) = mctm::nll_grad_with(&design, w, &p, &serial);
+            for t in [2usize, 8] {
+                let pool = Pool::new(t);
+                let parts = mctm::nll_parts_with(&design, w, &theta, &lam, &pool);
+                bits_eq(
+                    &[parts.f1, parts.f2, parts.f3],
+                    &[ref_parts.f1, ref_parts.f2, ref_parts.f3],
+                )
+                .map_err(|e| format!("parts threads={t}: {e}"))?;
+                let (v, g) = mctm::nll_grad_with(&design, w, &p, &pool);
+                bits_eq(&[v], &[ref_v]).map_err(|e| format!("nll threads={t}: {e}"))?;
+                bits_eq(&g, &ref_g).map_err(|e| format!("grad threads={t}: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_parallel_basis_build_bit_identical() {
+    // row-sharded Bernstein design construction writes disjoint chunks;
+    // a/ad must match the serial build exactly at any thread count
+    check(
+        "basis build: parallel == serial, bitwise",
+        111,
+        4,
+        |rng| {
+            let n = ROW_CHUNK * gen::size(rng, 1, 2) + gen::size(rng, 0, 700);
+            let j = gen::size(rng, 1, 3);
+            let d = gen::size(rng, 2, 8);
+            (Mat::from_vec(n, j, gen::vec_normal(rng, n * j)), d)
+        },
+        |(data, d)| {
+            let scaler = Scaler::fit(data, 0.01);
+            let reference =
+                Design::build_with_scaler_on(data, *d, scaler.clone(), &Pool::new(1));
+            for t in [2usize, 8] {
+                let got = Design::build_with_scaler_on(data, *d, scaler.clone(), &Pool::new(t));
+                bits_eq(&got.a, &reference.a).map_err(|e| format!("a threads={t}: {e}"))?;
+                bits_eq(&got.ad, &reference.ad).map_err(|e| format!("ad threads={t}: {e}"))?;
             }
             Ok(())
         },
