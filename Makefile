@@ -4,7 +4,7 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: build test check fmt clippy bench-quick bench-perf artifacts
+.PHONY: build test check ci fmt clippy bench-quick bench-perf artifacts
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -20,6 +20,11 @@ clippy:
 
 # The tier-1 gate: formatting, lints as errors, full test suite.
 check: fmt clippy test
+
+# What .github/workflows/ci.yml runs (lib/bin clippy only — fmt and the
+# all-targets lint pass stay in `make check` for local use).
+ci: build test
+	$(CARGO) clippy --manifest-path $(MANIFEST) -- -D warnings
 
 # Hot-path microbench at the smallest scale (CI smoke): serial vs
 # parallel medians for basis build, leverage, gram, nll_grad.

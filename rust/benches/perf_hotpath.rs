@@ -1,7 +1,8 @@
 //! §Perf micro-benchmarks of every hot path, native AND XLA backends:
 //!   L3-a  leverage pipeline (basis build, Gram, scoring)
 //!   L3-b  NLL + gradient evaluation (the optimizer inner loop)
-//!   L3-c  convex-hull selection
+//!   L3-c  convex-hull selection + batched hull distances
+//!   L4    John-ellipsoid rounding scans (§4 extension)
 //!   L1/L2 AOT artifacts: tiled nll_grad, fused nll_eval, gram, leverage
 //! Each parallel-ported path is timed at thread counts {1, 2, 4, max}
 //! (serial-vs-parallel medians + scaling); `MCTM_THREADS` pins the max.
@@ -9,7 +10,8 @@
 
 use mctm_coreset::basis::Design;
 use mctm_coreset::benchsupport::{banner, results_dir, time_median, Scale};
-use mctm_coreset::coreset::hull::select_hull_points;
+use mctm_coreset::coreset::ellipsoid::ellipsoid_scores;
+use mctm_coreset::coreset::hull::{dist_to_hull_batch, select_hull_points};
 use mctm_coreset::coreset::leverage::mctm_leverage_scores;
 use mctm_coreset::data::dgp::Dgp;
 use mctm_coreset::linalg::{Cholesky, Mat};
@@ -184,20 +186,61 @@ fn bench_native(table: &mut Table, cfg: &str, data: &Mat, iters: usize, max_thre
         format!("{:.1} Mrow/s", n as f64 / t_score / 1e6),
     ]);
 
-    // hull selection on the derivative points (not parallel-ported yet)
+    // hull selection on the derivative points (L3-c): the support-
+    // direction prefilter and the greedy distance scans are row-parallel
     let dp = design.deriv_points();
-    let mut rng = Rng::new(7);
-    let t_hull = time_median(3.min(iters), || {
-        std::hint::black_box(select_hull_points(&dp, 20, &mut rng));
-    });
-    table.row(vec![
-        "L3 hull select k=20".into(),
-        cfg.into(),
-        "1".into(),
-        format!("{t_hull:.4}"),
-        "1.00x".into(),
-        format!("{:.2} Mpt/s", dp.rows as f64 / t_hull / 1e6),
-    ]);
+    let hull_iters = 3.min(iters).max(1);
+    bench_scaling(
+        table,
+        "L3 hull select k=20",
+        cfg,
+        hull_iters,
+        max_threads,
+        |s| format!("{:.2} Mpt/s", dp.rows as f64 / s / 1e6),
+        || {
+            // fresh RNG per call: every thread count times the IDENTICAL
+            // selection problem, so the speedup column is pure scaling
+            let mut rng = Rng::new(7);
+            std::hint::black_box(select_hull_points(&dp, 20, &mut rng));
+        },
+    );
+
+    // batched hull-distance queries against a fixed selected hull
+    // (strided query subset keeps the serial rows affordable)
+    let mut hull_rng = Rng::new(8);
+    let hull20 = select_hull_points(&dp, 20, &mut hull_rng);
+    let q_idx: Vec<usize> = (0..dp.rows).step_by(8).collect();
+    let queries = dp.select_rows(&q_idx);
+    bench_scaling(
+        table,
+        "L3 dist_to_hull_batch",
+        cfg,
+        hull_iters,
+        max_threads,
+        |s| format!("{:.2} Mq/s", queries.rows as f64 / s / 1e6),
+        || {
+            std::hint::black_box(dist_to_hull_batch(
+                &dp,
+                &hull20,
+                &queries,
+                &parallel::Pool::current(),
+            ));
+        },
+    );
+
+    // John-ellipsoid rounding (L4): per-iteration moment rebuild +
+    // violator scan are row-parallel
+    bench_scaling(
+        table,
+        "L4 ellipsoid scores",
+        cfg,
+        hull_iters,
+        max_threads,
+        |s| format!("{:.2} Mrow/s", n as f64 / s / 1e6),
+        || {
+            std::hint::black_box(ellipsoid_scores(data, 0.05));
+        },
+    );
     parallel::set_threads(max_threads);
 }
 

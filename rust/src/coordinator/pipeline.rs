@@ -99,6 +99,18 @@ impl StreamingPipeline {
         let k_buffer = self.buffer_factor * self.k;
         let (method, d, base_seed) = (self.method, self.d, self.seed);
 
+        // the consumers ARE the parallelism when fanned out — but a
+        // single consumer may use the full worker pool inside its leaf
+        // reduces (basis, leverage, hull selection). Every kernel is
+        // bit-identical for any pool width, so this cannot change the
+        // coreset — only wall-clock (pinned by
+        // `streaming_hull_deterministic_across_consumers`).
+        let leaf_pool = if consumers == 1 {
+            parallel::Pool::current()
+        } else {
+            parallel::Pool::new(1)
+        };
+
         let mut n_shards = 0usize;
         let mut peak_reorder = 0usize;
         let shard_rx = Mutex::new(shard_rx);
@@ -133,9 +145,6 @@ impl StreamingPipeline {
                             }
                             let n_raw = shard.rows;
                             let mut rng = Rng::new(shard_seed(base_seed, seq));
-                            // the consumers ARE the parallelism — run the
-                            // kernels inside the leaf reduce serially so
-                            // threads aren't nested/oversubscribed
                             let leaf = reduce_with(
                                 &WeightedRows::new(shard, vec![1.0; n_raw]),
                                 method,
@@ -143,7 +152,7 @@ impl StreamingPipeline {
                                 d,
                                 0.01,
                                 &mut rng,
-                                &crate::util::parallel::Pool::new(1),
+                                &leaf_pool,
                             );
                             if leaf_tx.send((seq, leaf, n_raw)).is_err() {
                                 break;

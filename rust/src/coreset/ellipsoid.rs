@@ -10,8 +10,17 @@
 //! q_iᵀ M⁻¹ q_i — an upper bound on the directional extremeness that
 //! replaces the Gram-based leverage when the level sets are merely
 //! log-concave rather than elliptical-Gaussian.
+//!
+//! Parallelism (ISSUE 2): the two O(n·d²) rounding scans per Khachiyan
+//! iteration — the weighted second-moment rebuild and the
+//! most-violating-point search — are row-sharded on the deterministic
+//! pool. Partial moments merge by fixed-shape tree reduction and the
+//! violator argmax merges with strict `>` (earlier rows win ties), so
+//! the whole rounding loop is **bit-identical for any thread count**
+//! (pinned by `tests/hull_properties.rs`).
 
 use crate::linalg::{Cholesky, Mat};
+use crate::util::parallel::{add_assign, tree_reduce, Pool, ROW_CHUNK};
 
 /// Result of the MVEE computation.
 pub struct JohnEllipsoid {
@@ -27,6 +36,11 @@ pub struct JohnEllipsoid {
 /// maximize log det Σ u_i q_i q_iᵀ over the simplex. Converges when
 /// max_i q_iᵀ M⁻¹ q_i ≤ (1+ε)(d+1).
 pub fn john_ellipsoid(x: &Mat, eps: f64, max_iters: usize) -> JohnEllipsoid {
+    john_ellipsoid_with(x, eps, max_iters, &Pool::current())
+}
+
+/// [`john_ellipsoid`] on an explicit pool.
+pub fn john_ellipsoid_with(x: &Mat, eps: f64, max_iters: usize, pool: &Pool) -> JohnEllipsoid {
     let (n, d) = (x.rows, x.cols);
     assert!(n > d, "need more points than dimensions");
     let dl = d + 1; // lifted dimension
@@ -37,7 +51,7 @@ pub fn john_ellipsoid(x: &Mat, eps: f64, max_iters: usize) -> JohnEllipsoid {
         q.row_mut(i)[d] = 1.0;
     }
     let mut iters = 0;
-    let mut m = weighted_moment(&q, &u);
+    let mut m = weighted_moment_with(&q, &u, pool);
     for it in 0..max_iters {
         iters = it + 1;
         // M with a tiny stabilizer, factor once per iteration
@@ -50,18 +64,28 @@ pub fn john_ellipsoid(x: &Mat, eps: f64, max_iters: usize) -> JohnEllipsoid {
             Ok(c) => c,
             Err(_) => break,
         };
-        // find the most violating point
-        let mut kappa_max = f64::NEG_INFINITY;
-        let mut arg = 0usize;
-        let mut scratch = Vec::new();
-        for i in 0..n {
-            let k = ch.quad_form_inv(q.row(i), &mut scratch);
-            if k > kappa_max {
-                kappa_max = k;
-                arg = i;
-            }
-        }
-        if kappa_max <= (1.0 + eps) * dl as f64 {
+        // most violating point: row-sharded argmax with per-worker
+        // scratch, merged in fixed tree order (earlier rows win ties)
+        let (kappa_max, arg) = {
+            let ch = &ch;
+            let q_ref = &q;
+            tree_reduce(
+                pool.map_chunks(n, ROW_CHUNK, |_, range| {
+                    let mut scratch = Vec::new();
+                    let mut best = (f64::NEG_INFINITY, usize::MAX);
+                    for i in range {
+                        let kq = ch.quad_form_inv(q_ref.row(i), &mut scratch);
+                        if kq > best.0 {
+                            best = (kq, i);
+                        }
+                    }
+                    best
+                }),
+                |a, b| if b.0 > a.0 { b } else { a },
+            )
+            .unwrap_or((f64::NEG_INFINITY, usize::MAX))
+        };
+        if arg == usize::MAX || kappa_max <= (1.0 + eps) * dl as f64 {
             break;
         }
         // Khachiyan step toward the violator
@@ -70,27 +94,40 @@ pub fn john_ellipsoid(x: &Mat, eps: f64, max_iters: usize) -> JohnEllipsoid {
             *ui *= 1.0 - step;
         }
         u[arg] += step;
-        m = weighted_moment(&q, &u);
+        m = weighted_moment_with(&q, &u, pool);
     }
     JohnEllipsoid { u, m, iters }
 }
 
-fn weighted_moment(q: &Mat, u: &[f64]) -> Mat {
+/// Row-sharded M = Σ u_i q_i q_iᵀ: per-chunk upper-triangle partials in
+/// fixed row order, merged by tree reduction — summation order depends
+/// only on n, never on the thread count.
+fn weighted_moment_with(q: &Mat, u: &[f64], pool: &Pool) -> Mat {
     let dl = q.cols;
-    let mut m = Mat::zeros(dl, dl);
-    for i in 0..q.rows {
-        let w = u[i];
-        if w == 0.0 {
-            continue;
-        }
-        let row = q.row(i);
-        for a in 0..dl {
-            let ra = w * row[a];
-            for b in a..dl {
-                *m.at_mut(a, b) += ra * row[b];
+    let partials = pool.map_chunks(q.rows, ROW_CHUNK, |_, range| {
+        let mut acc = vec![0.0f64; dl * dl];
+        for i in range {
+            let w = u[i];
+            if w == 0.0 {
+                continue;
+            }
+            let row = q.row(i);
+            for a in 0..dl {
+                let ra = w * row[a];
+                let mrow = &mut acc[a * dl..(a + 1) * dl];
+                for b in a..dl {
+                    mrow[b] += ra * row[b];
+                }
             }
         }
-    }
+        acc
+    });
+    let data = tree_reduce(partials, |mut a, b| {
+        add_assign(&mut a, &b);
+        a
+    })
+    .unwrap_or_else(|| vec![0.0; dl * dl]);
+    let mut m = Mat::from_vec(dl, dl, data);
     for a in 0..dl {
         for b in (a + 1)..dl {
             let v = m.at(a, b);
@@ -105,8 +142,15 @@ fn weighted_moment(q: &Mat, u: &[f64]) -> Mat {
 /// support points is ≈ d+1 (John's theorem), mirroring the
 /// leverage-plus-uniform shape of Algorithm 1.
 pub fn ellipsoid_scores(x: &Mat, eps: f64) -> Vec<f64> {
+    ellipsoid_scores_with(x, eps, &Pool::current())
+}
+
+/// [`ellipsoid_scores`] on an explicit pool: the final scoring pass
+/// writes disjoint row chunks with per-worker scratch, sharing the one
+/// factorization — same disjoint-write pattern as the leverage kernel.
+pub fn ellipsoid_scores_with(x: &Mat, eps: f64, pool: &Pool) -> Vec<f64> {
     let n = x.rows;
-    let je = john_ellipsoid(x, eps, 200);
+    let je = john_ellipsoid_with(x, eps, 200, pool);
     let dl = x.cols + 1;
     let mut ms = je.m.clone();
     let stab = 1e-12 * ms.trace().max(1e-300) / dl as f64;
@@ -117,13 +161,21 @@ pub fn ellipsoid_scores(x: &Mat, eps: f64) -> Vec<f64> {
         Ok(c) => c,
         Err(_) => return vec![1.0; n],
     };
-    let mut scratch = Vec::new();
-    let mut out = Vec::with_capacity(n);
-    for i in 0..n {
-        let mut q = x.row(i).to_vec();
-        q.push(1.0);
-        let k = ch.quad_form_inv(&q, &mut scratch);
-        out.push(k / dl as f64 + 1.0 / n as f64);
+    let mut out = vec![0.0; n];
+    {
+        let ch = &ch;
+        let items: Vec<&mut [f64]> = out.chunks_mut(ROW_CHUNK).collect();
+        pool.for_items(items, |ci, chunk| {
+            let lo = ci * ROW_CHUNK;
+            let mut scratch = Vec::new();
+            let mut qb = vec![0.0; dl];
+            for (off, o) in chunk.iter_mut().enumerate() {
+                qb[..dl - 1].copy_from_slice(x.row(lo + off));
+                qb[dl - 1] = 1.0;
+                let kq = ch.quad_form_inv(&qb, &mut scratch);
+                *o = kq / dl as f64 + 1.0 / n as f64;
+            }
+        });
     }
     out
 }

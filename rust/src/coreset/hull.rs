@@ -20,8 +20,18 @@
 //! points (extremal in R random directions) — only possible hull
 //! vertices survive, making selection O(R·n) instead of O(k₂·n·M·|S|).
 //! This is the η-kernel style mildness assumption discussed in §4.
+//!
+//! Parallelism (ISSUE 2 / ROADMAP L3-c): both hot scans run on the
+//! deterministic worker pool of `util/parallel.rs` — the support-
+//! direction pass is row-sharded with a fixed-shape tree-reduced
+//! per-direction argmax, and the greedy selection's distance scans are
+//! chunked over candidates with a tree-reduced argmax whose ties break
+//! towards the lowest candidate position. Chunk grids depend only on
+//! problem sizes, so results are **bit-identical for any thread count**
+//! (pinned by `tests/hull_properties.rs`).
 
 use crate::linalg::Mat;
+use crate::util::parallel::{tree_reduce, Pool, ROW_CHUNK};
 use crate::util::rng::Rng;
 
 /// Frank–Wolfe iterations for a hull-distance query (the paper's
@@ -29,13 +39,39 @@ use crate::util::rng::Rng;
 /// *selection* where only the argmax matters).
 const FW_ITERS: usize = 64;
 
+/// Candidates per selection-scan chunk. Each candidate costs a full
+/// Frank–Wolfe projection (|S|·M·d flops), so chunks are much smaller
+/// than `ROW_CHUNK` to fan out even the ~260-candidate prefiltered case.
+const SCAN_CHUNK: usize = 32;
+
+/// Reusable Frank–Wolfe projection state: both buffers are fully
+/// overwritten per query, so reuse across a batch changes no bits —
+/// it only removes the two allocations from the inner loop.
+struct FwScratch {
+    t: Vec<f64>,
+    v: Vec<f64>,
+}
+
+impl FwScratch {
+    fn new(d: usize) -> FwScratch {
+        FwScratch { t: vec![0.0; d], v: vec![0.0; d] }
+    }
+}
+
 /// Squared distance of `q` to conv of the rows of `points` restricted to
 /// `hull_idx`, via the Algorithm-2 projection loop.
 pub fn dist_to_hull(points: &Mat, hull_idx: &[usize], q: &[f64]) -> f64 {
+    let mut ws = FwScratch::new(points.cols);
+    dist_to_hull_into(points, hull_idx, q, &mut ws)
+}
+
+/// [`dist_to_hull`] with caller-owned scratch (the batch/selection inner
+/// loop) — identical arithmetic, no per-query allocation.
+fn dist_to_hull_into(points: &Mat, hull_idx: &[usize], q: &[f64], ws: &mut FwScratch) -> f64 {
     debug_assert!(!hull_idx.is_empty());
     let d = points.cols;
     // t₀ ← closest hull point to q
-    let mut t = {
+    {
         let mut best = f64::INFINITY;
         let mut best_row = hull_idx[0];
         for &i in hull_idx {
@@ -45,9 +81,10 @@ pub fn dist_to_hull(points: &Mat, hull_idx: &[usize], q: &[f64]) -> f64 {
                 best_row = i;
             }
         }
-        points.row(best_row).to_vec()
-    };
-    let mut v = vec![0.0; d];
+        ws.t.copy_from_slice(points.row(best_row));
+    }
+    let t = &mut ws.t;
+    let v = &mut ws.v;
     for _ in 0..FW_ITERS {
         // v ← q − t; p ← extremal hull point in direction v
         for k in 0..d {
@@ -113,11 +150,50 @@ fn dot(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
+/// Batched hull-distance queries: squared distance of every row of
+/// `queries` to conv(points[hull_idx]). Rows are chunked across the
+/// pool's workers (fixed `ROW_CHUNK` grid, disjoint output chunks) and
+/// each worker amortizes one Frank–Wolfe scratch across its queries, so
+/// the result is bit-identical to per-query [`dist_to_hull`] calls at
+/// any thread count.
+pub fn dist_to_hull_batch(
+    points: &Mat,
+    hull_idx: &[usize],
+    queries: &Mat,
+    pool: &Pool,
+) -> Vec<f64> {
+    assert!(!hull_idx.is_empty(), "hull must be non-empty");
+    assert_eq!(points.cols, queries.cols, "query dimension mismatch");
+    let mut out = vec![0.0; queries.rows];
+    let items: Vec<&mut [f64]> = out.chunks_mut(ROW_CHUNK).collect();
+    pool.for_items(items, |ci, chunk| {
+        let lo = ci * ROW_CHUNK;
+        let mut ws = FwScratch::new(points.cols);
+        for (off, o) in chunk.iter_mut().enumerate() {
+            *o = dist_to_hull_into(points, hull_idx, queries.row(lo + off), &mut ws);
+        }
+    });
+    out
+}
+
 /// Directional support-point prefilter: the extremal row in each of
 /// `n_dirs` random directions (plus ± coordinate directions). Every
 /// returned index is a vertex of conv(points); for "mild" data this
 /// covers the hull (DESIGN.md §2, paper §4 "mildness").
 pub fn support_candidates(points: &Mat, n_dirs: usize, rng: &mut Rng) -> Vec<usize> {
+    support_candidates_with(points, n_dirs, rng, &Pool::current())
+}
+
+/// [`support_candidates`] on an explicit pool: the point stream is
+/// row-sharded; each shard keeps a private per-direction argmax and the
+/// partials merge in fixed tree order with strict `>` (earlier rows win
+/// ties), reproducing the serial scan bit for bit.
+pub fn support_candidates_with(
+    points: &Mat,
+    n_dirs: usize,
+    rng: &mut Rng,
+    pool: &Pool,
+) -> Vec<usize> {
     let d = points.cols;
     let mut dirs: Vec<Vec<f64>> = Vec::with_capacity(n_dirs + 2 * d);
     for k in 0..d {
@@ -146,26 +222,42 @@ pub fn support_candidates(points: &Mat, n_dirs: usize, rng: &mut Rng) -> Vec<usi
             dirs_t[c * ndirs + k] = dir[c];
         }
     }
-    let mut best_val = vec![f64::NEG_INFINITY; ndirs];
-    let mut best_row = vec![0usize; ndirs];
-    let mut dp = vec![0.0f64; ndirs];
-    for i in 0..points.rows {
-        let row = points.row(i);
-        dp.iter_mut().for_each(|x| *x = 0.0);
-        for c in 0..d {
-            let rc = row[c];
-            let dt = &dirs_t[c * ndirs..(c + 1) * ndirs];
+    let dirs_t = &dirs_t;
+    let partials = pool.map_chunks(points.rows, ROW_CHUNK, |_, range| {
+        let mut best_val = vec![f64::NEG_INFINITY; ndirs];
+        let mut best_row = vec![0usize; ndirs];
+        let mut dp = vec![0.0f64; ndirs];
+        for i in range {
+            let row = points.row(i);
+            dp.iter_mut().for_each(|x| *x = 0.0);
+            for c in 0..d {
+                let rc = row[c];
+                let dt = &dirs_t[c * ndirs..(c + 1) * ndirs];
+                for k in 0..ndirs {
+                    dp[k] += rc * dt[k];
+                }
+            }
             for k in 0..ndirs {
-                dp[k] += rc * dt[k];
+                if dp[k] > best_val[k] {
+                    best_val[k] = dp[k];
+                    best_row[k] = i;
+                }
             }
         }
+        (best_val, best_row)
+    });
+    let best_row = match tree_reduce(partials, |mut a, b| {
         for k in 0..ndirs {
-            if dp[k] > best_val[k] {
-                best_val[k] = dp[k];
-                best_row[k] = i;
+            if b.0[k] > a.0[k] {
+                a.0[k] = b.0[k];
+                a.1[k] = b.1[k];
             }
         }
-    }
+        a
+    }) {
+        Some((_, rows)) => rows,
+        None => return Vec::new(),
+    };
     let mut seen = std::collections::HashSet::new();
     let mut out = Vec::new();
     for &row in &best_row {
@@ -179,6 +271,28 @@ pub fn support_candidates(points: &Mat, n_dirs: usize, rng: &mut Rng) -> Vec<usi
 /// Greedy sparse hull selection: returns up to `k` row indices of
 /// `points` approximating its convex hull (Algorithm 2 outer loop).
 pub fn select_hull_points(points: &Mat, k: usize, rng: &mut Rng) -> Vec<usize> {
+    select_hull_points_with(points, k, rng, &Pool::current())
+}
+
+/// [`select_hull_points`] on an explicit pool.
+///
+/// PARALLEL LAZY GREEDY (see EXPERIMENTS.md §Perf L3-c): dist_to_hull
+/// is non-increasing as the hull grows, so cached distances are upper
+/// bounds. Candidates are split into fixed `SCAN_CHUNK` chunks; each
+/// chunk walks its candidates in position order, skipping any whose
+/// cached bound cannot beat the chunk's current best and refreshing the
+/// rest against the CURRENT hull — the classic lazy-evaluation pruning,
+/// now per chunk so the chunks are independent work items. Chunk
+/// results merge through a fixed-shape tree-reduced argmax with strict
+/// `>` (ties break to the lowest candidate position), so the selection
+/// is **bit-identical for any thread count** — the RNG is consumed only
+/// by the prefilter and the seed choice, identically on every path.
+pub fn select_hull_points_with(
+    points: &Mat,
+    k: usize,
+    rng: &mut Rng,
+    pool: &Pool,
+) -> Vec<usize> {
     let n = points.rows;
     if n == 0 || k == 0 {
         return Vec::new();
@@ -189,75 +303,62 @@ pub fn select_hull_points(points: &Mat, k: usize, rng: &mut Rng) -> Vec<usize> {
 
     // prefilter candidates for large inputs
     let candidates: Vec<usize> = if n > 4096 {
-        support_candidates(points, 256, rng)
+        support_candidates_with(points, 256, rng, pool)
     } else {
         (0..n).collect()
     };
 
-    // initialization per Algorithm 2: random a₀; a₁ farthest from a₀;
-    // a₂ farthest from the segment (≈ hull of {a₀,a₁}).
+    // initialization per Algorithm 2: random a₀; every later point is
+    // the farthest from the current approximate hull.
     let a0 = candidates[rng.usize(candidates.len())];
     let mut hull = vec![a0];
 
-    // LAZY GREEDY (see EXPERIMENTS.md §Perf L3-c): dist_to_hull(q, S)
-    // is non-increasing as S grows, so cached distances are upper
-    // bounds. Keep a max-heap of (cached dist, candidate); pop, refresh
-    // against the CURRENT hull, and accept only if the refreshed value
-    // still dominates the next-best upper bound — the classic lazy
-    // evaluation trick, ~8× fewer projection calls than re-scoring
-    // every candidate per round.
-    let mut heap: std::collections::BinaryHeap<HeapItem> = candidates
-        .iter()
-        .filter(|&&c| c != a0)
-        .map(|&c| HeapItem {
-            dist: dist_to_hull(points, &hull, points.row(c)),
-            idx: c,
-        })
-        .collect();
+    // cached upper bounds on dist_to_hull, by candidate position
+    let mut ub = vec![f64::INFINITY; candidates.len()];
+    let n_chunks = candidates.len().div_ceil(SCAN_CHUNK);
 
     let target = k.min(candidates.len());
     while hull.len() < target {
-        let mut accepted = None;
-        while let Some(top) = heap.pop() {
-            let fresh = dist_to_hull(points, &hull, points.row(top.idx));
-            let next_bound = heap.peek().map(|h| h.dist).unwrap_or(f64::NEG_INFINITY);
-            if fresh >= next_bound - 1e-18 {
-                accepted = Some((top.idx, fresh));
-                break;
-            }
-            heap.push(HeapItem { dist: fresh, idx: top.idx });
+        let mut round_best: Vec<(f64, usize)> =
+            vec![(f64::NEG_INFINITY, usize::MAX); n_chunks];
+        {
+            let hull_ref = &hull;
+            let cand = &candidates;
+            let items: Vec<(&mut [f64], &mut (f64, usize))> = ub
+                .chunks_mut(SCAN_CHUNK)
+                .zip(round_best.iter_mut())
+                .collect();
+            pool.for_items(items, |ci, (ub_chunk, out)| {
+                let lo = ci * SCAN_CHUNK;
+                let mut ws = FwScratch::new(points.cols);
+                let mut best = (f64::NEG_INFINITY, usize::MAX);
+                for (off, ub_i) in ub_chunk.iter_mut().enumerate() {
+                    if *ub_i <= best.0 {
+                        continue; // cached bound cannot beat the chunk best
+                    }
+                    let pos = lo + off;
+                    let fresh =
+                        dist_to_hull_into(points, hull_ref, points.row(cand[pos]), &mut ws);
+                    *ub_i = fresh;
+                    if fresh > best.0 {
+                        best = (fresh, pos);
+                    }
+                }
+                *out = best;
+            });
         }
-        match accepted {
-            Some((idx, dist)) if dist > 1e-20 => hull.push(idx),
-            _ => break, // hull fully captured (or no candidates left)
+        let (dist, pos) = tree_reduce(round_best, |a, b| if b.0 > a.0 { b } else { a })
+            .unwrap_or((f64::NEG_INFINITY, usize::MAX));
+        if pos == usize::MAX || dist <= 1e-20 {
+            break; // hull fully captured (or no candidates left)
         }
+        hull.push(candidates[pos]);
+        // −∞ (not 0): the skip check `ub ≤ chunk best` prunes the
+        // selected candidate unconditionally, even while the chunk best
+        // is still 0 — saves one full re-projection per chunk per round
+        ub[pos] = f64::NEG_INFINITY;
     }
     hull
-}
-
-/// Max-heap item for the lazy-greedy selection.
-struct HeapItem {
-    dist: f64,
-    idx: usize,
-}
-
-impl PartialEq for HeapItem {
-    fn eq(&self, other: &Self) -> bool {
-        self.dist == other.dist
-    }
-}
-impl Eq for HeapItem {}
-impl PartialOrd for HeapItem {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for HeapItem {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.dist
-            .partial_cmp(&other.dist)
-            .unwrap_or(std::cmp::Ordering::Equal)
-    }
 }
 
 /// Exact 2-D convex hull (Andrew's monotone chain) — used in tests as an

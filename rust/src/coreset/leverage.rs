@@ -75,7 +75,12 @@ pub fn leverage_scores_ridged_with(
 /// The standard heuristic ridge for "ridge leverage scores" baselines:
 /// γ = tr(XᵀX)/d · ρ with ρ = 0.01.
 pub fn default_ridge(x: &Mat) -> f64 {
-    let g = x.gram();
+    default_ridge_with(x, &Pool::current())
+}
+
+/// [`default_ridge`] on an explicit pool (the Gram pass dominates).
+pub fn default_ridge_with(x: &Mat, pool: &Pool) -> f64 {
+    let g = x.gram_with(pool);
     0.01 * g.trace() / g.rows as f64
 }
 

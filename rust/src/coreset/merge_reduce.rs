@@ -102,7 +102,7 @@ pub fn reduce_with(
     let mut hull_set: std::collections::HashSet<usize> = Default::default();
     if hull_budget > 0 {
         let dp = design.deriv_points();
-        for p in crate::coreset::hull::select_hull_points(&dp, hull_budget, rng) {
+        for p in crate::coreset::hull::select_hull_points_with(&dp, hull_budget, rng, pool) {
             hull_set.insert(p / design.j);
         }
     }

@@ -17,7 +17,7 @@ pub mod leverage;
 pub mod merge_reduce;
 pub mod samplers;
 
-pub use samplers::{build_coreset, Coreset, Method};
+pub use samplers::{build_coreset, build_coreset_with, Coreset, Method};
 
 #[cfg(test)]
 mod tests {

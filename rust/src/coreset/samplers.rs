@@ -2,11 +2,13 @@
 //! §3): the hybrid ℓ₂-hull construction, plain ℓ₂ leverage sampling,
 //! uniform subsampling, ridge leverage scores and root leverage scores.
 
-use super::hull::select_hull_points;
+use super::hull::select_hull_points_with;
 use super::leverage::{
-    default_ridge, leverage_scores_ridged, mctm_leverage_scores, sensitivity_scores,
+    default_ridge_with, leverage_scores_ridged_with, mctm_leverage_scores_with,
+    sensitivity_scores_with,
 };
 use crate::basis::Design;
+use crate::util::parallel::Pool;
 use crate::util::rng::{AliasTable, Rng};
 
 /// Fraction of the budget spent on the sensitivity sample in the hybrid
@@ -97,6 +99,21 @@ fn importance_sample(scores: &[f64], k: usize, rng: &mut Rng, method: Method) ->
 /// (degenerate design) — mirroring the robustness behaviour of the
 /// reference implementation.
 pub fn build_coreset(design: &Design, method: Method, k: usize, rng: &mut Rng) -> Coreset {
+    build_coreset_with(design, method, k, rng, &Pool::current())
+}
+
+/// [`build_coreset`] on an explicit pool: every score/hull kernel inside
+/// (leverage, Gram, hull selection) runs on `pool`, and all of them are
+/// bit-identical for any thread count — so the sampled coreset depends
+/// only on `rng`, never on the pool width. Streaming consumers pass
+/// `Pool::new(1)` to avoid nesting workers.
+pub fn build_coreset_with(
+    design: &Design,
+    method: Method,
+    k: usize,
+    rng: &mut Rng,
+    pool: &Pool,
+) -> Coreset {
     let n = design.n;
     assert!(k >= 1);
     if k >= n {
@@ -119,37 +136,37 @@ pub fn build_coreset(design: &Design, method: Method, k: usize, rng: &mut Rng) -
                 method,
             }
         }
-        Method::L2Only => match sensitivity_scores(design) {
+        Method::L2Only => match sensitivity_scores_with(design, pool) {
             Ok(s) => importance_sample(&s, k, rng, method),
-            Err(_) => build_coreset(design, Method::Uniform, k, rng),
+            Err(_) => build_coreset_with(design, Method::Uniform, k, rng, pool),
         },
         Method::RidgeLss => {
             let stacked = design.stacked();
-            let gamma = default_ridge(&stacked);
-            match leverage_scores_ridged(&stacked, gamma) {
+            let gamma = default_ridge_with(&stacked, pool);
+            match leverage_scores_ridged_with(&stacked, gamma, pool) {
                 Ok(mut u) => {
                     let unif = 1.0 / n as f64;
                     u.iter_mut().for_each(|x| *x += unif);
                     importance_sample(&u, k, rng, method)
                 }
-                Err(_) => build_coreset(design, Method::Uniform, k, rng),
+                Err(_) => build_coreset_with(design, Method::Uniform, k, rng, pool),
             }
         }
-        Method::RootL2 => match mctm_leverage_scores(design) {
+        Method::RootL2 => match mctm_leverage_scores_with(design, pool) {
             Ok(u) => {
                 let s: Vec<f64> =
                     u.iter().map(|&x| x.max(0.0).sqrt() + 1.0 / n as f64).collect();
                 importance_sample(&s, k, rng, method)
             }
-            Err(_) => build_coreset(design, Method::Uniform, k, rng),
+            Err(_) => build_coreset_with(design, Method::Uniform, k, rng, pool),
         },
         Method::L2Hull => {
             let k1 = ((HULL_SPLIT * k as f64).floor() as usize).clamp(1, k);
             let k2 = k - k1;
-            let mut cs = match sensitivity_scores(design) {
+            let mut cs = match sensitivity_scores_with(design, pool) {
                 Ok(s) => importance_sample(&s, k1, rng, method),
                 Err(_) => {
-                    let mut u = build_coreset(design, Method::Uniform, k1, rng);
+                    let mut u = build_coreset_with(design, Method::Uniform, k1, rng, pool);
                     u.method = method;
                     u
                 }
@@ -158,7 +175,7 @@ pub fn build_coreset(design: &Design, method: Method, k: usize, rng: &mut Rng) -
                 // hull over derivative points {a'_ij}: map point index
                 // (i·J + j) back to observation index i
                 let dp = design.deriv_points();
-                let hull_pts = select_hull_points(&dp, k2, rng);
+                let hull_pts = select_hull_points_with(&dp, k2, rng, pool);
                 let mut seen: std::collections::HashSet<usize> =
                     cs.indices.iter().cloned().collect();
                 for p in hull_pts {

@@ -1,0 +1,216 @@
+//! Property tests for the parallel deterministic geometry layer
+//! (ISSUE 2 tentpole): Frank–Wolfe hull distances, greedy hull
+//! selection, and the John-ellipsoid rounding scans.
+//!
+//! The bit-identity tests are the acceptance pins: `select_hull_points`
+//! and the ellipsoid rounding must produce identical output for any
+//! thread count (here {1, 2, 8}), because the sampling probabilities
+//! and hull augmentation feeding Algorithm 1 must not depend on the
+//! machine's core count.
+
+use mctm_coreset::coreset::ellipsoid::{ellipsoid_scores_with, john_ellipsoid_with};
+use mctm_coreset::coreset::hull::{
+    dist_to_hull, dist_to_hull_batch, select_hull_points, select_hull_points_with,
+};
+use mctm_coreset::linalg::Mat;
+use mctm_coreset::util::parallel::Pool;
+use mctm_coreset::util::proptest::{check, gen};
+use mctm_coreset::util::rng::Rng;
+
+fn normal_cloud(n: usize, d: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_vec(n, d, (0..n * d).map(|_| rng.normal()).collect())
+}
+
+/// Convex combinations of hull members lie inside conv(hull), so their
+/// hull distance must be ~zero. Frank–Wolfe is an O(1/M)-approximate
+/// projection (M = 64 iterations), so the tolerance is loose, not 1e-12.
+#[test]
+fn prop_dist_near_zero_inside_hull() {
+    check(
+        "convex combinations of hull points have ~zero distance",
+        201,
+        30,
+        |rng| {
+            let n = gen::size(rng, 8, 80);
+            let d = gen::size(rng, 2, 4);
+            let pts = Mat::from_vec(n, d, gen::vec_normal(rng, n * d));
+            (pts, rng.next_u64())
+        },
+        |(pts, seed)| {
+            let mut rng = Rng::new(*seed);
+            let hull = select_hull_points(pts, 8, &mut rng);
+            for _ in 0..5 {
+                let mut wsum = 0.0;
+                let mut q = vec![0.0; pts.cols];
+                for &h in &hull {
+                    let w = rng.f64() + 1e-3;
+                    wsum += w;
+                    for (qk, xk) in q.iter_mut().zip(pts.row(h)) {
+                        *qk += w * xk;
+                    }
+                }
+                q.iter_mut().for_each(|x| *x /= wsum);
+                let dist = dist_to_hull(pts, &hull, &q);
+                if dist > 1e-2 {
+                    return Err(format!("interior point at squared distance {dist}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// dist_to_hull is monotone non-increasing as hull points are added —
+/// the invariant the lazy-greedy upper-bound cache in
+/// `select_hull_points` relies on. Checked over nested prefixes of one
+/// greedy selection, with slack for the finite Frank–Wolfe budget.
+#[test]
+fn prop_dist_monotone_as_hull_grows() {
+    check(
+        "dist_to_hull non-increasing in the hull",
+        202,
+        30,
+        |rng| {
+            let n = gen::size(rng, 10, 100);
+            let d = gen::size(rng, 2, 5);
+            (Mat::from_vec(n, d, gen::vec_normal(rng, n * d)), rng.next_u64())
+        },
+        |(pts, seed)| {
+            let mut rng = Rng::new(*seed);
+            let hull = select_hull_points(pts, 10, &mut rng);
+            for probe in 0..pts.rows.min(20) {
+                let q = pts.row(probe);
+                let mut prev = f64::INFINITY;
+                for m in 1..=hull.len() {
+                    let cur = dist_to_hull(pts, &hull[..m], q);
+                    if cur > prev * 1.05 + 1e-6 {
+                        return Err(format!(
+                            "probe {probe}, |S|={m}: {cur} > previous {prev}"
+                        ));
+                    }
+                    prev = cur;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The hull distance is a function of the point SET: permuting the rows
+/// (and remapping the hull indices) must not change it.
+#[test]
+fn prop_dist_invariant_under_row_permutation() {
+    check(
+        "hull distance invariant under row permutation",
+        203,
+        40,
+        |rng| {
+            let n = gen::size(rng, 6, 60);
+            let d = gen::size(rng, 2, 5);
+            (Mat::from_vec(n, d, gen::vec_normal(rng, n * d)), rng.next_u64())
+        },
+        |(pts, seed)| {
+            let mut rng = Rng::new(*seed);
+            let hull = select_hull_points(pts, 6, &mut rng);
+            let mut perm: Vec<usize> = (0..pts.rows).collect();
+            rng.shuffle(&mut perm);
+            let ppts = pts.select_rows(&perm);
+            // position of original row r in the permuted matrix
+            let mut pos = vec![0usize; pts.rows];
+            for (new_i, &old_i) in perm.iter().enumerate() {
+                pos[old_i] = new_i;
+            }
+            let phull: Vec<usize> = hull.iter().map(|&h| pos[h]).collect();
+            for probe in 0..pts.rows.min(12) {
+                let a = dist_to_hull(pts, &hull, pts.row(probe));
+                let b = dist_to_hull(&ppts, &phull, ppts.row(pos[probe]));
+                if (a - b).abs() > 1e-9 * (1.0 + a.abs()) {
+                    return Err(format!("probe {probe}: {a} vs permuted {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// ACCEPTANCE PIN: hull selection is bit-identical for threads {1,2,8},
+/// on both the all-candidates path (n ≤ 4096) and the
+/// support-prefiltered path (n > 4096) with multiple greedy rounds.
+#[test]
+fn select_hull_points_bit_identical_across_threads() {
+    for (n, d, k, seed) in [(500usize, 3usize, 12usize, 11u64), (6_000, 4, 16, 13)] {
+        let pts = normal_cloud(n, d, seed);
+        let reference =
+            select_hull_points_with(&pts, k, &mut Rng::new(seed ^ 0xA5), &Pool::new(1));
+        assert!(!reference.is_empty(), "n={n}: empty selection");
+        for t in [2usize, 8] {
+            let got =
+                select_hull_points_with(&pts, k, &mut Rng::new(seed ^ 0xA5), &Pool::new(t));
+            assert_eq!(got, reference, "selection differs at threads={t}, n={n}");
+        }
+    }
+}
+
+/// The batched API must agree with per-query calls bit for bit at any
+/// thread count (the scratch reuse may not change a single rounding).
+#[test]
+fn dist_to_hull_batch_matches_single_bitwise() {
+    let n = 3_000;
+    let pts = normal_cloud(n, 4, 17);
+    let mut rng = Rng::new(19);
+    let hull = select_hull_points(&pts, 10, &mut rng);
+    let idx: Vec<usize> = (0..n).step_by(3).collect();
+    let queries = pts.select_rows(&idx);
+    let reference: Vec<f64> = (0..queries.rows)
+        .map(|r| dist_to_hull(&pts, &hull, queries.row(r)))
+        .collect();
+    for t in [1usize, 2, 8] {
+        let got = dist_to_hull_batch(&pts, &hull, &queries, &Pool::new(t));
+        assert_eq!(got.len(), reference.len());
+        for (i, (a, b)) in got.iter().zip(&reference).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "threads={t}, query {i}: {a} vs {b}");
+        }
+    }
+}
+
+/// ACCEPTANCE PIN: the John-ellipsoid rounding loop (weighted moment
+/// rebuild + violator scan) and the final scoring pass are bit-identical
+/// for threads {1,2,8}. n spans several ROW_CHUNK shards with a ragged
+/// tail.
+#[test]
+fn ellipsoid_rounding_bit_identical_across_threads() {
+    let x = normal_cloud(2_500, 3, 23);
+    let je_ref = john_ellipsoid_with(&x, 0.05, 120, &Pool::new(1));
+    let s_ref = ellipsoid_scores_with(&x, 0.05, &Pool::new(1));
+    for t in [2usize, 8] {
+        let je = john_ellipsoid_with(&x, 0.05, 120, &Pool::new(t));
+        assert_eq!(je.iters, je_ref.iters, "iteration count differs at threads={t}");
+        for (i, (a, b)) in je.u.iter().zip(&je_ref.u).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "threads={t}, u[{i}]");
+        }
+        for (i, (a, b)) in je.m.data.iter().zip(&je_ref.m.data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "threads={t}, moment entry {i}");
+        }
+        let s = ellipsoid_scores_with(&x, 0.05, &Pool::new(t));
+        for (i, (a, b)) in s.iter().zip(&s_ref).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "threads={t}, score {i}");
+        }
+    }
+}
+
+/// Batch queries against a hull spanning > ROW_CHUNK rows: the chunk
+/// grid must cover every query exactly once (ragged-tail regression).
+#[test]
+fn batch_covers_ragged_tail() {
+    let pts = normal_cloud(2_049, 2, 29);
+    let mut rng = Rng::new(31);
+    let hull = select_hull_points(&pts, 6, &mut rng);
+    let out = dist_to_hull_batch(&pts, &hull, &pts, &Pool::new(4));
+    assert_eq!(out.len(), 2_049);
+    assert!(out.iter().all(|d| d.is_finite() && *d >= 0.0));
+    // selected hull members project onto themselves
+    for &h in &hull {
+        assert!(out[h] < 1e-9, "hull member {h} at distance {}", out[h]);
+    }
+}

@@ -51,6 +51,9 @@ fn lemma_2_6_any_proper_subset_fails() {
         for wscale in [1.0, 10.0, 1e6] {
             let w = vec![wscale; keep.len()];
             let part = nll_parts(&sub, &w, &theta, &lam);
+            // exact equality is intentional: every per-row term is the
+            // literal 0.0 (w·0.5·0²) and IEEE sums of exact zeros stay
+            // exact through the tree reduction — keep the lemma pinned
             assert_eq!(
                 part.f1, 0.0,
                 "subset missing row {dropped} cannot represent f1"
@@ -110,6 +113,7 @@ fn lemma_2_5_block_isolation() {
     let keep: Vec<usize> = (0..n).filter(|i| !carriers.contains(i)).collect();
     let sub = design.select(&keep);
     let part = nll_parts(&sub, &[], &theta, &lam);
+    // exact equality for the same reason as in Lemma 2.6 above
     assert_eq!(part.f1, 0.0, "dropping the carriers must zero f1");
 }
 

@@ -72,6 +72,43 @@ fn streaming_quality_close_to_batch() {
 }
 
 #[test]
+fn streaming_hull_deterministic_across_consumers() {
+    // ISSUE 2 acceptance: the L2Hull leaf reduce now runs the parallel
+    // geometry kernels (hull selection included). Per-shard RNGs plus
+    // the in-order reorder fold must keep the final coreset
+    // bit-identical for any consumer count — including the
+    // single-consumer path, which uses the full worker pool inside its
+    // leaf reduces, so this also pins pool-width independence of the
+    // whole reduce.
+    let make_source = |seed: u64| {
+        let mut rng = Rng::new(seed);
+        GenShards::new(
+            move |n| Dgp::CopulaComplex.generate(n, &mut rng),
+            2,
+            8_000,
+            1_000,
+        )
+    };
+    let run = |consumers: usize| {
+        let mut p = StreamingPipeline::new(Method::L2Hull, 50, 6);
+        p.consumers = consumers;
+        p.run(make_source(71))
+    };
+    let (c1, s1) = run(1);
+    let (c4, s4) = run(4);
+    assert_eq!(s1.n_seen, 8_000);
+    assert_eq!(s1.n_seen, s4.n_seen);
+    assert_eq!(s1.n_shards, s4.n_shards);
+    assert_eq!(c1.weights.len(), c4.weights.len(), "coreset sizes differ");
+    for (i, (a, b)) in c1.weights.iter().zip(&c4.weights).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "weight {i}: {a} vs {b}");
+    }
+    for (i, (a, b)) in c1.rows.data.iter().zip(&c4.rows.data).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "row value {i}: {a} vs {b}");
+    }
+}
+
+#[test]
 fn backpressure_bounds_queue() {
     let pipeline = {
         let mut p = StreamingPipeline::new(Method::Uniform, 50, 5);
