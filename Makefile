@@ -21,9 +21,10 @@ clippy:
 # The tier-1 gate: formatting, lints as errors, full test suite.
 check: fmt clippy test
 
-# What .github/workflows/ci.yml runs (lib/bin clippy only — fmt and the
-# all-targets lint pass stay in `make check` for local use).
-ci: build test
+# What .github/workflows/ci.yml runs: fmt --check, build, tests, and
+# the lib/bin clippy pass (the all-targets lint stays in `make check`
+# for local use).
+ci: fmt build test
 	$(CARGO) clippy --manifest-path $(MANIFEST) -- -D warnings
 
 # Hot-path microbench at the smallest scale (CI smoke): serial vs

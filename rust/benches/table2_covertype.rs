@@ -1,7 +1,8 @@
 //! Regenerates paper Table 2 + Figure 13: Covertype (synthetic terrain
 //! substitute, DESIGN.md §5), J = 10 continuous variables, coreset sizes
-//! k ∈ {50, 200, 500}, methods {ℓ₂-hull, ℓ₂-only, ridge-lss, root-l2,
-//! uniform}, against the full-data benchmark fit.
+//! k ∈ {50, 200, 500}, every method in the strategy registry
+//! (`Method::all()` — the §4 ellipsoid pair included), against the
+//! full-data benchmark fit.
 
 use mctm_coreset::benchsupport::{banner, bench_fit_options, results_dir, Scale};
 use mctm_coreset::coordinator::experiment::{summarize, TableRunner};
@@ -37,7 +38,6 @@ fn main() {
         runner.full.fit.nll, runner.full.fit.iters, runner.full.seconds
     );
 
-    let methods = Method::all();
     let mut table = Table::new(
         "Table 2: Covertype performance per coreset size",
         &["k", "method", "theta L2", "lambda err", "LR", "impr(%)", "time(s)"],
@@ -51,7 +51,9 @@ fn main() {
     let mut fig_time = Vec::new();
 
     for &k in &ks {
-        let all: Vec<_> = methods.iter().map(|&m| runner.run(m, k, reps)).collect();
+        // registry-driven: every registered method (ellipsoid pair
+        // included) lands in the table automatically
+        let all = runner.run_all(k, reps);
         let unif = all.last().unwrap(); // Method::all ends with Uniform
         for stats in &all {
             let mut row = vec![format!("{k}")];

@@ -48,6 +48,25 @@ pub fn bench_fit_options(scale: Scale) -> FitOptions {
     }
 }
 
+/// Methods a table bench compares: the paper's headline trio by
+/// default. `MCTM_BENCH_METHODS=name,name,…` (registry names, baseline
+/// last) overrides — e.g. `MCTM_BENCH_METHODS=ellipsoid-hull,ellipsoid,uniform`
+/// reruns any table under the §4 ellipsoid strategies without touching
+/// bench code.
+pub fn bench_methods() -> Vec<crate::coreset::Method> {
+    use crate::coreset::Method;
+    match std::env::var("MCTM_BENCH_METHODS") {
+        Ok(spec) => spec
+            .split(',')
+            .map(|name| {
+                Method::parse(name.trim())
+                    .unwrap_or_else(|e| panic!("MCTM_BENCH_METHODS: {e:#}"))
+            })
+            .collect(),
+        Err(_) => vec![Method::L2Hull, Method::L2Only, Method::Uniform],
+    }
+}
+
 /// Results directory.
 pub fn results_dir() -> PathBuf {
     let p = PathBuf::from("results");
@@ -83,7 +102,6 @@ pub fn banner(name: &str, detail: &str) {
 /// at k=100): all 14 DGPs × {ℓ₂-hull, ℓ₂-only, uniform}.
 pub fn run_sim_table(title: &str, k: usize, csv: &str) {
     use crate::coordinator::experiment::{summarize, TableRunner};
-    use crate::coreset::Method;
     use crate::data::dgp::Dgp;
     use crate::util::report::Table;
     use crate::util::rng::Rng;
@@ -96,6 +114,7 @@ pub fn run_sim_table(title: &str, k: usize, csv: &str) {
     } else {
         Dgp::all().to_vec()
     };
+    let methods = bench_methods();
     banner(title, &format!("n={n}, k={k}, reps={reps}, {} DGPs", dgps.len()));
 
     let mut table = Table::new(
@@ -106,12 +125,11 @@ pub fn run_sim_table(title: &str, k: usize, csv: &str) {
         let mut rng = Rng::new(0xD6 ^ dgp.name().len() as u64);
         let data = dgp.generate(n, &mut rng);
         let runner = TableRunner::new(&data, 7, bench_fit_options(scale), 0xBEEF);
-        let hull = runner.run(Method::L2Hull, k, reps);
-        let l2 = runner.run(Method::L2Only, k, reps);
-        let unif = runner.run(Method::Uniform, k, reps);
-        for stats in [&hull, &l2, &unif] {
+        let all: Vec<_> = methods.iter().map(|&m| runner.run(m, k, reps)).collect();
+        let baseline = all.last().expect("bench_methods is non-empty");
+        for stats in &all {
             let mut row = vec![dgp.name().to_string()];
-            row.extend(summarize(stats, &unif));
+            row.extend(summarize(stats, baseline));
             table.row(row);
         }
         println!("  done {}", dgp.name());
@@ -123,7 +141,6 @@ pub fn run_sim_table(title: &str, k: usize, csv: &str) {
 /// three headline methods.
 pub fn run_equity_table(title: &str, n_stocks: usize, csv: &str) {
     use crate::coordinator::experiment::{summarize, TableRunner};
-    use crate::coreset::Method;
     use crate::data::equity;
     use crate::util::report::Table;
     use crate::util::rng::Rng;
@@ -135,6 +152,7 @@ pub fn run_equity_table(title: &str, n_stocks: usize, csv: &str) {
         Scale::Fast => vec![50, 100],
         _ => vec![50, 100, 200, 300],
     };
+    let methods = bench_methods();
     banner(title, &format!("{n_stocks} stocks, n={n} days, reps={reps}"));
 
     let mut rng = Rng::new(1985);
@@ -149,12 +167,11 @@ pub fn run_equity_table(title: &str, n_stocks: usize, csv: &str) {
         &["k", "method", "theta L2", "lambda err", "LR", "impr(%)", "time(s)"],
     );
     for &k in &ks {
-        let hull = runner.run(Method::L2Hull, k, reps);
-        let l2 = runner.run(Method::L2Only, k, reps);
-        let unif = runner.run(Method::Uniform, k, reps);
-        for stats in [&hull, &l2, &unif] {
+        let all: Vec<_> = methods.iter().map(|&m| runner.run(m, k, reps)).collect();
+        let baseline = all.last().expect("bench_methods is non-empty");
+        for stats in &all {
             let mut row = vec![format!("{k}")];
-            row.extend(summarize(stats, &unif));
+            row.extend(summarize(stats, baseline));
             table.row(row);
         }
         println!("  done k={k}");

@@ -98,16 +98,9 @@ impl ExperimentConfig {
             }
             "artifacts" => self.artifacts = PathBuf::from(value),
             "out_dir" => self.out_dir = PathBuf::from(value),
-            "method" => {
-                self.method = match value {
-                    "uniform" => Method::Uniform,
-                    "l2-only" => Method::L2Only,
-                    "l2-hull" => Method::L2Hull,
-                    "ridge-lss" => Method::RidgeLss,
-                    "root-l2" => Method::RootL2,
-                    other => return Err(anyhow!("unknown method {other}")),
-                };
-            }
+            // the strategy registry owns name → method resolution (and
+            // its error lists every valid name)
+            "method" => self.method = Method::parse(value)?,
             "optimizer" => {
                 self.fit.optimizer = match value {
                     "adam" => OptimizerKind::Adam,
@@ -173,5 +166,25 @@ mod tests {
     fn rejects_unknown_keys() {
         assert!(ExperimentConfig::load(None, &["bogus = 1".into()]).is_err());
         assert!(ExperimentConfig::load(None, &["method = nope".into()]).is_err());
+    }
+
+    #[test]
+    fn method_roundtrip_every_registered_name() {
+        // parse → name() → parse is the identity for the whole registry
+        for m in Method::all() {
+            let cfg =
+                ExperimentConfig::load(None, &[format!("method = {}", m.name())]).unwrap();
+            assert_eq!(cfg.method, m);
+            assert_eq!(cfg.method.name(), m.name());
+        }
+    }
+
+    #[test]
+    fn unknown_method_error_lists_valid_names() {
+        let err = ExperimentConfig::load(None, &["method = not-a-method".into()]).unwrap_err();
+        let msg = format!("{err:#}");
+        for m in Method::all() {
+            assert!(msg.contains(m.name()), "error should list {}: {msg}", m.name());
+        }
     }
 }

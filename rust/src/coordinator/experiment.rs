@@ -140,6 +140,16 @@ impl TableRunner {
     pub fn run(&self, method: Method, k: usize, reps: usize) -> MethodStats {
         run_method(&self.design, &self.full, method, k, reps, self.seed, &self.opts)
     }
+
+    /// Run every registered method at one k (registry order; Uniform is
+    /// last, so callers can use `.last()` as the baseline row). New
+    /// strategies appear in the tables without touching any bench.
+    pub fn run_all(&self, k: usize, reps: usize) -> Vec<MethodStats> {
+        Method::all()
+            .into_iter()
+            .map(|m| self.run(m, k, reps))
+            .collect()
+    }
 }
 
 #[cfg(test)]

@@ -8,6 +8,13 @@
 //! and leaves are folded in sequence order through a reorder buffer, so
 //! the final coreset is identical for any number of consumers. The
 //! final coreset is fitted exactly like an in-memory one.
+//!
+//! The pipeline holds only a `Method` tag; every per-method decision
+//! inside the leaf/tree reduces (scores, hull budget) dispatches
+//! through the strategy registry (`coreset::strategy`), so any
+//! registered method — the §4 ellipsoid ones included — streams end to
+//! end with the same determinism guarantees (pinned at consumers
+//! {1, 4} by `tests/pipeline_e2e.rs`).
 
 use crate::coreset::merge_reduce::{reduce_with, MergeReduce, WeightedRows};
 use crate::coreset::Method;

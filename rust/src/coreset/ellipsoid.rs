@@ -18,6 +18,12 @@
 //! violator argmax merges with strict `>` (earlier rows win ties), so
 //! the whole rounding loop is **bit-identical for any thread count**
 //! (pinned by `tests/hull_properties.rs`).
+//!
+//! Wiring (ISSUE 3): `ellipsoid_scores_with` backs the registered
+//! `ellipsoid` / `ellipsoid-hull` methods through
+//! `strategy::EllipsoidScores`, so the rounding here runs end to end —
+//! CLI flag → batch builds → streaming Merge & Reduce — not just in the
+//! perf bench.
 
 use crate::linalg::{Cholesky, Mat};
 use crate::util::parallel::{add_assign, tree_reduce, Pool, ROW_CHUNK};

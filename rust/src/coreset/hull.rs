@@ -29,6 +29,11 @@
 //! towards the lowest candidate position. Chunk grids depend only on
 //! problem sizes, so results are **bit-identical for any thread count**
 //! (pinned by `tests/hull_properties.rs`).
+//!
+//! Selection is shared by every hybrid method through
+//! `strategy::HybridSampler` (Algorithm 1's α-split): `l2-hull` and
+//! `ellipsoid-hull` both pin hull points of the derivative cloud, only
+//! their score families differ.
 
 use crate::linalg::Mat;
 use crate::util::parallel::{tree_reduce, Pool, ROW_CHUNK};

@@ -7,6 +7,10 @@
 //! matrix Ab ∈ R^{n×dJ} (proof in DESIGN.md §2). That reduction makes
 //! the computation O(n·(dJ)² + (dJ)³) via Gram + Cholesky instead of
 //! operating on the dJ²-wide block matrix.
+//!
+//! These kernels feed the `l2` / `ridge` / `root` score families of the
+//! strategy registry (`coreset::strategy`); samplers never call them
+//! directly.
 
 use crate::basis::Design;
 use crate::linalg::{Cholesky, LinalgError, Mat};

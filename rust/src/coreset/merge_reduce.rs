@@ -5,11 +5,17 @@
 //! memory O(k·log(n/B)).
 //!
 //! Each shard keeps its raw rows + weights (a weighted sub-design), so
-//! the reduce step can recompute leverage scores on the weighted union —
-//! leverage scores are recomputed *locally*, which upper-bounds the
+//! the reduce step can recompute sensitivity scores on the weighted
+//! union — scores are recomputed *locally*, which upper-bounds the
 //! global scores after reweighting (standard Merge & Reduce argument).
+//!
+//! Per-method behaviour (which scores, whether a hull budget is pinned)
+//! is dispatched through the strategy registry (`coreset::strategy`),
+//! so every registered method — including the §4 ellipsoid ones —
+//! streams through this tree without this module naming any of them.
 
 use super::samplers::Method;
+use super::strategy;
 use crate::basis::Design;
 use crate::linalg::Mat;
 use crate::util::parallel::Pool;
@@ -81,17 +87,14 @@ pub fn reduce_with(
     let design = Design::build_on(&set.rows, d, eps, pool);
     let n = set.len();
 
-    // per-row sensitivity scores for the chosen method (uniform falls
-    // back to s ≡ 1)
-    let sens: Vec<f64> = match method {
-        Method::Uniform => vec![1.0; n],
-        _ => crate::coreset::leverage::sensitivity_scores_with(&design, pool)
-            .unwrap_or_else(|_| vec![1.0; n]),
-    };
-    let hull_budget = if method == Method::L2Hull {
-        (0.2 * k as f64).ceil() as usize
-    } else {
-        0
+    // per-row scores and hull budget via the strategy registry — the
+    // reduce step works unchanged for ANY registered method (uniform
+    // scores ≡ 1; degenerate designs fall back to ≡ 1 inside the trait)
+    let sampler = strategy::sampler(method);
+    let sens = sampler.reduce_scores(&design, pool);
+    let hull_budget = match sampler.hull_fraction() {
+        Some(frac) => (frac * k as f64).ceil() as usize,
+        None => 0,
     };
 
     // hull points are kept EXACTLY (with their prior weights); the

@@ -5,19 +5,30 @@
 //!   plus ridge and root variants used as real-data baselines.
 //! * `hull` — sparse convex-hull approximation (Blum, Har-Peled &
 //!   Raichel 2019, paper Algorithm 2) over the derivative points a'.
-//! * `samplers` — Algorithm 1: the hybrid ℓ₂-hull construction and all
-//!   baselines behind one `Method` enum.
-//! * `merge_reduce` — the streaming / distributed composition (§4).
-//! * `ellipsoid` — John-ellipsoid scores (§4 extension for non-Gaussian
-//!   log-concave copulas, Tukan et al. 2020).
+//! * `ellipsoid` — John-ellipsoid rounding + quadratic-form scores
+//!   (§4 extension for non-Gaussian log-concave copulas, Tukan et al.
+//!   2020).
+//! * `strategy` — the sampling-strategy layer: a [`ScoreStrategy`]
+//!   trait (uniform/ℓ₂/ridge/root/ellipsoid score families), a generic
+//!   hybrid sampler composing any score family with the hull component
+//!   under Algorithm 1's α = 0.8 split, and the string-keyed registry
+//!   that config, CLI, pipeline, merge-reduce and the benches all
+//!   dispatch through. `l2-hull` and `ellipsoid-hull` are two instances
+//!   of the same hybrid.
+//! * `samplers` — the `Method` tags and the `build_coreset` front door.
+//! * `merge_reduce` — the streaming / distributed composition (§4);
+//!   per-method behaviour is dispatched through `strategy`, so every
+//!   registered method streams end to end.
 
 pub mod ellipsoid;
 pub mod hull;
 pub mod leverage;
 pub mod merge_reduce;
 pub mod samplers;
+pub mod strategy;
 
 pub use samplers::{build_coreset, build_coreset_with, Coreset, Method};
+pub use strategy::{MethodSampler, ScoreStrategy};
 
 #[cfg(test)]
 mod tests {
@@ -31,19 +42,16 @@ mod tests {
         let mut rng = Rng::new(77);
         let data = Mat::from_vec(500, 2, (0..1000).map(|_| rng.normal()).collect());
         let design = Design::build(&data, 5, 0.01);
-        for method in [
-            Method::Uniform,
-            Method::L2Only,
-            Method::L2Hull,
-            Method::RidgeLss,
-            Method::RootL2,
-        ] {
+        // registry-driven: new strategies (the ellipsoid pair included)
+        // are covered here automatically, no hand-kept list
+        for method in Method::all() {
             let cs = build_coreset(&design, method, 40, &mut rng);
             assert!(!cs.indices.is_empty(), "{method:?} empty");
             assert!(cs.indices.len() <= 40 + 5, "{method:?} oversize");
             assert_eq!(cs.indices.len(), cs.weights.len());
             assert!(cs.weights.iter().all(|&w| w > 0.0), "{method:?} weights");
             assert!(cs.indices.iter().all(|&i| i < 500), "{method:?} range");
+            assert_eq!(cs.method, method, "{method:?} tag");
         }
     }
 }

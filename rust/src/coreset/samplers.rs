@@ -1,21 +1,25 @@
-//! Coreset sampling strategies (paper Algorithm 1 + the baselines of
-//! §3): the hybrid ℓ₂-hull construction, plain ℓ₂ leverage sampling,
-//! uniform subsampling, ridge leverage scores and root leverage scores.
+//! Coreset sampling entry points (paper Algorithm 1 + the baselines of
+//! §3 and the §4 ellipsoid extension): the `Method` tags and the
+//! `build_coreset` front door. All per-method behaviour — scores,
+//! budget splits, names — lives in the strategy registry
+//! (`coreset::strategy`); this module never matches on `Method`.
 
-use super::hull::select_hull_points_with;
-use super::leverage::{
-    default_ridge_with, leverage_scores_ridged_with, mctm_leverage_scores_with,
-    sensitivity_scores_with,
-};
+use super::strategy;
 use crate::basis::Design;
 use crate::util::parallel::Pool;
-use crate::util::rng::{AliasTable, Rng};
+use crate::util::rng::Rng;
 
 /// Fraction of the budget spent on the sensitivity sample in the hybrid
-/// method; the rest goes to convex-hull points (Algorithm 1: α = 0.8).
+/// methods; the rest goes to convex-hull points (Algorithm 1: α = 0.8).
 pub const HULL_SPLIT: f64 = 0.8;
 
-/// The sampling strategies compared in the paper.
+/// Registry tags for the sampling strategies compared in the paper.
+///
+/// A tag is a lightweight `Copy` handle; everything behind it — name,
+/// description, score strategy, hull split, Merge & Reduce behaviour —
+/// is defined by the matching `strategy::REGISTRY` row. Adding a method
+/// means adding a variant here and one registry row there; no other
+/// code enumerates methods.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Method {
     /// uniform subsampling without replacement, weights n/k
@@ -28,27 +32,32 @@ pub enum Method {
     RidgeLss,
     /// root leverage scores baseline (Table 2): p_i ∝ √u_i
     RootL2,
+    /// John-ellipsoid scores (§4, non-Gaussian log-concave copulas)
+    Ellipsoid,
+    /// ellipsoid scores + convex hull under the α = 0.8 split
+    EllipsoidHull,
 }
 
 impl Method {
+    /// Canonical CLI/config name (registry-driven).
     pub fn name(&self) -> &'static str {
-        match self {
-            Method::Uniform => "uniform",
-            Method::L2Only => "l2-only",
-            Method::L2Hull => "l2-hull",
-            Method::RidgeLss => "ridge-lss",
-            Method::RootL2 => "root-l2",
-        }
+        strategy::method_name(*self)
     }
 
-    pub fn all() -> [Method; 5] {
-        [
-            Method::L2Hull,
-            Method::L2Only,
-            Method::RidgeLss,
-            Method::RootL2,
-            Method::Uniform,
-        ]
+    /// One-line description for `--help` and docs (registry-driven).
+    pub fn describe(&self) -> &'static str {
+        strategy::method_describe(*self)
+    }
+
+    /// Every registered method, registry order (Uniform last — table
+    /// drivers use the last entry as the baseline row).
+    pub fn all() -> Vec<Method> {
+        strategy::all_methods()
+    }
+
+    /// Parse a CLI/config name; the error lists all valid names.
+    pub fn parse(name: &str) -> crate::util::error::Result<Method> {
+        strategy::parse_method(name)
     }
 }
 
@@ -61,7 +70,7 @@ pub struct Coreset {
     pub weights: Vec<f64>,
     /// diagnostics: how many points came from the hull component
     pub n_hull: usize,
-    /// sampling probabilities used (empty for uniform/hull-only parts)
+    /// which registered sampling method built this coreset
     pub method: Method,
 }
 
@@ -80,22 +89,9 @@ impl Coreset {
     }
 }
 
-/// Draw `k` i.i.d. indices with probabilities ∝ scores; weight 1/(k p).
-fn importance_sample(scores: &[f64], k: usize, rng: &mut Rng, method: Method) -> Coreset {
-    let table = AliasTable::new(scores);
-    let mut indices = Vec::with_capacity(k);
-    let mut weights = Vec::with_capacity(k);
-    for _ in 0..k {
-        let i = table.sample(rng);
-        indices.push(i);
-        weights.push(1.0 / (k as f64 * table.p(i)));
-    }
-    Coreset { indices, weights, n_hull: 0, method }
-}
-
 /// Build a coreset of target size `k` from a design, per `method`.
 ///
-/// Falls back to uniform sampling if the leverage computation fails
+/// Falls back to uniform sampling if the score computation fails
 /// (degenerate design) — mirroring the robustness behaviour of the
 /// reference implementation.
 pub fn build_coreset(design: &Design, method: Method, k: usize, rng: &mut Rng) -> Coreset {
@@ -103,10 +99,14 @@ pub fn build_coreset(design: &Design, method: Method, k: usize, rng: &mut Rng) -
 }
 
 /// [`build_coreset`] on an explicit pool: every score/hull kernel inside
-/// (leverage, Gram, hull selection) runs on `pool`, and all of them are
-/// bit-identical for any thread count — so the sampled coreset depends
-/// only on `rng`, never on the pool width. Streaming consumers pass
-/// `Pool::new(1)` to avoid nesting workers.
+/// (leverage, ellipsoid rounding, Gram, hull selection) runs on `pool`,
+/// and all of them are bit-identical for any thread count — so the
+/// sampled coreset depends only on `rng`, never on the pool width.
+/// Streaming consumers pass `Pool::new(1)` to avoid nesting workers.
+///
+/// Dispatch goes through the strategy registry: the trivial `k ≥ n`
+/// identity coreset is handled here, everything else by the method's
+/// registered [`strategy::MethodSampler`].
 pub fn build_coreset_with(
     design: &Design,
     method: Method,
@@ -125,71 +125,7 @@ pub fn build_coreset_with(
             method,
         };
     }
-    match method {
-        Method::Uniform => {
-            let indices = rng.sample_without_replacement(n, k);
-            let w = n as f64 / k as f64;
-            Coreset {
-                weights: vec![w; indices.len()],
-                indices,
-                n_hull: 0,
-                method,
-            }
-        }
-        Method::L2Only => match sensitivity_scores_with(design, pool) {
-            Ok(s) => importance_sample(&s, k, rng, method),
-            Err(_) => build_coreset_with(design, Method::Uniform, k, rng, pool),
-        },
-        Method::RidgeLss => {
-            let stacked = design.stacked();
-            let gamma = default_ridge_with(&stacked, pool);
-            match leverage_scores_ridged_with(&stacked, gamma, pool) {
-                Ok(mut u) => {
-                    let unif = 1.0 / n as f64;
-                    u.iter_mut().for_each(|x| *x += unif);
-                    importance_sample(&u, k, rng, method)
-                }
-                Err(_) => build_coreset_with(design, Method::Uniform, k, rng, pool),
-            }
-        }
-        Method::RootL2 => match mctm_leverage_scores_with(design, pool) {
-            Ok(u) => {
-                let s: Vec<f64> =
-                    u.iter().map(|&x| x.max(0.0).sqrt() + 1.0 / n as f64).collect();
-                importance_sample(&s, k, rng, method)
-            }
-            Err(_) => build_coreset_with(design, Method::Uniform, k, rng, pool),
-        },
-        Method::L2Hull => {
-            let k1 = ((HULL_SPLIT * k as f64).floor() as usize).clamp(1, k);
-            let k2 = k - k1;
-            let mut cs = match sensitivity_scores_with(design, pool) {
-                Ok(s) => importance_sample(&s, k1, rng, method),
-                Err(_) => {
-                    let mut u = build_coreset_with(design, Method::Uniform, k1, rng, pool);
-                    u.method = method;
-                    u
-                }
-            };
-            if k2 > 0 {
-                // hull over derivative points {a'_ij}: map point index
-                // (i·J + j) back to observation index i
-                let dp = design.deriv_points();
-                let hull_pts = select_hull_points_with(&dp, k2, rng, pool);
-                let mut seen: std::collections::HashSet<usize> =
-                    cs.indices.iter().cloned().collect();
-                for p in hull_pts {
-                    let obs = p / design.j;
-                    if seen.insert(obs) {
-                        cs.indices.push(obs);
-                        cs.weights.push(1.0); // hull points get weight 1
-                        cs.n_hull += 1;
-                    }
-                }
-            }
-            cs
-        }
-    }
+    strategy::sampler(method).sample(design, method, k, rng, pool)
 }
 
 /// Extract the weight vector aligned with `design.select(&coreset.indices)`:
@@ -248,6 +184,20 @@ mod tests {
         let tail = &cs.weights[cs.weights.len() - cs.n_hull..];
         assert!(tail.iter().all(|&w| w == 1.0));
         assert!(cs.len() >= 30 - 5 && cs.len() <= 30);
+    }
+
+    #[test]
+    fn ellipsoid_hull_contains_hull_points() {
+        // the hull composition comes from HybridSampler, so the new
+        // ellipsoid-hull method inherits the same augmentation shape
+        let design = toy_design(300, 11);
+        let mut rng = Rng::new(12);
+        let cs = build_coreset(&design, Method::EllipsoidHull, 30, &mut rng);
+        assert!(cs.n_hull > 0, "expected hull augmentation");
+        let tail = &cs.weights[cs.weights.len() - cs.n_hull..];
+        assert!(tail.iter().all(|&w| w == 1.0));
+        assert!(cs.len() >= 30 - 5 && cs.len() <= 30);
+        assert_eq!(cs.method, Method::EllipsoidHull);
     }
 
     #[test]

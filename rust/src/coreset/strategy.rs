@@ -1,0 +1,468 @@
+//! The sampling-strategy layer (ISSUE 3): every coreset method in the
+//! system — score computation, budgeted sampling, Merge & Reduce
+//! behaviour, CLI/config name — flows through the string-keyed registry
+//! in this module. It replaces the closed `match`-on-`Method` dispatch
+//! that used to be copy-pasted across config, CLI, pipeline,
+//! merge-reduce and the benches.
+//!
+//! Two traits split the concerns the way Huggins et al. ("Coresets for
+//! Scalable Bayesian Logistic Regression") separate them:
+//!
+//! * [`ScoreStrategy`] — a per-observation sensitivity score family
+//!   (ℓ₂ leverage, ridge, root, John-ellipsoid). Pure function of the
+//!   design; no randomness.
+//! * [`MethodSampler`] — how a budgeted coreset is drawn from those
+//!   scores, and how a weighted Merge & Reduce `reduce` step scores and
+//!   splits its budget. [`HybridSampler`] composes any score strategy
+//!   with the convex-hull component under Algorithm 1's α-split, so
+//!   `l2-hull` is one instance and `ellipsoid-hull` comes for free.
+//!
+//! Every implementation must be **deterministic given (design, rng)** —
+//! independent of the worker-pool width — so streaming coresets stay
+//! bit-identical at any thread/consumer count (pinned by
+//! `tests/coreset_invariants.rs` and `tests/pipeline_e2e.rs`).
+//!
+//! Adding a method = one `Method` tag + one [`REGISTRY`] row. Nothing
+//! else in the codebase enumerates methods by hand.
+
+use super::ellipsoid::ellipsoid_scores_with;
+use super::hull::select_hull_points_with;
+use super::leverage::{
+    default_ridge_with, leverage_scores_ridged_with, mctm_leverage_scores_with,
+    sensitivity_scores_with,
+};
+use super::samplers::{Coreset, Method, HULL_SPLIT};
+use crate::basis::Design;
+use crate::linalg::LinalgError;
+use crate::util::parallel::Pool;
+use crate::util::rng::{AliasTable, Rng};
+
+/// Khachiyan rounding tolerance for the ellipsoid strategies: the
+/// (1+ε)-approximate MVEE of the stacked design rows.
+pub const ELLIPSOID_EPS: f64 = 0.05;
+
+/// A per-observation sensitivity-score family.
+///
+/// `Err` means the design is degenerate for this family (rank-deficient
+/// Gram, too few rows for the ellipsoid lift, …); samplers fall back to
+/// uniform, mirroring the robustness of the reference implementation.
+pub trait ScoreStrategy: Sync {
+    /// Short key naming the score family (diagnostics / bench labels).
+    fn key(&self) -> &'static str;
+
+    /// Per-observation sampling scores (higher ⇒ more likely kept).
+    fn scores(&self, design: &Design, pool: &Pool) -> Result<Vec<f64>, LinalgError>;
+}
+
+/// ℓ₂ sensitivity proxy s_i = u_i + 1/n (paper Lemmas 2.1/2.2).
+pub struct L2Sensitivity;
+
+impl ScoreStrategy for L2Sensitivity {
+    fn key(&self) -> &'static str {
+        "l2"
+    }
+
+    fn scores(&self, design: &Design, pool: &Pool) -> Result<Vec<f64>, LinalgError> {
+        sensitivity_scores_with(design, pool)
+    }
+}
+
+/// Ridge leverage scores u_i(γ) + 1/n (Table 2 baseline).
+pub struct RidgeLeverage;
+
+impl ScoreStrategy for RidgeLeverage {
+    fn key(&self) -> &'static str {
+        "ridge"
+    }
+
+    fn scores(&self, design: &Design, pool: &Pool) -> Result<Vec<f64>, LinalgError> {
+        let stacked = design.stacked();
+        let gamma = default_ridge_with(&stacked, pool);
+        let mut u = leverage_scores_ridged_with(&stacked, gamma, pool)?;
+        let unif = 1.0 / design.n as f64;
+        u.iter_mut().for_each(|x| *x += unif);
+        Ok(u)
+    }
+}
+
+/// Root leverage scores p_i ∝ √u_i + 1/n (Table 2 baseline).
+pub struct RootLeverage;
+
+impl ScoreStrategy for RootLeverage {
+    fn key(&self) -> &'static str {
+        "root"
+    }
+
+    fn scores(&self, design: &Design, pool: &Pool) -> Result<Vec<f64>, LinalgError> {
+        let u = mctm_leverage_scores_with(design, pool)?;
+        let n = design.n as f64;
+        Ok(u.iter().map(|&x| x.max(0.0).sqrt() + 1.0 / n).collect())
+    }
+}
+
+/// John-ellipsoid scores (paper §4, non-Gaussian log-concave copulas):
+/// the quadratic form of the (1+ε)-MVEE of the stacked design rows,
+/// normalized as q_iᵀM⁻¹q_i/(dJ+1) + 1/n — the Tukan et al. (2020)
+/// replacement for Gram leverage when level sets are merely log-concave
+/// rather than elliptical. Runs the parallel Khachiyan rounding of
+/// `coreset::ellipsoid`, bit-identical at any pool width.
+pub struct EllipsoidScores;
+
+impl ScoreStrategy for EllipsoidScores {
+    fn key(&self) -> &'static str {
+        "ellipsoid"
+    }
+
+    fn scores(&self, design: &Design, pool: &Pool) -> Result<Vec<f64>, LinalgError> {
+        let stacked = design.stacked();
+        // the Khachiyan lift needs strictly more rows than lifted
+        // dimensions; shorter designs fall back to uniform upstream
+        if stacked.rows <= stacked.cols + 1 {
+            return Err(LinalgError::Dim(format!(
+                "ellipsoid scores need n > dJ + 1 = {}, got n = {}",
+                stacked.cols + 1,
+                stacked.rows
+            )));
+        }
+        Ok(ellipsoid_scores_with(&stacked, ELLIPSOID_EPS, pool))
+    }
+}
+
+/// A registered sampling method: budgeted coreset draws plus the two
+/// hooks the Merge & Reduce `reduce` step needs.
+///
+/// `sample` is called with `1 ≤ k < design.n` (the trivial `k ≥ n`
+/// identity coreset is handled by `build_coreset_with`); `method` is the
+/// registry tag recorded on the result (`Coreset::method`).
+pub trait MethodSampler: Sync {
+    /// Draw a coreset of target size `k`.
+    fn sample(
+        &self,
+        design: &Design,
+        method: Method,
+        k: usize,
+        rng: &mut Rng,
+        pool: &Pool,
+    ) -> Coreset;
+
+    /// Per-row scores for the weighted reduce step (`merge_reduce`);
+    /// 1.0 ≡ uniform. Degenerate designs fall back to all-ones.
+    fn reduce_scores(&self, design: &Design, pool: &Pool) -> Vec<f64>;
+
+    /// Fraction of the reduce budget pinned to convex-hull points
+    /// (`None` for non-hybrid methods).
+    fn hull_fraction(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// Uniform subsampling without replacement, weights n/k — both the
+/// baseline method and the fallback every hybrid degrades to when its
+/// score computation fails.
+pub struct UniformSampler;
+
+impl MethodSampler for UniformSampler {
+    fn sample(
+        &self,
+        design: &Design,
+        method: Method,
+        k: usize,
+        rng: &mut Rng,
+        _pool: &Pool,
+    ) -> Coreset {
+        let n = design.n;
+        let indices = rng.sample_without_replacement(n, k);
+        let w = n as f64 / k as f64;
+        Coreset {
+            weights: vec![w; indices.len()],
+            indices,
+            n_hull: 0,
+            method,
+        }
+    }
+
+    fn reduce_scores(&self, design: &Design, _pool: &Pool) -> Vec<f64> {
+        vec![1.0; design.n]
+    }
+}
+
+/// The generic budgeted sampler behind every score-driven method:
+/// importance sampling on a [`ScoreStrategy`], optionally composed with
+/// Algorithm 1's convex-hull component under the α-budget split
+/// (`split = Some(α)` spends ⌊α·k⌋ on the score sample and the rest on
+/// hull points of the derivative cloud).
+pub struct HybridSampler {
+    pub scores: &'static dyn ScoreStrategy,
+    pub split: Option<f64>,
+}
+
+impl MethodSampler for HybridSampler {
+    fn sample(
+        &self,
+        design: &Design,
+        method: Method,
+        k: usize,
+        rng: &mut Rng,
+        pool: &Pool,
+    ) -> Coreset {
+        let (k1, k2) = match self.split {
+            Some(alpha) => {
+                let k1 = ((alpha * k as f64).floor() as usize).clamp(1, k);
+                (k1, k - k1)
+            }
+            None => (k, 0),
+        };
+        let mut cs = match self.scores.scores(design, pool) {
+            Ok(s) => importance_sample(&s, k1, rng, method),
+            Err(_) => UniformSampler.sample(design, method, k1, rng, pool),
+        };
+        if k2 > 0 {
+            // hull over derivative points {a'_ij}: map point index
+            // (i·J + j) back to observation index i
+            let dp = design.deriv_points();
+            let hull_pts = select_hull_points_with(&dp, k2, rng, pool);
+            let mut seen: std::collections::HashSet<usize> =
+                cs.indices.iter().cloned().collect();
+            for p in hull_pts {
+                let obs = p / design.j;
+                if seen.insert(obs) {
+                    cs.indices.push(obs);
+                    cs.weights.push(1.0); // hull points get weight 1
+                    cs.n_hull += 1;
+                }
+            }
+        }
+        cs
+    }
+
+    fn reduce_scores(&self, design: &Design, pool: &Pool) -> Vec<f64> {
+        self.scores
+            .scores(design, pool)
+            .unwrap_or_else(|_| vec![1.0; design.n])
+    }
+
+    fn hull_fraction(&self) -> Option<f64> {
+        self.split.map(|alpha| 1.0 - alpha)
+    }
+}
+
+/// Draw `k` i.i.d. indices with probabilities ∝ scores; weight 1/(k p).
+fn importance_sample(scores: &[f64], k: usize, rng: &mut Rng, method: Method) -> Coreset {
+    let table = AliasTable::new(scores);
+    let mut indices = Vec::with_capacity(k);
+    let mut weights = Vec::with_capacity(k);
+    for _ in 0..k {
+        let i = table.sample(rng);
+        indices.push(i);
+        weights.push(1.0 / (k as f64 * table.p(i)));
+    }
+    Coreset {
+        indices,
+        weights,
+        n_hull: 0,
+        method,
+    }
+}
+
+/// One registry row: the `Method` tag, its canonical CLI/config name, a
+/// one-line description (drives `--help` and the README table) and the
+/// sampler implementing it.
+pub struct StrategyEntry {
+    pub method: Method,
+    pub name: &'static str,
+    pub describe: &'static str,
+    pub sampler: &'static dyn MethodSampler,
+}
+
+static L2_HULL: HybridSampler = HybridSampler {
+    scores: &L2Sensitivity,
+    split: Some(HULL_SPLIT),
+};
+static L2_ONLY: HybridSampler = HybridSampler {
+    scores: &L2Sensitivity,
+    split: None,
+};
+static RIDGE_LSS: HybridSampler = HybridSampler {
+    scores: &RidgeLeverage,
+    split: None,
+};
+static ROOT_L2: HybridSampler = HybridSampler {
+    scores: &RootLeverage,
+    split: None,
+};
+static ELLIPSOID: HybridSampler = HybridSampler {
+    scores: &EllipsoidScores,
+    split: None,
+};
+static ELLIPSOID_HULL: HybridSampler = HybridSampler {
+    scores: &EllipsoidScores,
+    split: Some(HULL_SPLIT),
+};
+static UNIFORM: UniformSampler = UniformSampler;
+
+/// The registry — the single source of truth for which methods exist.
+/// Order is the order benches and tables iterate (`Method::all()`);
+/// Uniform stays last because table drivers use the last row as the
+/// baseline.
+pub static REGISTRY: &[StrategyEntry] = &[
+    StrategyEntry {
+        method: Method::L2Hull,
+        name: "l2-hull",
+        describe: "Algorithm 1 hybrid: ℓ₂ sensitivity sample + convex hull of a' (α = 0.8)",
+        sampler: &L2_HULL,
+    },
+    StrategyEntry {
+        method: Method::L2Only,
+        name: "l2-only",
+        describe: "pure ℓ₂ leverage-score (sensitivity proxy) importance sampling",
+        sampler: &L2_ONLY,
+    },
+    StrategyEntry {
+        method: Method::RidgeLss,
+        name: "ridge-lss",
+        describe: "ridge leverage scores baseline (Table 2)",
+        sampler: &RIDGE_LSS,
+    },
+    StrategyEntry {
+        method: Method::RootL2,
+        name: "root-l2",
+        describe: "root leverage scores baseline: p_i ∝ √u_i",
+        sampler: &ROOT_L2,
+    },
+    StrategyEntry {
+        method: Method::Ellipsoid,
+        name: "ellipsoid",
+        describe: "John-ellipsoid quadratic-form scores (§4, non-Gaussian log-concave copulas)",
+        sampler: &ELLIPSOID,
+    },
+    StrategyEntry {
+        method: Method::EllipsoidHull,
+        name: "ellipsoid-hull",
+        describe: "ellipsoid scores + convex hull of a' under the α = 0.8 split",
+        sampler: &ELLIPSOID_HULL,
+    },
+    StrategyEntry {
+        method: Method::Uniform,
+        name: "uniform",
+        describe: "uniform subsampling without replacement, weights n/k",
+        sampler: &UNIFORM,
+    },
+];
+
+fn entry(method: Method) -> &'static StrategyEntry {
+    REGISTRY
+        .iter()
+        .find(|e| e.method == method)
+        .expect("method missing from strategy registry")
+}
+
+/// Registry-driven enumeration (replaces the hard-coded `[Method; 5]`).
+pub fn all_methods() -> Vec<Method> {
+    REGISTRY.iter().map(|e| e.method).collect()
+}
+
+/// Canonical CLI/config name of a method.
+pub fn method_name(method: Method) -> &'static str {
+    entry(method).name
+}
+
+/// One-line description of a method.
+pub fn method_describe(method: Method) -> &'static str {
+    entry(method).describe
+}
+
+/// All registered names, registry order.
+pub fn method_names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|e| e.name).collect()
+}
+
+/// Parse a config/CLI method string. The error lists every valid name
+/// so `--set method=typo` is self-explaining.
+pub fn parse_method(name: &str) -> crate::util::error::Result<Method> {
+    REGISTRY
+        .iter()
+        .find(|e| e.name == name)
+        .map(|e| e.method)
+        .ok_or_else(|| {
+            crate::anyhow!(
+                "unknown method `{name}` (valid: {})",
+                method_names().join(", ")
+            )
+        })
+}
+
+/// The sampler behind a method tag — the system's only dispatch point.
+pub fn sampler(method: Method) -> &'static dyn MethodSampler {
+    entry(method).sampler
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn toy_design(n: usize, seed: u64) -> Design {
+        let mut rng = Rng::new(seed);
+        let data = Mat::from_vec(n, 2, (0..n * 2).map(|_| rng.normal()).collect());
+        Design::build(&data, 5, 0.01)
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_roundtrip() {
+        let names = method_names();
+        let set: std::collections::HashSet<_> = names.iter().collect();
+        assert_eq!(set.len(), names.len(), "duplicate registry names");
+        for m in all_methods() {
+            assert_eq!(parse_method(method_name(m)).unwrap(), m);
+            assert!(!method_describe(m).is_empty());
+        }
+    }
+
+    #[test]
+    fn parse_error_lists_every_valid_name() {
+        let err = parse_method("not-a-method").unwrap_err();
+        let msg = format!("{err:#}");
+        for name in method_names() {
+            assert!(msg.contains(name), "error should list `{name}`: {msg}");
+        }
+    }
+
+    #[test]
+    fn uniform_is_last_for_table_baselines() {
+        assert_eq!(all_methods().last(), Some(&Method::Uniform));
+    }
+
+    #[test]
+    fn every_strategy_scores_a_healthy_design() {
+        let design = toy_design(300, 5);
+        let pool = Pool::new(1);
+        for s in [
+            &L2Sensitivity as &dyn ScoreStrategy,
+            &RidgeLeverage,
+            &RootLeverage,
+            &EllipsoidScores,
+        ] {
+            let scores = s.scores(&design, &pool).unwrap();
+            assert_eq!(scores.len(), 300, "{} length", s.key());
+            assert!(
+                scores.iter().all(|&x| x.is_finite() && x > 0.0),
+                "{} scores must be positive",
+                s.key()
+            );
+        }
+    }
+
+    #[test]
+    fn ellipsoid_rejects_short_designs() {
+        // n = 8 ≤ dJ + 1 = 11 → Err, so samplers fall back to uniform
+        let design = toy_design(8, 6);
+        assert!(EllipsoidScores.scores(&design, &Pool::new(1)).is_err());
+    }
+
+    #[test]
+    fn hull_fraction_complements_split() {
+        assert_eq!(L2_ONLY.hull_fraction(), None);
+        let f = L2_HULL.hull_fraction().unwrap();
+        assert!((f - (1.0 - HULL_SPLIT)).abs() < 1e-15);
+    }
+}

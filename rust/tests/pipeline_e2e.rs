@@ -109,6 +109,42 @@ fn streaming_hull_deterministic_across_consumers() {
 }
 
 #[test]
+fn streaming_ellipsoid_deterministic_across_consumers() {
+    // ISSUE 3 acceptance: `--method ellipsoid-hull` runs end to end
+    // through the streaming pipeline — the Khachiyan rounding and hull
+    // selection execute inside every leaf/tree reduce via the strategy
+    // registry — and per-shard RNGs + the in-order reorder fold keep
+    // the final coreset bit-identical for any consumer count.
+    let make_source = |seed: u64| {
+        let mut rng = Rng::new(seed);
+        GenShards::new(
+            move |n| Dgp::CopulaComplex.generate(n, &mut rng),
+            2,
+            6_000,
+            1_000,
+        )
+    };
+    let run = |consumers: usize| {
+        let mut p = StreamingPipeline::new(Method::EllipsoidHull, 50, 6);
+        p.consumers = consumers;
+        p.run(make_source(73))
+    };
+    let (c1, s1) = run(1);
+    let (c4, s4) = run(4);
+    assert_eq!(s1.n_seen, 6_000);
+    assert_eq!(s1.n_seen, s4.n_seen);
+    assert_eq!(s1.n_shards, s4.n_shards);
+    assert!(c1.len() <= 50 && !c1.is_empty());
+    assert_eq!(c1.weights.len(), c4.weights.len(), "coreset sizes differ");
+    for (i, (a, b)) in c1.weights.iter().zip(&c4.weights).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "weight {i}: {a} vs {b}");
+    }
+    for (i, (a, b)) in c1.rows.data.iter().zip(&c4.rows.data).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "row value {i}: {a} vs {b}");
+    }
+}
+
+#[test]
 fn backpressure_bounds_queue() {
     let pipeline = {
         let mut p = StreamingPipeline::new(Method::Uniform, 50, 5);
@@ -159,6 +195,28 @@ fn cli_parses_and_validates() {
     assert_eq!(cli.shards, 4);
     assert!(Cli::parse(&["fit".into(), "--bogus".into()]).is_err());
     assert!(Cli::parse(&["fit".into(), "--set".into(), "zzz=1".into()]).is_err());
+}
+
+#[test]
+fn cli_method_roundtrip_every_registered_name() {
+    // ISSUE 3 satellite: parse → name() → parse is the identity for
+    // every registered strategy, through the real CLI path
+    for m in Method::all() {
+        let cli = Cli::parse(&[
+            "fit".into(),
+            "--set".into(),
+            format!("method={}", m.name()),
+        ])
+        .unwrap();
+        assert_eq!(cli.config.method, m);
+        assert_eq!(cli.config.method.name(), m.name());
+    }
+    // unknown method: the error must list every valid name
+    let err = Cli::parse(&["fit".into(), "--set".into(), "method=bogus".into()]).unwrap_err();
+    let msg = format!("{err:#}");
+    for m in Method::all() {
+        assert!(msg.contains(m.name()), "error should list {}: {msg}", m.name());
+    }
 }
 
 #[test]

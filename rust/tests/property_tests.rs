@@ -120,13 +120,10 @@ fn prop_coresets_valid_for_any_method_and_size() {
             let n = gen::size(rng, 30, 400);
             let k = gen::size(rng, 5, n);
             let data = Mat::from_vec(n, 2, gen::vec_normal(rng, n * 2));
-            let m = match rng.usize(5) {
-                0 => Method::Uniform,
-                1 => Method::L2Only,
-                2 => Method::L2Hull,
-                3 => Method::RidgeLss,
-                _ => Method::RootL2,
-            };
+            // registry-driven: new strategies are property-tested the
+            // moment they are registered
+            let all = Method::all();
+            let m = all[rng.usize(all.len())];
             (data, k, m, rng.next_u64())
         },
         |(data, k, m, seed)| {
