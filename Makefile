@@ -4,7 +4,7 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: build test check ci fmt clippy bench-quick bench-perf artifacts
+.PHONY: build test check ci fmt clippy doc example bench-quick bench-perf artifacts
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -18,13 +18,21 @@ fmt:
 clippy:
 	$(CARGO) clippy --manifest-path $(MANIFEST) --all-targets -- -D warnings
 
-# The tier-1 gate: formatting, lints as errors, full test suite.
-check: fmt clippy test
+# Rustdoc gate for the public API (broken intra-doc links etc. fail).
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --manifest-path $(MANIFEST)
 
-# What .github/workflows/ci.yml runs: fmt --check, build, tests, and
-# the lib/bin clippy pass (the all-targets lint stays in `make check`
-# for local use).
-ci: fmt build test
+# The facade walkthrough: builder → session → fit → queries.
+example:
+	$(CARGO) run --release --manifest-path $(MANIFEST) --example quickstart
+
+# The tier-1 gate: formatting, lints as errors, docs, full test suite.
+check: fmt clippy doc test
+
+# What .github/workflows/ci.yml runs: fmt --check, build, tests, the
+# rustdoc gate, and the lib/bin clippy pass (the all-targets lint stays
+# in `make check` for local use).
+ci: fmt build test doc
 	$(CARGO) clippy --manifest-path $(MANIFEST) -- -D warnings
 
 # Hot-path microbench at the smallest scale (CI smoke): serial vs

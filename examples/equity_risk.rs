@@ -1,48 +1,56 @@
 //! Financial scenario (paper §3.2 / §E.2.2): joint modeling of 10
 //! volatility-clustered, heavy-tailed stock-return series with a
-//! Gaussian-copula MCTM, fitted from a coreset. Reports the fitted
-//! dependence structure (λ-implied marginal variances) and tail
-//! quantiles of the fitted margins — the quantities a risk system
-//! consumes.
+//! Gaussian-copula MCTM, fitted from a coreset through the facade.
+//! Reports the fitted dependence structure (λ-implied marginal
+//! variances) and tail quantiles of the fitted margins — the
+//! quantities a risk system consumes, served straight off the
+//! `FittedModel` query surface.
 //!
 //! Run: cargo run --release --example equity_risk
 
-use mctm_coreset::coordinator::experiment::{design_of, full_fit};
-use mctm_coreset::coreset::{build_coreset, Method};
 use mctm_coreset::data::equity;
-use mctm_coreset::fit::{fit_native, FitOptions};
 use mctm_coreset::mctm::density::marginal_sigmas;
-use mctm_coreset::mctm::{lambda_error, ModelSpec};
-use mctm_coreset::util::rng::Rng;
+use mctm_coreset::prelude::*;
 
-fn main() {
+fn main() -> Result<(), ApiError> {
     let (n_days, n_stocks, k) = (10_000, 10, 300);
     let mut rng = Rng::new(1985);
     let returns = equity::generate(n_days, n_stocks, &mut rng);
     println!("{n_days} trading days × {n_stocks} stocks (~40y of daily returns)");
 
-    let design = design_of(&returns, 7);
-    let spec = ModelSpec::new(n_stocks, 7);
     let opts = FitOptions { max_iters: 200, ..Default::default() };
 
     println!("fitting full data (this is the slow path the paper attacks)...");
-    let full = full_fit(&design, spec, &opts);
-    println!("  full: nll={:.1} in {:.1}s", full.fit.nll, full.seconds);
+    let full = SessionBuilder::new()
+        .budget(n_days) // identity coreset ⇒ exact full fit
+        .seed(11)
+        .fit_options(opts.clone())
+        .build()?
+        .fit(&returns)?;
+    println!(
+        "  full: nll={:.1} in {:.1}s",
+        full.diagnostics().fit_nll,
+        full.diagnostics().fit_seconds
+    );
 
-    let cs = build_coreset(&design, Method::L2Hull, k, &mut rng);
-    let sub = design.select(&cs.indices);
-    let fit = fit_native(spec, &sub, cs.weights.clone(), &opts);
+    let model = SessionBuilder::new()
+        .method("l2-hull")
+        .budget(k)
+        .seed(11)
+        .fit_options(opts)
+        .build()?
+        .fit(&returns)?;
     println!(
         "  coreset (k={}): nll={:.1}, λ-error vs full = {:.3}",
-        cs.len(),
-        fit.nll,
-        lambda_error(&fit.params, &full.fit.params)
+        model.diagnostics().coreset.size,
+        model.diagnostics().fit_nll,
+        lambda_error(model.params(), full.params())
     );
 
     // implied dependence: σ_j of h̃_j(Y) under the fitted copula — a
     // proxy for how strongly stock j loads on the common structure
-    let sig_full = marginal_sigmas(&full.fit.params);
-    let sig_core = marginal_sigmas(&fit.params);
+    let sig_full = marginal_sigmas(full.params());
+    let sig_core = marginal_sigmas(model.params());
     println!("\nimplied marginal sigmas (full vs coreset):");
     for s in 0..n_stocks {
         println!("  stock {s:>2}: {:.3} vs {:.3}", sig_full[s], sig_core[s]);
@@ -54,28 +62,12 @@ fn main() {
         .fold(0.0f64, f64::max);
     println!("max relative sigma deviation: {:.1}%", 100.0 * max_rel);
 
-    // tail behaviour: 1% left-tail quantile of each fitted margin via
-    // inverse transform on a y-grid (risk = VaR-like number)
+    // tail behaviour straight off the query surface: the 1% left-tail
+    // quantile of each fitted margin (a VaR-like number)
     println!("\n1% left-tail (VaR-like) of margin 0:");
-    for (label, params) in [("full", &full.fit.params), ("coreset", &fit.params)] {
-        let mut lo = design.scaler.mins[0];
-        let hi = design.scaler.maxs[0];
-        // integrate the marginal density to the 1% point
-        let m = 4000;
-        let step = (hi - lo) / m as f64;
-        let mut acc = 0.0;
-        let mut var99 = lo;
-        for i in 0..m {
-            let y = lo + step * (i as f64 + 0.5);
-            acc += mctm_coreset::mctm::marginal_density(params, &design.scaler, 0, y) * step;
-            if acc >= 0.01 {
-                var99 = y;
-                break;
-            }
-        }
-        println!("  {label:>7}: {var99:+.4} (daily return)");
-        lo = var99; // silence unused warning paranoia
-        let _ = lo;
+    for (label, m) in [("full", &full), ("coreset", &model)] {
+        println!("  {label:>7}: {:+.4} (daily return)", m.marginal_quantile(0, 0.01));
     }
     println!("\nequity_risk OK");
+    Ok(())
 }

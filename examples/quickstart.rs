@@ -1,69 +1,91 @@
-//! Quickstart: build an ℓ₂-hull coreset of 10 000 correlated samples,
-//! fit the MCTM on 30 weighted points, and compare against the full fit.
+//! Quickstart on the PR-4 facade: builder → session → fitted model.
+//! Build an ℓ₂-hull coreset of 10 000 correlated samples, fit the MCTM
+//! on ~30 weighted points, compare against the full fit, then serve
+//! queries (density, CDF, quantiles, conditional samples) from the
+//! fitted model.
 //!
-//! Run: cargo run --release --example quickstart
+//! Run: make example   (or: cargo run --release --example quickstart)
 
-use mctm_coreset::coordinator::experiment::{design_of, full_fit};
-use mctm_coreset::coreset::{build_coreset, Method};
-use mctm_coreset::data::dgp::Dgp;
-use mctm_coreset::fit::{fit_native, FitOptions};
-use mctm_coreset::mctm::{self, lambda_error, loglik_ratio, theta_l2, ModelSpec};
-use mctm_coreset::util::rng::Rng;
-use mctm_coreset::util::Stopwatch;
+use mctm_coreset::prelude::*;
 
-fn main() {
-    // 1. data: 10 000 samples of a correlated bivariate distribution
+fn main() -> Result<(), ApiError> {
+    // 1. data: 10 000 samples of a correlated bivariate distribution.
+    //    Any DataSource works here — an in-memory Mat, a DGP generator,
+    //    or a shard stream (which would switch fit() to Merge & Reduce).
     let mut rng = Rng::new(42);
     let data = Dgp::BivariateNormal.generate(10_000, &mut rng);
     println!("generated {} x {} samples", data.rows, data.cols);
 
-    // 2. Bernstein design (d = 7 basis functions per margin)
-    let design = design_of(&data, 7);
-    let spec = ModelSpec::new(2, 7);
-    let opts = FitOptions::default();
-
-    // 3. full-data baseline
-    let sw = Stopwatch::start();
-    let full = full_fit(&design, spec, &opts);
+    // 2. full-data baseline through the same facade: budget ≥ n is the
+    //    identity coreset, i.e. an exact full fit
+    let full = SessionBuilder::new()
+        .budget(data.rows)
+        .seed(7)
+        .build()?
+        .fit(&data)?;
     println!(
         "full fit     : nll = {:>10.2}  ({} iters, {:.2}s)",
-        full.fit.nll,
-        full.fit.iters,
-        sw.secs()
+        full.diagnostics().fit_nll,
+        full.diagnostics().fit_iters,
+        full.diagnostics().fit_seconds
     );
 
-    // 4. the paper's ℓ₂-hull coreset: 30 points instead of 10 000
-    let cs = build_coreset(&design, Method::L2Hull, 30, &mut rng);
+    // 3. the paper's ℓ₂-hull coreset: 30 points instead of 10 000
+    let session = SessionBuilder::new()
+        .method("l2-hull")
+        .budget(30)
+        .seed(7)
+        .build()?;
+    let model = session.fit(&data)?;
+    let diag = model.diagnostics();
     println!(
         "coreset      : {} points ({} sensitivity-sampled + {} hull), total weight {:.0}",
-        cs.len(),
-        cs.len() - cs.n_hull,
-        cs.n_hull,
-        cs.total_weight()
+        diag.coreset.size,
+        diag.coreset.size - diag.coreset.n_hull,
+        diag.coreset.n_hull,
+        diag.coreset.total_weight
     );
-
-    // 5. fit on the weighted coreset
-    let sw = Stopwatch::start();
-    let sub = design.select(&cs.indices);
-    let fit = fit_native(spec, &sub, cs.weights.clone(), &opts);
     println!(
         "coreset fit  : nll = {:>10.2}  ({} iters, {:.3}s)",
-        fit.nll,
-        fit.iters,
-        sw.secs()
+        diag.fit_nll, diag.fit_iters, diag.fit_seconds
     );
 
-    // 6. quality: evaluate coreset params on the FULL data
-    let nll_on_full = mctm::nll(&design, &[], &fit.params);
-    let lr = loglik_ratio(nll_on_full, full.fit.nll, design.n, design.j);
+    // 4. quality: evaluate coreset params on the FULL data
+    let lr = loglik_ratio(
+        model.nll(&data),
+        full.diagnostics().fit_nll,
+        data.rows,
+        data.cols,
+    );
     println!("log-likelihood ratio (→1 is perfect): {lr:.4}");
-    println!("theta L2 distance : {:.4}", theta_l2(&fit.params, &full.fit.params));
-    println!("lambda error      : {:.4}", lambda_error(&fit.params, &full.fit.params));
+    println!(
+        "theta L2 distance : {:.4}",
+        theta_l2(model.params(), full.params())
+    );
+    println!(
+        "lambda error      : {:.4}",
+        lambda_error(model.params(), full.params())
+    );
     println!(
         "fitted dependence λ₂₁: full = {:+.3}, coreset = {:+.3}",
-        full.fit.params.lambda(1, 0),
-        fit.params.lambda(1, 0)
+        full.params().lambda(1, 0),
+        model.params().lambda(1, 0)
     );
+
+    // 5. the model is a query server: densities, CDFs, quantiles and
+    //    conditional draws — and it is Send + Sync, so many threads can
+    //    hit one instance concurrently
+    println!(
+        "median / 90% quantile of margin 0: {:+.3} / {:+.3}",
+        model.marginal_quantile(0, 0.5),
+        model.marginal_quantile(0, 0.9)
+    );
+    println!("log-density at the origin: {:.3}", model.log_density(&[0.0, 0.0]));
+    let cond = model.sample_conditional(&[1.5], 500, &mut rng);
+    let mean_y2 = (0..cond.rows).map(|r| cond.at(r, 1)).sum::<f64>() / cond.rows as f64;
+    println!("E[y₂ | y₁ = 1.5] ≈ {mean_y2:+.3} (ρ = 0.7 ⇒ expect ≈ +1.05)");
+
     assert!(lr < 2.5, "coreset fit should approximate the full fit");
     println!("\nquickstart OK — 30 points reproduced the 10k-sample fit");
+    Ok(())
 }

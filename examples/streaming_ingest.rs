@@ -2,20 +2,15 @@
 //! over a shard stream with bounded memory via Merge & Reduce — the
 //! producer thread is backpressured by a bounded channel, so the
 //! pipeline never buffers more than `queue_cap` shards no matter how
-//! large the stream is. The final coreset is fitted like any other.
+//! large the stream is. Through the facade this is just `Session::fit`
+//! on a shard source: the session notices the source streams and takes
+//! the Merge & Reduce path automatically.
 //!
 //! Run: cargo run --release --example streaming_ingest
 
-use mctm_coreset::coordinator::experiment::design_of;
-use mctm_coreset::coordinator::pipeline::StreamingPipeline;
-use mctm_coreset::coreset::Method;
-use mctm_coreset::data::dgp::Dgp;
-use mctm_coreset::data::GenShards;
-use mctm_coreset::fit::{fit_native, FitOptions};
-use mctm_coreset::mctm::{self, loglik_ratio, ModelSpec};
-use mctm_coreset::util::rng::Rng;
+use mctm_coreset::prelude::*;
 
-fn main() {
+fn main() -> Result<(), ApiError> {
     let (total, shard, k) = (200_000usize, 10_000usize, 100usize);
     println!("streaming {total} rows in shards of {shard} (Merge & Reduce, k={k})");
 
@@ -27,42 +22,47 @@ fn main() {
         total,
         shard,
     );
-    let mut pipeline = StreamingPipeline::new(Method::L2Hull, k, 7);
-    pipeline.queue_cap = 2; // aggressive backpressure for the demo
-    let (coreset, stats) = pipeline.run(source);
+    let session = SessionBuilder::new()
+        .method("l2-hull")
+        .budget(k)
+        .basis_size(7)
+        .queue_cap(2) // aggressive backpressure for the demo
+        .build()?;
+    let model = session.fit(source)?;
+    let diag = model.diagnostics();
+    let stats = diag.coreset.stream.as_ref().expect("shard sources stream");
     println!(
         "stream done: {} shards, {} reduce steps, peak queue ≤ {}, {:.1}s",
         stats.n_shards, stats.n_reduces, stats.peak_queue, stats.seconds
     );
     println!(
         "final coreset: {} rows, total weight {:.0} (n = {})",
-        coreset.len(),
-        coreset.weights.iter().sum::<f64>(),
-        stats.n_seen
+        diag.coreset.size, diag.coreset.total_weight, stats.n_seen
     );
-
-    // fit the streamed coreset
-    let spec = ModelSpec::new(2, 7);
-    let opts = FitOptions::default();
-    let design = design_of(&coreset.rows, 7);
-    let fit = fit_native(spec, &design, coreset.weights.clone(), &opts);
-    println!("fit on streamed coreset: nll={:.2} ({} iters)", fit.nll, fit.iters);
+    println!(
+        "fit on streamed coreset: nll={:.2} ({} iters)",
+        diag.fit_nll, diag.fit_iters
+    );
 
     // quality check vs an in-memory batch fit on a fresh holdout sample
     let mut rng = Rng::new(77);
     let holdout = Dgp::NormalMixture.generate(20_000, &mut rng);
-    let ho_design = design_of(&holdout, 7);
-    let batch = fit_native(spec, &ho_design, Vec::new(), &opts);
+    let batch = SessionBuilder::new()
+        .budget(20_000) // identity coreset ⇒ exact batch fit
+        .basis_size(7)
+        .build()?
+        .fit(&holdout)?;
     // the streamed fit's params live on the streamed coreset's scaled
-    // axis — evaluate on a holdout design sharing that scaler
-    let ho_stream_design = mctm_coreset::basis::Design::build_with_scaler(
-        &holdout,
-        7,
-        design.scaler.clone(),
+    // axis — FittedModel::nll evaluates them with that scaler, so no
+    // manual design plumbing is needed
+    let lr = loglik_ratio(
+        model.nll(&holdout),
+        batch.diagnostics().fit_nll,
+        holdout.rows,
+        2,
     );
-    let nll_stream_on_holdout = mctm::nll(&ho_stream_design, &[], &fit.params);
-    let lr = loglik_ratio(nll_stream_on_holdout, batch.nll, ho_design.n, 2);
     println!("holdout log-lik ratio (streamed params vs batch fit): {lr:.4}");
     assert!(lr < 1.5, "streamed coreset lost too much: {lr}");
     println!("streaming_ingest OK");
+    Ok(())
 }

@@ -4,19 +4,18 @@
 //!        skew-t need a larger hull component at fixed k)
 //!   A3 — Bernstein basis size d (model flexibility vs coreset size)
 //!   A4 — Merge & Reduce intermediate buffer factor (accuracy vs memory)
+//!
+//! All coreset construction and fitting is driven through the facade
+//! (`mctm_coreset::prelude`): sessions for the samples, `FittedModel`
+//! for the metrics.
 
 use mctm_coreset::benchsupport::{banner, bench_fit_options, results_dir, Scale};
-use mctm_coreset::coordinator::experiment::{design_of, full_fit, run_method, TableRunner};
-use mctm_coreset::coordinator::pipeline::StreamingPipeline;
+use mctm_coreset::coordinator::experiment::{design_of, full_fit, TableRunner};
+use mctm_coreset::coreset::hull::select_hull_points;
 use mctm_coreset::coreset::samplers::HULL_SPLIT;
-use mctm_coreset::coreset::Method;
-use mctm_coreset::data::dgp::Dgp;
-use mctm_coreset::data::GenShards;
 use mctm_coreset::fit::fit_native;
-use mctm_coreset::mctm::{self, loglik_ratio, ModelSpec};
+use mctm_coreset::prelude::*;
 use mctm_coreset::util::report::Table;
-use mctm_coreset::util::rng::Rng;
-use mctm_coreset::util::{fmt_ms, mean};
 
 fn main() {
     let scale = Scale::from_env();
@@ -44,43 +43,48 @@ fn ablation_hull_split(n: usize, reps: usize, scale: Scale) {
         let opts = bench_fit_options(scale);
         let full = full_fit(&design, spec, &opts);
         for hull_frac in [0.0, 0.1, 0.2, 0.4, 0.6] {
-            // emulate the split by building the two parts explicitly
+            // emulate the split by building the two parts explicitly:
+            // the sensitivity part through the facade's sketching half,
+            // the hull part via the geometry layer
             let mut lrs = Vec::new();
             let mut l2s = Vec::new();
             for rep in 0..reps {
-                let mut rng = Rng::new(0xAB2 + rep as u64);
                 let k2 = (hull_frac * k as f64).round() as usize;
                 let k1 = k - k2;
-                // sensitivity part
-                let mut cs = mctm_coreset::coreset::build_coreset(
-                    &design,
-                    Method::L2Only,
-                    k1.max(1),
-                    &mut rng,
-                );
+                let session = SessionBuilder::new()
+                    .method_tag(Method::L2Only)
+                    .budget(k1.max(1))
+                    .basis_size(7)
+                    .seed(0xAB2 + rep as u64)
+                    .fit_options(opts.clone())
+                    .build()
+                    .expect("valid ablation session");
+                let cs = session.coreset(&data).expect("non-empty data");
+                let mut indices = cs.indices.clone().expect("batch path");
+                let mut weights = cs.weights.clone();
                 if k2 > 0 {
+                    let mut hull_rng = Rng::new(0xAB8 + rep as u64);
                     let dp = design.deriv_points();
-                    let hull =
-                        mctm_coreset::coreset::hull::select_hull_points(&dp, k2, &mut rng);
+                    let hull = select_hull_points(&dp, k2, &mut hull_rng);
                     let seen: std::collections::HashSet<usize> =
-                        cs.indices.iter().cloned().collect();
+                        indices.iter().cloned().collect();
                     for p in hull {
                         let obs = p / design.j;
                         if !seen.contains(&obs) {
-                            cs.indices.push(obs);
-                            cs.weights.push(1.0);
+                            indices.push(obs);
+                            weights.push(1.0);
                         }
                     }
                 }
-                let sub = design.select(&cs.indices);
-                let fit = fit_native(spec, &sub, cs.weights.clone(), &opts);
+                let sub = design.select(&indices);
+                let fit = fit_native(spec, &sub, weights, &opts);
                 lrs.push(loglik_ratio(
-                    mctm::nll(&design, &[], &fit.params),
+                    mctm_coreset::mctm::nll(&design, &[], &fit.params),
                     full.fit.nll,
                     design.n,
                     design.j,
                 ));
-                l2s.push(mctm::theta_l2(&fit.params, &full.fit.params));
+                l2s.push(theta_l2(&fit.params, &full.fit.params));
             }
             table.row(vec![
                 dgp.name().into(),
@@ -105,15 +109,7 @@ fn ablation_degree(n: usize, reps: usize, scale: Scale) {
     for d in [4usize, 7, 10] {
         let runner = TableRunner::new(&data, d, bench_fit_options(scale), 0xAB4);
         for method in [Method::L2Hull, Method::Uniform] {
-            let stats = run_method(
-                &runner.design,
-                &runner.full,
-                method,
-                100,
-                reps,
-                0xAB5,
-                &runner.opts,
-            );
+            let stats = runner.run(method, 100, reps);
             table.row(vec![
                 format!("{d}"),
                 method.name().into(),
@@ -127,7 +123,8 @@ fn ablation_degree(n: usize, reps: usize, scale: Scale) {
 }
 
 /// A4: Merge & Reduce buffer factor — streamed-coreset quality vs the
-/// intermediate memory multiplier.
+/// intermediate memory multiplier, driven end to end through
+/// `Session::fit` on a shard source.
 fn ablation_buffer_factor(scale: Scale) {
     let total = scale.pick(10_000, 40_000, 100_000);
     let k = 100;
@@ -153,19 +150,20 @@ fn ablation_buffer_factor(scale: Scale) {
                 total,
                 total / 10,
             );
-            let mut pipeline = StreamingPipeline::new(Method::L2Hull, k, 6);
-            pipeline.seed = rep;
-            pipeline.buffer_factor = factor;
-            let (coreset, _) = pipeline.run(source);
-            let design = design_of(&coreset.rows, 6);
-            let fit = fit_native(spec, &design, coreset.weights.clone(), &opts);
-            let eval = mctm_coreset::basis::Design::build_with_scaler(
-                &holdout,
-                6,
-                design.scaler.clone(),
-            );
+            let session = SessionBuilder::new()
+                .method_tag(Method::L2Hull)
+                .budget(k)
+                .basis_size(6)
+                .seed(rep)
+                .buffer_factor(factor)
+                .fit_options(opts.clone())
+                .build()
+                .expect("valid streaming session");
+            let model = session.fit(source).expect("non-empty stream");
+            // the streamed fit's params live on the streamed coreset's
+            // scaled axis — FittedModel::nll evaluates with that scaler
             lrs.push(loglik_ratio(
-                mctm::nll(&eval, &[], &fit.params),
+                model.nll(&holdout),
                 batch.nll,
                 ho_design.n,
                 2,

@@ -2,15 +2,14 @@
 //! bivariate-normal DGP under coresets of size k ∈ {50, 100, 500} built
 //! by each method, over 10 replicate trials, against the true N(0,1)
 //! marginal.
+//!
+//! Each replicate is one facade run: `SessionBuilder` → `Session::fit`
+//! → `FittedModel::marginal_density` — the same query surface library
+//! users hit.
 
 use mctm_coreset::benchsupport::{banner, bench_fit_options, results_dir, Scale};
-use mctm_coreset::coordinator::experiment::design_of;
-use mctm_coreset::coreset::{build_coreset, Method};
-use mctm_coreset::data::dgp::Dgp;
-use mctm_coreset::fit::fit_native;
-use mctm_coreset::mctm::{marginal_density, ModelSpec};
+use mctm_coreset::prelude::*;
 use mctm_coreset::util::report::write_series_csv;
-use mctm_coreset::util::rng::Rng;
 use mctm_coreset::util::special::norm_pdf;
 
 fn main() {
@@ -25,8 +24,6 @@ fn main() {
 
     let mut rng = Rng::new(1011);
     let data = Dgp::BivariateNormal.generate(n, &mut rng);
-    let design = design_of(&data, 7);
-    let spec = ModelSpec::new(2, 7);
     let opts = bench_fit_options(scale);
 
     // density evaluation grid over both margins
@@ -45,13 +42,17 @@ fn main() {
                 // mean predicted density over replicate coreset fits
                 let mut acc = vec![0.0; grid.len()];
                 for rep in 0..reps {
-                    let mut rng = Rng::new(2000 + rep as u64);
-                    let cs = build_coreset(&design, method, k, &mut rng);
-                    let sub = design.select(&cs.indices);
-                    let fit = fit_native(spec, &sub, cs.weights.clone(), &opts);
+                    let session = SessionBuilder::new()
+                        .method_tag(method)
+                        .budget(k)
+                        .basis_size(7)
+                        .seed(2000 + rep as u64)
+                        .fit_options(opts.clone())
+                        .build()
+                        .expect("valid bench session");
+                    let model = session.fit(&data).expect("non-empty data");
                     for (gi, &y) in grid.iter().enumerate() {
-                        acc[gi] += marginal_density(&fit.params, &design.scaler, margin, y)
-                            / reps as f64;
+                        acc[gi] += model.marginal_density(margin, y) / reps as f64;
                     }
                 }
                 cols.push((format!("{}_k{k}", method.name()), acc));

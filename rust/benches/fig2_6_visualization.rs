@@ -2,13 +2,27 @@
 //! a ~100-point coreset from 1 000 original samples under each sampling
 //! method (uniform / ℓ₂-sensitivity / ℓ₂-hull). Output: tidy CSV with
 //! (dgp, method, selected y1, y2, weight) — plus the raw cloud.
+//!
+//! Coresets are built through the facade's sketching half
+//! (`Session::coreset`), so this bench exercises exactly the public
+//! entry point.
 
 use mctm_coreset::benchsupport::{banner, results_dir, Scale};
-use mctm_coreset::coordinator::experiment::design_of;
-use mctm_coreset::coreset::{build_coreset, Method};
-use mctm_coreset::data::dgp::Dgp;
-use mctm_coreset::util::rng::Rng;
+use mctm_coreset::prelude::*;
 use std::io::Write;
+
+/// One facade sketch: indices + weights of a k-point coreset of `data`.
+fn sketch(data: &Mat, method: Method, k: usize, seed: u64) -> CoresetReport {
+    SessionBuilder::new()
+        .method_tag(method)
+        .budget(k)
+        .basis_size(7)
+        .seed(seed)
+        .build()
+        .expect("valid sketch session")
+        .coreset(data)
+        .expect("non-empty data")
+}
 
 fn main() {
     let scale = Scale::from_env();
@@ -33,10 +47,13 @@ fn main() {
             )
             .unwrap();
         }
-        let design = design_of(&data, 7);
-        for method in [Method::Uniform, Method::L2Only, Method::L2Hull] {
-            let cs = build_coreset(&design, method, k, &mut rng);
-            for (idx, w) in cs.indices.iter().zip(&cs.weights) {
+        for (mi, method) in [Method::Uniform, Method::L2Only, Method::L2Hull]
+            .into_iter()
+            .enumerate()
+        {
+            let cs = sketch(&data, method, k, 0xF16 + mi as u64);
+            let indices = cs.indices.as_deref().expect("batch path");
+            for (idx, w) in indices.iter().zip(&cs.weights) {
                 writeln!(
                     f,
                     "{},{},coreset,{},{},{}",
@@ -57,15 +74,16 @@ fn main() {
     // the cloud better than uniform (max |y| among selected points)
     let mut rng = Rng::new(99);
     let data = Dgp::BimodalClusters.generate(n, &mut rng);
-    let design = design_of(&data, 7);
-    let extent = |m: Method, rng: &mut Rng| -> f64 {
-        let cs = build_coreset(&design, m, k, rng);
+    let extent = |m: Method, seed: u64| -> f64 {
+        let cs = sketch(&data, m, k, seed);
         cs.indices
+            .as_deref()
+            .expect("batch path")
             .iter()
             .map(|&i| data.at(i, 0).abs().max(data.at(i, 1).abs()))
             .fold(0.0, f64::max)
     };
-    let e_hull = extent(Method::L2Hull, &mut rng);
-    let e_unif = extent(Method::Uniform, &mut rng);
+    let e_hull = extent(Method::L2Hull, 7);
+    let e_unif = extent(Method::Uniform, 7);
     println!("coverage extent (bimodal clusters): l2-hull={e_hull:.2} uniform={e_unif:.2}");
 }

@@ -13,13 +13,12 @@ use mctm_coreset::benchsupport::{banner, results_dir, time_median, Scale};
 use mctm_coreset::coreset::ellipsoid::ellipsoid_scores;
 use mctm_coreset::coreset::hull::{dist_to_hull_batch, select_hull_points};
 use mctm_coreset::coreset::leverage::mctm_leverage_scores;
-use mctm_coreset::data::dgp::Dgp;
-use mctm_coreset::linalg::{Cholesky, Mat};
-use mctm_coreset::mctm::{self, ModelSpec, Params};
+use mctm_coreset::linalg::Cholesky;
+use mctm_coreset::mctm;
+use mctm_coreset::prelude::*;
 use mctm_coreset::runtime::{Engine, TiledNll};
 use mctm_coreset::util::parallel;
 use mctm_coreset::util::report::Table;
-use mctm_coreset::util::rng::Rng;
 use std::path::Path;
 
 fn main() {

@@ -6,11 +6,9 @@
 
 use mctm_coreset::benchsupport::{banner, bench_fit_options, results_dir, Scale};
 use mctm_coreset::coordinator::experiment::{summarize, TableRunner};
-use mctm_coreset::coreset::Method;
 use mctm_coreset::data::covertype;
+use mctm_coreset::prelude::*;
 use mctm_coreset::util::report::{write_series_csv, Table};
-use mctm_coreset::util::rng::Rng;
-use mctm_coreset::util::{mean, Stopwatch};
 
 fn main() {
     let scale = Scale::from_env();

@@ -1,0 +1,121 @@
+//! The typed error surface of the public facade.
+//!
+//! One enum replaces the ad-hoc `Result<_, String>` / `anyhow!`-chain /
+//! panic paths that used to live in the config parser and the CLI:
+//! every way the builder → session → fitted-model pipeline can be
+//! misconfigured or fed bad data has a variant here, so callers can
+//! match on the failure instead of grepping a message string.
+//!
+//! `ApiError` implements [`std::error::Error`], so it converts into the
+//! in-tree anyhow-style [`crate::util::error::Error`] via `?` wherever
+//! the coordinator still speaks that dialect.
+
+use std::fmt;
+
+/// Everything that can go wrong on the public facade.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ApiError {
+    /// A builder / config knob failed validation.
+    Config {
+        /// which knob (`"budget"`, `"threads"`, `"--shards"`, …)
+        key: String,
+        /// what was wrong with it
+        reason: String,
+    },
+    /// A sampling-method name not present in the strategy registry.
+    /// `valid` lists every registered name.
+    UnknownMethod {
+        name: String,
+        valid: Vec<&'static str>,
+    },
+    /// A dataset name the data registry cannot resolve.
+    UnknownDataset {
+        name: String,
+        /// human-readable summary of what IS resolvable
+        known: String,
+    },
+    /// The data source was empty or otherwise unusable.
+    Data(String),
+    /// Filesystem / IO failure (config files, CSV sources).
+    Io(String),
+    /// A backend (XLA runtime, …) rejected the request.
+    Backend(String),
+    /// Malformed command-line invocation.
+    Usage(String),
+}
+
+impl ApiError {
+    /// Shorthand for a knob-validation failure.
+    pub fn config(key: impl Into<String>, reason: impl fmt::Display) -> Self {
+        ApiError::Config {
+            key: key.into(),
+            reason: reason.to_string(),
+        }
+    }
+
+    /// Unknown-method error carrying every registered name (the
+    /// registry is the single source of truth, so the message can never
+    /// drift from the strategies that actually exist).
+    pub fn unknown_method(name: impl Into<String>) -> Self {
+        ApiError::UnknownMethod {
+            name: name.into(),
+            valid: crate::coreset::strategy::method_names(),
+        }
+    }
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ApiError::Config { key, reason } => write!(f, "invalid `{key}`: {reason}"),
+            ApiError::UnknownMethod { name, valid } => {
+                write!(f, "unknown method `{name}` (valid: {})", valid.join(", "))
+            }
+            ApiError::UnknownDataset { name, known } => {
+                write!(f, "unknown dataset `{name}` ({known})")
+            }
+            ApiError::Data(msg) => write!(f, "data source error: {msg}"),
+            ApiError::Io(msg) => write!(f, "{msg}"),
+            ApiError::Backend(msg) => write!(f, "backend error: {msg}"),
+            ApiError::Usage(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_method_lists_every_registered_name() {
+        let err = ApiError::unknown_method("nope");
+        let msg = format!("{err}");
+        for name in crate::coreset::strategy::method_names() {
+            assert!(msg.contains(name), "message should list `{name}`: {msg}");
+        }
+    }
+
+    #[test]
+    fn converts_into_util_error_chain() {
+        fn fails() -> Result<(), ApiError> {
+            Err(ApiError::config("budget", "must be ≥ 1"))
+        }
+        fn inner() -> crate::util::error::Result<()> {
+            fails()?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(format!("{e:#}").contains("budget"));
+    }
+
+    #[test]
+    fn display_is_actionable() {
+        let e = ApiError::config("threads", "must be ≥ 1 (omit the call for auto)");
+        assert_eq!(
+            format!("{e}"),
+            "invalid `threads`: must be ≥ 1 (omit the call for auto)"
+        );
+    }
+}

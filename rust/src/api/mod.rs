@@ -1,0 +1,31 @@
+//! The public facade (PR 4): **one typed entry point** from a data
+//! source to a query-serving fitted model.
+//!
+//! ```text
+//! SessionBuilder ──build()──▶ Session ──fit(source)──▶ FittedModel
+//!      knobs                   recipe                  query surface
+//! ```
+//!
+//! * [`SessionBuilder`] validates every knob (method names resolve
+//!   through the strategy registry, budgets/threads must be positive)
+//!   and returns typed [`ApiError`]s instead of panicking.
+//! * [`Session::fit`] accepts anything implementing [`DataSource`] —
+//!   an in-memory [`crate::linalg::Mat`], a DGP generator, a named
+//!   dataset, or any streaming [`crate::data::ShardSource`] — and picks
+//!   the batch or the Merge & Reduce path automatically.
+//! * [`FittedModel`] exposes the read-side query surface (joint
+//!   log-density, full-data NLL, per-margin CDF / quantile, conditional
+//!   sampling) and is `Send + Sync`, so one model serves many
+//!   concurrent scenario queries.
+//!
+//! The pre-facade free functions (`build_coreset`,
+//! `StreamingPipeline::new`, …) remain as `#[deprecated]` shims for one
+//! release; use [`crate::prelude`] for new code.
+
+pub mod error;
+pub mod session;
+pub mod source;
+
+pub use error::ApiError;
+pub use session::{CoresetReport, Diagnostics, FittedModel, Session, SessionBuilder};
+pub use source::{load_dataset, DataSource, DgpSource, NamedSource, SourceInput};

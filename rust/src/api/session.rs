@@ -1,0 +1,799 @@
+//! The builder → session → fitted-model pipeline: one typed entry point
+//! from a data source to a query-serving fitted MCTM.
+//!
+//! * [`SessionBuilder`] — validated knobs (method via the strategy
+//!   registry, budget, threads, seed, streaming queue/buffer, basis
+//!   options). `build()` returns a typed [`ApiError`] instead of
+//!   panicking or stringly failing.
+//! * [`Session`] — an immutable, reusable recipe. `fit(source)` picks
+//!   the batch or the Merge & Reduce path automatically from what the
+//!   [`DataSource`] resolves to; `coreset(source)` runs only the
+//!   sketching half (no optimization) and returns a [`CoresetReport`].
+//! * [`FittedModel`] — the query surface: joint log-density, full-data
+//!   NLL, per-margin CDF / quantile, (conditional) sampling, and
+//!   [`Diagnostics`] carrying the coreset + stream statistics. It owns
+//!   all of its state (`Send + Sync`), so one fitted model can serve
+//!   concurrent read-side queries from many threads.
+//!
+//! Determinism: a session is a pure function of (knobs, source). The
+//! same seed gives bit-identical coresets at any `threads` /
+//! `consumers` setting — the worker pool only changes wall-clock time,
+//! never results (pinned by `tests/api_facade.rs` and the invariant
+//! suites).
+
+use super::error::ApiError;
+use super::source::{DataSource, SourceInput};
+use crate::basis::{Bernstein, Design, Scaler};
+use crate::coordinator::pipeline::{StreamingPipeline, StreamStats};
+use crate::coreset::samplers::build_coreset_on;
+use crate::coreset::{Coreset, Method};
+use crate::fit::{fit_native, FitOptions, OptimizerKind};
+use crate::linalg::Mat;
+use crate::mctm::{self, density, ModelSpec, Params};
+use crate::util::parallel::{self, Pool};
+use crate::util::rng::Rng;
+use crate::util::special::{norm_cdf, norm_quantile};
+use crate::util::Stopwatch;
+
+/// Builder for a [`Session`]. Every knob is validated in [`Self::build`];
+/// invalid values surface as typed [`ApiError::Config`] /
+/// [`ApiError::UnknownMethod`] instead of panics.
+#[derive(Clone, Debug)]
+pub struct SessionBuilder {
+    method_name: Option<String>,
+    method_tag: Method,
+    budget: usize,
+    basis_size: usize,
+    scale_eps: f64,
+    seed: u64,
+    threads: Option<usize>,
+    consumers: Option<usize>,
+    queue_cap: usize,
+    buffer_factor: usize,
+    fit: FitOptions,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder {
+            method_name: None,
+            method_tag: Method::L2Hull,
+            budget: 100,
+            basis_size: 7,
+            scale_eps: 0.01,
+            seed: 0xC0FF_EE,
+            threads: None,
+            consumers: None,
+            queue_cap: 4,
+            buffer_factor: 4,
+            fit: FitOptions::default(),
+        }
+    }
+}
+
+impl SessionBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Sampling method by registry name (`"l2-hull"`, `"ellipsoid"`, …).
+    /// Resolution happens in [`Self::build`]; an unknown name fails with
+    /// an error listing every registered name.
+    pub fn method(mut self, name: &str) -> Self {
+        self.method_name = Some(name.to_string());
+        self
+    }
+
+    /// Sampling method by tag (for callers that already hold a
+    /// validated [`Method`], e.g. the experiment harness).
+    pub fn method_tag(mut self, method: Method) -> Self {
+        self.method_name = None;
+        self.method_tag = method;
+        self
+    }
+
+    /// Coreset budget k (target number of kept observations).
+    pub fn budget(mut self, k: usize) -> Self {
+        self.budget = k;
+        self
+    }
+
+    /// Bernstein basis size d (degree d − 1) per margin.
+    pub fn basis_size(mut self, d: usize) -> Self {
+        self.basis_size = d;
+        self
+    }
+
+    /// Min–max scaling margin ε: raw data maps into [ε, 1 − ε] (the
+    /// paper's negative-value correction).
+    pub fn scale_eps(mut self, eps: f64) -> Self {
+        self.scale_eps = eps;
+        self
+    }
+
+    /// RNG seed — the only source of randomness in a session.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Worker threads for the parallel kernels. Omit for auto
+    /// (`MCTM_THREADS` / available parallelism). Thread count never
+    /// changes results, only wall-clock time.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n);
+        self
+    }
+
+    /// Streaming consumer workers running leaf reduces in parallel.
+    /// Omit for auto. Results do not depend on this.
+    pub fn consumers(mut self, n: usize) -> Self {
+        self.consumers = Some(n);
+        self
+    }
+
+    /// Bounded shard-queue capacity (streaming backpressure).
+    pub fn queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = cap;
+        self
+    }
+
+    /// Merge & Reduce intermediate-level size multiplier (accuracy vs
+    /// memory).
+    pub fn buffer_factor(mut self, f: usize) -> Self {
+        self.buffer_factor = f;
+        self
+    }
+
+    /// Full optimizer configuration.
+    pub fn fit_options(mut self, opts: FitOptions) -> Self {
+        self.fit = opts;
+        self
+    }
+
+    /// Optimizer choice (shorthand for the common `fit_options` edit).
+    pub fn optimizer(mut self, kind: OptimizerKind) -> Self {
+        self.fit.optimizer = kind;
+        self
+    }
+
+    /// Iteration cap (shorthand for the common `fit_options` edit).
+    pub fn max_iters(mut self, n: usize) -> Self {
+        self.fit.max_iters = n;
+        self
+    }
+
+    /// Validate every knob and produce the immutable [`Session`].
+    pub fn build(self) -> Result<Session, ApiError> {
+        let method = match &self.method_name {
+            Some(name) => {
+                Method::parse(name).map_err(|_| ApiError::unknown_method(name.clone()))?
+            }
+            None => self.method_tag,
+        };
+        if self.budget == 0 {
+            return Err(ApiError::config("budget", "must be ≥ 1"));
+        }
+        if self.basis_size < 2 {
+            return Err(ApiError::config("basis_size", "must be ≥ 2"));
+        }
+        if self.scale_eps <= 0.0 || self.scale_eps >= 0.5 {
+            return Err(ApiError::config("scale_eps", "must lie in (0, 0.5)"));
+        }
+        if self.threads == Some(0) {
+            return Err(ApiError::config(
+                "threads",
+                "must be ≥ 1 (omit the call for auto)",
+            ));
+        }
+        if self.consumers == Some(0) {
+            return Err(ApiError::config(
+                "consumers",
+                "must be ≥ 1 (omit the call for auto)",
+            ));
+        }
+        if self.queue_cap == 0 {
+            return Err(ApiError::config("queue_cap", "must be ≥ 1"));
+        }
+        if self.buffer_factor == 0 {
+            return Err(ApiError::config("buffer_factor", "must be ≥ 1"));
+        }
+        if self.fit.max_iters == 0 {
+            return Err(ApiError::config("max_iters", "must be ≥ 1"));
+        }
+        Ok(Session {
+            method,
+            budget: self.budget,
+            d: self.basis_size,
+            eps: self.scale_eps,
+            seed: self.seed,
+            threads: self.threads.unwrap_or(0),
+            consumers: self.consumers.unwrap_or(0),
+            queue_cap: self.queue_cap,
+            buffer_factor: self.buffer_factor,
+            fit: self.fit,
+        })
+    }
+}
+
+/// An immutable, reusable fitting recipe produced by [`SessionBuilder`].
+#[derive(Clone, Debug)]
+pub struct Session {
+    method: Method,
+    budget: usize,
+    d: usize,
+    eps: f64,
+    seed: u64,
+    /// 0 = auto
+    threads: usize,
+    /// 0 = auto
+    consumers: usize,
+    queue_cap: usize,
+    buffer_factor: usize,
+    fit: FitOptions,
+}
+
+/// Salted seed for resolving generator-backed sources: the RNG stream
+/// that realizes the data must be independent of the stream that
+/// samples the coreset (both derive from the session seed, but through
+/// different expansions — `Rng::new` seeds via SplitMix64, so any
+/// distinct input yields an uncorrelated sequence).
+fn source_seed(seed: u64) -> u64 {
+    seed ^ 0xA076_1D64_78BD_642F
+}
+
+/// What the sketching half produced, before any optimization.
+enum Sketch {
+    Batch {
+        data: Mat,
+        design: Design,
+        cs: Coreset,
+        seconds: f64,
+    },
+    Stream {
+        rows: Mat,
+        weights: Vec<f64>,
+        stats: StreamStats,
+        j: usize,
+        seconds: f64,
+    },
+}
+
+impl Session {
+    /// Entry point mirroring [`SessionBuilder::new`].
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::new()
+    }
+
+    pub fn method(&self) -> Method {
+        self.method
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn pool(&self) -> Pool {
+        if self.threads > 0 {
+            Pool::new(self.threads)
+        } else {
+            Pool::current()
+        }
+    }
+
+    /// Build only the coreset — the sketching half of [`Self::fit`],
+    /// without the optimization. Batch sources get a one-shot
+    /// importance sample over the full design; shard sources stream
+    /// through Merge & Reduce with bounded memory.
+    pub fn coreset<S: DataSource>(&self, source: S) -> Result<CoresetReport, ApiError> {
+        Ok(match self.sketch(source)? {
+            Sketch::Batch { data, cs, seconds, .. } => self.batch_report(&data, &cs, seconds),
+            Sketch::Stream { rows, weights, stats, seconds, .. } => {
+                self.stream_report(rows, weights, stats, seconds)
+            }
+        })
+    }
+
+    /// Build the coreset, fit the MCTM on it, and return the
+    /// query-serving [`FittedModel`].
+    pub fn fit<S: DataSource>(&self, source: S) -> Result<FittedModel, ApiError> {
+        match self.sketch(source)? {
+            Sketch::Batch { data, design, cs, seconds } => {
+                let spec = ModelSpec::new(design.j, self.d);
+                let sub = design.select(&cs.indices);
+                let fit = fit_native(spec, &sub, cs.weights.clone(), &self.fit);
+                let report = self.batch_report(&data, &cs, seconds);
+                Ok(FittedModel::assemble(spec, fit, design.scaler.clone(), report))
+            }
+            Sketch::Stream { rows, weights, stats, j, seconds } => {
+                let pool = self.pool();
+                let design = Design::build_on(&rows, self.d, self.eps, &pool);
+                let spec = ModelSpec::new(j, self.d);
+                let fit = fit_native(spec, &design, weights.clone(), &self.fit);
+                let scaler = design.scaler.clone();
+                let report = self.stream_report(rows, weights, stats, seconds);
+                Ok(FittedModel::assemble(spec, fit, scaler, report))
+            }
+        }
+    }
+
+    fn sketch<S: DataSource>(&self, source: S) -> Result<Sketch, ApiError> {
+        match source.into_input(source_seed(self.seed))? {
+            SourceInput::Batch(data) => {
+                if data.rows == 0 {
+                    return Err(ApiError::Data("batch source produced no rows".into()));
+                }
+                if data.cols == 0 {
+                    return Err(ApiError::Data("batch source has zero columns".into()));
+                }
+                let pool = self.pool();
+                let design = Design::build_on(&data, self.d, self.eps, &pool);
+                // time only the sampling itself (scores + draw), keeping
+                // the paper tables' sampling-time column comparable with
+                // the pre-facade harness, which shared one design build
+                let sw = Stopwatch::start();
+                let mut rng = Rng::new(self.seed);
+                let cs = build_coreset_on(&design, self.method, self.budget, &mut rng, &pool);
+                let seconds = sw.secs();
+                Ok(Sketch::Batch { data, design, cs, seconds })
+            }
+            SourceInput::Stream(shards) => {
+                let j = shards.dim();
+                if j == 0 {
+                    return Err(ApiError::Data("shard source has zero columns".into()));
+                }
+                let sw = Stopwatch::start();
+                let mut pipeline =
+                    StreamingPipeline::assemble(self.method, self.budget, self.d);
+                pipeline.eps = self.eps;
+                pipeline.seed = self.seed;
+                pipeline.queue_cap = self.queue_cap;
+                pipeline.buffer_factor = self.buffer_factor;
+                pipeline.consumers = if self.consumers > 0 {
+                    self.consumers
+                } else if self.threads > 0 {
+                    self.threads
+                } else {
+                    parallel::threads()
+                };
+                let (out, stats) = pipeline.run(shards);
+                let seconds = sw.secs();
+                if out.is_empty() {
+                    return Err(ApiError::Data("shard stream produced no rows".into()));
+                }
+                Ok(Sketch::Stream {
+                    rows: out.rows,
+                    weights: out.weights,
+                    stats,
+                    j,
+                    seconds,
+                })
+            }
+        }
+    }
+
+    fn batch_report(&self, data: &Mat, cs: &Coreset, seconds: f64) -> CoresetReport {
+        CoresetReport {
+            method: cs.method.name(),
+            requested: self.budget,
+            size: cs.len(),
+            n_hull: cs.n_hull,
+            total_weight: cs.total_weight(),
+            n_seen: data.rows,
+            indices: Some(cs.indices.clone()),
+            rows: data.select_rows(&cs.indices),
+            weights: cs.weights.clone(),
+            stream: None,
+            seconds,
+        }
+    }
+
+    fn stream_report(
+        &self,
+        rows: Mat,
+        weights: Vec<f64>,
+        stats: StreamStats,
+        seconds: f64,
+    ) -> CoresetReport {
+        CoresetReport {
+            method: self.method.name(),
+            requested: self.budget,
+            size: rows.rows,
+            // the reduce tree does not track per-point provenance, so
+            // hull membership is unknown on the streaming path
+            n_hull: 0,
+            total_weight: weights.iter().sum(),
+            n_seen: stats.n_seen,
+            indices: None,
+            rows,
+            weights,
+            stream: Some(stats),
+            seconds,
+        }
+    }
+}
+
+/// What the sketching phase produced: the weighted coreset itself plus
+/// the statistics both test pins and dashboards want.
+#[derive(Clone, Debug)]
+pub struct CoresetReport {
+    /// registry name of the sampling method
+    pub method: &'static str,
+    /// the requested budget k
+    pub requested: usize,
+    /// actual coreset size (≤ k + hull augmentation slack)
+    pub size: usize,
+    /// points contributed by the convex-hull component (batch path;
+    /// 0 on the streaming path, which does not track provenance)
+    pub n_hull: usize,
+    /// Σ weights — ≈ n for an unbiased construction
+    pub total_weight: f64,
+    /// raw rows consumed to build this coreset
+    pub n_seen: usize,
+    /// observation indices into the batch source (`None` when streamed)
+    pub indices: Option<Vec<usize>>,
+    /// the coreset rows on the original data scale
+    pub rows: Mat,
+    /// per-row weights aligned with `rows`
+    pub weights: Vec<f64>,
+    /// streaming statistics (`None` on the batch path)
+    pub stream: Option<StreamStats>,
+    /// wall-clock seconds spent sampling: the score computation + draw
+    /// on the batch path (excluding the design build, matching the
+    /// paper tables' sampling-time column), the whole pipeline run on
+    /// the streaming path
+    pub seconds: f64,
+}
+
+/// Coreset + fit statistics carried by every [`FittedModel`].
+#[derive(Clone, Debug)]
+pub struct Diagnostics {
+    pub coreset: CoresetReport,
+    /// NLL of the fitted parameters on the (weighted) coreset
+    pub fit_nll: f64,
+    pub fit_iters: usize,
+    pub fit_seconds: f64,
+    pub converged: bool,
+}
+
+/// A fitted MCTM with its query surface. Owns all of its state — no
+/// borrowed designs, no pool handles — so it is `Send + Sync` and can
+/// serve concurrent read-side queries (`log_density`, CDFs, quantiles,
+/// sampling with caller-owned RNGs) from many threads at once.
+#[derive(Clone, Debug)]
+pub struct FittedModel {
+    spec: ModelSpec,
+    params: Params,
+    scaler: Scaler,
+    /// cached monotone coefficients ϑ (row-major (j, k))
+    theta: Vec<f64>,
+    /// cached marginal standard deviations σ_j of h̃(Y)
+    sigmas: Vec<f64>,
+    diagnostics: Diagnostics,
+}
+
+impl FittedModel {
+    fn assemble(
+        spec: ModelSpec,
+        fit: crate::fit::FitResult,
+        scaler: Scaler,
+        coreset: CoresetReport,
+    ) -> FittedModel {
+        let theta = fit.params.theta();
+        let sigmas = density::marginal_sigmas(&fit.params);
+        FittedModel {
+            spec,
+            theta,
+            sigmas,
+            scaler,
+            diagnostics: Diagnostics {
+                coreset,
+                fit_nll: fit.nll,
+                fit_iters: fit.iters,
+                fit_seconds: fit.seconds,
+                converged: fit.converged,
+            },
+            params: fit.params,
+        }
+    }
+
+    pub fn spec(&self) -> ModelSpec {
+        self.spec
+    }
+
+    pub fn params(&self) -> &Params {
+        &self.params
+    }
+
+    pub fn scaler(&self) -> &Scaler {
+        &self.scaler
+    }
+
+    pub fn diagnostics(&self) -> &Diagnostics {
+        &self.diagnostics
+    }
+
+    /// Joint log-density at a raw J-vector (original data scale).
+    pub fn log_density(&self, y: &[f64]) -> f64 {
+        density::log_joint_density(&self.params, &self.scaler, y)
+    }
+
+    /// Joint density at a raw J-vector.
+    pub fn density(&self, y: &[f64]) -> f64 {
+        self.log_density(y).exp()
+    }
+
+    /// Marginal density of component `j` at raw value `y` (the shared
+    /// formula in `mctm::density`, fed from the cached ϑ and σ).
+    pub fn marginal_density(&self, j: usize, y: f64) -> f64 {
+        assert!(j < self.spec.j, "margin {j} out of range");
+        density::marginal_density_with_sigma(
+            &self.theta,
+            self.spec.d,
+            &self.scaler,
+            j,
+            y,
+            self.sigmas[j],
+        )
+    }
+
+    /// Marginal CDF F_j(y) of component `j` at raw value `y`.
+    pub fn marginal_cdf(&self, j: usize, y: f64) -> f64 {
+        assert!(j < self.spec.j, "margin {j} out of range");
+        let h = self.htilde(j, self.scaler.scale(j, y));
+        norm_cdf(h / self.sigmas[j])
+    }
+
+    /// Marginal quantile F_j⁻¹(p) of component `j` (p ∈ (0, 1)). The
+    /// transformation lives on the scaled axis, so extreme p saturate
+    /// at its endpoints — which [`Scaler::unscale`] maps ~ε/(1 − 2ε)
+    /// (≈ 1% at the default ε) beyond the observed data min/max, not
+    /// exactly at it. The same applies to tail draws of `sample` /
+    /// `sample_conditional`.
+    pub fn marginal_quantile(&self, j: usize, p: f64) -> f64 {
+        assert!(j < self.spec.j, "margin {j} out of range");
+        assert!(p > 0.0 && p < 1.0, "quantile level {p} outside (0, 1)");
+        let target = self.sigmas[j] * norm_quantile(p);
+        let x = self.invert_htilde(j, target);
+        self.scaler.unscale(j, x)
+    }
+
+    /// Draw `n` joint samples on the original data scale.
+    pub fn sample(&self, n: usize, rng: &mut Rng) -> Mat {
+        self.sample_conditional(&[], n, rng)
+    }
+
+    /// Draw `n` samples of the remaining components given the first
+    /// `given.len()` components (the MCTM's triangular structure makes
+    /// this exact: conditioning fixes h̃ of the given margins, and the
+    /// remaining latent z's stay independent standard normals). Returns
+    /// full J-column rows with the given values copied into place.
+    pub fn sample_conditional(&self, given: &[f64], n: usize, rng: &mut Rng) -> Mat {
+        let j = self.spec.j;
+        let m = given.len();
+        assert!(m <= j, "conditioning on {m} > J = {j} components");
+        let mut buf = vec![0.0; self.spec.d];
+        let mut base_h = vec![0.0; j];
+        for (l, &y) in given.iter().enumerate() {
+            base_h[l] = self.htilde_into(l, self.scaler.scale(l, y), &mut buf);
+        }
+        let mut out = Mat::zeros(n, j);
+        let mut h = vec![0.0; j];
+        for r in 0..n {
+            h.copy_from_slice(&base_h);
+            for (l, &y) in given.iter().enumerate() {
+                *out.at_mut(r, l) = y;
+            }
+            for jj in m..j {
+                let mut target = rng.normal();
+                for l in 0..jj {
+                    target -= self.params.lambda(jj, l) * h[l];
+                }
+                let x = self.invert_htilde(jj, target);
+                h[jj] = self.htilde_into(jj, x, &mut buf);
+                *out.at_mut(r, jj) = self.scaler.unscale(jj, x);
+            }
+        }
+        out
+    }
+
+    /// Weighted-sum NLL of this model's parameters on `data` (original
+    /// scale, `data.cols == J`). The design is rebuilt with the model's
+    /// own scaler, so parameters fitted on a streamed coreset evaluate
+    /// correctly on any other sample of the same distribution.
+    pub fn nll(&self, data: &Mat) -> f64 {
+        assert_eq!(data.cols, self.spec.j, "data J mismatch");
+        let design = Design::build_with_scaler(data, self.spec.d, self.scaler.clone());
+        mctm::nll(&design, &[], &self.params)
+    }
+
+    #[inline]
+    fn theta_row(&self, j: usize) -> &[f64] {
+        &self.theta[j * self.spec.d..(j + 1) * self.spec.d]
+    }
+
+    /// h̃_j at scaled coordinate x ∈ [0, 1].
+    fn htilde(&self, j: usize, x: f64) -> f64 {
+        let mut buf = vec![0.0; self.spec.d];
+        self.htilde_into(j, x, &mut buf)
+    }
+
+    /// h̃_j evaluated through a caller-owned basis buffer (`len == d`),
+    /// so the bisection and sampling loops reuse one allocation across
+    /// all their iterations.
+    #[inline]
+    fn htilde_into(&self, j: usize, x: f64, buf: &mut [f64]) -> f64 {
+        Bernstein::new(self.spec.d - 1).eval_into(x, buf);
+        buf.iter().zip(self.theta_row(j)).map(|(ai, ti)| ai * ti).sum()
+    }
+
+    /// Invert the strictly increasing h̃_j over the scaled axis by
+    /// bisection; targets outside the transformation's range clamp to
+    /// the support edges.
+    fn invert_htilde(&self, j: usize, target: f64) -> f64 {
+        let th = self.theta_row(j);
+        // Bernstein endpoints: h̃(0) = ϑ_0, h̃(1) = ϑ_{d−1}, monotone
+        // in between because ϑ is increasing
+        if target <= th[0] {
+            return 0.0;
+        }
+        if target >= th[th.len() - 1] {
+            return 1.0;
+        }
+        let mut buf = vec![0.0; self.spec.d];
+        let (mut lo, mut hi) = (0.0f64, 1.0f64);
+        for _ in 0..64 {
+            let mid = 0.5 * (lo + hi);
+            if self.htilde_into(j, mid, &mut buf) < target {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dgp::Dgp;
+
+    #[test]
+    fn builder_rejects_bad_knobs_with_typed_errors() {
+        assert!(matches!(
+            SessionBuilder::new().budget(0).build().unwrap_err(),
+            ApiError::Config { .. }
+        ));
+        assert!(matches!(
+            SessionBuilder::new().threads(0).build().unwrap_err(),
+            ApiError::Config { .. }
+        ));
+        assert!(matches!(
+            SessionBuilder::new().basis_size(1).build().unwrap_err(),
+            ApiError::Config { .. }
+        ));
+        assert!(matches!(
+            SessionBuilder::new().scale_eps(0.7).build().unwrap_err(),
+            ApiError::Config { .. }
+        ));
+        assert!(matches!(
+            SessionBuilder::new().queue_cap(0).build().unwrap_err(),
+            ApiError::Config { .. }
+        ));
+        let err = SessionBuilder::new().method("not-a-method").build().unwrap_err();
+        match &err {
+            ApiError::UnknownMethod { valid, .. } => {
+                assert_eq!(valid, &crate::coreset::strategy::method_names());
+            }
+            other => panic!("expected UnknownMethod, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn builder_resolves_every_registered_name() {
+        for m in Method::all() {
+            let s = SessionBuilder::new().method(m.name()).build().unwrap();
+            assert_eq!(s.method(), m);
+        }
+    }
+
+    #[test]
+    fn session_is_reusable_and_deterministic() {
+        let mut rng = Rng::new(5);
+        let data = Dgp::NormalMixture.generate(400, &mut rng);
+        let session = SessionBuilder::new().budget(40).basis_size(5).seed(11).build().unwrap();
+        let a = session.coreset(&data).unwrap();
+        let b = session.coreset(&data).unwrap();
+        assert_eq!(a.indices, b.indices);
+        assert_eq!(a.weights, b.weights);
+        assert_eq!(a.n_seen, 400);
+        assert!(a.size <= 40 + 5 && a.size > 0);
+        assert!(a.stream.is_none());
+    }
+
+    #[test]
+    fn empty_sources_are_typed_errors() {
+        let session = SessionBuilder::new().build().unwrap();
+        assert!(matches!(
+            session.coreset(Mat::zeros(0, 2)).unwrap_err(),
+            ApiError::Data(_)
+        ));
+    }
+
+    #[test]
+    fn fitted_model_is_send_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<FittedModel>();
+        check::<Session>();
+        check::<Diagnostics>();
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        let mut rng = Rng::new(21);
+        let data = Dgp::BivariateNormal.generate(2_000, &mut rng);
+        let session = SessionBuilder::new()
+            .budget(2_000) // identity coreset: fastest exact fit
+            .basis_size(6)
+            .max_iters(120)
+            .seed(3)
+            .build()
+            .unwrap();
+        let model = session.fit(&data).unwrap();
+        for &p in &[0.1, 0.25, 0.5, 0.9] {
+            for j in 0..2 {
+                let y = model.marginal_quantile(j, p);
+                let back = model.marginal_cdf(j, y);
+                assert!(
+                    (back - p).abs() < 1e-3,
+                    "margin {j}: F(F⁻¹({p})) = {back}"
+                );
+            }
+        }
+        // CDF is monotone and spans (0, 1) over the data range
+        assert!(model.marginal_cdf(0, -4.0) < 0.05);
+        assert!(model.marginal_cdf(0, 4.0) > 0.95);
+    }
+
+    #[test]
+    fn sampling_matches_fitted_marginals() {
+        let mut rng = Rng::new(33);
+        let data = Dgp::BivariateNormal.generate(3_000, &mut rng);
+        let session = SessionBuilder::new()
+            .budget(3_000)
+            .basis_size(6)
+            .max_iters(150)
+            .seed(4)
+            .build()
+            .unwrap();
+        let model = session.fit(&data).unwrap();
+        let draws = model.sample(4_000, &mut rng);
+        assert_eq!((draws.rows, draws.cols), (4_000, 2));
+        // empirical median of margin 0 ≈ model median
+        let mut col: Vec<f64> = (0..draws.rows).map(|r| draws.at(r, 0)).collect();
+        col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let emp_median = col[col.len() / 2];
+        let model_median = model.marginal_quantile(0, 0.5);
+        assert!(
+            (emp_median - model_median).abs() < 0.15,
+            "median {emp_median} vs {model_median}"
+        );
+        // correlated DGP (ρ = 0.7): conditioning on a high y₁ must shift
+        // the conditional mean of y₂ upward vs conditioning on a low y₁
+        let hi = model.sample_conditional(&[1.5], 800, &mut rng);
+        let lo = model.sample_conditional(&[-1.5], 800, &mut rng);
+        let mean = |m: &Mat| (0..m.rows).map(|r| m.at(r, 1)).sum::<f64>() / m.rows as f64;
+        assert!(hi.rows == 800 && hi.at(0, 0) == 1.5);
+        assert!(
+            mean(&hi) > mean(&lo) + 0.5,
+            "conditional shift missing: {} vs {}",
+            mean(&hi),
+            mean(&lo)
+        );
+    }
+}

@@ -1,0 +1,279 @@
+//! Data sources for the facade: one [`DataSource`] trait unifies
+//! in-memory matrices, DGP generators, named datasets and streaming
+//! [`ShardSource`]s, so [`crate::api::Session::fit`] can pick the batch
+//! or the Merge & Reduce path automatically — callers never choose a
+//! code path by hand.
+//!
+//! * [`Mat`] / `&Mat` → batch: design + one-shot coreset on all rows.
+//! * [`MatShards`] / [`GenShards`] / any boxed [`ShardSource`] →
+//!   streaming: bounded-memory Merge & Reduce over the shard stream.
+//! * [`DgpSource`] / [`NamedSource`] → either, chosen at construction
+//!   (`batch` vs `stream`), with generation seeded from the session.
+
+use super::error::ApiError;
+use crate::data::dgp::Dgp;
+use crate::data::{covertype, equity, GenShards, MatShards, ShardSource};
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// The concrete input [`crate::api::Session::fit`] consumes: either a
+/// fully materialized matrix (batch path) or a shard stream (Merge &
+/// Reduce path).
+pub enum SourceInput {
+    /// materialized rows — batch coreset construction
+    Batch(Mat),
+    /// a shard stream — bounded-memory streaming construction
+    Stream(Box<dyn ShardSource + Send>),
+}
+
+/// Anything the session can fit. `into_input` resolves the source into
+/// a [`SourceInput`]; `seed` is the session seed, so generator-backed
+/// sources derive their randomness from the session configuration and
+/// a given (session, source) pair is fully deterministic.
+pub trait DataSource {
+    /// Resolve into the concrete input the session consumes.
+    fn into_input(self, seed: u64) -> Result<SourceInput, ApiError>;
+}
+
+impl DataSource for Mat {
+    fn into_input(self, _seed: u64) -> Result<SourceInput, ApiError> {
+        Ok(SourceInput::Batch(self))
+    }
+}
+
+impl DataSource for &Mat {
+    fn into_input(self, _seed: u64) -> Result<SourceInput, ApiError> {
+        Ok(SourceInput::Batch(self.clone()))
+    }
+}
+
+impl DataSource for MatShards {
+    fn into_input(self, _seed: u64) -> Result<SourceInput, ApiError> {
+        Ok(SourceInput::Stream(Box::new(self)))
+    }
+}
+
+impl<F: FnMut(usize) -> Mat + Send + 'static> DataSource for GenShards<F> {
+    fn into_input(self, _seed: u64) -> Result<SourceInput, ApiError> {
+        Ok(SourceInput::Stream(Box::new(self)))
+    }
+}
+
+impl DataSource for Box<dyn ShardSource + Send> {
+    fn into_input(self, _seed: u64) -> Result<SourceInput, ApiError> {
+        Ok(SourceInput::Stream(self))
+    }
+}
+
+impl DataSource for SourceInput {
+    fn into_input(self, _seed: u64) -> Result<SourceInput, ApiError> {
+        Ok(self)
+    }
+}
+
+/// A simulation DGP as a data source: `batch` materializes `n` rows up
+/// front, `stream` feeds them through the pipeline in shards of
+/// `shard` rows (nothing materialized — the "data never fits in
+/// memory" path). Generation is seeded from the session seed.
+#[derive(Clone, Copy, Debug)]
+pub struct DgpSource {
+    dgp: Dgp,
+    n: usize,
+    shard: Option<usize>,
+}
+
+impl DgpSource {
+    /// Materialize `n` samples of `dgp` (batch coreset path).
+    pub fn batch(dgp: Dgp, n: usize) -> Self {
+        DgpSource { dgp, n, shard: None }
+    }
+
+    /// Stream `total` samples of `dgp` in shards of `shard` rows
+    /// (Merge & Reduce path).
+    pub fn stream(dgp: Dgp, total: usize, shard: usize) -> Self {
+        DgpSource { dgp, n: total, shard: Some(shard) }
+    }
+}
+
+impl DataSource for DgpSource {
+    fn into_input(self, seed: u64) -> Result<SourceInput, ApiError> {
+        if let Some(shard) = self.shard {
+            if shard == 0 {
+                return Err(ApiError::config("shard", "shard size must be ≥ 1"));
+            }
+            let dgp = self.dgp;
+            // derive J from a probe draw rather than assuming the
+            // current all-bivariate DGP catalogue stays that way
+            let j = dgp.generate(1, &mut Rng::new(seed)).cols;
+            let mut rng = Rng::new(seed);
+            return Ok(SourceInput::Stream(Box::new(GenShards::new(
+                move |m| dgp.generate(m, &mut rng),
+                j,
+                self.n,
+                shard,
+            ))));
+        }
+        let mut rng = Rng::new(seed);
+        Ok(SourceInput::Batch(self.dgp.generate(self.n, &mut rng)))
+    }
+}
+
+/// A dataset addressed by its registry name (any of the 14 DGP names,
+/// `covertype`, `stocks10`, `stocks20`, or `file:/path.csv`) — what the
+/// CLI `dataset` config key resolves through.
+#[derive(Clone, Debug)]
+pub struct NamedSource {
+    name: String,
+    n: usize,
+    shard: Option<usize>,
+}
+
+impl NamedSource {
+    /// Materialize `n` rows of the named dataset (batch path).
+    pub fn batch(name: impl Into<String>, n: usize) -> Self {
+        NamedSource { name: name.into(), n, shard: None }
+    }
+
+    /// Stream `total` rows of the named dataset in shards of `shard`
+    /// rows (Merge & Reduce path).
+    pub fn stream(name: impl Into<String>, total: usize, shard: usize) -> Self {
+        NamedSource { name: name.into(), n: total, shard: Some(shard) }
+    }
+}
+
+impl DataSource for NamedSource {
+    fn into_input(self, seed: u64) -> Result<SourceInput, ApiError> {
+        if let Some(shard) = self.shard {
+            if shard == 0 {
+                return Err(ApiError::config("shard", "shard size must be ≥ 1"));
+            }
+            if self.name.starts_with("file:") {
+                // a CSV file does not re-generate rows per request the
+                // way the DGP sources do — load it once (capped to the
+                // requested total) and shard the materialized rows;
+                // otherwise every shard would replay the file's leading
+                // rows
+                let mut rng = Rng::new(seed);
+                let m = load_dataset(&self.name, self.n, &mut rng)?;
+                return Ok(SourceInput::Stream(Box::new(MatShards::new(m, shard))));
+            }
+            // validate the name (and learn J) before spawning a stream,
+            // so a typo fails fast with the full dataset listing
+            let mut probe = Rng::new(seed);
+            let j = load_dataset(&self.name, 2, &mut probe)?.cols;
+            let name = self.name.clone();
+            let mut rng = Rng::new(seed);
+            return Ok(SourceInput::Stream(Box::new(GenShards::new(
+                move |m| {
+                    load_dataset(&name, m, &mut rng)
+                        .expect("dataset name validated before streaming")
+                },
+                j,
+                self.n,
+                shard,
+            ))));
+        }
+        let mut rng = Rng::new(seed);
+        Ok(SourceInput::Batch(load_dataset(&self.name, self.n, &mut rng)?))
+    }
+}
+
+/// Resolve a dataset name to `n` materialized rows: the 14 DGP names
+/// (`Dgp::name`), the synthetic `covertype` / `stocks10` / `stocks20`
+/// generators, or `file:/path.csv` (capped to the first `n` rows).
+pub fn load_dataset(name: &str, n: usize, rng: &mut Rng) -> Result<Mat, ApiError> {
+    if let Some(path) = name.strip_prefix("file:") {
+        let m = crate::data::csv::load_csv(std::path::Path::new(path))
+            .map_err(|e| ApiError::Io(format!("loading {path}: {e:#}")))?;
+        // honour the n cap (subsample deterministically from the front)
+        if m.rows > n {
+            let idx: Vec<usize> = (0..n).collect();
+            return Ok(m.select_rows(&idx));
+        }
+        return Ok(m);
+    }
+    if name == "covertype" {
+        return Ok(covertype::generate(n, rng));
+    }
+    if name == "stocks10" {
+        return Ok(equity::generate(n, 10, rng));
+    }
+    if name == "stocks20" {
+        return Ok(equity::generate(n, 20, rng));
+    }
+    for dgp in Dgp::all() {
+        if dgp.name() == name {
+            return Ok(dgp.generate(n, rng));
+        }
+    }
+    Err(ApiError::UnknownDataset {
+        name: name.to_string(),
+        known: format!(
+            "DGP names: {}; plus covertype, stocks10, stocks20, file:/path.csv",
+            Dgp::all().map(|d| d.name()).join(", ")
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_resolves_to_batch() {
+        let m = Mat::zeros(10, 2);
+        match m.into_input(1).unwrap() {
+            SourceInput::Batch(b) => assert_eq!((b.rows, b.cols), (10, 2)),
+            SourceInput::Stream(_) => panic!("expected batch"),
+        }
+    }
+
+    #[test]
+    fn shards_resolve_to_stream_and_cover_rows() {
+        let m = Mat::from_vec(10, 2, (0..20).map(|x| x as f64).collect());
+        match MatShards::new(m, 4).into_input(1).unwrap() {
+            SourceInput::Stream(mut s) => {
+                assert_eq!(s.dim(), 2);
+                let mut total = 0;
+                while let Some(shard) = s.next_shard() {
+                    total += shard.rows;
+                }
+                assert_eq!(total, 10);
+            }
+            SourceInput::Batch(_) => panic!("expected stream"),
+        }
+    }
+
+    #[test]
+    fn dgp_source_is_seed_deterministic() {
+        let a = match DgpSource::batch(Dgp::Spiral, 50).into_input(9).unwrap() {
+            SourceInput::Batch(m) => m,
+            _ => unreachable!(),
+        };
+        let b = match DgpSource::batch(Dgp::Spiral, 50).into_input(9).unwrap() {
+            SourceInput::Batch(m) => m,
+            _ => unreachable!(),
+        };
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn named_source_rejects_unknown_names() {
+        let err = NamedSource::batch("nope", 10).into_input(1).unwrap_err();
+        assert!(matches!(err, ApiError::UnknownDataset { .. }));
+        let err = NamedSource::stream("nope", 100, 10).into_input(1).unwrap_err();
+        assert!(matches!(err, ApiError::UnknownDataset { .. }));
+    }
+
+    #[test]
+    fn dataset_registry_resolves_every_dgp() {
+        let mut rng = Rng::new(3);
+        for dgp in Dgp::all() {
+            let m = load_dataset(dgp.name(), 20, &mut rng).unwrap();
+            assert_eq!((m.rows, m.cols), (20, 2));
+        }
+        assert_eq!(load_dataset("covertype", 15, &mut rng).unwrap().cols, 10);
+        assert_eq!(load_dataset("stocks10", 15, &mut rng).unwrap().cols, 10);
+        assert_eq!(load_dataset("stocks20", 15, &mut rng).unwrap().cols, 20);
+    }
+}

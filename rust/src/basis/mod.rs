@@ -137,6 +137,16 @@ impl Scaler {
         (1.0 - 2.0 * self.eps) / (self.maxs[c] - self.mins[c])
     }
 
+    /// Inverse of [`Scaler::scale`] (without the clamp): map a scaled
+    /// coordinate x ∈ [0, 1] back to the raw axis of column c. Values
+    /// outside [ε, 1 − ε] extrapolate linearly beyond the fitted range —
+    /// the quantile/sampling queries use this to report support edges.
+    #[inline]
+    pub fn unscale(&self, c: usize, x: f64) -> f64 {
+        let t = (x - self.eps) / (1.0 - 2.0 * self.eps);
+        self.mins[c] + t * (self.maxs[c] - self.mins[c])
+    }
+
     /// Apply to a full matrix (returns a new matrix).
     pub fn transform(&self, data: &Mat) -> Mat {
         let mut out = data.clone();
@@ -343,6 +353,11 @@ mod tests {
         assert!((s.scale(0, -5.0) - 0.01).abs() < 1e-12);
         assert!((s.scale(0, 5.0) - 0.99).abs() < 1e-12);
         assert!((s.dscale(0) - 0.98 / 10.0).abs() < 1e-12);
+        // unscale inverts scale inside the data range
+        for &v in &[-5.0, -1.3, 0.0, 2.7, 5.0] {
+            let back = s.unscale(0, s.scale(0, v));
+            assert!((back - v).abs() < 1e-9, "{v} → {back}");
+        }
     }
 
     #[test]

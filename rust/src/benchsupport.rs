@@ -1,6 +1,10 @@
 //! Shared helpers for the `cargo bench` targets (hand-rolled harness —
 //! `criterion` is unavailable offline; see DESIGN.md §5).
 //!
+//! The table drivers run every (method, k, rep) through the facade:
+//! `TableRunner` → `run_method` → `SessionBuilder`/`Session::fit`, so
+//! benches measure exactly the public entry point (PR 4).
+//!
 //! Scaling: benches honour `MCTM_BENCH_SCALE`:
 //!   * `fast` — smallest sizes (CI smoke)
 //!   * `paper` — the paper's full sizes (n=300k Covertype etc.)

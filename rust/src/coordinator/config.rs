@@ -1,11 +1,15 @@
 //! Experiment configuration: defaults + a minimal `key = value` config
 //! file format + CLI-style overrides. (No external TOML crate offline;
 //! the format is the flat subset of TOML the launcher needs.)
+//!
+//! Every failure path — unknown keys, unparsable numbers, unknown
+//! method names — surfaces as a typed [`ApiError`] (PR 4), not an
+//! ad-hoc string chain; `ExperimentConfig::session` turns a validated
+//! config into a facade [`Session`].
 
+use crate::api::{ApiError, Session, SessionBuilder};
 use crate::coreset::Method;
 use crate::fit::{FitOptions, OptimizerKind};
-use crate::anyhow;
-use crate::util::error::Result;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -60,16 +64,26 @@ impl Default for ExperimentConfig {
     }
 }
 
+/// Parse a numeric config value, reporting the key on failure.
+fn parse_num<T: std::str::FromStr>(key: &str, value: &str) -> Result<T, ApiError>
+where
+    T::Err: std::fmt::Display,
+{
+    value
+        .parse()
+        .map_err(|e| ApiError::config(key, format!("`{value}`: {e}")))
+}
+
 impl ExperimentConfig {
     /// Parse a `key = value` config file (lines starting with `#` are
     /// comments), then apply `overrides` (same syntax, e.g. from CLI
     /// `--set k=100`).
-    pub fn load(path: Option<&Path>, overrides: &[String]) -> Result<Self> {
+    pub fn load(path: Option<&Path>, overrides: &[String]) -> Result<Self, ApiError> {
         let mut cfg = ExperimentConfig::default();
         let mut kv: HashMap<String, String> = HashMap::new();
         if let Some(p) = path {
             let text = std::fs::read_to_string(p)
-                .map_err(|e| anyhow!("reading config {}: {e}", p.display()))?;
+                .map_err(|e| ApiError::Io(format!("reading config {}: {e}", p.display())))?;
             parse_kv(&text, &mut kv)?;
         }
         for ov in overrides {
@@ -82,51 +96,77 @@ impl ExperimentConfig {
     }
 
     /// Apply one key.
-    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), ApiError> {
         match key {
             "dataset" => self.dataset = value.to_string(),
-            "n" => self.n = value.parse()?,
-            "k" => self.k = value.parse()?,
-            "d" => self.d = value.parse()?,
-            "reps" => self.reps = value.parse()?,
-            "seed" => self.seed = value.parse()?,
+            "n" => self.n = parse_num(key, value)?,
+            "k" => self.k = parse_num(key, value)?,
+            "d" => self.d = parse_num(key, value)?,
+            "reps" => self.reps = parse_num(key, value)?,
+            "seed" => self.seed = parse_num(key, value)?,
             "backend" => {
                 if value != "native" && value != "xla" {
-                    return Err(anyhow!("backend must be native|xla, got {value}"));
+                    return Err(ApiError::config(key, format!(
+                        "must be native|xla, got `{value}`"
+                    )));
                 }
                 self.backend = value.to_string();
             }
             "artifacts" => self.artifacts = PathBuf::from(value),
             "out_dir" => self.out_dir = PathBuf::from(value),
             // the strategy registry owns name → method resolution (and
-            // its error lists every valid name)
-            "method" => self.method = Method::parse(value)?,
+            // the typed error lists every valid name)
+            "method" => {
+                self.method =
+                    Method::parse(value).map_err(|_| ApiError::unknown_method(value))?
+            }
             "optimizer" => {
                 self.fit.optimizer = match value {
                     "adam" => OptimizerKind::Adam,
                     "lbfgs" => OptimizerKind::Lbfgs,
-                    other => return Err(anyhow!("unknown optimizer {other}")),
+                    other => {
+                        return Err(ApiError::config(key, format!(
+                            "must be lbfgs|adam, got `{other}`"
+                        )))
+                    }
                 };
             }
-            "threads" => self.threads = value.parse()?,
-            "max_iters" => self.fit.max_iters = value.parse()?,
-            "tol" => self.fit.tol = value.parse()?,
-            "learning_rate" => self.fit.learning_rate = value.parse()?,
-            other => return Err(anyhow!("unknown config key {other}")),
+            "threads" => self.threads = parse_num(key, value)?,
+            "max_iters" => self.fit.max_iters = parse_num(key, value)?,
+            "tol" => self.fit.tol = parse_num(key, value)?,
+            "learning_rate" => self.fit.learning_rate = parse_num(key, value)?,
+            other => {
+                return Err(ApiError::config(other, "unknown config key"));
+            }
         }
         Ok(())
     }
+
+    /// Turn this (already validated) config into a facade [`Session`]:
+    /// the single place where CLI knobs map onto builder knobs.
+    pub fn session(&self) -> Result<Session, ApiError> {
+        let mut b = SessionBuilder::new()
+            .method_tag(self.method)
+            .budget(self.k)
+            .basis_size(self.d)
+            .seed(self.seed)
+            .fit_options(self.fit.clone());
+        if self.threads > 0 {
+            b = b.threads(self.threads);
+        }
+        b.build()
+    }
 }
 
-fn parse_kv(text: &str, kv: &mut HashMap<String, String>) -> Result<()> {
+fn parse_kv(text: &str, kv: &mut HashMap<String, String>) -> Result<(), ApiError> {
     for line in text.lines() {
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
-        let (k, v) = line
-            .split_once('=')
-            .ok_or_else(|| anyhow!("expected key = value, got `{line}`"))?;
+        let (k, v) = line.split_once('=').ok_or_else(|| {
+            ApiError::config(line, "expected `key = value`")
+        })?;
         kv.insert(k.trim().to_string(), v.trim().trim_matches('"').to_string());
     }
     Ok(())
@@ -163,9 +203,19 @@ mod tests {
     }
 
     #[test]
-    fn rejects_unknown_keys() {
-        assert!(ExperimentConfig::load(None, &["bogus = 1".into()]).is_err());
-        assert!(ExperimentConfig::load(None, &["method = nope".into()]).is_err());
+    fn rejects_unknown_keys_with_typed_errors() {
+        assert!(matches!(
+            ExperimentConfig::load(None, &["bogus = 1".into()]).unwrap_err(),
+            ApiError::Config { .. }
+        ));
+        assert!(matches!(
+            ExperimentConfig::load(None, &["method = nope".into()]).unwrap_err(),
+            ApiError::UnknownMethod { .. }
+        ));
+        assert!(matches!(
+            ExperimentConfig::load(None, &["k = banana".into()]).unwrap_err(),
+            ApiError::Config { .. }
+        ));
     }
 
     #[test]
@@ -186,5 +236,21 @@ mod tests {
         for m in Method::all() {
             assert!(msg.contains(m.name()), "error should list {}: {msg}", m.name());
         }
+    }
+
+    #[test]
+    fn config_maps_onto_a_session() {
+        let cfg = ExperimentConfig::load(
+            None,
+            &["k = 77".into(), "method = ellipsoid".into(), "threads = 2".into()],
+        )
+        .unwrap();
+        let session = cfg.session().unwrap();
+        assert_eq!(session.budget(), 77);
+        assert_eq!(session.method(), Method::Ellipsoid);
+        // an invalid budget surfaces as a typed builder error
+        let mut bad = cfg.clone();
+        bad.k = 0;
+        assert!(matches!(bad.session().unwrap_err(), ApiError::Config { .. }));
     }
 }

@@ -3,13 +3,19 @@
 //! relative improvement, sampling/optimization time split), aggregated
 //! as mean ± std over repetitions — the machinery behind Tables 1–6 and
 //! Figures 1, 7–13.
+//!
+//! Since PR 4 every per-rep coreset build + fit goes through the facade
+//! (`SessionBuilder` → `Session::fit`), so the harness measures exactly
+//! what library users run. The per-rep session seed reproduces the
+//! pre-facade RNG mixing, so sampled coresets are bit-identical to the
+//! old direct path.
 
+use crate::api::SessionBuilder;
 use crate::basis::Design;
-use crate::coreset::{build_coreset, Method};
+use crate::coreset::Method;
 use crate::fit::{fit_native, FitOptions, FitResult};
 use crate::linalg::Mat;
 use crate::mctm::{self, lambda_error, loglik_ratio, theta_l2, ModelSpec};
-use crate::util::rng::Rng;
 use crate::util::{fmt_ms, mean, Stopwatch};
 
 /// The cached full-data baseline.
@@ -55,9 +61,12 @@ impl MethodStats {
 }
 
 /// Run `reps` repetitions of: build coreset → fit on coreset → compare
-/// against the full fit on the full data.
+/// against the full fit on the full data. Each repetition is one
+/// facade session (`SessionBuilder` → `Session::fit`) with a per-rep
+/// seed mixing identical to the pre-facade harness, so results are
+/// bit-compatible with the old direct `build_coreset` path.
 pub fn run_method(
-    design: &Design,
+    data: &Mat,
     full: &FullFit,
     method: Method,
     k: usize,
@@ -70,29 +79,36 @@ pub fn run_method(
         k,
         ..Default::default()
     };
+    let d = full.spec.d;
     for rep in 0..reps {
-        let mut rng = Rng::new(seed ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(rep as u64 + 1)));
-        let sw = Stopwatch::start();
-        let cs = build_coreset(design, method, k, &mut rng);
-        let sample_secs = sw.secs();
-
-        let sub = design.select(&cs.indices);
-        let sw = Stopwatch::start();
-        let fit = fit_native(full.spec, &sub, cs.weights.clone(), opts);
-        let fit_secs = sw.secs();
+        let rep_seed = seed ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(rep as u64 + 1));
+        let session = SessionBuilder::new()
+            .method_tag(method)
+            .budget(k)
+            .basis_size(d)
+            .seed(rep_seed)
+            .fit_options(opts.clone())
+            .build()
+            .expect("harness session knobs are valid by construction");
+        let model = session
+            .fit(data)
+            .expect("harness data sources are non-empty");
+        let diag = model.diagnostics();
 
         // metrics vs the full fit, NLL of coreset params ON FULL DATA
-        let nll_on_full = mctm::nll(design, &[], &fit.params);
+        let nll_on_full = model.nll(data);
         stats
             .lr
-            .push(loglik_ratio(nll_on_full, full.fit.nll, design.n, design.j));
-        stats.theta_l2.push(theta_l2(&fit.params, &full.fit.params));
+            .push(loglik_ratio(nll_on_full, full.fit.nll, data.rows, data.cols));
+        stats
+            .theta_l2
+            .push(theta_l2(model.params(), &full.fit.params));
         stats
             .lambda_err
-            .push(lambda_error(&fit.params, &full.fit.params));
-        stats.sample_secs.push(sample_secs);
-        stats.fit_secs.push(fit_secs);
-        stats.n_hull.push(cs.n_hull as f64);
+            .push(lambda_error(model.params(), &full.fit.params));
+        stats.sample_secs.push(diag.coreset.seconds);
+        stats.fit_secs.push(diag.fit_seconds);
+        stats.n_hull.push(diag.coreset.n_hull as f64);
     }
     stats
 }
@@ -120,8 +136,10 @@ pub fn design_of(data: &Mat, d: usize) -> Design {
 }
 
 /// Convenience wrapper: everything Table-3-style benches need for one
-/// dataset: full fit once, then each method at one k.
+/// dataset: full fit once, then each method at one k (each run through
+/// the facade — see [`run_method`]).
 pub struct TableRunner {
+    pub data: Mat,
     pub design: Design,
     pub spec: ModelSpec,
     pub full: FullFit,
@@ -134,11 +152,11 @@ impl TableRunner {
         let design = design_of(data, d);
         let spec = ModelSpec::new(data.cols, d);
         let full = full_fit(&design, spec, &opts);
-        TableRunner { design, spec, full, opts, seed }
+        TableRunner { data: data.clone(), design, spec, full, opts, seed }
     }
 
     pub fn run(&self, method: Method, k: usize, reps: usize) -> MethodStats {
-        run_method(&self.design, &self.full, method, k, reps, self.seed, &self.opts)
+        run_method(&self.data, &self.full, method, k, reps, self.seed, &self.opts)
     }
 
     /// Run every registered method at one k (registry order; Uniform is
@@ -156,6 +174,7 @@ impl TableRunner {
 mod tests {
     use super::*;
     use crate::data::dgp::Dgp;
+    use crate::util::rng::Rng;
 
     fn quick_opts() -> FitOptions {
         FitOptions { max_iters: 60, ..Default::default() }

@@ -48,6 +48,8 @@ pub struct StreamingPipeline {
     pub method: Method,
     pub k: usize,
     pub d: usize,
+    /// min–max scaling margin ε used inside every reduce's design build
+    pub eps: f64,
     /// bounded-queue capacity (shards in flight)
     pub queue_cap: usize,
     pub seed: u64,
@@ -59,11 +61,27 @@ pub struct StreamingPipeline {
 }
 
 impl StreamingPipeline {
+    /// Deprecated public constructor — configure streaming through the
+    /// facade instead (`SessionBuilder::queue_cap` / `buffer_factor` /
+    /// `consumers`, then `Session::fit` on a shard source). The shim
+    /// stays for one release.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use mctm_coreset::prelude::SessionBuilder and feed Session::fit a shard \
+                source; this constructor will be removed next release"
+    )]
     pub fn new(method: Method, k: usize, d: usize) -> Self {
+        Self::assemble(method, k, d)
+    }
+
+    /// Crate-internal constructor behind `api::Session` (and the shim
+    /// above).
+    pub(crate) fn assemble(method: Method, k: usize, d: usize) -> Self {
         StreamingPipeline {
             method,
             k,
             d,
+            eps: 0.01,
             queue_cap: 4,
             seed: 0xC0FF_EE,
             buffer_factor: 4,
@@ -98,13 +116,13 @@ impl StreamingPipeline {
             produced
         });
 
-        let mut mr = MergeReduce::new(self.method, self.k, self.d, 0.01, self.seed);
+        let mut mr = MergeReduce::new(self.method, self.k, self.d, self.eps, self.seed);
         mr.buffer_factor = self.buffer_factor;
         // reducer-side merges run concurrently with busy consumers — the
         // consumers are the parallelism, so the tree reduces stay serial
         mr.pool = crate::util::parallel::Pool::new(1);
         let k_buffer = self.buffer_factor * self.k;
-        let (method, d, base_seed) = (self.method, self.d, self.seed);
+        let (method, d, eps, base_seed) = (self.method, self.d, self.eps, self.seed);
 
         // the consumers ARE the parallelism when fanned out — but a
         // single consumer may use the full worker pool inside its leaf
@@ -157,7 +175,7 @@ impl StreamingPipeline {
                                 method,
                                 k_buffer,
                                 d,
-                                0.01,
+                                eps,
                                 &mut rng,
                                 &leaf_pool,
                             );
@@ -230,7 +248,7 @@ mod tests {
     fn stream_matches_batch_quality() {
         // streaming coreset of a 20k stream should be a valid bounded
         // coreset with total weight ≈ n
-        let pipeline = StreamingPipeline::new(Method::L2Hull, 60, 5);
+        let pipeline = StreamingPipeline::assemble(Method::L2Hull, 60, 5);
         let mut rng = Rng::new(11);
         let source = GenShards::new(
             move |n| Dgp::BivariateNormal.generate(n, &mut rng),
@@ -261,9 +279,9 @@ mod tests {
                 1_000,
             )
         };
-        let mut p1 = StreamingPipeline::new(Method::L2Hull, 40, 5);
+        let mut p1 = StreamingPipeline::assemble(Method::L2Hull, 40, 5);
         p1.consumers = 1;
-        let mut p8 = StreamingPipeline::new(Method::L2Hull, 40, 5);
+        let mut p8 = StreamingPipeline::assemble(Method::L2Hull, 40, 5);
         p8.consumers = 8;
         let (c1, s1) = p1.run(make_source(99));
         let (c8, s8) = p8.run(make_source(99));
@@ -274,7 +292,7 @@ mod tests {
 
     #[test]
     fn empty_stream_is_empty_coreset() {
-        let pipeline = StreamingPipeline::new(Method::Uniform, 10, 5);
+        let pipeline = StreamingPipeline::assemble(Method::Uniform, 10, 5);
         let source = GenShards::new(|n| Mat::zeros(n, 2), 2, 0, 100);
         let (coreset, stats) = pipeline.run(source);
         assert_eq!(stats.n_seen, 0);

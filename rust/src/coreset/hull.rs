@@ -156,7 +156,7 @@ fn dot(a: &[f64], b: &[f64]) -> f64 {
 }
 
 /// Batched hull-distance queries: squared distance of every row of
-/// `queries` to conv(points[hull_idx]). Rows are chunked across the
+/// `queries` to `conv(points[hull_idx])`. Rows are chunked across the
 /// pool's workers (fixed `ROW_CHUNK` grid, disjoint output chunks) and
 /// each worker amortizes one Frank–Wolfe scratch across its queries, so
 /// the result is bit-identical to per-query [`dist_to_hull`] calls at

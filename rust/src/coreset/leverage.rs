@@ -76,6 +76,31 @@ pub fn leverage_scores_ridged_with(
     Ok(scores)
 }
 
+/// Leverage scores of the rows of `x` under **prior row weights** `w`:
+/// u_i(w) = w_i · x_iᵀ (XᵀWX)⁻¹ x_i — the row sensitivities of the
+/// weighted least-squares problem, which is what a Merge & Reduce
+/// reduce step actually resamples (each kept row stands for w_i raw
+/// rows). Implemented by scaling row i by √w_i and reusing the
+/// unweighted kernel: the scaled row's leverage is exactly w_i·ũ_i,
+/// and with w ≡ 1 the scaling multiplies by 1.0, so the result is
+/// **bit-identical** to [`leverage_scores_ridged`] at γ = 0 — the
+/// property the strategy layer's unweighted call sites rely on.
+pub fn weighted_leverage_scores_with(
+    x: &Mat,
+    w: &[f64],
+    pool: &Pool,
+) -> Result<Vec<f64>, LinalgError> {
+    assert_eq!(x.rows, w.len(), "weights length");
+    let mut scaled = x.clone();
+    for i in 0..scaled.rows {
+        let s = w[i].max(0.0).sqrt();
+        for v in scaled.row_mut(i) {
+            *v *= s;
+        }
+    }
+    leverage_scores_ridged_with(&scaled, 0.0, pool)
+}
+
 /// The standard heuristic ridge for "ridge leverage scores" baselines:
 /// γ = tr(XᵀX)/d · ρ with ρ = 0.01.
 pub fn default_ridge(x: &Mat) -> f64 {
@@ -197,6 +222,41 @@ mod tests {
         for (ui, si) in u.iter().zip(&s) {
             assert!((si - ui - 1.0 / 50.0).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn weighted_leverage_unit_weights_bit_identical() {
+        let mut rng = Rng::new(27);
+        let x = Mat::from_vec(150, 5, (0..750).map(|_| rng.normal()).collect());
+        let pool = Pool::new(1);
+        let plain = leverage_scores_ridged_with(&x, 0.0, &pool).unwrap();
+        let weighted = weighted_leverage_scores_with(&x, &[1.0; 150], &pool).unwrap();
+        for (i, (a, b)) in plain.iter().zip(&weighted).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "row {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn weighted_leverage_matches_replication() {
+        // integer weight w_i = 2 ≡ duplicating row i: the weighted score
+        // equals the sum of the duplicates' unweighted scores
+        let mut rng = Rng::new(28);
+        let n = 120;
+        let x = Mat::from_vec(n, 4, (0..n * 4).map(|_| rng.normal()).collect());
+        let pool = Pool::new(1);
+        let mut w = vec![1.0; n];
+        w[9] = 2.0;
+        let weighted = weighted_leverage_scores_with(&x, &w, &pool).unwrap();
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.push(9);
+        let dup = x.select_rows(&idx);
+        let plain = leverage_scores_ridged_with(&dup, 0.0, &pool).unwrap();
+        let rhs = plain[9] + plain[n];
+        assert!(
+            (weighted[9] - rhs).abs() < 1e-8 * (1.0 + rhs.abs()),
+            "{} vs {rhs}",
+            weighted[9]
+        );
     }
 
     #[test]

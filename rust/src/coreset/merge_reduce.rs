@@ -54,10 +54,12 @@ impl WeightedRows {
 
 /// Reduce a weighted set to a coreset of ≤ k rows.
 ///
-/// Prior weights enter the sampling probabilities (p_i ∝ w_i·s_i, the
+/// Prior weights enter the **score computation itself** via
+/// `ScoreStrategy::weighted_scores` (ℓ₂ re-derives leverage under the
+/// weighted Gram Σ w·b bᵀ; other families fall back to s_i·w_i — the
 /// variance-optimal importance design for a weighted sum), and the new
-/// weight S/(k₁·s_i) keeps the estimator unbiased:
-/// E[Σ ŵ f] = Σ w_i f_i.
+/// weight w_i/(k₁·p_i) keeps the estimator unbiased for any positive
+/// score choice: E[Σ ŵ f] = Σ w_i f_i.
 pub fn reduce(
     set: &WeightedRows,
     method: Method,
@@ -88,10 +90,13 @@ pub fn reduce_with(
     let n = set.len();
 
     // per-row scores and hull budget via the strategy registry — the
-    // reduce step works unchanged for ANY registered method (uniform
-    // scores ≡ 1; degenerate designs fall back to ≡ 1 inside the trait)
+    // reduce step works unchanged for ANY registered method. The prior
+    // weights feed the score computation itself (ℓ₂ re-derives leverage
+    // under the weighted Gram; other families multiply scores by w),
+    // and the returned scores already include the weight factor, so
+    // they ARE the sampling probabilities up to normalization.
     let sampler = strategy::sampler(method);
-    let sens = sampler.reduce_scores(&design, pool);
+    let sens = sampler.reduce_scores(&design, &set.weights, pool);
     let hull_budget = match sampler.hull_fraction() {
         Some(frac) => (frac * k as f64).ceil() as usize,
         None => 0,
@@ -111,15 +116,10 @@ pub fn reduce_with(
     }
     let k1 = k.saturating_sub(hull_set.len()).max(1);
 
-    // weighted importance sample over the complement
+    // weighted importance sample over the complement (the weight factor
+    // is already inside `sens` — see MethodSampler::reduce_scores)
     let scaled: Vec<f64> = (0..n)
-        .map(|i| {
-            if hull_set.contains(&i) {
-                0.0
-            } else {
-                sens[i] * set.weights[i]
-            }
-        })
+        .map(|i| if hull_set.contains(&i) { 0.0 } else { sens[i] })
         .collect();
     // sort for determinism: HashSet order varies per process, and the
     // row order feeds the next level's RNG-driven sampling
@@ -140,7 +140,7 @@ pub fn reduce_with(
 
 /// Merge & Reduce accumulator: push shards, get the final coreset.
 pub struct MergeReduce {
-    /// buckets[l] holds at most one reduced set per tree level l
+    /// `buckets[l]` holds at most one reduced set per tree level l
     buckets: Vec<Option<WeightedRows>>,
     pub method: Method,
     pub k: usize,

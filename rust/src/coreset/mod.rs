@@ -15,7 +15,10 @@
 //!   that config, CLI, pipeline, merge-reduce and the benches all
 //!   dispatch through. `l2-hull` and `ellipsoid-hull` are two instances
 //!   of the same hybrid.
-//! * `samplers` — the `Method` tags and the `build_coreset` front door.
+//! * `samplers` — the `Method` tags and the crate-internal
+//!   `build_coreset_on` construction. The public front door is the
+//!   facade (`mctm_coreset::prelude::SessionBuilder`); the old free
+//!   functions remain as `#[deprecated]` shims for one release.
 //! * `merge_reduce` — the streaming / distributed composition (§4);
 //!   per-method behaviour is dispatched through `strategy`, so every
 //!   registered method streams end to end.
@@ -27,7 +30,11 @@ pub mod merge_reduce;
 pub mod samplers;
 pub mod strategy;
 
-pub use samplers::{build_coreset, build_coreset_with, Coreset, Method};
+// the deprecated free-function shims stay re-exported for one release;
+// new code goes through `mctm_coreset::prelude::SessionBuilder`
+#[allow(deprecated)]
+pub use samplers::{build_coreset, build_coreset_with};
+pub use samplers::{Coreset, Method};
 pub use strategy::{MethodSampler, ScoreStrategy};
 
 #[cfg(test)]
@@ -35,6 +42,7 @@ mod tests {
     use super::*;
     use crate::basis::Design;
     use crate::linalg::Mat;
+    use crate::util::parallel::Pool;
     use crate::util::rng::Rng;
 
     #[test]
@@ -45,7 +53,7 @@ mod tests {
         // registry-driven: new strategies (the ellipsoid pair included)
         // are covered here automatically, no hand-kept list
         for method in Method::all() {
-            let cs = build_coreset(&design, method, 40, &mut rng);
+            let cs = samplers::build_coreset_on(&design, method, 40, &mut rng, &Pool::current());
             assert!(!cs.indices.is_empty(), "{method:?} empty");
             assert!(cs.indices.len() <= 40 + 5, "{method:?} oversize");
             assert_eq!(cs.indices.len(), cs.weights.len());

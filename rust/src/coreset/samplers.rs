@@ -83,7 +83,7 @@ impl Coreset {
         self.indices.is_empty()
     }
 
-    /// Total weight — for an unbiased construction E[total] = n.
+    /// Total weight — for an unbiased construction `E[total] = n`.
     pub fn total_weight(&self) -> f64 {
         self.weights.iter().sum()
     }
@@ -91,23 +91,48 @@ impl Coreset {
 
 /// Build a coreset of target size `k` from a design, per `method`.
 ///
-/// Falls back to uniform sampling if the score computation fails
-/// (degenerate design) — mirroring the robustness behaviour of the
-/// reference implementation.
+/// Deprecated entry point — construct coresets through the facade
+/// instead: `mctm_coreset::prelude::SessionBuilder` → `Session::coreset`
+/// / `Session::fit`. The shim stays for one release.
+#[deprecated(
+    since = "0.2.0",
+    note = "use mctm_coreset::prelude::SessionBuilder (Session::coreset / Session::fit); \
+            this free-function shim will be removed next release"
+)]
 pub fn build_coreset(design: &Design, method: Method, k: usize, rng: &mut Rng) -> Coreset {
-    build_coreset_with(design, method, k, rng, &Pool::current())
+    build_coreset_on(design, method, k, rng, &Pool::current())
 }
 
-/// [`build_coreset`] on an explicit pool: every score/hull kernel inside
-/// (leverage, ellipsoid rounding, Gram, hull selection) runs on `pool`,
-/// and all of them are bit-identical for any thread count — so the
-/// sampled coreset depends only on `rng`, never on the pool width.
-/// Streaming consumers pass `Pool::new(1)` to avoid nesting workers.
+/// Deprecated pool-explicit twin of [`build_coreset`] — the facade's
+/// `SessionBuilder::threads` knob replaces the explicit pool argument.
+#[deprecated(
+    since = "0.2.0",
+    note = "use mctm_coreset::prelude::SessionBuilder with .threads(n); \
+            this free-function shim will be removed next release"
+)]
+pub fn build_coreset_with(
+    design: &Design,
+    method: Method,
+    k: usize,
+    rng: &mut Rng,
+    pool: &Pool,
+) -> Coreset {
+    build_coreset_on(design, method, k, rng, pool)
+}
+
+/// Crate-internal coreset construction on an explicit pool: every
+/// score/hull kernel inside (leverage, ellipsoid rounding, Gram, hull
+/// selection) runs on `pool`, and all of them are bit-identical for any
+/// thread count — so the sampled coreset depends only on `rng`, never
+/// on the pool width. Streaming consumers pass `Pool::new(1)` to avoid
+/// nesting workers.
 ///
 /// Dispatch goes through the strategy registry: the trivial `k ≥ n`
 /// identity coreset is handled here, everything else by the method's
-/// registered [`strategy::MethodSampler`].
-pub fn build_coreset_with(
+/// registered [`strategy::MethodSampler`]. Public callers reach this
+/// through `api::Session`; the old free functions above are deprecated
+/// shims over it.
+pub(crate) fn build_coreset_on(
     design: &Design,
     method: Method,
     k: usize,
@@ -139,6 +164,10 @@ mod tests {
     use super::*;
     use crate::linalg::Mat;
 
+    fn bc(design: &Design, method: Method, k: usize, rng: &mut Rng) -> Coreset {
+        build_coreset_on(design, method, k, rng, &Pool::current())
+    }
+
     fn toy_design(n: usize, seed: u64) -> Design {
         let mut rng = Rng::new(seed);
         let data = Mat::from_vec(n, 2, (0..n * 2).map(|_| rng.normal()).collect());
@@ -149,7 +178,7 @@ mod tests {
     fn uniform_weights_are_n_over_k() {
         let design = toy_design(100, 1);
         let mut rng = Rng::new(2);
-        let cs = build_coreset(&design, Method::Uniform, 10, &mut rng);
+        let cs = bc(&design, Method::Uniform, 10, &mut rng);
         assert_eq!(cs.len(), 10);
         assert!(cs.weights.iter().all(|&w| (w - 10.0).abs() < 1e-12));
         // no duplicates for uniform-without-replacement
@@ -164,7 +193,7 @@ mod tests {
         let mut rng = Rng::new(4);
         let mut totals = Vec::new();
         for _ in 0..50 {
-            let cs = build_coreset(&design, Method::L2Only, 30, &mut rng);
+            let cs = bc(&design, Method::L2Only, 30, &mut rng);
             totals.push(cs.total_weight());
         }
         let mean = totals.iter().sum::<f64>() / totals.len() as f64;
@@ -178,7 +207,7 @@ mod tests {
     fn l2hull_contains_hull_points() {
         let design = toy_design(300, 5);
         let mut rng = Rng::new(6);
-        let cs = build_coreset(&design, Method::L2Hull, 30, &mut rng);
+        let cs = bc(&design, Method::L2Hull, 30, &mut rng);
         assert!(cs.n_hull > 0, "expected hull augmentation");
         // hull points have weight exactly 1 at the tail
         let tail = &cs.weights[cs.weights.len() - cs.n_hull..];
@@ -192,7 +221,7 @@ mod tests {
         // ellipsoid-hull method inherits the same augmentation shape
         let design = toy_design(300, 11);
         let mut rng = Rng::new(12);
-        let cs = build_coreset(&design, Method::EllipsoidHull, 30, &mut rng);
+        let cs = bc(&design, Method::EllipsoidHull, 30, &mut rng);
         assert!(cs.n_hull > 0, "expected hull augmentation");
         let tail = &cs.weights[cs.weights.len() - cs.n_hull..];
         assert!(tail.iter().all(|&w| w == 1.0));
@@ -204,7 +233,7 @@ mod tests {
     fn k_geq_n_returns_identity() {
         let design = toy_design(20, 7);
         let mut rng = Rng::new(8);
-        let cs = build_coreset(&design, Method::L2Hull, 50, &mut rng);
+        let cs = bc(&design, Method::L2Hull, 50, &mut rng);
         assert_eq!(cs.len(), 20);
         assert!(cs.weights.iter().all(|&w| w == 1.0));
     }
@@ -225,7 +254,7 @@ mod tests {
         let mut rng = Rng::new(10);
         let mut ratios = Vec::new();
         for _ in 0..10 {
-            let cs = build_coreset(&design, Method::L2Only, 200, &mut rng);
+            let cs = bc(&design, Method::L2Only, 200, &mut rng);
             let sub = design.select(&cs.indices);
             let part = nll_parts(&sub, &cs.weights, &theta, &lam);
             ratios.push(part.f1 / full.f1);

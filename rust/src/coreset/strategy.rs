@@ -29,7 +29,7 @@ use super::ellipsoid::ellipsoid_scores_with;
 use super::hull::select_hull_points_with;
 use super::leverage::{
     default_ridge_with, leverage_scores_ridged_with, mctm_leverage_scores_with,
-    sensitivity_scores_with,
+    sensitivity_scores_with, weighted_leverage_scores_with,
 };
 use super::samplers::{Coreset, Method, HULL_SPLIT};
 use crate::basis::Design;
@@ -52,6 +52,30 @@ pub trait ScoreStrategy: Sync {
 
     /// Per-observation sampling scores (higher ⇒ more likely kept).
     fn scores(&self, design: &Design, pool: &Pool) -> Result<Vec<f64>, LinalgError>;
+
+    /// Per-observation sampling scores under **prior row weights** —
+    /// the Merge & Reduce reduce step feeds each row's accumulated
+    /// weight in, so the score computation itself can see the mass it
+    /// represents (ROADMAP PR-3 follow-up). The returned scores INCLUDE
+    /// the weight factor: the reduce samples with `p_i ∝ weighted_scores[i]`
+    /// directly.
+    ///
+    /// Default: `scores(design) · w` — exactly the pre-PR-4 behaviour
+    /// (weights enter only the sampling probabilities), and bit-identical
+    /// to it for any weights. Families that can do better (ℓ₂ leverage
+    /// re-derives the Gram under the weights) override this; with
+    /// w ≡ 1 every implementation MUST reproduce `scores` bit for bit,
+    /// which keeps the unweighted call sites and the streaming
+    /// determinism pins unchanged.
+    fn weighted_scores(
+        &self,
+        design: &Design,
+        weights: &[f64],
+        pool: &Pool,
+    ) -> Result<Vec<f64>, LinalgError> {
+        let scores = self.scores(design, pool)?;
+        Ok(scores.iter().zip(weights).map(|(s, w)| s * w).collect())
+    }
 }
 
 /// ℓ₂ sensitivity proxy s_i = u_i + 1/n (paper Lemmas 2.1/2.2).
@@ -64,6 +88,26 @@ impl ScoreStrategy for L2Sensitivity {
 
     fn scores(&self, design: &Design, pool: &Pool) -> Result<Vec<f64>, LinalgError> {
         sensitivity_scores_with(design, pool)
+    }
+
+    /// Weighted ℓ₂ sensitivities: leverage of the √w-scaled stacked
+    /// rows — i.e. w_i·b_iᵀ(Σ w b bᵀ)⁻¹b_i, the exact sensitivity of
+    /// the weighted sum — plus the weighted uniform term w_i/n. With
+    /// w ≡ 1 the row scaling multiplies by 1.0 (bit-exact identity), so
+    /// this reproduces `scores` to the bit, as the trait requires.
+    fn weighted_scores(
+        &self,
+        design: &Design,
+        weights: &[f64],
+        pool: &Pool,
+    ) -> Result<Vec<f64>, LinalgError> {
+        let stacked = design.stacked();
+        let u = weighted_leverage_scores_with(&stacked, weights, pool)?;
+        let n = design.n as f64;
+        Ok(u.iter()
+            .zip(weights)
+            .map(|(ui, wi)| ui + wi * (1.0 / n))
+            .collect())
     }
 }
 
@@ -145,9 +189,13 @@ pub trait MethodSampler: Sync {
         pool: &Pool,
     ) -> Coreset;
 
-    /// Per-row scores for the weighted reduce step (`merge_reduce`);
-    /// 1.0 ≡ uniform. Degenerate designs fall back to all-ones.
-    fn reduce_scores(&self, design: &Design, pool: &Pool) -> Vec<f64>;
+    /// Per-row sampling scores for the weighted reduce step
+    /// (`merge_reduce`), INCLUDING the prior-weight factor: the reduce
+    /// samples with `p_i ∝ reduce_scores[i]` and reweights by
+    /// w_i/(k₁·p_i), which stays unbiased for any positive scores.
+    /// `weights.len() == design.n`. Degenerate designs fall back to the
+    /// weights themselves (≡ weighted-uniform).
+    fn reduce_scores(&self, design: &Design, weights: &[f64], pool: &Pool) -> Vec<f64>;
 
     /// Fraction of the reduce budget pinned to convex-hull points
     /// (`None` for non-hybrid methods).
@@ -181,8 +229,10 @@ impl MethodSampler for UniformSampler {
         }
     }
 
-    fn reduce_scores(&self, design: &Design, _pool: &Pool) -> Vec<f64> {
-        vec![1.0; design.n]
+    fn reduce_scores(&self, _design: &Design, weights: &[f64], _pool: &Pool) -> Vec<f64> {
+        // uniform over mass: p ∝ w (identical to the pre-weighted-score
+        // behaviour, where all-ones scores were multiplied by w)
+        weights.to_vec()
     }
 }
 
@@ -235,10 +285,10 @@ impl MethodSampler for HybridSampler {
         cs
     }
 
-    fn reduce_scores(&self, design: &Design, pool: &Pool) -> Vec<f64> {
+    fn reduce_scores(&self, design: &Design, weights: &[f64], pool: &Pool) -> Vec<f64> {
         self.scores
-            .scores(design, pool)
-            .unwrap_or_else(|_| vec![1.0; design.n])
+            .weighted_scores(design, weights, pool)
+            .unwrap_or_else(|_| weights.to_vec())
     }
 
     fn hull_fraction(&self) -> Option<f64> {
@@ -464,5 +514,80 @@ mod tests {
         assert_eq!(L2_ONLY.hull_fraction(), None);
         let f = L2_HULL.hull_fraction().unwrap();
         assert!((f - (1.0 - HULL_SPLIT)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn unit_weights_reproduce_unweighted_scores_bitwise() {
+        // the contract every ScoreStrategy must honour: w ≡ 1 ⇒
+        // weighted_scores == scores to the bit (keeps all unweighted
+        // call sites and the streaming leaf reduces pinned)
+        let design = toy_design(300, 7);
+        let pool = Pool::new(1);
+        let ones = vec![1.0; design.n];
+        for s in [
+            &L2Sensitivity as &dyn ScoreStrategy,
+            &RidgeLeverage,
+            &RootLeverage,
+            &EllipsoidScores,
+        ] {
+            let plain = s.scores(&design, &pool).unwrap();
+            let weighted = s.weighted_scores(&design, &ones, &pool).unwrap();
+            for (i, (a, b)) in plain.iter().zip(&weighted).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{} row {i}: {a} vs {b} under unit weights",
+                    s.key()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn l2_weighted_scores_match_row_replication() {
+        // weight 2 on a row ≈ duplicating it: the weighted sensitivity
+        // of the doubled row must equal the SUM of the two duplicates'
+        // unweighted sensitivities (leverage under the same Gram)
+        let n = 200;
+        let design = toy_design(n, 8);
+        let pool = Pool::new(1);
+        let mut w = vec![1.0; n];
+        w[17] = 2.0;
+        let weighted = L2Sensitivity.weighted_scores(&design, &w, &pool).unwrap();
+
+        // replicated design: row 17 appears twice
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.push(17);
+        let dup = design.select(&idx);
+        let dup_scores = L2Sensitivity.scores(&dup, &pool).unwrap();
+        // strip the uniform terms (1/n vs 1/(n+1) differ by design)
+        let lhs = weighted[17] - 2.0 / n as f64;
+        let rhs = (dup_scores[17] - 1.0 / (n + 1) as f64)
+            + (dup_scores[n] - 1.0 / (n + 1) as f64);
+        assert!(
+            (lhs - rhs).abs() < 1e-8 * (1.0 + rhs.abs()),
+            "weighted {lhs} vs replicated {rhs}"
+        );
+        // untouched rows keep leverage of the (slightly) reweighted Gram:
+        // finite, positive, close to the replicated design's values
+        for i in [0usize, 50, 199] {
+            let a = weighted[i] - 1.0 / n as f64;
+            let b = dup_scores[i] - 1.0 / (n + 1) as f64;
+            assert!(
+                (a - b).abs() < 1e-8 * (1.0 + b.abs()),
+                "row {i}: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn reduce_scores_fall_back_to_weights() {
+        // ellipsoid on a too-short design errs ⇒ the hybrid's reduce
+        // scores degrade to the prior weights (weighted-uniform), never
+        // to unweighted ones
+        let design = toy_design(8, 9);
+        let w: Vec<f64> = (0..8).map(|i| 1.0 + i as f64).collect();
+        let got = ELLIPSOID.reduce_scores(&design, &w, &Pool::new(1));
+        assert_eq!(got, w);
     }
 }

@@ -18,6 +18,18 @@ pub trait ShardSource {
     fn dim(&self) -> usize;
 }
 
+// Boxed sources forward, so `api::SourceInput` can carry a type-erased
+// stream and hand it to the pipeline's generic `run`.
+impl<S: ShardSource + ?Sized> ShardSource for Box<S> {
+    fn next_shard(&mut self) -> Option<Mat> {
+        (**self).next_shard()
+    }
+
+    fn dim(&self) -> usize {
+        (**self).dim()
+    }
+}
+
 /// Shard an in-memory matrix.
 pub struct MatShards {
     data: Mat,

@@ -3,6 +3,7 @@
 //! Scalable learning of multivariate distributions via coresets — a
 //! three-layer Rust + JAX + Pallas reproduction. See DESIGN.md.
 
+pub mod api;
 pub mod basis;
 pub mod benchsupport;
 pub mod coordinator;
@@ -13,3 +14,38 @@ pub mod linalg;
 pub mod mctm;
 pub mod runtime;
 pub mod util;
+
+/// The one-stop import for the public facade: builder → session →
+/// fitted model, plus the data sources, method tags and metrics the
+/// top layer (CLI, benches, integration tests, examples) needs.
+///
+/// ```no_run
+/// use mctm_coreset::prelude::*;
+///
+/// let session = SessionBuilder::new()
+///     .method("l2-hull")
+///     .budget(100)
+///     .seed(42)
+///     .build()?;
+/// let model = session.fit(DgpSource::batch(Dgp::BivariateNormal, 10_000))?;
+/// let median = model.marginal_quantile(0, 0.5);
+/// # let _ = median;
+/// # Ok::<(), mctm_coreset::prelude::ApiError>(())
+/// ```
+pub mod prelude {
+    pub use crate::api::{
+        load_dataset, ApiError, CoresetReport, DataSource, DgpSource, Diagnostics,
+        FittedModel, NamedSource, Session, SessionBuilder, SourceInput,
+    };
+    pub use crate::coordinator::cli::Cli;
+    pub use crate::coordinator::config::ExperimentConfig;
+    pub use crate::coordinator::pipeline::StreamStats;
+    pub use crate::coreset::{Coreset, Method};
+    pub use crate::data::dgp::Dgp;
+    pub use crate::data::{GenShards, MatShards, ShardSource};
+    pub use crate::fit::{FitOptions, FitResult, OptimizerKind};
+    pub use crate::linalg::Mat;
+    pub use crate::mctm::{lambda_error, loglik_ratio, theta_l2, ModelSpec, Params};
+    pub use crate::util::rng::Rng;
+    pub use crate::util::{fmt_ms, mean, median, std_dev, Stopwatch};
+}

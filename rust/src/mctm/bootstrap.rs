@@ -117,8 +117,10 @@ pub fn bootstrap_ci(
 mod tests {
     use super::*;
     use crate::coordinator::experiment::design_of;
-    use crate::coreset::{build_coreset, Method};
+    use crate::coreset::samplers::build_coreset_on;
+    use crate::coreset::Method;
     use crate::data::dgp::Dgp;
+    use crate::util::parallel::Pool;
 
     fn quick_opts() -> FitOptions {
         FitOptions { max_iters: 80, ..Default::default() }
@@ -134,7 +136,7 @@ mod tests {
         let spec = ModelSpec::new(2, 6);
         let full = fit_native(spec, &design, Vec::new(), &quick_opts());
 
-        let cs = build_coreset(&design, Method::L2Hull, 200, &mut rng);
+        let cs = build_coreset_on(&design, Method::L2Hull, 200, &mut rng, &Pool::current());
         let sub = design.select(&cs.indices);
         let point = fit_native(spec, &sub, cs.weights.clone(), &quick_opts());
         let boot = bootstrap_ci(

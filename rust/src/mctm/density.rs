@@ -40,21 +40,42 @@ pub fn marginal_sigmas(p: &Params) -> Vec<f64> {
 
 /// Marginal density f_j(y) on the original data scale at raw value `y`.
 pub fn marginal_density(p: &Params, scaler: &Scaler, j: usize, y: f64) -> f64 {
-    let d = p.spec.d;
+    marginal_density_with_sigma(
+        &p.theta(),
+        p.spec.d,
+        scaler,
+        j,
+        y,
+        marginal_sigmas(p)[j],
+    )
+}
+
+/// [`marginal_density`] with the materialized ϑ and a precomputed σ_j —
+/// the single formula behind both the free function above and the
+/// facade's `FittedModel::marginal_density` (which caches ϑ and the
+/// σ's across queries).
+pub fn marginal_density_with_sigma(
+    theta: &[f64],
+    d: usize,
+    scaler: &Scaler,
+    j: usize,
+    y: f64,
+    sigma: f64,
+) -> f64 {
     let basis = Bernstein::new(d - 1);
-    let theta = p.theta();
     let th = &theta[j * d..(j + 1) * d];
     let x = scaler.scale(j, y);
     let a = basis.eval(x);
     let ad = basis.deriv(x);
     let htil: f64 = a.iter().zip(th).map(|(ai, ti)| ai * ti).sum();
     let hd: f64 = ad.iter().zip(th).map(|(ai, ti)| ai * ti).sum();
-    let sigma = marginal_sigmas(p)[j];
     norm_pdf(htil / sigma) / sigma * hd.max(0.0) * scaler.dscale(j)
 }
 
-/// Joint density at a raw J-vector.
-pub fn joint_density(p: &Params, scaler: &Scaler, y: &[f64]) -> f64 {
+/// Joint **log**-density at a raw J-vector — the numerically safe form
+/// the facade's `FittedModel::log_density` serves (far-tail queries
+/// underflow `joint_density` but stay finite here).
+pub fn log_joint_density(p: &Params, scaler: &Scaler, y: &[f64]) -> f64 {
     let (j, d) = (p.spec.j, p.spec.d);
     assert_eq!(y.len(), j);
     let basis = Bernstein::new(d - 1);
@@ -79,7 +100,12 @@ pub fn joint_density(p: &Params, scaler: &Scaler, y: &[f64]) -> f64 {
         }
         logphi += -0.5 * z * z - 0.5 * (2.0 * std::f64::consts::PI).ln();
     }
-    (logphi + log_jac).exp()
+    logphi + log_jac
+}
+
+/// Joint density at a raw J-vector.
+pub fn joint_density(p: &Params, scaler: &Scaler, y: &[f64]) -> f64 {
+    log_joint_density(p, scaler, y).exp()
 }
 
 #[cfg(test)]

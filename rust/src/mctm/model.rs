@@ -2,8 +2,12 @@
 //! gradient, over precomputed Bernstein design tensors.
 //!
 //! Per observation i:
-//!   z_{ij} = h̃_j(y_{ij}) + Σ_{l<j} λ_{jl} h̃_l(y_{il}),
-//!   loss_i = Σ_j ½ z_{ij}² − log h̃'_j(y_{ij}),
+//!
+//! ```text
+//! z_{ij} = h̃_j(y_{ij}) + Σ_{l<j} λ_{jl} h̃_l(y_{il}),
+//! loss_i = Σ_j ½ z_{ij}² − log h̃'_j(y_{ij}),
+//! ```
+//!
 //! with h̃_j = a_{ij}ᵀ ϑ_j, h̃'_j = a'_{ij}ᵀ ϑ_j. Weighted sums (coreset
 //! weights w_i) everywhere; the unweighted case is w ≡ 1.
 //!

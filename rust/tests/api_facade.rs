@@ -1,0 +1,202 @@
+//! PR 4 acceptance tests for the facade: builder validation, automatic
+//! batch-vs-streaming dispatch and their statistical equivalence on a
+//! fixed seed, and concurrent read-side serving from one `FittedModel`.
+
+use mctm_coreset::prelude::*;
+
+#[test]
+fn builder_validation_is_typed_and_lists_methods() {
+    // unknown method → error listing every registry name
+    let err = SessionBuilder::new().method("not-a-method").build().unwrap_err();
+    let msg = format!("{err}");
+    for m in Method::all() {
+        assert!(msg.contains(m.name()), "error should list {}: {msg}", m.name());
+    }
+    assert!(matches!(err, ApiError::UnknownMethod { .. }));
+
+    // zero budget and zero threads are rejected up front
+    for err in [
+        SessionBuilder::new().budget(0).build().unwrap_err(),
+        SessionBuilder::new().threads(0).build().unwrap_err(),
+        SessionBuilder::new().consumers(0).build().unwrap_err(),
+        SessionBuilder::new().buffer_factor(0).build().unwrap_err(),
+    ] {
+        match err {
+            ApiError::Config { key, reason } => {
+                assert!(!key.is_empty() && !reason.is_empty());
+            }
+            other => panic!("expected Config error, got {other:?}"),
+        }
+    }
+
+    // every registered name builds
+    for m in Method::all() {
+        assert!(SessionBuilder::new().method(m.name()).build().is_ok());
+    }
+}
+
+#[test]
+fn batch_and_streaming_agree_on_a_fixed_seed() {
+    // one distribution, one seed recipe, two ingestion paths through
+    // the SAME facade: a materialized Mat (batch) and shards of it
+    // (Merge & Reduce). The paths use different estimators, so exact
+    // equality is not expected — but both must be deterministic, carry
+    // the correct diagnostics, and land within the established quality
+    // envelope of the full fit.
+    let total = 12_000;
+    let mut rng = Rng::new(61);
+    let data = Dgp::BivariateNormal.generate(total, &mut rng);
+    let session = SessionBuilder::new()
+        .method("l2-hull")
+        .budget(100)
+        .basis_size(6)
+        .seed(7)
+        .max_iters(150)
+        .build()
+        .unwrap();
+
+    let batch = session.fit(&data).unwrap();
+    let streamed = session.fit(MatShards::new(data.clone(), 2_000)).unwrap();
+
+    // dispatch happened automatically and is visible in diagnostics
+    assert!(batch.diagnostics().coreset.stream.is_none());
+    let sstats = streamed.diagnostics().coreset.stream.clone().expect("stream path");
+    assert_eq!(sstats.n_seen, total);
+    assert_eq!(sstats.n_shards, 6);
+
+    // fixed seed ⇒ both paths reproduce bit-for-bit on a rerun
+    let batch2 = session.fit(&data).unwrap();
+    assert_eq!(batch.params().x, batch2.params().x);
+    let streamed2 = session.fit(MatShards::new(data.clone(), 2_000)).unwrap();
+    assert_eq!(streamed.params().x, streamed2.params().x);
+
+    // statistical equivalence: both approximate the full fit on the
+    // same evaluation sample
+    let full = SessionBuilder::new()
+        .budget(total)
+        .basis_size(6)
+        .seed(7)
+        .max_iters(150)
+        .build()
+        .unwrap()
+        .fit(&data)
+        .unwrap();
+    let full_nll = full.diagnostics().fit_nll;
+    let lr_batch = loglik_ratio(batch.nll(&data), full_nll, total, 2);
+    let lr_stream = loglik_ratio(streamed.nll(&data), full_nll, total, 2);
+    assert!(lr_batch < 1.4, "batch LR {lr_batch}");
+    assert!(lr_stream < 1.9, "streamed LR {lr_stream}");
+    // and their median queries agree within a modest band
+    let (mb, ms) = (batch.marginal_quantile(0, 0.5), streamed.marginal_quantile(0, 0.5));
+    assert!((mb - ms).abs() < 0.5, "medians diverge: {mb} vs {ms}");
+}
+
+#[test]
+fn one_fitted_model_serves_concurrent_queries() {
+    // FittedModel is Send + Sync by construction: hit one instance from
+    // many threads with the whole query surface and check the answers
+    // are identical to the single-threaded ones.
+    let mut rng = Rng::new(88);
+    let data = Dgp::BivariateNormal.generate(4_000, &mut rng);
+    let model = SessionBuilder::new()
+        .method("l2-hull")
+        .budget(200)
+        .basis_size(6)
+        .seed(5)
+        .max_iters(120)
+        .build()
+        .unwrap()
+        .fit(&data)
+        .unwrap();
+
+    // single-threaded reference answers
+    let grid: Vec<f64> = (0..20).map(|i| -2.0 + 0.2 * i as f64).collect();
+    let ref_logd: Vec<f64> = grid.iter().map(|&y| model.log_density(&[y, 0.3])).collect();
+    let ref_cdf: Vec<f64> = grid.iter().map(|&y| model.marginal_cdf(1, y)).collect();
+    let ref_q = model.marginal_quantile(0, 0.75);
+
+    let model_ref = &model;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..8usize {
+            let grid = grid.clone();
+            let ref_logd = ref_logd.clone();
+            let ref_cdf = ref_cdf.clone();
+            handles.push(s.spawn(move || {
+                // every thread owns its RNG; the model is shared read-only
+                let mut rng = Rng::new(1000 + t as u64);
+                for (i, &y) in grid.iter().enumerate() {
+                    let ld = model_ref.log_density(&[y, 0.3]);
+                    assert_eq!(ld.to_bits(), ref_logd[i].to_bits(), "thread {t} log_density");
+                    let c = model_ref.marginal_cdf(1, y);
+                    assert_eq!(c.to_bits(), ref_cdf[i].to_bits(), "thread {t} cdf");
+                }
+                let q = model_ref.marginal_quantile(0, 0.75);
+                assert_eq!(q.to_bits(), ref_q.to_bits(), "thread {t} quantile");
+                let draws = model_ref.sample_conditional(&[0.5], 50, &mut rng);
+                assert_eq!((draws.rows, draws.cols), (50, 2));
+                assert!(draws.data.iter().all(|v| v.is_finite()));
+            }));
+        }
+        for h in handles {
+            h.join().expect("query thread panicked");
+        }
+    });
+}
+
+#[test]
+fn query_surface_is_coherent() {
+    // CDF/quantile/density/sampling tell one consistent story about
+    // the same fitted distribution
+    let mut rng = Rng::new(14);
+    let data = Dgp::Heteroscedastic.generate(3_000, &mut rng);
+    let model = SessionBuilder::new()
+        .budget(3_000) // identity coreset — exact fit, no sampling noise
+        .basis_size(6)
+        .seed(2)
+        .max_iters(150)
+        .build()
+        .unwrap()
+        .fit(&data)
+        .unwrap();
+
+    for j in 0..2 {
+        // CDF is monotone over the data range
+        let (lo, hi) = (model.marginal_quantile(j, 0.05), model.marginal_quantile(j, 0.95));
+        assert!(lo < hi, "margin {j}: q05 {lo} !< q95 {hi}");
+        let mut prev = 0.0;
+        for step in 0..=20 {
+            let y = lo + (hi - lo) * step as f64 / 20.0;
+            let c = model.marginal_cdf(j, y);
+            assert!(c >= prev - 1e-12, "margin {j}: CDF not monotone at {y}");
+            prev = c;
+        }
+        // density integrates to ≈ the CDF mass over [lo, hi]
+        let m = 400;
+        let mut integral = 0.0;
+        for i in 0..m {
+            let y = lo + (hi - lo) * (i as f64 + 0.5) / m as f64;
+            integral += model.marginal_density(j, y) * (hi - lo) / m as f64;
+        }
+        let mass = model.marginal_cdf(j, hi) - model.marginal_cdf(j, lo);
+        assert!(
+            (integral - mass).abs() < 0.03,
+            "margin {j}: ∫f = {integral} vs ΔF = {mass}"
+        );
+    }
+
+    // log_density agrees with density where the latter doesn't underflow
+    let y = [data.at(10, 0), data.at(10, 1)];
+    let (ld, d) = (model.log_density(&y), model.density(&y));
+    assert!(d > 0.0 && (d.ln() - ld).abs() < 1e-9);
+
+    // empirical CDF of model samples matches the model CDF (margin 0)
+    let draws = model.sample(3_000, &mut rng);
+    let y0 = model.marginal_quantile(0, 0.3);
+    let emp = draws_below(&draws, 0, y0) / 3_000.0;
+    assert!((emp - 0.3).abs() < 0.05, "empirical CDF {emp} vs 0.3");
+}
+
+fn draws_below(m: &Mat, col: usize, y: f64) -> f64 {
+    (0..m.rows).filter(|&r| m.at(r, col) < y).count() as f64
+}

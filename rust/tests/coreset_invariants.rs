@@ -1,17 +1,27 @@
 //! Statistical invariants of the coreset constructions — the testable
-//! faces of Lemmas 2.1–2.3 and Theorem 2.4.
+//! faces of Lemmas 2.1–2.3 and Theorem 2.4 — driven through the public
+//! facade (`SessionBuilder` → `Session::coreset` / the `TableRunner`
+//! harness, which itself runs every repetition through `Session::fit`).
 
 use mctm_coreset::basis::Design;
 use mctm_coreset::coordinator::experiment::{design_of, TableRunner};
 use mctm_coreset::coreset::hull::{dist_to_hull, select_hull_points};
 use mctm_coreset::coreset::leverage::{leverage_scores_ridged_with, sensitivity_scores};
-use mctm_coreset::coreset::{build_coreset, build_coreset_with, Method};
-use mctm_coreset::data::dgp::Dgp;
-use mctm_coreset::fit::FitOptions;
-use mctm_coreset::mctm::{nll_parts, ModelSpec, Params};
-use mctm_coreset::util::mean;
+use mctm_coreset::prelude::*;
 use mctm_coreset::util::parallel::Pool;
-use mctm_coreset::util::rng::Rng;
+
+/// One facade sketch: the coreset of `data` under (method, k, d, seed).
+fn sketch(data: &Mat, method: Method, k: usize, d: usize, seed: u64) -> CoresetReport {
+    SessionBuilder::new()
+        .method_tag(method)
+        .budget(k)
+        .basis_size(d)
+        .seed(seed)
+        .build()
+        .expect("valid test session")
+        .coreset(data)
+        .expect("non-empty data")
+}
 
 fn random_theta_lambda(spec: ModelSpec, seed: u64) -> (Vec<f64>, Vec<f64>) {
     let mut rng = Rng::new(seed);
@@ -27,6 +37,7 @@ fn random_theta_lambda(spec: ModelSpec, seed: u64) -> (Vec<f64>, Vec<f64>) {
 /// heterogeneous DGPs.
 #[test]
 fn f1_preserved_within_epsilon() {
+    use mctm_coreset::mctm::nll_parts;
     let spec = ModelSpec::new(2, 6);
     for dgp in [Dgp::BivariateNormal, Dgp::Heteroscedastic, Dgp::NormalMixture] {
         let mut rng = Rng::new(17);
@@ -38,8 +49,8 @@ fn f1_preserved_within_epsilon() {
         for t in 0..trials {
             let (theta, lam) = random_theta_lambda(spec, 100 + t);
             let full = nll_parts(&design, &[], &theta, &lam);
-            let cs = build_coreset(&design, Method::L2Only, 400, &mut rng);
-            let sub = design.select(&cs.indices);
+            let cs = sketch(&data, Method::L2Only, 400, 6, 500 + t);
+            let sub = design.select(cs.indices.as_deref().expect("batch path"));
             let part = nll_parts(&sub, &cs.weights, &theta, &lam);
             let rel = ((part.f1 - full.f1) / full.f1).abs();
             worst = worst.max(rel);
@@ -64,8 +75,9 @@ fn hull_preserves_min_inner_products() {
     let data = Dgp::NormalMixture.generate(3_000, &mut rng);
     let design = design_of(&data, 6);
     let dp = design.deriv_points();
-    let cs = build_coreset(&design, Method::L2Hull, 60, &mut rng);
+    let cs = sketch(&data, Method::L2Hull, 60, 6, 24);
     assert!(cs.n_hull > 0);
+    let indices = cs.indices.as_deref().expect("batch path");
 
     // directions: random unit vectors in basis space
     let d = design.d;
@@ -76,8 +88,7 @@ fn hull_preserves_min_inner_products() {
         let full_min = (0..dp.rows)
             .map(|r| dot(dp.row(r), &v))
             .fold(f64::INFINITY, f64::min);
-        let coreset_min = cs
-            .indices
+        let coreset_min = indices
             .iter()
             .flat_map(|&i| (0..design.j).map(move |j| (i, j)))
             .map(|(i, j)| dot(design.ad_row(i, j), &v))
@@ -107,13 +118,12 @@ fn dot(a: &[f64], b: &[f64]) -> f64 {
 fn weights_are_unbiased() {
     let mut rng = Rng::new(29);
     let data = Dgp::Circular.generate(2_000, &mut rng);
-    let design = design_of(&data, 5);
     for method in [Method::L2Only, Method::RidgeLss, Method::RootL2] {
         let mut mean_total = 0.0;
         let reps = 40;
-        for _ in 0..reps {
-            let cs = build_coreset(&design, method, 50, &mut rng);
-            mean_total += cs.total_weight() / reps as f64;
+        for rep in 0..reps {
+            let cs = sketch(&data, method, 50, 5, 3_000 + rep);
+            mean_total += cs.total_weight / reps as f64;
         }
         let rel = (mean_total - 2_000.0).abs() / 2_000.0;
         assert!(rel < 0.2, "{}: E[total weight] off by {rel}", method.name());
@@ -221,32 +231,44 @@ fn l2hull_guards_nll_on_heavy_tails() {
 /// coresets on a heterogeneous DGP, and bit-identical for any
 /// worker-pool width (the Khachiyan rounding + hull selection inside
 /// run on the deterministic pool, so the sampled coreset depends only
-/// on the RNG).
+/// on the RNG). PR 4: driven through the facade's `threads` knob.
 #[test]
 fn ellipsoid_methods_valid_and_thread_deterministic() {
     let mut rng = Rng::new(91);
     let data = Dgp::NormalMixture.generate(3_000, &mut rng);
-    let design = design_of(&data, 6);
     for method in [Method::Ellipsoid, Method::EllipsoidHull] {
-        let cs = build_coreset(&design, method, 60, &mut rng);
-        assert!(!cs.is_empty(), "{} empty", method.name());
-        assert!(cs.len() <= 60, "{} oversize: {}", method.name(), cs.len());
-        assert_eq!(cs.indices.len(), cs.weights.len());
+        let cs = sketch(&data, method, 60, 6, 92);
+        assert!(cs.size > 0, "{} empty", method.name());
+        assert!(cs.size <= 60, "{} oversize: {}", method.name(), cs.size);
+        let indices = cs.indices.as_deref().expect("batch path");
+        assert_eq!(indices.len(), cs.weights.len());
         assert!(
             cs.weights.iter().all(|&w| w > 0.0 && w.is_finite()),
             "{} weights",
             method.name()
         );
-        assert!(cs.indices.iter().all(|&i| i < 3_000), "{} range", method.name());
+        assert!(indices.iter().all(|&i| i < 3_000), "{} range", method.name());
         if method == Method::EllipsoidHull {
             assert!(cs.n_hull > 0, "ellipsoid-hull must pin hull points");
         }
 
         // pool-width bit-identity at threads {1, 2, 8}: same seed, same
-        // coreset, to the bit
-        let reference = build_coreset_with(&design, method, 60, &mut Rng::new(17), &Pool::new(1));
+        // coreset, to the bit — through SessionBuilder::threads
+        let at_threads = |t: usize| {
+            SessionBuilder::new()
+                .method_tag(method)
+                .budget(60)
+                .basis_size(6)
+                .seed(17)
+                .threads(t)
+                .build()
+                .unwrap()
+                .coreset(&data)
+                .unwrap()
+        };
+        let reference = at_threads(1);
         for t in [2usize, 8] {
-            let got = build_coreset_with(&design, method, 60, &mut Rng::new(17), &Pool::new(t));
+            let got = at_threads(t);
             assert_eq!(
                 reference.indices,
                 got.indices,
@@ -307,6 +329,7 @@ fn ellipsoid_hull_guards_nll_on_heavy_tails() {
 /// after the normalization shift.
 #[test]
 fn total_loss_preserved_at_reference_params() {
+    use mctm_coreset::mctm::nll_parts;
     let spec = ModelSpec::new(2, 6);
     let mut rng = Rng::new(37);
     let data = Dgp::BivariateNormal.generate(5_000, &mut rng);
@@ -329,9 +352,9 @@ fn total_loss_preserved_at_reference_params() {
     // exactly that normalized form
     let denom = full.f1 + 5_000.0;
     let mut errs = Vec::new();
-    for _ in 0..10 {
-        let cs = build_coreset(&design, Method::L2Hull, 500, &mut rng);
-        let sub = design.select(&cs.indices);
+    for trial in 0..10u64 {
+        let cs = sketch(&data, Method::L2Hull, 500, 6, 7_000 + trial);
+        let sub = design.select(cs.indices.as_deref().expect("batch path"));
         let part = nll_parts(&sub, &cs.weights, &theta, &lam);
         errs.push((part.total() - full.total()).abs() / denom);
     }

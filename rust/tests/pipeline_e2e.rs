@@ -1,32 +1,43 @@
-//! End-to-end coordinator tests: streaming pipeline vs batch coresets,
-//! CLI/config plumbing, dataset registry.
+//! End-to-end coordinator tests, driven through the public facade
+//! (`mctm_coreset::prelude`): streaming pipeline vs batch coresets,
+//! CLI/config plumbing, dataset registry. The consumer-count
+//! bit-identity pins from PRs 2/3 are preserved verbatim — now running
+//! through `SessionBuilder` → `Session::coreset`/`fit`.
 
-use mctm_coreset::coordinator::cli::{load_dataset, Cli};
-use mctm_coreset::coordinator::experiment::design_of;
-use mctm_coreset::coordinator::pipeline::StreamingPipeline;
-use mctm_coreset::coreset::{build_coreset, Method};
-use mctm_coreset::data::dgp::Dgp;
-use mctm_coreset::data::GenShards;
-use mctm_coreset::fit::{fit_native, FitOptions};
-use mctm_coreset::mctm::{self, loglik_ratio, ModelSpec};
-use mctm_coreset::util::rng::Rng;
+use mctm_coreset::prelude::*;
 
 #[test]
 fn streaming_quality_close_to_batch() {
     let total = 30_000;
-    let spec = ModelSpec::new(2, 6);
     let opts = FitOptions { max_iters: 150, ..Default::default() };
 
-    // batch: materialize everything, coreset, fit
+    // batch: materialize everything; the full fit is the identity
+    // coreset (budget ≥ n) through the same facade
     let mut rng = Rng::new(41);
     let batch_data = Dgp::BivariateNormal.generate(total, &mut rng);
-    let batch_design = design_of(&batch_data, 6);
-    let full = fit_native(spec, &batch_design, Vec::new(), &opts);
-    let cs = build_coreset(&batch_design, Method::L2Hull, 100, &mut rng);
-    let sub = batch_design.select(&cs.indices);
-    let batch_fit = fit_native(spec, &sub, cs.weights.clone(), &opts);
+    let full = SessionBuilder::new()
+        .budget(total)
+        .basis_size(6)
+        .seed(41)
+        .fit_options(opts.clone())
+        .build()
+        .unwrap()
+        .fit(&batch_data)
+        .unwrap();
+    let batch_model = SessionBuilder::new()
+        .method("l2-hull")
+        .budget(100)
+        .basis_size(6)
+        .seed(42)
+        .fit_options(opts.clone())
+        .build()
+        .unwrap()
+        .fit(&batch_data)
+        .unwrap();
+    assert!(batch_model.diagnostics().coreset.stream.is_none());
 
-    // streaming: same distribution through Merge & Reduce
+    // streaming: same distribution through Merge & Reduce — the session
+    // picks the streaming path automatically from the shard source
     let mut gen_rng = Rng::new(43);
     let source = GenShards::new(
         move |n| Dgp::BivariateNormal.generate(n, &mut gen_rng),
@@ -34,33 +45,28 @@ fn streaming_quality_close_to_batch() {
         total,
         3_000,
     );
-    let pipeline = StreamingPipeline::new(Method::L2Hull, 100, 6);
-    let (streamed, stats) = pipeline.run(source);
-    assert_eq!(stats.n_seen, total);
-    let s_design = design_of(&streamed.rows, 6);
-    let stream_fit = fit_native(spec, &s_design, streamed.weights.clone(), &opts);
+    let stream_model = SessionBuilder::new()
+        .method("l2-hull")
+        .budget(100)
+        .basis_size(6)
+        .seed(44)
+        .fit_options(opts)
+        .build()
+        .unwrap()
+        .fit(source)
+        .unwrap();
+    let sdiag = stream_model.diagnostics();
+    let sstats = sdiag.coreset.stream.as_ref().expect("streaming path");
+    assert_eq!(sstats.n_seen, total);
+    assert_eq!(sdiag.coreset.n_seen, total);
 
-    // both coreset fits must approximate the batch full fit on full data.
-    // IMPORTANT: the streamed fit's parameters live on the streamed
-    // coreset's scaled axis — evaluate them on a full-data design built
-    // with THAT scaler (see Design::build_with_scaler docs).
-    let eval_design = mctm_coreset::basis::Design::build_with_scaler(
-        &batch_data,
-        6,
-        s_design.scaler.clone(),
-    );
-    let lr_batch = loglik_ratio(
-        mctm::nll(&batch_design, &[], &batch_fit.params),
-        full.nll,
-        total,
-        2,
-    );
-    let lr_stream = loglik_ratio(
-        mctm::nll(&eval_design, &[], &stream_fit.params),
-        full.nll,
-        total,
-        2,
-    );
+    // both coreset fits must approximate the batch full fit on full
+    // data. FittedModel::nll evaluates with each model's OWN scaler, so
+    // the streamed fit (whose params live on the streamed coreset's
+    // scaled axis) is handled correctly without manual design plumbing.
+    let full_nll = full.diagnostics().fit_nll;
+    let lr_batch = loglik_ratio(batch_model.nll(&batch_data), full_nll, total, 2);
+    let lr_stream = loglik_ratio(stream_model.nll(&batch_data), full_nll, total, 2);
     assert!(lr_batch < 1.3, "batch coreset LR {lr_batch}");
     // the stream compresses 30k → 100 through a random reduce tree;
     // quality is necessarily below one-shot sampling but bounded
@@ -71,34 +77,40 @@ fn streaming_quality_close_to_batch() {
     );
 }
 
-#[test]
-fn streaming_hull_deterministic_across_consumers() {
-    // ISSUE 2 acceptance: the L2Hull leaf reduce now runs the parallel
-    // geometry kernels (hull selection included). Per-shard RNGs plus
-    // the in-order reorder fold must keep the final coreset
-    // bit-identical for any consumer count — including the
-    // single-consumer path, which uses the full worker pool inside its
-    // leaf reduces, so this also pins pool-width independence of the
-    // whole reduce.
-    let make_source = |seed: u64| {
+/// Shared driver for the consumer-count bit-identity pins: build the
+/// streamed coreset through the facade at `consumers` ∈ {1, 4} and
+/// compare weights + rows bit for bit.
+fn assert_stream_deterministic(method: &str, total: usize, budget: usize, seed: u64) {
+    let make_source = move || {
         let mut rng = Rng::new(seed);
         GenShards::new(
             move |n| Dgp::CopulaComplex.generate(n, &mut rng),
             2,
-            8_000,
+            total,
             1_000,
         )
     };
     let run = |consumers: usize| {
-        let mut p = StreamingPipeline::new(Method::L2Hull, 50, 6);
-        p.consumers = consumers;
-        p.run(make_source(71))
+        SessionBuilder::new()
+            .method(method)
+            .budget(budget)
+            .basis_size(6)
+            .consumers(consumers)
+            .build()
+            .unwrap()
+            .coreset(make_source())
+            .unwrap()
     };
-    let (c1, s1) = run(1);
-    let (c4, s4) = run(4);
-    assert_eq!(s1.n_seen, 8_000);
+    let c1 = run(1);
+    let c4 = run(4);
+    let (s1, s4) = (
+        c1.stream.as_ref().expect("streaming path"),
+        c4.stream.as_ref().expect("streaming path"),
+    );
+    assert_eq!(s1.n_seen, total);
     assert_eq!(s1.n_seen, s4.n_seen);
     assert_eq!(s1.n_shards, s4.n_shards);
+    assert!(c1.size <= budget && c1.size > 0);
     assert_eq!(c1.weights.len(), c4.weights.len(), "coreset sizes differ");
     for (i, (a, b)) in c1.weights.iter().zip(&c4.weights).enumerate() {
         assert_eq!(a.to_bits(), b.to_bits(), "weight {i}: {a} vs {b}");
@@ -106,51 +118,30 @@ fn streaming_hull_deterministic_across_consumers() {
     for (i, (a, b)) in c1.rows.data.iter().zip(&c4.rows.data).enumerate() {
         assert_eq!(a.to_bits(), b.to_bits(), "row value {i}: {a} vs {b}");
     }
+}
+
+#[test]
+fn streaming_hull_deterministic_across_consumers() {
+    // ISSUE 2 acceptance, preserved through the facade: the L2Hull leaf
+    // reduce runs the parallel geometry kernels; per-shard RNGs plus
+    // the in-order reorder fold keep the final coreset bit-identical
+    // for any consumer count — including the single-consumer path,
+    // which uses the full worker pool inside its leaf reduces, so this
+    // also pins pool-width independence of the whole reduce.
+    assert_stream_deterministic("l2-hull", 8_000, 50, 71);
 }
 
 #[test]
 fn streaming_ellipsoid_deterministic_across_consumers() {
-    // ISSUE 3 acceptance: `--method ellipsoid-hull` runs end to end
-    // through the streaming pipeline — the Khachiyan rounding and hull
-    // selection execute inside every leaf/tree reduce via the strategy
-    // registry — and per-shard RNGs + the in-order reorder fold keep
-    // the final coreset bit-identical for any consumer count.
-    let make_source = |seed: u64| {
-        let mut rng = Rng::new(seed);
-        GenShards::new(
-            move |n| Dgp::CopulaComplex.generate(n, &mut rng),
-            2,
-            6_000,
-            1_000,
-        )
-    };
-    let run = |consumers: usize| {
-        let mut p = StreamingPipeline::new(Method::EllipsoidHull, 50, 6);
-        p.consumers = consumers;
-        p.run(make_source(73))
-    };
-    let (c1, s1) = run(1);
-    let (c4, s4) = run(4);
-    assert_eq!(s1.n_seen, 6_000);
-    assert_eq!(s1.n_seen, s4.n_seen);
-    assert_eq!(s1.n_shards, s4.n_shards);
-    assert!(c1.len() <= 50 && !c1.is_empty());
-    assert_eq!(c1.weights.len(), c4.weights.len(), "coreset sizes differ");
-    for (i, (a, b)) in c1.weights.iter().zip(&c4.weights).enumerate() {
-        assert_eq!(a.to_bits(), b.to_bits(), "weight {i}: {a} vs {b}");
-    }
-    for (i, (a, b)) in c1.rows.data.iter().zip(&c4.rows.data).enumerate() {
-        assert_eq!(a.to_bits(), b.to_bits(), "row value {i}: {a} vs {b}");
-    }
+    // ISSUE 3 acceptance, preserved through the facade: the ellipsoid
+    // hybrid streams end to end — Khachiyan rounding and hull selection
+    // execute inside every leaf/tree reduce via the strategy registry —
+    // bit-identical for any consumer count.
+    assert_stream_deterministic("ellipsoid-hull", 6_000, 50, 73);
 }
 
 #[test]
 fn backpressure_bounds_queue() {
-    let pipeline = {
-        let mut p = StreamingPipeline::new(Method::Uniform, 50, 5);
-        p.queue_cap = 2;
-        p
-    };
     let mut rng = Rng::new(47);
     let source = GenShards::new(
         move |n| Dgp::Spiral.generate(n, &mut rng),
@@ -158,10 +149,73 @@ fn backpressure_bounds_queue() {
         20_000,
         1_000,
     );
-    let (out, stats) = pipeline.run(source);
+    let report = SessionBuilder::new()
+        .method_tag(Method::Uniform)
+        .budget(50)
+        .basis_size(5)
+        .queue_cap(2)
+        .build()
+        .unwrap()
+        .coreset(source)
+        .unwrap();
+    let stats = report.stream.as_ref().expect("streaming path");
     assert_eq!(stats.n_shards, 20);
     assert!(stats.peak_queue <= 2);
-    assert!(out.len() <= 50);
+    assert!(report.size <= 50);
+}
+
+#[test]
+fn batch_vs_streaming_dispatch_is_automatic() {
+    // the SAME session fits either path purely from the source type:
+    // a Mat takes the batch path, shards of that Mat take Merge &
+    // Reduce — and both produce valid, deterministic models
+    let mut rng = Rng::new(90);
+    let data = Dgp::NormalMixture.generate(6_000, &mut rng);
+    let session = SessionBuilder::new()
+        .method("l2-hull")
+        .budget(80)
+        .basis_size(6)
+        .seed(17)
+        .max_iters(120)
+        .build()
+        .unwrap();
+
+    let batch = session.fit(&data).unwrap();
+    assert!(batch.diagnostics().coreset.stream.is_none());
+    assert!(batch.diagnostics().coreset.indices.is_some());
+
+    let streamed = session.fit(MatShards::new(data.clone(), 1_000)).unwrap();
+    let sdiag = streamed.diagnostics();
+    assert!(sdiag.coreset.stream.is_some());
+    assert!(sdiag.coreset.indices.is_none());
+    assert_eq!(sdiag.coreset.n_seen, 6_000);
+
+    // determinism: rerunning either path reproduces it bit for bit
+    let batch2 = session.fit(&data).unwrap();
+    assert_eq!(
+        batch.diagnostics().coreset.indices,
+        batch2.diagnostics().coreset.indices
+    );
+    assert_eq!(batch.params().x, batch2.params().x);
+    let streamed2 = session.fit(MatShards::new(data.clone(), 1_000)).unwrap();
+    assert_eq!(sdiag.coreset.weights, streamed2.diagnostics().coreset.weights);
+
+    // both models answer the same queries with comparable quality on
+    // the SAME evaluation data (each using its own scaler internally)
+    let full = SessionBuilder::new()
+        .budget(6_000)
+        .basis_size(6)
+        .seed(17)
+        .max_iters(120)
+        .build()
+        .unwrap()
+        .fit(&data)
+        .unwrap();
+    let full_nll = full.diagnostics().fit_nll;
+    let lr_batch = loglik_ratio(batch.nll(&data), full_nll, 6_000, 2);
+    let lr_stream = loglik_ratio(streamed.nll(&data), full_nll, 6_000, 2);
+    assert!(lr_batch < 1.5, "batch LR {lr_batch}");
+    assert!(lr_stream < 2.0, "streamed LR {lr_stream}");
 }
 
 #[test]
@@ -174,7 +228,10 @@ fn dataset_registry_resolves_all_names() {
     assert_eq!(load_dataset("covertype", 40, &mut rng).unwrap().cols, 10);
     assert_eq!(load_dataset("stocks10", 40, &mut rng).unwrap().cols, 10);
     assert_eq!(load_dataset("stocks20", 40, &mut rng).unwrap().cols, 20);
-    assert!(load_dataset("nope", 10, &mut rng).is_err());
+    assert!(matches!(
+        load_dataset("nope", 10, &mut rng).unwrap_err(),
+        ApiError::UnknownDataset { .. }
+    ));
 }
 
 #[test]
@@ -195,6 +252,11 @@ fn cli_parses_and_validates() {
     assert_eq!(cli.shards, 4);
     assert!(Cli::parse(&["fit".into(), "--bogus".into()]).is_err());
     assert!(Cli::parse(&["fit".into(), "--set".into(), "zzz=1".into()]).is_err());
+    // bad numbers in flags are typed config errors, not panics
+    assert!(matches!(
+        Cli::parse(&["fit".into(), "--shards".into(), "x".into()]).unwrap_err(),
+        ApiError::Config { .. }
+    ));
 }
 
 #[test]
@@ -211,12 +273,13 @@ fn cli_method_roundtrip_every_registered_name() {
         assert_eq!(cli.config.method, m);
         assert_eq!(cli.config.method.name(), m.name());
     }
-    // unknown method: the error must list every valid name
+    // unknown method: the typed error must list every valid name
     let err = Cli::parse(&["fit".into(), "--set".into(), "method=bogus".into()]).unwrap_err();
-    let msg = format!("{err:#}");
+    let msg = format!("{err}");
     for m in Method::all() {
         assert!(msg.contains(m.name()), "error should list {}: {msg}", m.name());
     }
+    assert!(matches!(err, ApiError::UnknownMethod { .. }));
 }
 
 #[test]

@@ -6,9 +6,10 @@ use mctm_coreset::basis::{Bernstein, Design, Scaler};
 use mctm_coreset::coreset::hull::{dist_to_hull, select_hull_points};
 use mctm_coreset::coreset::leverage::leverage_scores_ridged_with;
 use mctm_coreset::coreset::merge_reduce::{reduce, WeightedRows};
-use mctm_coreset::coreset::{build_coreset, Method};
+use mctm_coreset::coreset::Method;
 use mctm_coreset::linalg::{Cholesky, Mat};
 use mctm_coreset::mctm::{self, ModelSpec, Params};
+use mctm_coreset::prelude::SessionBuilder;
 use mctm_coreset::util::parallel::{Pool, ROW_CHUNK};
 use mctm_coreset::util::proptest::{check, gen};
 use mctm_coreset::util::rng::Rng;
@@ -127,23 +128,31 @@ fn prop_coresets_valid_for_any_method_and_size() {
             (data, k, m, rng.next_u64())
         },
         |(data, k, m, seed)| {
-            let design = Design::build(data, 5, 0.01);
-            let mut rng = Rng::new(*seed);
-            let cs = build_coreset(&design, *m, *k, &mut rng);
-            if cs.is_empty() {
+            // through the facade: builder → session → coreset report
+            let cs = SessionBuilder::new()
+                .method_tag(*m)
+                .budget(*k)
+                .basis_size(5)
+                .seed(*seed)
+                .build()
+                .map_err(|e| e.to_string())?
+                .coreset(data)
+                .map_err(|e| e.to_string())?;
+            if cs.size == 0 {
                 return Err("empty coreset".into());
             }
-            if cs.indices.len() != cs.weights.len() {
+            let indices = cs.indices.as_deref().ok_or("batch path must report indices")?;
+            if indices.len() != cs.weights.len() {
                 return Err("length mismatch".into());
             }
-            if cs.indices.iter().any(|&i| i >= design.n) {
+            if indices.iter().any(|&i| i >= data.rows) {
                 return Err("index out of range".into());
             }
             if cs.weights.iter().any(|&w| !(w > 0.0) || !w.is_finite()) {
                 return Err("invalid weight".into());
             }
-            if cs.len() > *k + 2 {
-                return Err(format!("oversize {} > k={k}", cs.len()));
+            if cs.size > *k + 2 {
+                return Err(format!("oversize {} > k={k}", cs.size));
             }
             Ok(())
         },
