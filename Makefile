@@ -4,7 +4,7 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: build test check ci fmt clippy doc example bench-quick bench-perf artifacts
+.PHONY: build test check ci fmt clippy doc example bench-compile bench-quick bench-perf artifacts
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -26,13 +26,18 @@ doc:
 example:
 	$(CARGO) run --release --manifest-path $(MANIFEST) --example quickstart
 
+# Compile gate for every bench target (they are plain main()s, so a
+# bitrotted bench only surfaces at `cargo bench` time without this).
+bench-compile:
+	$(CARGO) bench --no-run --manifest-path $(MANIFEST)
+
 # The tier-1 gate: formatting, lints as errors, docs, full test suite.
 check: fmt clippy doc test
 
 # What .github/workflows/ci.yml runs: fmt --check, build, tests, the
-# rustdoc gate, and the lib/bin clippy pass (the all-targets lint stays
-# in `make check` for local use).
-ci: fmt build test doc
+# rustdoc gate, the bench compile gate, and the lib/bin clippy pass
+# (the all-targets lint stays in `make check` for local use).
+ci: fmt build test doc bench-compile
 	$(CARGO) clippy --manifest-path $(MANIFEST) -- -D warnings
 
 # Hot-path microbench at the smallest scale (CI smoke): serial vs

@@ -45,6 +45,12 @@ fn main() {
     let data10 = mctm_coreset::data::covertype::generate(n / 2, &mut rng);
     bench_native(&mut table, "J=10 d=7", &data10, iters, max_threads);
 
+    // ---- L3-b: blocked-kernel sweep (ISSUE 5) ------------------------
+    // serial row-at-a-time reference vs the blocked plane-major kernel
+    // at threads {1, 2, 4, max}; shapes from simulation to beyond
+    // covertype scale (the 50k/200k rows are where blocking must win)
+    bench_nll_sweep(&mut table, scale, iters, max_threads);
+
     // ---- L1/L2 via PJRT ----------------------------------------------
     if Path::new("artifacts/manifest.json").exists() {
         bench_xla(&mut table, &data2, 2, iters);
@@ -240,6 +246,61 @@ fn bench_native(table: &mut Table, cfg: &str, data: &Mat, iters: usize, max_thre
             std::hint::black_box(ellipsoid_scores(data, 0.05));
         },
     );
+    parallel::set_threads(max_threads);
+}
+
+/// ISSUE 5 sweep: `nll_grad` — the optimizer inner loop — as
+/// serial row-at-a-time reference (`nll_grad_reference`) vs the
+/// blocked plane-major kernel at threads {1, 2, 4, max}, over
+/// (n, J, d) ∈ {(5k, 3, 8), (50k, 5, 8), (200k, 10, 8)}. The fast
+/// (CI-smoke) scale runs only the smallest shape; the sweep feeds
+/// EXPERIMENTS.md §Perf iteration 7.
+fn bench_nll_sweep(table: &mut Table, scale: Scale, iters: usize, max_threads: usize) {
+    let shapes: &[(usize, usize, usize)] = if scale == Scale::Fast {
+        &[(5_000, 3, 8)]
+    } else {
+        &[(5_000, 3, 8), (50_000, 5, 8), (200_000, 10, 8)]
+    };
+    for &(n, j, d) in shapes {
+        let mut rng = Rng::new(0xB10C + n as u64);
+        let data = Mat::from_vec(n, j, (0..n * j).map(|_| rng.normal()).collect());
+        let design = Design::build(&data, d, 0.01);
+        let spec = ModelSpec::new(j, d);
+        let p = Params::init(spec);
+        let cfg = format!("n={n} J={j} d={d}");
+
+        // serial row-at-a-time baseline (the pre-refactor kernel)
+        parallel::set_threads(1);
+        let t_ref = time_median(iters, || {
+            std::hint::black_box(mctm::nll_grad_reference(&design, &[], &p));
+        });
+        table.row(vec![
+            "L3 nll_grad rows (ref)".into(),
+            cfg.clone(),
+            "1".into(),
+            format!("{t_ref:.4}"),
+            "1.00x".into(),
+            format!("{:.1} Mrow/s", n as f64 / t_ref / 1e6),
+        ]);
+
+        // blocked plane-major kernel, thread sweep; speedup column is
+        // relative to the row-at-a-time reference so the single-thread
+        // row isolates the blocking win from the threading win
+        for &t in &thread_sweep(max_threads) {
+            parallel::set_threads(t);
+            let sec = time_median(iters, || {
+                std::hint::black_box(mctm::nll_grad(&design, &[], &p));
+            });
+            table.row(vec![
+                "L3 nll_grad blocked".into(),
+                cfg.clone(),
+                format!("{t}"),
+                format!("{sec:.4}"),
+                format!("{:.2}x", t_ref / sec),
+                format!("{:.1} Mrow/s", n as f64 / sec / 1e6),
+            ]);
+        }
+    }
     parallel::set_threads(max_threads);
 }
 

@@ -34,6 +34,7 @@ use crate::util::parallel::{self, Pool};
 use crate::util::rng::Rng;
 use crate::util::special::{norm_cdf, norm_quantile};
 use crate::util::Stopwatch;
+use std::borrow::Cow;
 
 /// Builder for a [`Session`]. Every knob is validated in [`Self::build`];
 /// invalid values surface as typed [`ApiError::Config`] /
@@ -242,10 +243,12 @@ fn source_seed(seed: u64) -> u64 {
     seed ^ 0xA076_1D64_78BD_642F
 }
 
-/// What the sketching half produced, before any optimization.
-enum Sketch {
+/// What the sketching half produced, before any optimization. The
+/// batch variant keeps the source's [`Cow`]: borrowed sources flow
+/// through the report zero-copy.
+enum Sketch<'a> {
     Batch {
-        data: Mat,
+        data: Cow<'a, Mat>,
         design: Design,
         cs: Coreset,
         seconds: f64,
@@ -253,6 +256,8 @@ enum Sketch {
     Stream {
         rows: Mat,
         weights: Vec<f64>,
+        /// hull-provenance count threaded up from the reduce tree
+        n_hull: usize,
         stats: StreamStats,
         j: usize,
         seconds: f64,
@@ -292,8 +297,8 @@ impl Session {
     pub fn coreset<S: DataSource>(&self, source: S) -> Result<CoresetReport, ApiError> {
         Ok(match self.sketch(source)? {
             Sketch::Batch { data, cs, seconds, .. } => self.batch_report(&data, &cs, seconds),
-            Sketch::Stream { rows, weights, stats, seconds, .. } => {
-                self.stream_report(rows, weights, stats, seconds)
+            Sketch::Stream { rows, weights, n_hull, stats, seconds, .. } => {
+                self.stream_report(rows, weights, n_hull, stats, seconds)
             }
         })
     }
@@ -309,19 +314,19 @@ impl Session {
                 let report = self.batch_report(&data, &cs, seconds);
                 Ok(FittedModel::assemble(spec, fit, design.scaler.clone(), report))
             }
-            Sketch::Stream { rows, weights, stats, j, seconds } => {
+            Sketch::Stream { rows, weights, n_hull, stats, j, seconds } => {
                 let pool = self.pool();
                 let design = Design::build_on(&rows, self.d, self.eps, &pool);
                 let spec = ModelSpec::new(j, self.d);
                 let fit = fit_native(spec, &design, weights.clone(), &self.fit);
                 let scaler = design.scaler.clone();
-                let report = self.stream_report(rows, weights, stats, seconds);
+                let report = self.stream_report(rows, weights, n_hull, stats, seconds);
                 Ok(FittedModel::assemble(spec, fit, scaler, report))
             }
         }
     }
 
-    fn sketch<S: DataSource>(&self, source: S) -> Result<Sketch, ApiError> {
+    fn sketch<'a, S: DataSource + 'a>(&self, source: S) -> Result<Sketch<'a>, ApiError> {
         match source.into_input(source_seed(self.seed))? {
             SourceInput::Batch(data) => {
                 if data.rows == 0 {
@@ -366,6 +371,7 @@ impl Session {
                     return Err(ApiError::Data("shard stream produced no rows".into()));
                 }
                 Ok(Sketch::Stream {
+                    n_hull: out.n_hull,
                     rows: out.rows,
                     weights: out.weights,
                     stats,
@@ -396,6 +402,7 @@ impl Session {
         &self,
         rows: Mat,
         weights: Vec<f64>,
+        n_hull: usize,
         stats: StreamStats,
         seconds: f64,
     ) -> CoresetReport {
@@ -403,9 +410,7 @@ impl Session {
             method: self.method.name(),
             requested: self.budget,
             size: rows.rows,
-            // the reduce tree does not track per-point provenance, so
-            // hull membership is unknown on the streaming path
-            n_hull: 0,
+            n_hull,
             total_weight: weights.iter().sum(),
             n_seen: stats.n_seen,
             indices: None,
@@ -427,8 +432,11 @@ pub struct CoresetReport {
     pub requested: usize,
     /// actual coreset size (≤ k + hull augmentation slack)
     pub size: usize,
-    /// points contributed by the convex-hull component (batch path;
-    /// 0 on the streaming path, which does not track provenance)
+    /// points contributed by the convex-hull component. On the batch
+    /// path this is the one-shot sampler's hull augmentation; on the
+    /// streaming path it is the hull-pinned count of the last reduce
+    /// that produced each surviving row, threaded up through the Merge
+    /// & Reduce tree (`WeightedRows::n_hull`)
     pub n_hull: usize,
     /// Σ weights — ≈ n for an unbiased construction
     pub total_weight: f64,

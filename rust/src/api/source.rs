@@ -15,13 +15,20 @@ use crate::data::dgp::Dgp;
 use crate::data::{covertype, equity, GenShards, MatShards, ShardSource};
 use crate::linalg::Mat;
 use crate::util::rng::Rng;
+use std::borrow::Cow;
 
 /// The concrete input [`crate::api::Session::fit`] consumes: either a
 /// fully materialized matrix (batch path) or a shard stream (Merge &
 /// Reduce path).
-pub enum SourceInput {
+///
+/// The batch variant carries a [`Cow`], so borrowed sources (`&Mat`)
+/// flow through the whole sketch **zero-copy** — the experiment
+/// harness used to clone the data matrix once per repetition — while
+/// owned sources (generated DGP draws, loaded files) move in without
+/// an extra copy either.
+pub enum SourceInput<'a> {
     /// materialized rows — batch coreset construction
-    Batch(Mat),
+    Batch(Cow<'a, Mat>),
     /// a shard stream — bounded-memory streaming construction
     Stream(Box<dyn ShardSource + Send>),
 }
@@ -29,44 +36,68 @@ pub enum SourceInput {
 /// Anything the session can fit. `into_input` resolves the source into
 /// a [`SourceInput`]; `seed` is the session seed, so generator-backed
 /// sources derive their randomness from the session configuration and
-/// a given (session, source) pair is fully deterministic.
+/// a given (session, source) pair is fully deterministic. The output
+/// lifetime is bounded by the source itself (`Self: 'a`), which is what
+/// lets `&Mat` resolve to a borrowed batch input.
 pub trait DataSource {
     /// Resolve into the concrete input the session consumes.
-    fn into_input(self, seed: u64) -> Result<SourceInput, ApiError>;
+    fn into_input<'a>(self, seed: u64) -> Result<SourceInput<'a>, ApiError>
+    where
+        Self: 'a;
 }
 
 impl DataSource for Mat {
-    fn into_input(self, _seed: u64) -> Result<SourceInput, ApiError> {
-        Ok(SourceInput::Batch(self))
+    fn into_input<'a>(self, _seed: u64) -> Result<SourceInput<'a>, ApiError>
+    where
+        Self: 'a,
+    {
+        Ok(SourceInput::Batch(Cow::Owned(self)))
     }
 }
 
 impl DataSource for &Mat {
-    fn into_input(self, _seed: u64) -> Result<SourceInput, ApiError> {
-        Ok(SourceInput::Batch(self.clone()))
+    fn into_input<'a>(self, _seed: u64) -> Result<SourceInput<'a>, ApiError>
+    where
+        Self: 'a,
+    {
+        Ok(SourceInput::Batch(Cow::Borrowed(self)))
     }
 }
 
 impl DataSource for MatShards {
-    fn into_input(self, _seed: u64) -> Result<SourceInput, ApiError> {
+    fn into_input<'a>(self, _seed: u64) -> Result<SourceInput<'a>, ApiError>
+    where
+        Self: 'a,
+    {
         Ok(SourceInput::Stream(Box::new(self)))
     }
 }
 
 impl<F: FnMut(usize) -> Mat + Send + 'static> DataSource for GenShards<F> {
-    fn into_input(self, _seed: u64) -> Result<SourceInput, ApiError> {
+    fn into_input<'a>(self, _seed: u64) -> Result<SourceInput<'a>, ApiError>
+    where
+        Self: 'a,
+    {
         Ok(SourceInput::Stream(Box::new(self)))
     }
 }
 
 impl DataSource for Box<dyn ShardSource + Send> {
-    fn into_input(self, _seed: u64) -> Result<SourceInput, ApiError> {
+    fn into_input<'a>(self, _seed: u64) -> Result<SourceInput<'a>, ApiError>
+    where
+        Self: 'a,
+    {
         Ok(SourceInput::Stream(self))
     }
 }
 
-impl DataSource for SourceInput {
-    fn into_input(self, _seed: u64) -> Result<SourceInput, ApiError> {
+impl<'b> DataSource for SourceInput<'b> {
+    fn into_input<'a>(self, _seed: u64) -> Result<SourceInput<'a>, ApiError>
+    where
+        Self: 'a,
+    {
+        // `Self: 'a` bounds 'b: 'a, and `SourceInput` is covariant in
+        // its lifetime, so the subtype coercion is implicit
         Ok(self)
     }
 }
@@ -96,7 +127,10 @@ impl DgpSource {
 }
 
 impl DataSource for DgpSource {
-    fn into_input(self, seed: u64) -> Result<SourceInput, ApiError> {
+    fn into_input<'a>(self, seed: u64) -> Result<SourceInput<'a>, ApiError>
+    where
+        Self: 'a,
+    {
         if let Some(shard) = self.shard {
             if shard == 0 {
                 return Err(ApiError::config("shard", "shard size must be ≥ 1"));
@@ -114,7 +148,7 @@ impl DataSource for DgpSource {
             ))));
         }
         let mut rng = Rng::new(seed);
-        Ok(SourceInput::Batch(self.dgp.generate(self.n, &mut rng)))
+        Ok(SourceInput::Batch(Cow::Owned(self.dgp.generate(self.n, &mut rng))))
     }
 }
 
@@ -142,7 +176,10 @@ impl NamedSource {
 }
 
 impl DataSource for NamedSource {
-    fn into_input(self, seed: u64) -> Result<SourceInput, ApiError> {
+    fn into_input<'a>(self, seed: u64) -> Result<SourceInput<'a>, ApiError>
+    where
+        Self: 'a,
+    {
         if let Some(shard) = self.shard {
             if shard == 0 {
                 return Err(ApiError::config("shard", "shard size must be ≥ 1"));
@@ -174,7 +211,9 @@ impl DataSource for NamedSource {
             ))));
         }
         let mut rng = Rng::new(seed);
-        Ok(SourceInput::Batch(load_dataset(&self.name, self.n, &mut rng)?))
+        Ok(SourceInput::Batch(Cow::Owned(load_dataset(
+            &self.name, self.n, &mut rng,
+        )?)))
     }
 }
 
@@ -223,7 +262,23 @@ mod tests {
     fn mat_resolves_to_batch() {
         let m = Mat::zeros(10, 2);
         match m.into_input(1).unwrap() {
-            SourceInput::Batch(b) => assert_eq!((b.rows, b.cols), (10, 2)),
+            SourceInput::Batch(b) => {
+                assert_eq!((b.rows, b.cols), (10, 2));
+                assert!(matches!(b, Cow::Owned(_)));
+            }
+            SourceInput::Stream(_) => panic!("expected batch"),
+        }
+    }
+
+    #[test]
+    fn borrowed_mat_resolves_without_a_copy() {
+        let m = Mat::from_vec(6, 2, (0..12).map(|x| x as f64).collect());
+        match (&m).into_input(1).unwrap() {
+            SourceInput::Batch(b) => {
+                assert!(matches!(b, Cow::Borrowed(_)));
+                // the borrow points at the caller's buffer, not a clone
+                assert!(std::ptr::eq(b.as_ref(), &m));
+            }
             SourceInput::Stream(_) => panic!("expected batch"),
         }
     }

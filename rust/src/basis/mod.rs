@@ -159,18 +159,28 @@ impl Scaler {
     }
 }
 
-/// Precomputed basis design tensors for a dataset: `a` and `a'` flattened
-/// as (n, J, d) row-major. This is the "apply the basis functions once"
-/// step the coreset construction operates on (paper §2: data points
-/// a_ij = a_j(y_ij), a'_ij = a'_j(y_ij)).
+/// Precomputed basis design tensors for a dataset in **plane-major
+/// layout**: `a` and `ad` are stored as J contiguous (n × d) planes —
+/// element (i, j, k) lives at `j·n·d + i·d + k`. This is the "apply the
+/// basis functions once" step the coreset construction operates on
+/// (paper §2: data points a_ij = a_j(y_ij), a'_ij = a'_j(y_ij)).
+///
+/// The plane layout makes per-margin work a unit-stride pass: the
+/// blocked NLL/gradient kernels (`mctm::model`) and the plane-direct
+/// leverage scoring (`coreset::leverage`) read each margin's panel
+/// `A_j` contiguously instead of striding through an interleaved
+/// (n, J, d) tensor. The row accessors ([`Design::a_row`] /
+/// [`Design::ad_row`]) and the materializing views ([`Design::stacked`],
+/// [`Design::deriv_points`]) keep their pre-plane semantics, so callers
+/// that think in rows are unaffected.
 #[derive(Clone, Debug)]
 pub struct Design {
     pub n: usize,
     pub j: usize,
     pub d: usize,
-    /// basis values, length n·J·d
+    /// basis values, length n·J·d, plane-major: J planes of (n × d)
     pub a: Vec<f64>,
-    /// basis derivative values, length n·J·d
+    /// basis derivative values, same plane-major layout as `a`
     pub ad: Vec<f64>,
     pub scaler: Scaler,
 }
@@ -196,84 +206,125 @@ impl Design {
         Self::build_with_scaler_on(data, d, scaler, &Pool::current())
     }
 
-    /// [`Design::build_with_scaler`] on an explicit pool. Every row's
-    /// basis values depend only on that row, so row shards fill disjoint
-    /// chunks of `a`/`ad` with per-worker scratch — output is identical
-    /// for any thread count.
+    /// [`Design::build_with_scaler`] on an explicit pool. Every plane
+    /// row's basis values depend only on one (observation, margin)
+    /// pair, so the work items — fixed `ROW_CHUNK` row slices of each
+    /// of the J planes — fill disjoint output chunks with per-worker
+    /// scratch, and the output is identical for any thread count.
     pub fn build_with_scaler_on(data: &Mat, d: usize, scaler: Scaler, pool: &Pool) -> Self {
         let basis = Bernstein::new(d - 1);
         let (n, j) = (data.rows, data.cols);
         let mut a = vec![0.0; n * j * d];
         let mut ad = vec![0.0; n * j * d];
-        let stride = j * d;
-        if stride > 0 {
-            let items: Vec<(&mut [f64], &mut [f64])> = a
-                .chunks_mut(ROW_CHUNK * stride)
-                .zip(ad.chunks_mut(ROW_CHUNK * stride))
-                .collect();
-            pool.for_items(items, |ci, (a_chunk, ad_chunk)| {
+        let plane = n * d;
+        if plane > 0 && j > 0 {
+            let mut items: Vec<(usize, usize, &mut [f64], &mut [f64])> = Vec::new();
+            for (jj, (pa, pad)) in a.chunks_mut(plane).zip(ad.chunks_mut(plane)).enumerate() {
+                for (ci, (ca, cad)) in pa
+                    .chunks_mut(ROW_CHUNK * d)
+                    .zip(pad.chunks_mut(ROW_CHUNK * d))
+                    .enumerate()
+                {
+                    items.push((jj, ci, ca, cad));
+                }
+            }
+            pool.for_items(items, |_, (jj, ci, a_chunk, ad_chunk)| {
                 let lo = ci * ROW_CHUNK;
-                let rows = a_chunk.len() / stride;
+                let rows = a_chunk.len() / d;
                 let mut scratch = vec![0.0; d.saturating_sub(1).max(1)];
                 for off in 0..rows {
-                    let r = lo + off;
-                    for c in 0..j {
-                        let x = scaler.scale(c, data.at(r, c));
-                        let at = off * stride + c * d;
-                        basis.eval_into(x, &mut a_chunk[at..at + d]);
-                        basis.deriv_into(x, &mut ad_chunk[at..at + d], &mut scratch);
-                    }
+                    let x = scaler.scale(jj, data.at(lo + off, jj));
+                    let at = off * d;
+                    basis.eval_into(x, &mut a_chunk[at..at + d]);
+                    basis.deriv_into(x, &mut ad_chunk[at..at + d], &mut scratch);
                 }
             });
         }
         Design { n, j, d, a, ad, scaler }
     }
 
+    /// The contiguous (n × d) basis panel A_j of margin `j` — the view
+    /// the blocked kernels stream with unit stride.
+    #[inline]
+    pub fn a_plane(&self, j: usize) -> &[f64] {
+        let plane = self.n * self.d;
+        &self.a[j * plane..(j + 1) * plane]
+    }
+
+    /// The contiguous (n × d) derivative panel A'_j of margin `j`.
+    #[inline]
+    pub fn ad_plane(&self, j: usize) -> &[f64] {
+        let plane = self.n * self.d;
+        &self.ad[j * plane..(j + 1) * plane]
+    }
+
     /// Basis row a_{ij} (length d).
     #[inline]
     pub fn a_row(&self, i: usize, j: usize) -> &[f64] {
-        let off = (i * self.j + j) * self.d;
+        let off = (j * self.n + i) * self.d;
         &self.a[off..off + self.d]
     }
 
     /// Derivative row a'_{ij} (length d).
     #[inline]
     pub fn ad_row(&self, i: usize, j: usize) -> &[f64] {
-        let off = (i * self.j + j) * self.d;
+        let off = (j * self.n + i) * self.d;
         &self.ad[off..off + self.d]
+    }
+
+    /// Gather the stacked row b_i = (a_1(y_i1), …, a_J(y_iJ)) into a
+    /// caller-owned buffer of length dJ — the zero-materialization view
+    /// the plane-direct leverage kernels use instead of [`Self::stacked`].
+    #[inline]
+    pub fn stacked_row_into(&self, i: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.j * self.d);
+        for jj in 0..self.j {
+            out[jj * self.d..(jj + 1) * self.d].copy_from_slice(self.a_row(i, jj));
+        }
     }
 
     /// The stacked matrix Ab ∈ R^{n × dJ} with rows
     /// b_i = (a_1(y_i1), …, a_J(y_iJ)) whose row leverage scores equal the
     /// leverage scores of the paper's block matrix B (see DESIGN.md §2).
+    /// Materializes a copy; the hot leverage path gathers rows straight
+    /// from the planes instead (`coreset::leverage`).
     pub fn stacked(&self) -> Mat {
         let dj = self.d * self.j;
         let mut m = Mat::zeros(self.n, dj);
         for i in 0..self.n {
-            let dst = m.row_mut(i);
-            let src = &self.a[i * dj..(i + 1) * dj];
-            dst.copy_from_slice(src);
+            self.stacked_row_into(i, m.row_mut(i));
         }
         m
     }
 
     /// All derivative points {a'_ij} as an (nJ × d) matrix — the input of
-    /// the convex-hull component.
+    /// the convex-hull component. Row order is (i·J + j), matching the
+    /// pre-plane layout, so hull point indices map back to observations
+    /// as `p / J` exactly as before.
     pub fn deriv_points(&self) -> Mat {
-        Mat::from_vec(self.n * self.j, self.d, self.ad.clone())
+        let mut m = Mat::zeros(self.n * self.j, self.d);
+        for i in 0..self.n {
+            for jj in 0..self.j {
+                m.row_mut(i * self.j + jj).copy_from_slice(self.ad_row(i, jj));
+            }
+        }
+        m
     }
 
     /// Restrict to a subset of observations (coreset restriction).
     pub fn select(&self, idx: &[usize]) -> Design {
         let (j, d) = (self.j, self.d);
-        let stride = j * d;
-        let mut a = Vec::with_capacity(idx.len() * stride);
-        let mut ad = Vec::with_capacity(idx.len() * stride);
-        for &i in idx {
-            a.extend_from_slice(&self.a[i * stride..(i + 1) * stride]);
-            ad.extend_from_slice(&self.ad[i * stride..(i + 1) * stride]);
+        let m = idx.len();
+        let mut a = vec![0.0; m * j * d];
+        let mut ad = vec![0.0; m * j * d];
+        for jj in 0..j {
+            for (t, &i) in idx.iter().enumerate() {
+                let at = (jj * m + t) * d;
+                a[at..at + d].copy_from_slice(self.a_row(i, jj));
+                ad[at..at + d].copy_from_slice(self.ad_row(i, jj));
+            }
         }
-        Design { n: idx.len(), j, d, a, ad, scaler: self.scaler.clone() }
+        Design { n: m, j, d, a, ad, scaler: self.scaler.clone() }
     }
 }
 
@@ -375,8 +426,33 @@ mod tests {
         }
         let dp = dz.deriv_points();
         assert_eq!((dp.rows, dp.cols), (60, 5));
+        // deriv_points keeps the (i·J + j) row order of the pre-plane layout
+        assert_eq!(dp.row(4 * 3 + 2), dz.ad_row(4, 2));
         let sel = dz.select(&[3, 19]);
         assert_eq!(sel.n, 2);
         assert_eq!(sel.a_row(1, 1), dz.a_row(19, 1));
+        assert_eq!(sel.ad_row(0, 2), dz.ad_row(3, 2));
+    }
+
+    #[test]
+    fn planes_are_contiguous_margin_panels() {
+        let mut rng = Rng::new(11);
+        let data = Mat::from_vec(17, 3, (0..51).map(|_| rng.normal()).collect());
+        let dz = Design::build(&data, 4, 0.01);
+        for jj in 0..3 {
+            let (pa, pad) = (dz.a_plane(jj), dz.ad_plane(jj));
+            assert_eq!(pa.len(), 17 * 4);
+            for i in 0..17 {
+                assert_eq!(&pa[i * 4..(i + 1) * 4], dz.a_row(i, jj));
+                assert_eq!(&pad[i * 4..(i + 1) * 4], dz.ad_row(i, jj));
+            }
+        }
+        // gather-row view matches the materialized stacked matrix
+        let stacked = dz.stacked();
+        let mut buf = vec![0.0; 12];
+        for i in [0usize, 7, 16] {
+            dz.stacked_row_into(i, &mut buf);
+            assert_eq!(&buf[..], stacked.row(i));
+        }
     }
 }

@@ -60,20 +60,29 @@ pub fn leverage_scores_ridged_with(
     pool.for_items(items, |ci, chunk| {
         let lo = ci * ROW_CHUNK;
         for (off, out) in chunk.iter_mut().enumerate() {
-            let xi = x.row(lo + off);
-            let mut acc = 0.0;
-            for r in 0..d {
-                let lrow = &linv.row(r)[..=r];
-                let mut z = 0.0;
-                for (c, &l) in lrow.iter().enumerate() {
-                    z += l * xi[c];
-                }
-                acc += z * z;
-            }
-            *out = acc;
+            *out = linv_quad_form(&linv, x.row(lo + off));
         }
     });
     Ok(scores)
+}
+
+/// ‖L⁻¹ b‖² through the materialized triangular L⁻¹ — the per-row
+/// scoring formula shared by the materialized-stacked path above and
+/// the plane-direct path below, so their floating-point order is
+/// identical by construction (the bitwise pin between the two paths
+/// depends on it).
+#[inline]
+fn linv_quad_form(linv: &Mat, xi: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for r in 0..linv.rows {
+        let lrow = &linv.row(r)[..=r];
+        let mut z = 0.0;
+        for (c, &l) in lrow.iter().enumerate() {
+            z += l * xi[c];
+        }
+        acc += z * z;
+    }
+    acc
 }
 
 /// Leverage scores of the rows of `x` under **prior row weights** `w`:
@@ -85,6 +94,11 @@ pub fn leverage_scores_ridged_with(
 /// and with w ≡ 1 the scaling multiplies by 1.0, so the result is
 /// **bit-identical** to [`leverage_scores_ridged`] at γ = 0 — the
 /// property the strategy layer's unweighted call sites rely on.
+///
+/// This materializing variant serves generic `Mat` inputs; the MCTM
+/// hot path (the strategy layer's ℓ₂ reduces) uses the plane-direct
+/// [`weighted_mctm_leverage_scores_with`] instead, which is pinned
+/// bit-identical to this one on the stacked design.
 pub fn weighted_leverage_scores_with(
     x: &Mat,
     w: &[f64],
@@ -122,12 +136,146 @@ pub fn mctm_leverage_scores(design: &Design) -> Result<Vec<f64>, LinalgError> {
 /// [`mctm_leverage_scores`] on an explicit pool (used by callers that
 /// already provide their own parallelism, e.g. the streaming consumers
 /// pass `Pool::new(1)` to avoid nested fan-out).
+///
+/// Runs **directly on the plane-major design**: both the Gram pass and
+/// the scoring pass gather each stacked row b_i from the J basis
+/// planes into a small per-worker buffer instead of materializing the
+/// (n × dJ) stacked matrix. The weighted twin
+/// [`weighted_mctm_leverage_scores_with`] does the same for the
+/// streaming Merge & Reduce reduces, where that copy used to be the
+/// largest transient allocation. Every floating-point operation and
+/// its order match
+/// `leverage_scores_ridged_with(&design.stacked(), 0.0, …)`, so scores
+/// are bit-identical to the materialized path (pinned by the
+/// `plane_direct_matches_stacked_bitwise` test below) and therefore to
+/// every coreset drawn before the refactor.
 pub fn mctm_leverage_scores_with(
     design: &Design,
     pool: &Pool,
 ) -> Result<Vec<f64>, LinalgError> {
-    let stacked = design.stacked();
-    leverage_scores_ridged_with(&stacked, 0.0, pool)
+    plane_leverage_scores(design, None, pool)
+}
+
+/// Weighted MCTM leverage scores u_i(w) = w_i · b_iᵀ(Σ w b bᵀ)⁻¹ b_i,
+/// plane-direct: stacked rows are gathered from the planes and scaled
+/// by √w_i on the fly — this is what every streaming Merge & Reduce
+/// reduce runs (`ScoreStrategy::weighted_scores` for the ℓ₂ family),
+/// so the per-reduce n × dJ stacked materialization (plus its scaled
+/// clone) is gone from the streaming hot path too. Bit-identical to
+/// `weighted_leverage_scores_with(&design.stacked(), w, …)` — the √w
+/// multiply hits the same values either way — and with w ≡ 1 the
+/// scaling multiplies by 1.0 (bit-exact), reproducing
+/// [`mctm_leverage_scores_with`] to the bit, which is the contract the
+/// strategy layer's determinism pins rely on.
+pub fn weighted_mctm_leverage_scores_with(
+    design: &Design,
+    w: &[f64],
+    pool: &Pool,
+) -> Result<Vec<f64>, LinalgError> {
+    assert_eq!(design.n, w.len(), "weights length");
+    let sqrt_w: Vec<f64> = w.iter().map(|wi| wi.max(0.0).sqrt()).collect();
+    plane_leverage_scores(design, Some(&sqrt_w), pool)
+}
+
+/// Gather stacked row i from the planes, scaled by `sqrt_w[i]` when
+/// weights are present — the one row view both plane-direct passes
+/// (Gram and scoring) read, so they cannot disagree on the scaling.
+#[inline]
+fn gather_stacked_row(design: &Design, i: usize, sqrt_w: Option<&[f64]>, out: &mut [f64]) {
+    design.stacked_row_into(i, out);
+    if let Some(s) = sqrt_w {
+        let si = s[i];
+        for v in out.iter_mut() {
+            *v *= si;
+        }
+    }
+}
+
+/// The shared plane-direct kernel behind [`mctm_leverage_scores_with`]
+/// (no weights) and [`weighted_mctm_leverage_scores_with`] (√w-scaled
+/// gather).
+fn plane_leverage_scores(
+    design: &Design,
+    sqrt_w: Option<&[f64]>,
+    pool: &Pool,
+) -> Result<Vec<f64>, LinalgError> {
+    let dj = design.j * design.d;
+    if design.n == 0 || dj == 0 {
+        return Ok(vec![0.0; design.n]);
+    }
+    let mut g = stacked_gram_with(design, sqrt_w, pool);
+    let stab = GRAM_RIDGE_REL * g.trace().max(1e-300) / dj as f64;
+    for i in 0..dj {
+        *g.at_mut(i, i) += stab;
+    }
+    let ch = Cholesky::new(&g)?;
+    let linv = ch.l_inverse();
+    let mut scores = vec![0.0; design.n];
+    let items: Vec<&mut [f64]> = scores.chunks_mut(ROW_CHUNK).collect();
+    pool.for_items(items, |ci, chunk| {
+        let lo = ci * ROW_CHUNK;
+        let mut xi = vec![0.0; dj];
+        for (off, out) in chunk.iter_mut().enumerate() {
+            gather_stacked_row(design, lo + off, sqrt_w, &mut xi);
+            *out = linv_quad_form(&linv, &xi);
+        }
+    });
+    Ok(scores)
+}
+
+/// Gram of the stacked design BᵀB ∈ R^{dJ×dJ} computed straight from
+/// the basis planes: per `ROW_CHUNK` shard, four stacked rows at a
+/// time are gathered into a scratch panel and fed through the SAME
+/// syrk block updates as [`Mat::gram_with`]
+/// (`linalg::syrk_upper_rows4`/`syrk_upper_row1` — one definition, not
+/// a copy) — identical chunk grid, 4-row blocking, per-entry
+/// accumulation order and tree reduction, so the result is
+/// bit-identical to `design.stacked().gram_with(pool)` without the
+/// n × dJ copy. With `sqrt_w` it computes the weighted Gram
+/// Σ w·b bᵀ by scaling each gathered row — bit-identical to scaling a
+/// materialized stacked matrix first.
+fn stacked_gram_with(
+    design: &Design,
+    sqrt_w: Option<&[f64]>,
+    pool: &Pool,
+) -> crate::linalg::Mat {
+    use crate::linalg::{syrk_upper_row1, syrk_upper_rows4};
+    use crate::util::parallel::{add_assign, tree_reduce};
+    let dj = design.j * design.d;
+    let partials = pool.map_chunks(design.n, ROW_CHUNK, |_, range| {
+        let mut g = vec![0.0; dj * dj];
+        let mut rows = vec![0.0; 4 * dj];
+        let (lo, hi) = (range.start, range.end);
+        let mut r = lo;
+        while r + 4 <= hi {
+            for t in 0..4 {
+                gather_stacked_row(design, r + t, sqrt_w, &mut rows[t * dj..(t + 1) * dj]);
+            }
+            let (r0, rest) = rows.split_at(dj);
+            let (r1, rest) = rest.split_at(dj);
+            let (r2, r3) = rest.split_at(dj);
+            syrk_upper_rows4(r0, r1, r2, r3, &mut g);
+            r += 4;
+        }
+        while r < hi {
+            gather_stacked_row(design, r, sqrt_w, &mut rows[..dj]);
+            syrk_upper_row1(&rows[..dj], &mut g);
+            r += 1;
+        }
+        g
+    });
+    let upper = tree_reduce(partials, |mut a, b| {
+        add_assign(&mut a, &b);
+        a
+    })
+    .unwrap_or_else(|| vec![0.0; dj * dj]);
+    let mut g = crate::linalg::Mat::from_vec(dj, dj, upper);
+    for i in 0..dj {
+        for q in (i + 1)..dj {
+            g.data[q * dj + i] = g.data[i * dj + q];
+        }
+    }
+    g
 }
 
 /// Sensitivity upper bounds s_i = u_i + 1/n (Algorithm 1 "sensitivity
@@ -221,6 +369,58 @@ mod tests {
         let s = sensitivity_scores(&design).unwrap();
         for (ui, si) in u.iter().zip(&s) {
             assert!((si - ui - 1.0 / 50.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn plane_direct_matches_stacked_bitwise() {
+        // the plane-direct Gram + scoring must reproduce the
+        // materialized-stacked path to the bit — this is what keeps
+        // every coreset draw identical to the pre-plane layout
+        for (n, j, d, seed) in [(150usize, 2usize, 5usize, 41u64), (2100, 3, 4, 43)] {
+            let design = random_design(n, j, d, seed);
+            for t in [1usize, 2, 8] {
+                let pool = Pool::new(t);
+                let direct = mctm_leverage_scores_with(&design, &pool).unwrap();
+                let stacked = design.stacked();
+                let via_mat = leverage_scores_ridged_with(&stacked, 0.0, &pool).unwrap();
+                for (i, (a, b)) in direct.iter().zip(&via_mat).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "n={n} t={t} row {i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_plane_direct_matches_stacked_bitwise() {
+        // the √w-scaled plane-direct path (what the streaming ℓ₂
+        // reduces run) must reproduce scaling a materialized stacked
+        // matrix, bit for bit, for unit AND non-trivial weights
+        let design = random_design(500, 2, 5, 45);
+        let mut rng = Rng::new(46);
+        let mut w: Vec<f64> = (0..500).map(|_| rng.uniform(0.5, 4.0)).collect();
+        w[7] = 1.0;
+        w[123] = 250.0; // a heavy merged-coreset weight
+        for t in [1usize, 4] {
+            let pool = Pool::new(t);
+            let direct = weighted_mctm_leverage_scores_with(&design, &w, &pool).unwrap();
+            let stacked = design.stacked();
+            let via_mat = weighted_leverage_scores_with(&stacked, &w, &pool).unwrap();
+            for (i, (a, b)) in direct.iter().zip(&via_mat).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "t={t} row {i}: {a} vs {b}");
+            }
+        }
+        // w ≡ 1 reproduces the unweighted plane-direct path to the bit
+        let ones = vec![1.0; 500];
+        let pool = Pool::new(1);
+        let wdirect = weighted_mctm_leverage_scores_with(&design, &ones, &pool).unwrap();
+        let plain = mctm_leverage_scores_with(&design, &pool).unwrap();
+        for (a, b) in wdirect.iter().zip(&plain) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

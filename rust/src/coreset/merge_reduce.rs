@@ -26,12 +26,19 @@ use crate::util::rng::Rng;
 pub struct WeightedRows {
     pub rows: Mat,
     pub weights: Vec<f64>,
+    /// Provenance: how many of these rows were pinned by the convex-hull
+    /// component of the reduce that produced them. A fresh (raw) set has
+    /// 0; [`reduce`] overwrites it with its own hull count (resampling
+    /// invalidates older provenance); [`WeightedRows::merge`] adds,
+    /// since concatenation keeps every row. This is what the facade's
+    /// `CoresetReport.n_hull` reports on the streaming path.
+    pub n_hull: usize,
 }
 
 impl WeightedRows {
     pub fn new(rows: Mat, weights: Vec<f64>) -> Self {
         assert_eq!(rows.rows, weights.len());
-        WeightedRows { rows, weights }
+        WeightedRows { rows, weights, n_hull: 0 }
     }
 
     pub fn len(&self) -> usize {
@@ -48,6 +55,7 @@ impl WeightedRows {
         self.rows.data.extend_from_slice(&other.rows.data);
         self.rows.rows += other.rows.rows;
         self.weights.extend_from_slice(&other.weights);
+        self.n_hull += other.n_hull;
         self
     }
 }
@@ -135,7 +143,11 @@ pub fn reduce_with(
         }
     }
     let rows = set.rows.select_rows(&indices);
-    WeightedRows::new(rows, weights)
+    let mut out = WeightedRows::new(rows, weights);
+    // fresh provenance: the hull points this reduce pinned exactly (the
+    // resampled complement replaces any earlier provenance)
+    out.n_hull = hull_set.len();
+    out
 }
 
 /// Merge & Reduce accumulator: push shards, get the final coreset.
@@ -312,5 +324,40 @@ mod tests {
         let out = mr.finish();
         assert_eq!(out.len(), 40);
         assert!(out.weights.iter().all(|&w| w == 1.0));
+        // nothing was reduced, so nothing carries hull provenance
+        assert_eq!(out.n_hull, 0);
+    }
+
+    #[test]
+    fn hull_provenance_threads_through_reduces() {
+        // hull methods report a non-zero hull-pinned count after a real
+        // reduce; score-only methods stay at zero
+        let mut mr = MergeReduce::new(Method::L2Hull, 40, 5, 0.01, 6);
+        for s in 0..6 {
+            mr.push_shard(random_rows(400, 2, 400 + s));
+        }
+        let out = mr.finish();
+        assert!(out.len() <= 40);
+        assert!(out.n_hull > 0, "hull reduce lost its provenance");
+        assert!(out.n_hull <= out.len());
+
+        let mut plain = MergeReduce::new(Method::L2Only, 40, 5, 0.01, 6);
+        for s in 0..6 {
+            plain.push_shard(random_rows(400, 2, 500 + s));
+        }
+        assert_eq!(plain.finish().n_hull, 0);
+
+        // merge adds provenance counts; reduce replaces them
+        let a = {
+            let mut w = WeightedRows::new(random_rows(10, 2, 9), vec![1.0; 10]);
+            w.n_hull = 3;
+            w
+        };
+        let b = {
+            let mut w = WeightedRows::new(random_rows(10, 2, 10), vec![1.0; 10]);
+            w.n_hull = 2;
+            w
+        };
+        assert_eq!(a.merge(b).n_hull, 5);
     }
 }

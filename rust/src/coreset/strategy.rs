@@ -29,7 +29,7 @@ use super::ellipsoid::ellipsoid_scores_with;
 use super::hull::select_hull_points_with;
 use super::leverage::{
     default_ridge_with, leverage_scores_ridged_with, mctm_leverage_scores_with,
-    sensitivity_scores_with, weighted_leverage_scores_with,
+    sensitivity_scores_with, weighted_mctm_leverage_scores_with,
 };
 use super::samplers::{Coreset, Method, HULL_SPLIT};
 use crate::basis::Design;
@@ -92,17 +92,20 @@ impl ScoreStrategy for L2Sensitivity {
 
     /// Weighted ℓ₂ sensitivities: leverage of the √w-scaled stacked
     /// rows — i.e. w_i·b_iᵀ(Σ w b bᵀ)⁻¹b_i, the exact sensitivity of
-    /// the weighted sum — plus the weighted uniform term w_i/n. With
-    /// w ≡ 1 the row scaling multiplies by 1.0 (bit-exact identity), so
-    /// this reproduces `scores` to the bit, as the trait requires.
+    /// the weighted sum — plus the weighted uniform term w_i/n.
+    /// Computed plane-direct (√w scaling happens while gathering rows
+    /// from the basis planes), so the streaming Merge & Reduce reduces
+    /// that call this per shard no longer materialize an n × dJ
+    /// stacked matrix. With w ≡ 1 the row scaling multiplies by 1.0
+    /// (bit-exact identity), so this reproduces `scores` to the bit,
+    /// as the trait requires.
     fn weighted_scores(
         &self,
         design: &Design,
         weights: &[f64],
         pool: &Pool,
     ) -> Result<Vec<f64>, LinalgError> {
-        let stacked = design.stacked();
-        let u = weighted_leverage_scores_with(&stacked, weights, pool)?;
+        let u = weighted_mctm_leverage_scores_with(design, weights, pool)?;
         let n = design.n as f64;
         Ok(u.iter()
             .zip(weights)

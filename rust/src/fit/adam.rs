@@ -1,5 +1,8 @@
 //! Adam optimizer (Kingma & Ba) with the standard bias correction —
-//! robust first-order fallback for ill-conditioned starts.
+//! robust first-order fallback for ill-conditioned starts. The
+//! iteration loop is allocation-free: moments, best-seen point and the
+//! gradient buffer are preallocated and evaluation goes through
+//! `Objective::value_grad_into` (pinned by `tests/fit_alloc.rs`).
 
 use super::{FitOptions, Objective};
 
@@ -13,6 +16,7 @@ pub fn minimize(
     let (beta1, beta2, eps): (f64, f64, f64) = (0.9, 0.999, 1e-8);
     let mut m = vec![0.0; n];
     let mut v = vec![0.0; n];
+    let mut g = vec![0.0; n];
     let mut prev_f = f64::INFINITY;
     let mut best_f = f64::INFINITY;
     let mut best_x = x.clone();
@@ -20,7 +24,7 @@ pub fn minimize(
     let mut iters = 0;
     for t in 1..=opts.max_iters {
         iters = t;
-        let (f, g) = obj.value_grad(&x);
+        let f = obj.value_grad_into(&x, &mut g);
         if f.is_finite() && f < best_f {
             best_f = f;
             best_x.copy_from_slice(&x);
@@ -57,8 +61,9 @@ mod tests {
         fn dim(&self) -> usize {
             1
         }
-        fn value_grad(&self, x: &[f64]) -> (f64, Vec<f64>) {
-            (x[0] * x[0], vec![2.0 * x[0]])
+        fn value_grad_into(&self, x: &[f64], grad: &mut [f64]) -> f64 {
+            grad[0] = 2.0 * x[0];
+            x[0] * x[0]
         }
     }
 
@@ -83,11 +88,13 @@ mod tests {
             fn dim(&self) -> usize {
                 1
             }
-            fn value_grad(&self, x: &[f64]) -> (f64, Vec<f64>) {
+            fn value_grad_into(&self, x: &[f64], grad: &mut [f64]) -> f64 {
                 if x[0] < 0.05 {
-                    (f64::INFINITY, vec![0.0])
+                    grad[0] = 0.0;
+                    f64::INFINITY
                 } else {
-                    ((x[0] - 0.1).powi(2), vec![2.0 * (x[0] - 0.1)])
+                    grad[0] = 2.0 * (x[0] - 0.1);
+                    (x[0] - 0.1).powi(2)
                 }
             }
         }

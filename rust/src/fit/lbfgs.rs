@@ -2,6 +2,15 @@
 //! the default optimizer: the MCTM NLL is smooth and the parameter
 //! dimension is modest (p ≤ ~300), where L-BFGS converges in tens of
 //! iterations against Adam's hundreds.
+//!
+//! The iteration loop performs **no heap allocation** (pinned by
+//! `tests/fit_alloc.rs`): every buffer — gradient, direction, trial
+//! point, curvature scratch and the (s, y, ρ) history, stored as a
+//! fixed ring of `m` preallocated slots — is allocated once up front,
+//! and evaluation goes through `Objective::value_grad_into`. The line
+//! search memoizes the (value, gradient) pair of the accepted point (it
+//! already computed both to test acceptance), so no re-evaluation
+//! happens at the start of the next iteration.
 
 use super::{FitOptions, Objective};
 
@@ -13,21 +22,35 @@ pub fn minimize(
     let n = obj.dim();
     assert_eq!(x.len(), n);
     let m = opts.history.max(1);
-    let mut s_hist: Vec<Vec<f64>> = Vec::with_capacity(m);
-    let mut y_hist: Vec<Vec<f64>> = Vec::with_capacity(m);
-    let mut rho: Vec<f64> = Vec::with_capacity(m);
+    // fixed ring of history slots: logical pair i ∈ [0, len) lives in
+    // physical slot (head + i) % m, oldest first — identical update
+    // order to a push/pop deque, without the per-iteration allocation
+    let mut s_hist: Vec<Vec<f64>> = (0..m).map(|_| vec![0.0; n]).collect();
+    let mut y_hist: Vec<Vec<f64>> = (0..m).map(|_| vec![0.0; n]).collect();
+    let mut rho = vec![0.0; m];
+    let mut head = 0usize;
+    let mut len = 0usize;
 
-    let (mut f, mut g) = obj.value_grad(&x);
+    let mut g = vec![0.0; n];
+    let mut g_new = vec![0.0; n];
+    let mut q = vec![0.0; n];
+    let mut d = vec![0.0; n];
+    let mut x_new = vec![0.0; n];
+    let mut s_tmp = vec![0.0; n];
+    let mut y_tmp = vec![0.0; n];
+    let mut alpha = vec![0.0; m];
+
+    let mut f = obj.value_grad_into(&x, &mut g);
     if !f.is_finite() {
         // fall back: shrink toward origin until finite
         for _ in 0..60 {
             for xi in x.iter_mut() {
                 *xi *= 0.5;
             }
-            let (f2, g2) = obj.value_grad(&x);
+            let f2 = obj.value_grad_into(&x, &mut g_new);
             if f2.is_finite() {
                 f = f2;
-                g = g2;
+                g.copy_from_slice(&g_new);
                 break;
             }
         }
@@ -44,51 +67,54 @@ pub fn minimize(
         }
 
         // two-loop recursion: d = −H g
-        let mut q = g.clone();
-        let k = s_hist.len();
-        let mut alpha = vec![0.0; k];
-        for i in (0..k).rev() {
-            alpha[i] = rho[i] * dot(&s_hist[i], &q);
-            axpy(&mut q, -alpha[i], &y_hist[i]);
+        q.copy_from_slice(&g);
+        for i in (0..len).rev() {
+            let pi = (head + i) % m;
+            alpha[i] = rho[pi] * dot(&s_hist[pi], &q);
+            axpy(&mut q, -alpha[i], &y_hist[pi]);
         }
         // initial scaling γ = sᵀy / yᵀy
-        if k > 0 {
-            let gamma = dot(&s_hist[k - 1], &y_hist[k - 1])
-                / dot(&y_hist[k - 1], &y_hist[k - 1]).max(1e-300);
+        if len > 0 {
+            let pl = (head + len - 1) % m;
+            let gamma =
+                dot(&s_hist[pl], &y_hist[pl]) / dot(&y_hist[pl], &y_hist[pl]).max(1e-300);
             for qi in q.iter_mut() {
                 *qi *= gamma;
             }
         }
-        for i in 0..k {
-            let beta = rho[i] * dot(&y_hist[i], &q);
-            axpy(&mut q, alpha[i] - beta, &s_hist[i]);
+        for i in 0..len {
+            let pi = (head + i) % m;
+            let beta = rho[pi] * dot(&y_hist[pi], &q);
+            axpy(&mut q, alpha[i] - beta, &s_hist[pi]);
         }
-        let mut d: Vec<f64> = q.iter().map(|v| -v).collect();
+        for i in 0..n {
+            d[i] = -q[i];
+        }
         let mut dir_deriv = dot(&g, &d);
         if dir_deriv >= 0.0 {
             // not a descent direction (can happen after a bad pair) —
             // reset to steepest descent
-            s_hist.clear();
-            y_hist.clear();
-            rho.clear();
-            d = g.iter().map(|v| -v).collect();
+            len = 0;
+            head = 0;
+            for i in 0..n {
+                d[i] = -g[i];
+            }
             dir_deriv = -dot(&g, &g);
         }
 
-        // Armijo backtracking
+        // Armijo backtracking; the accepted trial's (value, gradient)
+        // pair lands in (f_new, g_new) — memoized for the next iteration
         let c1 = 1e-4;
         let mut step = 1.0;
         let mut accepted = false;
-        let mut x_new = x.clone();
-        let (mut f_new, mut g_new) = (f, g.clone());
+        let mut f_new = f;
         for _ in 0..50 {
             for i in 0..n {
                 x_new[i] = x[i] + step * d[i];
             }
-            let (ft, gt) = obj.value_grad(&x_new);
+            let ft = obj.value_grad_into(&x_new, &mut g_new);
             if ft.is_finite() && ft <= f + c1 * step * dir_deriv {
                 f_new = ft;
-                g_new = gt;
                 accepted = true;
                 break;
             }
@@ -100,25 +126,29 @@ pub fn minimize(
             break;
         }
 
-        // curvature pair
-        let s: Vec<f64> = (0..n).map(|i| x_new[i] - x[i]).collect();
-        let yv: Vec<f64> = (0..n).map(|i| g_new[i] - g[i]).collect();
-        let sy = dot(&s, &yv);
-        if sy > 1e-12 * norm(&s) * norm(&yv) {
-            if s_hist.len() == m {
-                s_hist.remove(0);
-                y_hist.remove(0);
-                rho.remove(0);
+        // curvature pair — built in scratch first so a rejected pair
+        // cannot corrupt a live ring slot
+        for i in 0..n {
+            s_tmp[i] = x_new[i] - x[i];
+            y_tmp[i] = g_new[i] - g[i];
+        }
+        let sy = dot(&s_tmp, &y_tmp);
+        if sy > 1e-12 * norm(&s_tmp) * norm(&y_tmp) {
+            let slot = (head + len) % m;
+            s_hist[slot].copy_from_slice(&s_tmp);
+            y_hist[slot].copy_from_slice(&y_tmp);
+            rho[slot] = 1.0 / sy;
+            if len == m {
+                head = (head + 1) % m; // overwrote the oldest pair
+            } else {
+                len += 1;
             }
-            rho.push(1.0 / sy);
-            s_hist.push(s);
-            y_hist.push(yv);
         }
 
         let df = (f - f_new).abs();
-        x = x_new;
+        std::mem::swap(&mut x, &mut x_new);
+        std::mem::swap(&mut g, &mut g_new);
         f = f_new;
-        g = g_new;
         if df < opts.tol * (1.0 + f.abs()) {
             converged = true;
             break;
@@ -153,9 +183,10 @@ mod tests {
         fn dim(&self) -> usize {
             2
         }
-        fn value_grad(&self, x: &[f64]) -> (f64, Vec<f64>) {
-            let v = x[0].powi(4) + (x[1] - 1.0).powi(2);
-            (v, vec![4.0 * x[0].powi(3), 2.0 * (x[1] - 1.0)])
+        fn value_grad_into(&self, x: &[f64], grad: &mut [f64]) -> f64 {
+            grad[0] = 4.0 * x[0].powi(3);
+            grad[1] = 2.0 * (x[1] - 1.0);
+            x[0].powi(4) + (x[1] - 1.0).powi(2)
         }
     }
 
@@ -174,16 +205,43 @@ mod tests {
             fn dim(&self) -> usize {
                 1
             }
-            fn value_grad(&self, x: &[f64]) -> (f64, Vec<f64>) {
+            fn value_grad_into(&self, x: &[f64], grad: &mut [f64]) -> f64 {
                 if x[0].abs() > 3.0 {
-                    (f64::INFINITY, vec![0.0])
+                    grad[0] = 0.0;
+                    f64::INFINITY
                 } else {
-                    (x[0] * x[0], vec![2.0 * x[0]])
+                    grad[0] = 2.0 * x[0];
+                    x[0] * x[0]
                 }
             }
         }
         let opts = FitOptions::default();
         let (x, f, _, _) = super::minimize(&Guard, vec![10.0], &opts);
         assert!(f < 1e-8, "f={f} x={x:?}");
+    }
+
+    #[test]
+    fn ring_history_survives_long_runs() {
+        // > m accepted pairs so the ring wraps several times; the
+        // optimizer must still converge on an ill-conditioned quadratic
+        struct Ill;
+        impl Objective for Ill {
+            fn dim(&self) -> usize {
+                12
+            }
+            fn value_grad_into(&self, x: &[f64], grad: &mut [f64]) -> f64 {
+                let mut v = 0.0;
+                for i in 0..x.len() {
+                    let s = ((i + 1) * (i + 1)) as f64;
+                    v += 0.5 * s * x[i] * x[i];
+                    grad[i] = s * x[i];
+                }
+                v
+            }
+        }
+        let opts = FitOptions { history: 3, max_iters: 500, ..Default::default() };
+        let (_, f, _, converged) = super::minimize(&Ill, vec![1.0; 12], &opts);
+        assert!(f < 1e-10, "f={f}");
+        assert!(converged);
     }
 }

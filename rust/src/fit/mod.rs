@@ -2,34 +2,75 @@
 //! the two evaluation backends (native Rust and the AOT-compiled XLA
 //! executable), plus Adam and L-BFGS optimizers and the high-level
 //! `fit` driver used by every experiment.
+//!
+//! The optimizer loops are allocation-free per iteration: both drivers
+//! evaluate through [`Objective::value_grad_into`] into preallocated
+//! gradient buffers (pinned by `tests/fit_alloc.rs`), and the native
+//! objective keeps a reusable `Params` + kernel scratch so repeated
+//! evaluations allocate nothing above the worker pool.
 
 pub mod adam;
 pub mod lbfgs;
 
 use crate::basis::Design;
-use crate::mctm::{self, ModelSpec, Params};
+use crate::mctm::{self, ModelSpec, NllScratch, Params};
+use crate::util::parallel::Pool;
 use crate::util::Stopwatch;
+use std::cell::RefCell;
 
 /// A differentiable objective f: R^p → R.
+///
+/// `value_grad_into` is the required, allocation-free entry point the
+/// optimizer loops drive; `value_grad` is a convenience wrapper that
+/// allocates a fresh gradient vector.
 pub trait Objective {
     fn dim(&self) -> usize;
-    fn value_grad(&self, x: &[f64]) -> (f64, Vec<f64>);
+
+    /// Evaluate f at `x`, writing ∇f into `grad` (`grad.len() == dim()`)
+    /// and returning the value.
+    fn value_grad_into(&self, x: &[f64], grad: &mut [f64]) -> f64;
+
+    /// Allocating convenience wrapper over [`Self::value_grad_into`].
+    fn value_grad(&self, x: &[f64]) -> (f64, Vec<f64>) {
+        let mut grad = vec![0.0; self.dim()];
+        let v = self.value_grad_into(x, &mut grad);
+        (v, grad)
+    }
+
     fn value(&self, x: &[f64]) -> f64 {
         self.value_grad(x).0
     }
 }
 
-/// Native-Rust weighted MCTM NLL objective.
+/// Native-Rust weighted MCTM NLL objective. Holds a reusable `Params`
+/// and kernel scratch behind a `RefCell` (the `Objective` surface is
+/// `&self`), so the optimizer loop's repeated evaluations never
+/// re-allocate the parameter vector, the ϑ materialization, or the λ
+/// offsets — only the per-chunk worker buffers below the pool remain.
 pub struct NativeNll<'a> {
     pub spec: ModelSpec,
     pub design: &'a Design,
     pub weights: Vec<f64>,
+    state: RefCell<NativeState>,
+}
+
+struct NativeState {
+    params: Params,
+    scratch: NllScratch,
 }
 
 impl<'a> NativeNll<'a> {
     pub fn new(spec: ModelSpec, design: &'a Design, weights: Vec<f64>) -> Self {
         assert!(weights.is_empty() || weights.len() == design.n);
-        NativeNll { spec, design, weights }
+        NativeNll {
+            spec,
+            design,
+            weights,
+            state: RefCell::new(NativeState {
+                params: Params::new(spec, vec![0.0; spec.n_params()]),
+                scratch: NllScratch::new(spec),
+            }),
+        }
     }
 }
 
@@ -38,14 +79,31 @@ impl Objective for NativeNll<'_> {
         self.spec.n_params()
     }
 
-    fn value_grad(&self, x: &[f64]) -> (f64, Vec<f64>) {
-        let p = Params::new(self.spec, x.to_vec());
-        mctm::nll_grad(self.design, &self.weights, &p)
+    fn value_grad_into(&self, x: &[f64], grad: &mut [f64]) -> f64 {
+        let mut st = self.state.borrow_mut();
+        let st = &mut *st;
+        st.params.x.copy_from_slice(x);
+        mctm::nll_grad_into_with(
+            self.design,
+            &self.weights,
+            &st.params,
+            grad,
+            &mut st.scratch,
+            &Pool::current(),
+        )
     }
 
     fn value(&self, x: &[f64]) -> f64 {
-        let p = Params::new(self.spec, x.to_vec());
-        mctm::nll(self.design, &self.weights, &p)
+        let mut st = self.state.borrow_mut();
+        let st = &mut *st;
+        st.params.x.copy_from_slice(x);
+        mctm::nll_with_scratch(
+            self.design,
+            &self.weights,
+            &st.params,
+            &mut st.scratch,
+            &Pool::current(),
+        )
     }
 }
 
@@ -136,16 +194,15 @@ mod tests {
         fn dim(&self) -> usize {
             self.center.len()
         }
-        fn value_grad(&self, x: &[f64]) -> (f64, Vec<f64>) {
+        fn value_grad_into(&self, x: &[f64], grad: &mut [f64]) -> f64 {
             let mut v = 0.0;
-            let mut g = vec![0.0; x.len()];
             for i in 0..x.len() {
                 let scale = (i + 1) as f64;
                 let dxi = x[i] - self.center[i];
                 v += 0.5 * scale * dxi * dxi;
-                g[i] = scale * dxi;
+                grad[i] = scale * dxi;
             }
-            (v, g)
+            v
         }
     }
 
@@ -186,18 +243,34 @@ mod tests {
             fn dim(&self) -> usize {
                 2
             }
-            fn value_grad(&self, x: &[f64]) -> (f64, Vec<f64>) {
+            fn value_grad_into(&self, x: &[f64], grad: &mut [f64]) -> f64 {
                 let (a, b) = (1.0, 100.0);
                 let v = (a - x[0]).powi(2) + b * (x[1] - x[0] * x[0]).powi(2);
-                let g = vec![
-                    -2.0 * (a - x[0]) - 4.0 * b * x[0] * (x[1] - x[0] * x[0]),
-                    2.0 * b * (x[1] - x[0] * x[0]),
-                ];
-                (v, g)
+                grad[0] = -2.0 * (a - x[0]) - 4.0 * b * x[0] * (x[1] - x[0] * x[0]);
+                grad[1] = 2.0 * b * (x[1] - x[0] * x[0]);
+                v
             }
         }
         let opts = FitOptions { max_iters: 2000, ..Default::default() };
         let (x, v, _, _) = minimize(&Rosenbrock, vec![-1.2, 1.0], &opts);
         assert!(v < 1e-8, "final {v} at {x:?}");
+    }
+
+    #[test]
+    fn native_nll_into_matches_allocating_path() {
+        use crate::data::dgp::Dgp;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(8);
+        let data = Dgp::BivariateNormal.generate(200, &mut rng);
+        let design = Design::build(&data, 5, 0.01);
+        let spec = ModelSpec::new(2, 5);
+        let obj = NativeNll::new(spec, &design, Vec::new());
+        let x = Params::init(spec).x;
+        let (v, g) = obj.value_grad(&x);
+        let mut g2 = vec![0.0; obj.dim()];
+        let v2 = obj.value_grad_into(&x, &mut g2);
+        assert_eq!(v.to_bits(), v2.to_bits());
+        assert_eq!(g, g2);
+        assert_eq!(obj.value(&x).to_bits(), v.to_bits());
     }
 }

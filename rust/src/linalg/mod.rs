@@ -156,39 +156,54 @@ impl Mat {
     }
 }
 
+/// One 4-row rank-4 syrk update into the flat d×d upper triangle: each
+/// load of the accumulator row `g[i·d..]` absorbs four rank-1 updates.
+/// Shared by [`Mat::gram_with`]'s row blocks and the plane-gathered
+/// stacked Gram (`coreset::leverage`), so both accumulate in the same
+/// floating-point order **by construction** — the bitwise-identity
+/// contract between the two paths lives here, not in two hand-synced
+/// copies.
+pub(crate) fn syrk_upper_rows4(r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64], g: &mut [f64]) {
+    let d = r0.len();
+    for i in 0..d {
+        let (a0, a1, a2, a3) = (r0[i], r1[i], r2[i], r3[i]);
+        if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+            continue;
+        }
+        let grow = &mut g[i * d..(i + 1) * d];
+        for j in i..d {
+            grow[j] += a0 * r0[j] + a1 * r1[j] + a2 * r2[j] + a3 * r3[j];
+        }
+    }
+}
+
+/// Single-row rank-1 syrk update — the remainder companion of
+/// [`syrk_upper_rows4`].
+pub(crate) fn syrk_upper_row1(row: &[f64], g: &mut [f64]) {
+    let d = row.len();
+    for i in 0..d {
+        let xi = row[i];
+        if xi == 0.0 {
+            continue;
+        }
+        let grow = &mut g[i * d..(i + 1) * d];
+        for j in i..d {
+            grow[j] += xi * row[j];
+        }
+    }
+}
+
 /// Upper-triangular syrk accumulation over rows `[lo, hi)` of `x` into
-/// the flat d×d buffer `g`, four rows per pass: each load of the
-/// accumulator row `g[i·d..]` absorbs four rank-1 updates instead of
-/// one. Summation order is fixed by the row range alone.
+/// the flat d×d buffer `g`, four rows per pass. Summation order is
+/// fixed by the row range alone.
 fn gram_upper_block(x: &Mat, lo: usize, hi: usize, g: &mut [f64]) {
-    let d = x.cols;
     let mut r = lo;
     while r + 4 <= hi {
-        let (r0, r1, r2, r3) = (x.row(r), x.row(r + 1), x.row(r + 2), x.row(r + 3));
-        for i in 0..d {
-            let (a0, a1, a2, a3) = (r0[i], r1[i], r2[i], r3[i]);
-            if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
-                continue;
-            }
-            let grow = &mut g[i * d..(i + 1) * d];
-            for j in i..d {
-                grow[j] += a0 * r0[j] + a1 * r1[j] + a2 * r2[j] + a3 * r3[j];
-            }
-        }
+        syrk_upper_rows4(x.row(r), x.row(r + 1), x.row(r + 2), x.row(r + 3), g);
         r += 4;
     }
     while r < hi {
-        let row = x.row(r);
-        for i in 0..d {
-            let xi = row[i];
-            if xi == 0.0 {
-                continue;
-            }
-            let grow = &mut g[i * d..(i + 1) * d];
-            for j in i..d {
-                grow[j] += xi * row[j];
-            }
-        }
+        syrk_upper_row1(x.row(r), g);
         r += 1;
     }
 }
@@ -218,6 +233,102 @@ fn matmul_row_block(a: &Mat, b: &Mat, row0: usize, out: &mut [f64]) {
             }
         }
         bi += blk;
+    }
+}
+
+/// Panel GEMV: `out[r] = Σ_k panel[r·d + k] · v[k]` for the
+/// `out.len()` rows of a contiguous (rows × d) panel — the blocked
+/// matrix–vector kernel behind the plane-major NLL evaluation
+/// (`mctm::model`). Four accumulator chains per pass over `v` (the
+/// [`Mat::matmul_with`] 4-row blocking idiom) quarter the reload
+/// traffic of row-at-a-time dots, while each row's k-order stays that
+/// of the naive dot — so every output element is bit-identical to
+/// row-at-a-time evaluation.
+pub fn panel_matvec(panel: &[f64], d: usize, v: &[f64], out: &mut [f64]) {
+    let rows = out.len();
+    debug_assert_eq!(panel.len(), rows * d);
+    debug_assert_eq!(v.len(), d);
+    let mut r = 0usize;
+    while r + 4 <= rows {
+        let p0 = &panel[r * d..(r + 1) * d];
+        let p1 = &panel[(r + 1) * d..(r + 2) * d];
+        let p2 = &panel[(r + 2) * d..(r + 3) * d];
+        let p3 = &panel[(r + 3) * d..(r + 4) * d];
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        for k in 0..d {
+            let vk = v[k];
+            s0 += p0[k] * vk;
+            s1 += p1[k] * vk;
+            s2 += p2[k] * vk;
+            s3 += p3[k] * vk;
+        }
+        out[r] = s0;
+        out[r + 1] = s1;
+        out[r + 2] = s2;
+        out[r + 3] = s3;
+        r += 4;
+    }
+    while r < rows {
+        let p = &panel[r * d..(r + 1) * d];
+        let mut s = 0.0f64;
+        for k in 0..d {
+            s += p[k] * v[k];
+        }
+        out[r] = s;
+        r += 1;
+    }
+}
+
+/// Transposed-panel accumulation: `acc[k] += Σ_r ca[r]·a[r·d + k] +
+/// cad[r]·ad[r·d + k]` over two parallel (rows × d) panels — the
+/// gradient update ∂θ_j += A_jᵀ·c_a + A'_jᵀ·c_ad of the blocked NLL
+/// kernel. Four rows per pass so each load of the accumulator row
+/// absorbs four updates; the adds into `acc[k]` stay row-sequential
+/// (one `+=` per row, each row's pair combined as `ca·a + cad·ad`), so
+/// the accumulated values are bit-identical to a row-at-a-time loop.
+pub fn panel_accum_t(
+    a_panel: &[f64],
+    ad_panel: &[f64],
+    d: usize,
+    ca: &[f64],
+    cad: &[f64],
+    acc: &mut [f64],
+) {
+    let rows = ca.len();
+    debug_assert_eq!(a_panel.len(), rows * d);
+    debug_assert_eq!(ad_panel.len(), rows * d);
+    debug_assert_eq!(cad.len(), rows);
+    debug_assert_eq!(acc.len(), d);
+    let mut r = 0usize;
+    while r + 4 <= rows {
+        let a0 = &a_panel[r * d..(r + 1) * d];
+        let a1 = &a_panel[(r + 1) * d..(r + 2) * d];
+        let a2 = &a_panel[(r + 2) * d..(r + 3) * d];
+        let a3 = &a_panel[(r + 3) * d..(r + 4) * d];
+        let b0 = &ad_panel[r * d..(r + 1) * d];
+        let b1 = &ad_panel[(r + 1) * d..(r + 2) * d];
+        let b2 = &ad_panel[(r + 2) * d..(r + 3) * d];
+        let b3 = &ad_panel[(r + 3) * d..(r + 4) * d];
+        let (c0, c1, c2, c3) = (ca[r], ca[r + 1], ca[r + 2], ca[r + 3]);
+        let (e0, e1, e2, e3) = (cad[r], cad[r + 1], cad[r + 2], cad[r + 3]);
+        for k in 0..d {
+            let mut g = acc[k];
+            g += c0 * a0[k] + e0 * b0[k];
+            g += c1 * a1[k] + e1 * b1[k];
+            g += c2 * a2[k] + e2 * b2[k];
+            g += c3 * a3[k] + e3 * b3[k];
+            acc[k] = g;
+        }
+        r += 4;
+    }
+    while r < rows {
+        let a = &a_panel[r * d..(r + 1) * d];
+        let b = &ad_panel[r * d..(r + 1) * d];
+        let (c, e) = (ca[r], cad[r]);
+        for k in 0..d {
+            acc[k] += c * a[k] + e * b[k];
+        }
+        r += 1;
     }
 }
 
@@ -619,6 +730,44 @@ mod tests {
                 let denom = 1.0 + g2.at(i, j).abs();
                 assert!((g.at(i, j) - g2.at(i, j)).abs() / denom < 1e-10);
             }
+        }
+    }
+
+    #[test]
+    fn panel_matvec_bitwise_matches_row_dots() {
+        let mut rng = Rng::new(31);
+        let (rows, d) = (23, 6); // odd row count exercises the remainder path
+        let panel: Vec<f64> = (0..rows * d).map(|_| rng.normal()).collect();
+        let v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let mut out = vec![0.0; rows];
+        panel_matvec(&panel, d, &v, &mut out);
+        for r in 0..rows {
+            let mut s = 0.0;
+            for k in 0..d {
+                s += panel[r * d + k] * v[k];
+            }
+            assert_eq!(out[r].to_bits(), s.to_bits(), "row {r}");
+        }
+    }
+
+    #[test]
+    fn panel_accum_t_bitwise_matches_row_loop() {
+        let mut rng = Rng::new(32);
+        let (rows, d) = (21, 5);
+        let a: Vec<f64> = (0..rows * d).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..rows * d).map(|_| rng.normal()).collect();
+        let ca: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+        let cad: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+        let mut acc = vec![0.0; d];
+        panel_accum_t(&a, &b, d, &ca, &cad, &mut acc);
+        let mut want = vec![0.0; d];
+        for r in 0..rows {
+            for k in 0..d {
+                want[k] += ca[r] * a[r * d + k] + cad[r] * b[r * d + k];
+            }
+        }
+        for k in 0..d {
+            assert_eq!(acc[k].to_bits(), want[k].to_bits(), "k={k}");
         }
     }
 

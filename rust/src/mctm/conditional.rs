@@ -110,7 +110,6 @@ pub fn cond_nll_grad(
     let lam = &params[spec.lambda_off()..];
     let lam_off: Vec<usize> = (0..j).map(|jj| jj * jj.saturating_sub(1) / 2).collect();
 
-    let stride = j * d;
     let mut total = 0.0;
     let mut grad = vec![0.0; spec.n_params()];
     let mut grad_theta = vec![0.0; j * d];
@@ -122,16 +121,15 @@ pub fn cond_nll_grad(
         if w == 0.0 {
             continue;
         }
-        let a = &design.a[i * stride..(i + 1) * stride];
-        let ad = &design.ad[i * stride..(i + 1) * stride];
         let xi = cd.x.row(i);
         for jj in 0..j {
             let th = &theta[jj * d..(jj + 1) * d];
+            let (arow, adrow) = (design.a_row(i, jj), design.ad_row(i, jj));
             let mut ha = 0.0;
             let mut hb = 0.0;
             for k in 0..d {
-                ha += a[jj * d + k] * th[k];
-                hb += ad[jj * d + k] * th[k];
+                ha += arow[k] * th[k];
+                hb += adrow[k] * th[k];
             }
             let g = &gamma[jj * q..(jj + 1) * q];
             let mut shift = 0.0;
@@ -168,8 +166,9 @@ pub fn cond_nll_grad(
             let ca = w * ghtil[jj];
             let cad = -w / hdv;
             let gt = &mut grad_theta[jj * d..(jj + 1) * d];
+            let (arow, adrow) = (design.a_row(i, jj), design.ad_row(i, jj));
             for k in 0..d {
-                gt[k] += ca * a[jj * d + k] + cad * ad[jj * d + k];
+                gt[k] += ca * arow[k] + cad * adrow[k];
             }
             // Γ gradient: ∂h̃_j/∂γ_j = x
             let gg = &mut grad[spec.gamma_off() + jj * q..spec.gamma_off() + (jj + 1) * q];
@@ -211,8 +210,10 @@ impl crate::fit::Objective for CondNll<'_> {
     fn dim(&self) -> usize {
         self.spec.n_params()
     }
-    fn value_grad(&self, x: &[f64]) -> (f64, Vec<f64>) {
-        cond_nll_grad(self.cd, &self.weights, self.spec, x)
+    fn value_grad_into(&self, x: &[f64], grad: &mut [f64]) -> f64 {
+        let (v, g) = cond_nll_grad(self.cd, &self.weights, self.spec, x);
+        grad.copy_from_slice(&g);
+        v
     }
 }
 

@@ -65,30 +65,39 @@ pub fn marginal_density_with_sigma(
     let basis = Bernstein::new(d - 1);
     let th = &theta[j * d..(j + 1) * d];
     let x = scaler.scale(j, y);
-    let a = basis.eval(x);
-    let ad = basis.deriv(x);
-    let htil: f64 = a.iter().zip(th).map(|(ai, ti)| ai * ti).sum();
-    let hd: f64 = ad.iter().zip(th).map(|(ai, ti)| ai * ti).sum();
+    // one basis buffer reused for value and derivative (plus the
+    // lower-degree scratch `deriv_into` needs) — two allocations per
+    // query instead of two per margin
+    let mut buf = vec![0.0; d];
+    let mut scratch = vec![0.0; d.saturating_sub(1).max(1)];
+    basis.eval_into(x, &mut buf);
+    let htil: f64 = buf.iter().zip(th).map(|(ai, ti)| ai * ti).sum();
+    basis.deriv_into(x, &mut buf, &mut scratch);
+    let hd: f64 = buf.iter().zip(th).map(|(ai, ti)| ai * ti).sum();
     norm_pdf(htil / sigma) / sigma * hd.max(0.0) * scaler.dscale(j)
 }
 
 /// Joint **log**-density at a raw J-vector — the numerically safe form
 /// the facade's `FittedModel::log_density` serves (far-tail queries
-/// underflow `joint_density` but stay finite here).
+/// underflow `joint_density` but stay finite here). The per-margin
+/// basis evaluations share one reused buffer, mirroring how the fit
+/// path's blocked kernel streams one margin panel at a time.
 pub fn log_joint_density(p: &Params, scaler: &Scaler, y: &[f64]) -> f64 {
     let (j, d) = (p.spec.j, p.spec.d);
     assert_eq!(y.len(), j);
     let basis = Bernstein::new(d - 1);
     let theta = p.theta();
     let mut htil = vec![0.0; j];
+    let mut buf = vec![0.0; d];
+    let mut scratch = vec![0.0; d.saturating_sub(1).max(1)];
     let mut log_jac = 0.0;
     for jj in 0..j {
         let x = scaler.scale(jj, y[jj]);
-        let a = basis.eval(x);
-        let ad = basis.deriv(x);
         let th = &theta[jj * d..(jj + 1) * d];
-        htil[jj] = a.iter().zip(th).map(|(ai, ti)| ai * ti).sum();
-        let hd: f64 = ad.iter().zip(th).map(|(ai, ti)| ai * ti).sum();
+        basis.eval_into(x, &mut buf);
+        htil[jj] = buf.iter().zip(th).map(|(ai, ti)| ai * ti).sum();
+        basis.deriv_into(x, &mut buf, &mut scratch);
+        let hd: f64 = buf.iter().zip(th).map(|(ai, ti)| ai * ti).sum();
         log_jac += hd.max(1e-300).ln() + scaler.dscale(jj).ln();
     }
     // z = Λ h̃, φ_J(z) = Π φ(z_j); |det Λ| = 1

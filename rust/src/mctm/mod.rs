@@ -15,6 +15,7 @@ pub use bootstrap::{bootstrap_ci, BootstrapResult};
 pub use density::marginal_density;
 pub use metrics::{lambda_error, loglik_ratio, relative_improvement, theta_l2};
 pub use model::{
-    nll, nll_grad, nll_grad_with, nll_parts, nll_parts_with, nll_with, NllParts,
+    nll, nll_grad, nll_grad_into_with, nll_grad_reference, nll_grad_with, nll_parts,
+    nll_parts_with, nll_with, nll_with_scratch, NllParts, NllScratch,
 };
 pub use params::{ModelSpec, Params};

@@ -9,13 +9,42 @@
 //! ```
 //!
 //! with h̃_j = a_{ij}ᵀ ϑ_j, h̃'_j = a'_{ij}ᵀ ϑ_j. Weighted sums (coreset
-//! weights w_i) everywhere; the unweighted case is w ≡ 1.
+//! weights w_i) everywhere; the unweighted case is w ≡ 1. The coreset
+//! analysis additionally splits the loss as f = f₁ − f₂ + f₃
+//! ([`NllParts`]): squared part, positive log part, negative log part —
+//! [`nll_parts`] evaluates that split with the same blocked kernel.
 //!
-//! This is the hot inner loop of model fitting; see EXPERIMENTS.md §Perf
-//! for the optimization history of this function.
+//! ## Blocked evaluation over the plane-major design
+//!
+//! This is the hot inner loop of model fitting: the L-BFGS driver calls
+//! it hundreds of times per fit. Since the plane-major refactor
+//! (`basis::Design` stores J contiguous (n × d) panels) evaluation is
+//! structured as fused blocked kernels per fixed `ROW_CHUNK` shard:
+//!
+//! 1. **Panels** — H = A_j·θ_j and H' = A'_j·θ_j for every margin j via
+//!    [`crate::linalg::panel_matvec`] (4-row blocked GEMV over the
+//!    unit-stride plane panel).
+//! 2. **Triangular λ combination + loss** on the whole chunk, rows in
+//!    order.
+//! 3. **Gradient** — per-row coefficient panels c_a = w·∂loss/∂h̃ and
+//!    c_ad = −w/h̃', then the transposed-panel accumulation
+//!    ∂θ_j += A_jᵀ·c_a + A'_jᵀ·c_ad via
+//!    [`crate::linalg::panel_accum_t`]; θ → β chaining happens once on
+//!    the merged gradient.
+//!
+//! Shards merge by fixed-shape tree reduction, so results are
+//! bit-identical for any thread count; and every per-element
+//! accumulation order matches the pre-refactor row-at-a-time kernel
+//! (kept as [`nll_grad_reference`]), so values and gradients agree with
+//! it to the bit — pinned by `tests/nll_kernel.rs` at threads
+//! {1, 2, 8}; the facade-level consumer pins live in
+//! `tests/pipeline_e2e.rs`. See EXPERIMENTS.md
+//! §Perf iteration 7 for the blocked-kernel measurements; the earlier
+//! scratch-reuse finding this loop started from is §Perf iteration 1.
 
-use super::params::Params;
+use super::params::{ModelSpec, Params};
 use crate::basis::Design;
+use crate::linalg::{panel_accum_t, panel_matvec};
 use crate::util::parallel::{add_assign, tree_reduce, Pool, ROW_CHUNK};
 
 /// Floor for the log argument — the model-side D(η) guard. With the
@@ -41,25 +70,25 @@ impl NllParts {
     }
 }
 
-/// Per-worker scratch buffers reused across the rows of one shard (the
-/// optimizer calls the NLL hundreds of times; allocation in the inner
-/// loop was the first perf finding — see EXPERIMENTS.md §Perf L3-b).
-/// Each worker of the row-sharded evaluation owns one `Workspace`, so
-/// the shards never contend on scratch memory.
-pub struct Workspace {
-    htil: Vec<f64>,
-    hd: Vec<f64>,
-    z: Vec<f64>,
-    ghtil: Vec<f64>,
+/// Reusable per-call scratch of the blocked NLL kernel: the ϑ
+/// materialization buffer and the hoisted λ row offsets. The optimizer
+/// loop holds one `NllScratch` per objective (`fit::NativeNll`), so
+/// repeated `value_grad_into` evaluations allocate nothing at this
+/// layer — per-chunk worker buffers below the pool remain, amortized
+/// over `ROW_CHUNK` rows each.
+pub struct NllScratch {
+    theta: Vec<f64>,
+    /// λ row offsets: lam_off[j] = j(j−1)/2 (hoisted because
+    /// `lambda_index` costs a mul+shift per call — ~15% of the J=10 row
+    /// cost back when this was a per-row lookup; §Perf iteration 1)
+    lam_off: Vec<usize>,
 }
 
-impl Workspace {
-    pub fn new(j: usize) -> Self {
-        Workspace {
-            htil: vec![0.0; j],
-            hd: vec![0.0; j],
-            z: vec![0.0; j],
-            ghtil: vec![0.0; j],
+impl NllScratch {
+    pub fn new(spec: ModelSpec) -> Self {
+        NllScratch {
+            theta: vec![0.0; spec.j * spec.d],
+            lam_off: (0..spec.j).map(|jj| jj * jj.saturating_sub(1) / 2).collect(),
         }
     }
 }
@@ -90,7 +119,20 @@ pub fn nll(design: &Design, weights: &[f64], p: &Params) -> f64 {
 
 /// [`nll`] on an explicit pool.
 pub fn nll_with(design: &Design, weights: &[f64], p: &Params, pool: &Pool) -> f64 {
-    nll_impl(design, weights, p, None, pool)
+    let mut scratch = NllScratch::new(p.spec);
+    nll_impl(design, weights, p, None, &mut scratch, pool)
+}
+
+/// [`nll`] through a caller-owned [`NllScratch`] — the allocation-free
+/// value path of the optimizer loop.
+pub fn nll_with_scratch(
+    design: &Design,
+    weights: &[f64],
+    p: &Params,
+    scratch: &mut NllScratch,
+    pool: &Pool,
+) -> f64 {
+    nll_impl(design, weights, p, None, scratch, pool)
 }
 
 /// Weighted NLL and gradient w.r.t. the free parameter vector x.
@@ -106,19 +148,39 @@ pub fn nll_grad_with(
     pool: &Pool,
 ) -> (f64, Vec<f64>) {
     let mut grad = vec![0.0; p.spec.n_params()];
-    let v = nll_impl(design, weights, p, Some(&mut grad), pool);
+    let mut scratch = NllScratch::new(p.spec);
+    let v = nll_grad_into_with(design, weights, p, &mut grad, &mut scratch, pool);
     (v, grad)
 }
 
-/// Row-sharded evaluation: each chunk of rows is processed by one
-/// worker with its own `Workspace` and accumulates a private
-/// (`total`, ∂θ, ∂λ) partial; partials merge by fixed-shape tree
-/// reduction, and θ → β chaining happens once on the merged gradient.
+/// [`nll_grad`] writing into a caller-owned gradient buffer through a
+/// reusable [`NllScratch`] — the path `fit::Objective::value_grad_into`
+/// drives, with zero heap allocation above the worker pool.
+pub fn nll_grad_into_with(
+    design: &Design,
+    weights: &[f64],
+    p: &Params,
+    grad: &mut [f64],
+    scratch: &mut NllScratch,
+    pool: &Pool,
+) -> f64 {
+    assert_eq!(grad.len(), p.spec.n_params(), "gradient buffer length");
+    nll_impl(design, weights, p, Some(grad), scratch, pool)
+}
+
+/// The fused blocked evaluation (see the module doc): per fixed
+/// `ROW_CHUNK` shard, margin panels H/H' via blocked GEMV, the
+/// triangular λ combination + loss on the whole chunk, and the
+/// transposed-panel gradient accumulation; partials merge by
+/// fixed-shape tree reduction, and θ → β chaining happens once on the
+/// merged gradient. Every accumulator's floating-point order equals the
+/// row-at-a-time reference ([`nll_grad_reference`]), bit for bit.
 fn nll_impl(
     design: &Design,
     weights: &[f64],
     p: &Params,
-    grad: Option<&mut Vec<f64>>,
+    grad: Option<&mut [f64]>,
+    scratch: &mut NllScratch,
     pool: &Pool,
 ) -> f64 {
     let spec = p.spec;
@@ -129,86 +191,127 @@ fn nll_impl(
         weights.is_empty() || weights.len() == design.n,
         "weights length"
     );
+    assert_eq!(scratch.theta.len(), j * d, "scratch spec mismatch");
 
-    let theta = p.theta();
+    p.theta_into(&mut scratch.theta);
+    let theta: &[f64] = &scratch.theta;
+    let lam_off: &[usize] = &scratch.lam_off;
     let lam = p.lambda_block();
-    // λ row offsets hoisted out of the per-row loops (lambda_index does
-    // a mul+shift per call — ~15% of the J=10 row cost; §Perf L3-b)
-    let lam_off: Vec<usize> = (0..j).map(|jj| jj * jj.saturating_sub(1) / 2).collect();
-
     let want_grad = grad.is_some();
     let n_lam = spec.n_lambda();
-    let stride = j * d;
 
     let partials = pool.map_chunks(design.n, ROW_CHUNK, |_, range| {
-        let mut ws = Workspace::new(j);
+        let lo = range.start;
+        let cl = range.len();
+        // margin panels over this chunk: margin jj occupies
+        // [jj·cl, (jj+1)·cl) of each buffer
+        let mut h = vec![0.0; j * cl];
+        let mut hd = vec![0.0; j * cl];
+        for jj in 0..j {
+            let th = &theta[jj * d..(jj + 1) * d];
+            let pa = &design.a_plane(jj)[lo * d..(lo + cl) * d];
+            let pad = &design.ad_plane(jj)[lo * d..(lo + cl) * d];
+            panel_matvec(pa, d, th, &mut h[jj * cl..(jj + 1) * cl]);
+            panel_matvec(pad, d, th, &mut hd[jj * cl..(jj + 1) * cl]);
+        }
         let mut part = NllPartial {
             total: 0.0,
             grad_theta: vec![0.0; if want_grad { j * d } else { 0 }],
             grad_lambda: vec![0.0; if want_grad { n_lam } else { 0 }],
         };
-        for i in range {
-            let w = if weights.is_empty() { 1.0 } else { weights[i] };
+        let mut z = vec![0.0; if want_grad { j * cl } else { 0 }];
+
+        // triangular λ combination + loss, rows in chunk order
+        for r in 0..cl {
+            let w = if weights.is_empty() { 1.0 } else { weights[lo + r] };
             if w == 0.0 {
                 continue;
             }
-            let a = &design.a[i * stride..(i + 1) * stride];
-            let ad = &design.ad[i * stride..(i + 1) * stride];
-
-            // marginal transforms and derivatives
-            for jj in 0..j {
-                let th = &theta[jj * d..(jj + 1) * d];
-                ws.htil[jj] = dot(&a[jj * d..(jj + 1) * d], th);
-                ws.hd[jj] = dot(&ad[jj * d..(jj + 1) * d], th);
-            }
-
-            // copula combination z_j = h̃_j + Σ_{l<j} λ_jl h̃_l
             let mut li = 0usize;
-            for jj in 0..j {
-                let mut z = ws.htil[jj];
-                for ll in 0..jj {
-                    z += lam[li + ll] * ws.htil[ll];
-                }
-                ws.z[jj] = z;
-                li += jj;
-            }
-
-            // loss
             let mut loss = 0.0;
             for jj in 0..j {
-                let hd = ws.hd[jj].max(ETA_FLOOR);
-                loss += 0.5 * ws.z[jj] * ws.z[jj] - hd.ln();
+                let mut zv = h[jj * cl + r];
+                for ll in 0..jj {
+                    zv += lam[li + ll] * h[ll * cl + r];
+                }
+                if want_grad {
+                    z[jj * cl + r] = zv;
+                }
+                let hdv = hd[jj * cl + r].max(ETA_FLOOR);
+                loss += 0.5 * zv * zv - hdv.ln();
+                li += jj;
             }
             part.total += w * loss;
+        }
 
-            if want_grad {
-                // ∂loss/∂h̃_l = z_l + Σ_{j>l} λ_jl z_j
-                for ll in 0..j {
-                    let mut gh = ws.z[ll];
-                    for jj in (ll + 1)..j {
-                        gh += lam[lam_off[jj] + ll] * ws.z[jj];
-                    }
-                    ws.ghtil[ll] = gh;
+        if want_grad {
+            // per-row coefficient panels (c_a via the back-propagated
+            // ∂loss/∂h̃_l = z_l + Σ_{j>l} λ_jl z_j) and the λ gradient —
+            // O(J²) per row; the O(J·d) work happens in the panels below
+            let mut ca = vec![0.0; j * cl];
+            let mut cad = vec![0.0; j * cl];
+            for r in 0..cl {
+                let w = if weights.is_empty() { 1.0 } else { weights[lo + r] };
+                if w == 0.0 {
+                    continue; // excluded from the panel runs below too
                 }
-                // θ gradient (accumulated, chained to β once at the end)
-                for jj in 0..j {
-                    let hd = ws.hd[jj].max(ETA_FLOOR);
-                    let coef_a = w * ws.ghtil[jj];
-                    let coef_ad = -w / hd;
-                    let gt = &mut part.grad_theta[jj * d..(jj + 1) * d];
-                    let arow = &a[jj * d..(jj + 1) * d];
-                    let adrow = &ad[jj * d..(jj + 1) * d];
-                    for k in 0..d {
-                        gt[k] += coef_a * arow[k] + coef_ad * adrow[k];
+                for ll in 0..j {
+                    let mut gh = z[ll * cl + r];
+                    for jj in (ll + 1)..j {
+                        gh += lam[lam_off[jj] + ll] * z[jj * cl + r];
                     }
+                    ca[ll * cl + r] = w * gh;
+                }
+                for jj in 0..j {
+                    let hdv = hd[jj * cl + r].max(ETA_FLOOR);
+                    cad[jj * cl + r] = -w / hdv;
                 }
                 // λ gradient: ∂loss/∂λ_jl = z_j · h̃_l
                 let mut li = 0usize;
                 for jj in 1..j {
                     for ll in 0..jj {
-                        part.grad_lambda[li + ll] += w * ws.z[jj] * ws.htil[ll];
+                        part.grad_lambda[li + ll] += w * z[jj * cl + r] * h[ll * cl + r];
                     }
                     li += jj;
+                }
+            }
+            // transposed-panel accumulation ∂θ_j += A_jᵀ·c_a + A'_jᵀ·c_ad,
+            // over maximal runs of nonzero-weight rows: rows the
+            // row-at-a-time kernel skips contribute nothing here either
+            // (their raw basis values may be anything — a masked-out NaN
+            // observation must not poison the gradient via 0·NaN), and
+            // within a run the adds stay row-sequential, so the result
+            // is bit-identical to the reference for any weight pattern
+            let mut runs: Vec<(usize, usize)> = Vec::new();
+            if weights.is_empty() {
+                runs.push((0, cl));
+            } else {
+                let mut s = 0usize;
+                while s < cl {
+                    if weights[lo + s] == 0.0 {
+                        s += 1;
+                        continue;
+                    }
+                    let mut e = s + 1;
+                    while e < cl && weights[lo + e] != 0.0 {
+                        e += 1;
+                    }
+                    runs.push((s, e));
+                    s = e;
+                }
+            }
+            for jj in 0..j {
+                let pa = design.a_plane(jj);
+                let pad = design.ad_plane(jj);
+                for &(s, e) in &runs {
+                    panel_accum_t(
+                        &pa[(lo + s) * d..(lo + e) * d],
+                        &pad[(lo + s) * d..(lo + e) * d],
+                        d,
+                        &ca[jj * cl + s..jj * cl + e],
+                        &cad[jj * cl + s..jj * cl + e],
+                        &mut part.grad_theta[jj * d..(jj + 1) * d],
+                    );
                 }
             }
         }
@@ -237,6 +340,112 @@ fn nll_impl(
     merged.total
 }
 
+/// The pre-plane row-at-a-time kernel, kept verbatim (modulo the row
+/// accessors) as the agreement baseline: `tests/nll_kernel.rs` pins the
+/// blocked kernel against it and `benches/perf_hotpath.rs` uses it as
+/// the serial reference row of the nll_grad sweep. Like the engine it
+/// preserves, it processes fixed `ROW_CHUNK` shards row-at-a-time and
+/// tree-reduces the per-shard partials — serially, in chunk order —
+/// so its floating-point accumulation shape is exactly the old
+/// kernel's (at any thread count, since that shape never depended on
+/// threads). Single-threaded by construction; do not use on a hot path.
+pub fn nll_grad_reference(design: &Design, weights: &[f64], p: &Params) -> (f64, Vec<f64>) {
+    let spec = p.spec;
+    let (j, d) = (spec.j, spec.d);
+    assert_eq!(design.j, j, "design J mismatch");
+    assert_eq!(design.d, d, "design d mismatch");
+    assert!(
+        weights.is_empty() || weights.len() == design.n,
+        "weights length"
+    );
+    let theta = p.theta();
+    let lam = p.lambda_block();
+    let lam_off: Vec<usize> = (0..j).map(|jj| jj * jj.saturating_sub(1) / 2).collect();
+
+    let partials: Vec<NllPartial> = Pool::chunk_ranges(design.n, ROW_CHUNK)
+        .into_iter()
+        .map(|range| {
+            let mut part = NllPartial {
+                total: 0.0,
+                grad_theta: vec![0.0; j * d],
+                grad_lambda: vec![0.0; spec.n_lambda()],
+            };
+            let (mut htil, mut hd, mut z, mut ghtil) =
+                (vec![0.0; j], vec![0.0; j], vec![0.0; j], vec![0.0; j]);
+            for i in range {
+                let w = if weights.is_empty() { 1.0 } else { weights[i] };
+                if w == 0.0 {
+                    continue;
+                }
+                for jj in 0..j {
+                    let th = &theta[jj * d..(jj + 1) * d];
+                    htil[jj] = dot(design.a_row(i, jj), th);
+                    hd[jj] = dot(design.ad_row(i, jj), th);
+                }
+                let mut li = 0usize;
+                for jj in 0..j {
+                    let mut zv = htil[jj];
+                    for ll in 0..jj {
+                        zv += lam[li + ll] * htil[ll];
+                    }
+                    z[jj] = zv;
+                    li += jj;
+                }
+                let mut loss = 0.0;
+                for jj in 0..j {
+                    let hdv = hd[jj].max(ETA_FLOOR);
+                    loss += 0.5 * z[jj] * z[jj] - hdv.ln();
+                }
+                part.total += w * loss;
+
+                for ll in 0..j {
+                    let mut gh = z[ll];
+                    for jj in (ll + 1)..j {
+                        gh += lam[lam_off[jj] + ll] * z[jj];
+                    }
+                    ghtil[ll] = gh;
+                }
+                for jj in 0..j {
+                    let hdv = hd[jj].max(ETA_FLOOR);
+                    let coef_a = w * ghtil[jj];
+                    let coef_ad = -w / hdv;
+                    let gt = &mut part.grad_theta[jj * d..(jj + 1) * d];
+                    let arow = design.a_row(i, jj);
+                    let adrow = design.ad_row(i, jj);
+                    for k in 0..d {
+                        gt[k] += coef_a * arow[k] + coef_ad * adrow[k];
+                    }
+                }
+                let mut li = 0usize;
+                for jj in 1..j {
+                    for ll in 0..jj {
+                        part.grad_lambda[li + ll] += w * z[jj] * htil[ll];
+                    }
+                    li += jj;
+                }
+            }
+            part
+        })
+        .collect();
+    let merged = tree_reduce(partials, |mut x, y| {
+        x.total += y.total;
+        add_assign(&mut x.grad_theta, &y.grad_theta);
+        add_assign(&mut x.grad_lambda, &y.grad_lambda);
+        x
+    })
+    .unwrap_or_else(|| NllPartial {
+        total: 0.0,
+        grad_theta: vec![0.0; j * d],
+        grad_lambda: vec![0.0; spec.n_lambda()],
+    });
+    let mut grad_theta = merged.grad_theta;
+    p.grad_theta_to_beta(&mut grad_theta);
+    let mut grad = vec![0.0; spec.n_params()];
+    grad[..j * d].copy_from_slice(&grad_theta);
+    grad[j * d..].copy_from_slice(&merged.grad_lambda);
+    (merged.total, grad)
+}
+
 /// Evaluate the f₁/f₂/f₃ split at **raw** (ϑ, λ) — the objects the
 /// coreset guarantees are stated for. `theta` row-major (j,k), `lam` the
 /// strictly-lower-triangular block.
@@ -249,9 +458,11 @@ pub fn nll_parts(
     nll_parts_with(design, weights, theta, lam, &Pool::current())
 }
 
-/// [`nll_parts`] on an explicit pool: row shards accumulate private
-/// f₁/f₂/f₃ partials which merge in fixed tree order, so the split is
-/// bit-identical for any thread count.
+/// [`nll_parts`] on an explicit pool, evaluated with the same blocked
+/// panel kernel as [`nll`]: per shard, H/H' panels via blocked GEMV,
+/// then the per-row λ combination splits into f₁/f₂/f₃ partials which
+/// merge in fixed tree order — the split is bit-identical for any
+/// thread count.
 pub fn nll_parts_with(
     design: &Design,
     weights: &[f64],
@@ -265,29 +476,32 @@ pub fn nll_parts_with(
         weights.is_empty() || weights.len() == design.n,
         "weights length"
     );
-    let stride = j * d;
     let partials = pool.map_chunks(design.n, ROW_CHUNK, |_, range| {
+        let lo = range.start;
+        let cl = range.len();
+        let mut h = vec![0.0; j * cl];
+        let mut hd = vec![0.0; j * cl];
+        for jj in 0..j {
+            let th = &theta[jj * d..(jj + 1) * d];
+            let pa = &design.a_plane(jj)[lo * d..(lo + cl) * d];
+            let pad = &design.ad_plane(jj)[lo * d..(lo + cl) * d];
+            panel_matvec(pa, d, th, &mut h[jj * cl..(jj + 1) * cl]);
+            panel_matvec(pad, d, th, &mut hd[jj * cl..(jj + 1) * cl]);
+        }
         let mut parts = NllParts::default();
-        let mut htil = vec![0.0; j];
-        for i in range {
-            let w = if weights.is_empty() { 1.0 } else { weights[i] };
+        for r in 0..cl {
+            let w = if weights.is_empty() { 1.0 } else { weights[lo + r] };
             if w == 0.0 {
                 continue;
             }
-            let a = &design.a[i * stride..(i + 1) * stride];
-            let ad = &design.ad[i * stride..(i + 1) * stride];
-            for jj in 0..j {
-                htil[jj] = dot(&a[jj * d..(jj + 1) * d], &theta[jj * d..(jj + 1) * d]);
-            }
             let mut li = 0usize;
             for jj in 0..j {
-                let mut z = htil[jj];
+                let mut z = h[jj * cl + r];
                 for ll in 0..jj {
-                    z += lam[li + ll] * htil[ll];
+                    z += lam[li + ll] * h[ll * cl + r];
                 }
                 parts.f1 += w * 0.5 * z * z;
-                let hd = dot(&ad[jj * d..(jj + 1) * d], &theta[jj * d..(jj + 1) * d]);
-                let lg = hd.max(ETA_FLOOR).ln();
+                let lg = hd[jj * cl + r].max(ETA_FLOOR).ln();
                 if lg > 0.0 {
                     parts.f2 += w * lg;
                 } else {
@@ -349,6 +563,22 @@ mod tests {
     }
 
     #[test]
+    fn blocked_matches_reference_bitwise() {
+        // the blocked kernel preserves every accumulation order of the
+        // row-at-a-time reference, so values AND gradients agree to the
+        // bit (the cross-shape randomized sweep is tests/nll_kernel.rs)
+        let spec = ModelSpec::new(3, 6);
+        let design = toy_design(120, 3, 6, 77);
+        let p = random_params(spec, 78);
+        let (v_ref, g_ref) = nll_grad_reference(&design, &[], &p);
+        let (v, g) = nll_grad_with(&design, &[], &p, &Pool::new(1));
+        assert_eq!(v.to_bits(), v_ref.to_bits());
+        for (k, (a, b)) in g.iter().zip(&g_ref).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "grad[{k}]: {a} vs {b}");
+        }
+    }
+
+    #[test]
     fn weighted_equals_replication() {
         // weight 2 on a row == duplicating the row
         let spec = ModelSpec::new(2, 4);
@@ -375,6 +605,13 @@ mod tests {
         let v = nll(&design, &w, &p);
         let sub = design.select(&(1..7).collect::<Vec<_>>());
         assert!((v - nll(&sub, &[], &p)).abs() < 1e-10);
+        // the gradient skips them too — bitwise vs the reference
+        let (vg, g) = nll_grad(&design, &w, &p);
+        let (vr, gr) = nll_grad_reference(&design, &w, &p);
+        assert_eq!(vg.to_bits(), vr.to_bits());
+        for (a, b) in g.iter().zip(&gr) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -128,8 +128,17 @@ impl Params {
 
     /// Materialize the monotone coefficients ϑ (row-major (j,k)).
     pub fn theta(&self) -> Vec<f64> {
+        let mut theta = vec![0.0; self.spec.j * self.spec.d];
+        self.theta_into(&mut theta);
+        theta
+    }
+
+    /// [`Params::theta`] into a caller-owned buffer (length J·d) — the
+    /// allocation-free path the optimizer-loop evaluation reuses
+    /// (`mctm::model::NllScratch`).
+    pub fn theta_into(&self, theta: &mut [f64]) {
         let (j, d) = (self.spec.j, self.spec.d);
-        let mut theta = vec![0.0; j * d];
+        debug_assert_eq!(theta.len(), j * d);
         for jj in 0..j {
             let b = self.beta(jj);
             let t = &mut theta[jj * d..(jj + 1) * d];
@@ -138,7 +147,6 @@ impl Params {
                 t[k] = t[k - 1] + softplus(b[k]);
             }
         }
-        theta
     }
 
     /// Chain-rule: pull a gradient w.r.t. ϑ back to β **in place**

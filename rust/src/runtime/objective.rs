@@ -46,14 +46,18 @@ impl Objective for XlaNll<'_> {
         self.runner.n_params
     }
 
-    fn value_grad(&self, x: &[f64]) -> (f64, Vec<f64>) {
+    fn value_grad_into(&self, x: &[f64], grad: &mut [f64]) -> f64 {
         match self.runner.nll_grad(x, &self.y, &self.weights) {
-            Ok(vg) => vg,
+            Ok((v, g)) => {
+                grad.copy_from_slice(&g);
+                v
+            }
             Err(e) => {
                 // surface runtime errors as +inf so the line search backs
                 // off rather than crashing mid-fit
                 eprintln!("xla objective error: {e:#}");
-                (f64::INFINITY, vec![0.0; self.runner.n_params])
+                grad.fill(0.0);
+                f64::INFINITY
             }
         }
     }

@@ -7,9 +7,10 @@
 use mctm_coreset::basis::Design;
 use mctm_coreset::mctm::nll_parts;
 
-/// Build a Design directly from prescribed basis rows (bypassing the
+/// Build a Design directly from prescribed basis tensors (bypassing the
 /// Bernstein transform — the lower bounds are statements about the
-/// abstract data matrix {a_ij}).
+/// abstract data matrix {a_ij}). `a`/`ad` must be in the plane-major
+/// layout: element (i, j, k) at `j·n·d + i·d + k`.
 fn design_from_rows(a: Vec<f64>, ad: Vec<f64>, n: usize, j: usize, d: usize) -> Design {
     use mctm_coreset::basis::Scaler;
     use mctm_coreset::linalg::Mat;
@@ -24,11 +25,11 @@ fn design_from_rows(a: Vec<f64>, ad: Vec<f64>, n: usize, j: usize, d: usize) -> 
 #[test]
 fn lemma_2_6_any_proper_subset_fails() {
     let (n, j, d) = (6usize, 2usize, 6usize);
-    // a_ij = e_i for all j
+    // a_ij = e_i for all j (plane-major: margin jj's plane starts at jj·n·d)
     let mut a = vec![0.0; n * j * d];
     for i in 0..n {
         for jj in 0..j {
-            a[(i * j + jj) * d + i] = 1.0;
+            a[(jj * n + i) * d + i] = 1.0;
         }
     }
     let ad = vec![1.0; n * j * d]; // irrelevant for f1
@@ -77,7 +78,7 @@ fn lemma_2_5_block_isolation() {
         let k = blk / j;
         for jj in 0..j {
             if jj >= j0 {
-                a[(blk * j + jj) * d + k] = 1.0;
+                a[(jj * n + blk) * d + k] = 1.0;
             }
         }
     }
@@ -127,7 +128,7 @@ fn leverage_sampler_covers_adversarial_instance() {
     let mut a = vec![0.0; n * j * d];
     for i in 0..n {
         for jj in 0..j {
-            a[(i * j + jj) * d + i] = 1.0;
+            a[(jj * n + i) * d + i] = 1.0;
         }
     }
     let ad = vec![1.0; n * j * d];

@@ -1,0 +1,185 @@
+//! ISSUE 5 acceptance: the blocked GEMM-based NLL/gradient engine on
+//! the plane-major design layout must (a) reproduce the pre-refactor
+//! row-at-a-time kernel (kept as `nll_grad_reference`) to ≤ 1e-9
+//! relative tolerance on random designs — in fact the accumulation
+//! orders are preserved, so most pins here are bitwise — and (b) stay
+//! bit-identical across thread counts {1, 2, 8}, including when driven
+//! end-to-end through the facade.
+
+use mctm_coreset::basis::Design;
+use mctm_coreset::mctm::{
+    self, nll_grad_reference, nll_grad_with, nll_parts_with, ModelSpec, Params,
+};
+use mctm_coreset::prelude::*;
+use mctm_coreset::util::parallel::Pool;
+
+fn random_design(n: usize, j: usize, d: usize, seed: u64) -> Design {
+    let mut rng = Rng::new(seed);
+    let data = Mat::from_vec(n, j, (0..n * j).map(|_| rng.normal()).collect());
+    Design::build(&data, d, 0.01)
+}
+
+fn random_params(spec: ModelSpec, seed: u64) -> Params {
+    let mut rng = Rng::new(seed);
+    let x: Vec<f64> = (0..spec.n_params()).map(|_| 0.5 * rng.normal()).collect();
+    Params::new(spec, x)
+}
+
+fn rel_close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+/// Random weights with a few exact zeros — the blocked kernel must
+/// skip zero-weight rows exactly like the row-at-a-time path.
+fn random_weights(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            if i % 17 == 3 {
+                0.0
+            } else {
+                rng.uniform(0.25, 3.25)
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn blocked_kernel_matches_reference_on_random_designs() {
+    // shapes straddle the ROW_CHUNK boundary (2048) and the 4-row
+    // blocking remainder, J from bivariate to covertype-scale
+    let shapes: [(usize, usize, usize); 5] =
+        [(37, 2, 4), (500, 3, 8), (2048, 5, 6), (2100, 5, 8), (4099, 10, 5)];
+    for (case, &(n, j, d)) in shapes.iter().enumerate() {
+        let seed = 100 + case as u64;
+        let design = random_design(n, j, d, seed);
+        let spec = ModelSpec::new(j, d);
+        let p = random_params(spec, seed + 1);
+        for weights in [Vec::new(), random_weights(n, seed + 2)] {
+            let (v_ref, g_ref) = nll_grad_reference(&design, &weights, &p);
+            let (v, g) = nll_grad_with(&design, &weights, &p, &Pool::new(1));
+            assert!(
+                rel_close(v, v_ref, 1e-9),
+                "case {case}: value {v} vs reference {v_ref}"
+            );
+            for (k, (a, b)) in g.iter().zip(&g_ref).enumerate() {
+                assert!(
+                    rel_close(*a, *b, 1e-9),
+                    "case {case}: grad[{k}] {a} vs reference {b}"
+                );
+            }
+            // the blocked kernel preserves every accumulation order of
+            // the reference, so agreement is actually bitwise
+            assert_eq!(v.to_bits(), v_ref.to_bits(), "case {case}: value bits");
+            for (k, (a, b)) in g.iter().zip(&g_ref).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "case {case}: grad[{k}] bits");
+            }
+        }
+    }
+}
+
+#[test]
+fn masked_nonfinite_rows_cannot_poison_the_gradient() {
+    // a NaN observation masked out with weight 0 must contribute
+    // nothing — the reference kernel skips the row entirely, and the
+    // blocked kernel's panel accumulation must do the same (0·NaN would
+    // otherwise poison ∂θ)
+    let n = 300usize;
+    let mut rng = Rng::new(61);
+    let mut raw: Vec<f64> = (0..n * 2).map(|_| rng.normal()).collect();
+    raw[2 * 57] = f64::NAN; // row 57, column 0
+    raw[2 * 200 + 1] = f64::INFINITY; // row 200, column 1
+    let design = Design::build(&Mat::from_vec(n, 2, raw), 5, 0.01);
+    let spec = ModelSpec::new(2, 5);
+    let p = random_params(spec, 62);
+    let mut w = vec![1.0; n];
+    w[57] = 0.0;
+    w[200] = 0.0;
+    let (v_ref, g_ref) = nll_grad_reference(&design, &w, &p);
+    assert!(v_ref.is_finite());
+    assert!(g_ref.iter().all(|g| g.is_finite()));
+    for t in [1usize, 2] {
+        let (v, g) = nll_grad_with(&design, &w, &p, &Pool::new(t));
+        assert_eq!(v.to_bits(), v_ref.to_bits(), "value at {t} threads");
+        for (k, (a, b)) in g.iter().zip(&g_ref).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "grad[{k}] at {t} threads");
+        }
+    }
+}
+
+#[test]
+fn blocked_kernel_bit_identical_across_threads() {
+    // > ROW_CHUNK rows so the shards really merge through the tree
+    let (n, j, d) = (3 * 2048 + 19, 4, 6);
+    let design = random_design(n, j, d, 7);
+    let spec = ModelSpec::new(j, d);
+    let p = random_params(spec, 8);
+    let w = random_weights(n, 9);
+    let (v1, g1) = nll_grad_with(&design, &w, &p, &Pool::new(1));
+    let theta = p.theta();
+    let lam = p.lambda_block().to_vec();
+    let parts1 = nll_parts_with(&design, &w, &theta, &lam, &Pool::new(1));
+    for t in [2usize, 8] {
+        let (vt, gt) = nll_grad_with(&design, &w, &p, &Pool::new(t));
+        assert_eq!(v1.to_bits(), vt.to_bits(), "value differs at {t} threads");
+        for (k, (a, b)) in g1.iter().zip(&gt).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "grad[{k}] differs at {t} threads");
+        }
+        let pt = nll_parts_with(&design, &w, &theta, &lam, &Pool::new(t));
+        assert_eq!(parts1.f1.to_bits(), pt.f1.to_bits(), "f1 differs at {t}");
+        assert_eq!(parts1.f2.to_bits(), pt.f2.to_bits(), "f2 differs at {t}");
+        assert_eq!(parts1.f3.to_bits(), pt.f3.to_bits(), "f3 differs at {t}");
+    }
+}
+
+#[test]
+fn facade_fit_bit_identical_across_thread_counts() {
+    // the PR-2/3 style pin, re-run against the blocked kernel: the
+    // whole coreset + L-BFGS fit through the facade must not depend on
+    // the session's thread count
+    let mut rng = Rng::new(55);
+    let data = Dgp::NormalMixture.generate(5_000, &mut rng);
+    let run = |threads: usize| {
+        SessionBuilder::new()
+            .method("l2-hull")
+            .budget(80)
+            .basis_size(6)
+            .seed(23)
+            .threads(threads)
+            .max_iters(80)
+            .build()
+            .unwrap()
+            .fit(&data)
+            .unwrap()
+    };
+    let m1 = run(1);
+    for t in [2usize, 8] {
+        let mt = run(t);
+        assert_eq!(
+            m1.diagnostics().coreset.indices,
+            mt.diagnostics().coreset.indices,
+            "coreset differs at {t} threads"
+        );
+        for (k, (a, b)) in m1.params().x.iter().zip(&mt.params().x).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "fit param {k} differs at {t} threads");
+        }
+        assert_eq!(
+            m1.diagnostics().fit_nll.to_bits(),
+            mt.diagnostics().fit_nll.to_bits(),
+            "fit NLL differs at {t} threads"
+        );
+    }
+}
+
+#[test]
+fn value_and_value_grad_agree() {
+    // nll (no-gradient path) and the value returned next to the
+    // gradient must be the same number, bit for bit
+    let design = random_design(700, 3, 7, 31);
+    let spec = ModelSpec::new(3, 7);
+    let p = random_params(spec, 32);
+    let w = random_weights(700, 33);
+    let v_only = mctm::nll_with(&design, &w, &p, &Pool::new(2));
+    let (v, _) = nll_grad_with(&design, &w, &p, &Pool::new(2));
+    assert_eq!(v_only.to_bits(), v.to_bits());
+}

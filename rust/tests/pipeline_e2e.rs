@@ -111,6 +111,15 @@ fn assert_stream_deterministic(method: &str, total: usize, budget: usize, seed: 
     assert_eq!(s1.n_seen, s4.n_seen);
     assert_eq!(s1.n_shards, s4.n_shards);
     assert!(c1.size <= budget && c1.size > 0);
+    // ISSUE 5 satellite: the Merge & Reduce tree threads hull
+    // provenance up to the report — hull methods must report a real,
+    // consumer-count-independent count, not the old hardcoded 0
+    assert!(
+        c1.n_hull > 0,
+        "{method}: streaming n_hull lost its provenance"
+    );
+    assert!(c1.n_hull <= c1.size);
+    assert_eq!(c1.n_hull, c4.n_hull);
     assert_eq!(c1.weights.len(), c4.weights.len(), "coreset sizes differ");
     for (i, (a, b)) in c1.weights.iter().zip(&c4.weights).enumerate() {
         assert_eq!(a.to_bits(), b.to_bits(), "weight {i}: {a} vs {b}");
