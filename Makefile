@@ -37,6 +37,11 @@ check: fmt clippy doc test
 # What .github/workflows/ci.yml runs: fmt --check, build, tests, the
 # rustdoc gate, the bench compile gate, and the lib/bin clippy pass
 # (the all-targets lint stays in `make check` for local use).
+# The clippy pass also enforces the robustness gate: non-test library
+# code carries `warn(clippy::unwrap_used, clippy::expect_used)` as a
+# crate attribute in rust/src/lib.rs, so with -D warnings any new
+# unwrap/expect outside tests fails CI unless explicitly #[allow]ed
+# with a justification.
 ci: fmt build test doc bench-compile
 	$(CARGO) clippy --manifest-path $(MANIFEST) -- -D warnings
 

@@ -42,6 +42,20 @@ pub enum ApiError {
     Backend(String),
     /// Malformed command-line invocation.
     Usage(String),
+    /// The streaming pipeline failed mid-run (fatal shard read,
+    /// exhausted transient retries, invalid data under
+    /// `InvalidPolicy::Error`, a reduce that could not proceed). Carries
+    /// shard/consumer provenance from the pipeline's orderly shutdown.
+    Stream {
+        /// sequence number of the shard being handled when the error
+        /// hit (`None` for failures not attributable to one shard)
+        shard_seq: Option<usize>,
+        /// consumer worker index (`None` for producer/reducer-side
+        /// failures)
+        consumer: Option<usize>,
+        /// the underlying failure
+        source: Box<ApiError>,
+    },
 }
 
 impl ApiError {
@@ -78,11 +92,31 @@ impl fmt::Display for ApiError {
             ApiError::Io(msg) => write!(f, "{msg}"),
             ApiError::Backend(msg) => write!(f, "backend error: {msg}"),
             ApiError::Usage(msg) => write!(f, "{msg}"),
+            ApiError::Stream { shard_seq, consumer, source } => {
+                write!(f, "stream failure")?;
+                if let Some(seq) = shard_seq {
+                    write!(f, " at shard {seq}")?;
+                }
+                if let Some(c) = consumer {
+                    write!(f, " (consumer {c})")?;
+                }
+                write!(f, ": {source}")
+            }
         }
     }
 }
 
 impl std::error::Error for ApiError {}
+
+impl From<crate::coordinator::StreamError> for ApiError {
+    fn from(e: crate::coordinator::StreamError) -> Self {
+        ApiError::Stream {
+            shard_seq: e.shard_seq,
+            consumer: e.consumer,
+            source: Box::new(ApiError::Data(e.message)),
+        }
+    }
+}
 
 #[cfg(test)]
 mod tests {

@@ -18,9 +18,17 @@
 //!   sampling) and is `Send + Sync`, so one model serves many
 //!   concurrent scenario queries.
 //!
-//! The pre-facade free functions (`build_coreset`,
-//! `StreamingPipeline::new`, …) remain as `#[deprecated]` shims for one
-//! release; use [`crate::prelude`] for new code.
+//! Failure semantics: the streaming path retries transient shard reads
+//! deterministically, shuts down orderly on fatal errors (surfacing
+//! [`ApiError::Stream`] with shard/consumer provenance), and records
+//! every numerical fallback — ridge-jitter Cholesky recoveries, MVEE
+//! non-convergence, scrubbed rows — into
+//! [`CoresetReport::degradations`]. Non-finite input cells are handled
+//! per `SessionBuilder::on_invalid`
+//! ([`crate::data::InvalidPolicy`]: error / mask / drop).
+//!
+//! The pre-0.3 deprecated shims (`build_coreset`, `build_coreset_with`,
+//! `StreamingPipeline::new`) have been removed; use [`crate::prelude`].
 
 pub mod error;
 pub mod session;

@@ -3,8 +3,8 @@
 //!
 //! * [`SessionBuilder`] — validated knobs (method via the strategy
 //!   registry, budget, threads, seed, streaming queue/buffer, basis
-//!   options). `build()` returns a typed [`ApiError`] instead of
-//!   panicking or stringly failing.
+//!   options, the invalid-data policy `on_invalid`). `build()` returns
+//!   a typed [`ApiError`] instead of panicking or stringly failing.
 //! * [`Session`] — an immutable, reusable recipe. `fit(source)` picks
 //!   the batch or the Merge & Reduce path automatically from what the
 //!   [`DataSource`] resolves to; `coreset(source)` runs only the
@@ -27,8 +27,10 @@ use crate::basis::{Bernstein, Design, Scaler};
 use crate::coordinator::pipeline::{StreamingPipeline, StreamStats};
 use crate::coreset::samplers::build_coreset_on;
 use crate::coreset::{Coreset, Method};
-use crate::fit::{fit_native, FitOptions, OptimizerKind};
+use crate::data::{scrub_invalid, InvalidPolicy};
+use crate::fit::{fit_native_with_sink, FitOptions, OptimizerKind};
 use crate::linalg::Mat;
+use crate::util::degrade::{DegradeSink, Degradations};
 use crate::mctm::{self, density, ModelSpec, Params};
 use crate::util::parallel::{self, Pool};
 use crate::util::rng::Rng;
@@ -51,6 +53,7 @@ pub struct SessionBuilder {
     consumers: Option<usize>,
     queue_cap: usize,
     buffer_factor: usize,
+    on_invalid: InvalidPolicy,
     fit: FitOptions,
 }
 
@@ -67,6 +70,7 @@ impl Default for SessionBuilder {
             consumers: None,
             queue_cap: 4,
             buffer_factor: 4,
+            on_invalid: InvalidPolicy::Error,
             fit: FitOptions::default(),
         }
     }
@@ -146,6 +150,16 @@ impl SessionBuilder {
         self
     }
 
+    /// What to do with non-finite (NaN/±inf) cells at ingestion: reject
+    /// the run with a typed error naming the offending shard/row/column
+    /// (the default), zero out affected rows, or drop them. Every
+    /// masked/dropped row is counted into
+    /// [`CoresetReport::degradations`].
+    pub fn on_invalid(mut self, policy: InvalidPolicy) -> Self {
+        self.on_invalid = policy;
+        self
+    }
+
     /// Full optimizer configuration.
     pub fn fit_options(mut self, opts: FitOptions) -> Self {
         self.fit = opts;
@@ -212,6 +226,7 @@ impl SessionBuilder {
             consumers: self.consumers.unwrap_or(0),
             queue_cap: self.queue_cap,
             buffer_factor: self.buffer_factor,
+            on_invalid: self.on_invalid,
             fit: self.fit,
         })
     }
@@ -231,6 +246,7 @@ pub struct Session {
     consumers: usize,
     queue_cap: usize,
     buffer_factor: usize,
+    on_invalid: InvalidPolicy,
     fit: FitOptions,
 }
 
@@ -295,38 +311,53 @@ impl Session {
     /// importance sample over the full design; shard sources stream
     /// through Merge & Reduce with bounded memory.
     pub fn coreset<S: DataSource>(&self, source: S) -> Result<CoresetReport, ApiError> {
-        Ok(match self.sketch(source)? {
-            Sketch::Batch { data, cs, seconds, .. } => self.batch_report(&data, &cs, seconds),
+        let sink = DegradeSink::new();
+        Ok(match self.sketch(source, &sink)? {
+            Sketch::Batch { data, cs, seconds, .. } => {
+                self.batch_report(&data, &cs, seconds, &sink)
+            }
             Sketch::Stream { rows, weights, n_hull, stats, seconds, .. } => {
-                self.stream_report(rows, weights, n_hull, stats, seconds)
+                self.stream_report(rows, weights, n_hull, stats, seconds, &sink)
             }
         })
     }
 
     /// Build the coreset, fit the MCTM on it, and return the
     /// query-serving [`FittedModel`].
+    ///
+    /// The reports are assembled *after* the optimization, so
+    /// [`CoresetReport::degradations`] covers the whole run: sketch-side
+    /// events (ridge-jitter recoveries, scrubbed rows, shard retries)
+    /// and fit-side ones (line-search failures) alike.
     pub fn fit<S: DataSource>(&self, source: S) -> Result<FittedModel, ApiError> {
-        match self.sketch(source)? {
+        let sink = DegradeSink::new();
+        match self.sketch(source, &sink)? {
             Sketch::Batch { data, design, cs, seconds } => {
                 let spec = ModelSpec::new(design.j, self.d);
                 let sub = design.select(&cs.indices);
-                let fit = fit_native(spec, &sub, cs.weights.clone(), &self.fit);
-                let report = self.batch_report(&data, &cs, seconds);
+                let fit =
+                    fit_native_with_sink(spec, &sub, cs.weights.clone(), &self.fit, &sink);
+                let report = self.batch_report(&data, &cs, seconds, &sink);
                 Ok(FittedModel::assemble(spec, fit, design.scaler.clone(), report))
             }
             Sketch::Stream { rows, weights, n_hull, stats, j, seconds } => {
                 let pool = self.pool();
                 let design = Design::build_on(&rows, self.d, self.eps, &pool);
                 let spec = ModelSpec::new(j, self.d);
-                let fit = fit_native(spec, &design, weights.clone(), &self.fit);
+                let fit =
+                    fit_native_with_sink(spec, &design, weights.clone(), &self.fit, &sink);
                 let scaler = design.scaler.clone();
-                let report = self.stream_report(rows, weights, n_hull, stats, seconds);
+                let report = self.stream_report(rows, weights, n_hull, stats, seconds, &sink);
                 Ok(FittedModel::assemble(spec, fit, scaler, report))
             }
         }
     }
 
-    fn sketch<'a, S: DataSource + 'a>(&self, source: S) -> Result<Sketch<'a>, ApiError> {
+    fn sketch<'a, S: DataSource + 'a>(
+        &self,
+        source: S,
+        sink: &DegradeSink,
+    ) -> Result<Sketch<'a>, ApiError> {
         match source.into_input(source_seed(self.seed))? {
             SourceInput::Batch(data) => {
                 if data.rows == 0 {
@@ -335,6 +366,12 @@ impl Session {
                 if data.cols == 0 {
                     return Err(ApiError::Data("batch source has zero columns".into()));
                 }
+                let data = scrub_batch(data, self.on_invalid, sink)?;
+                if data.rows == 0 {
+                    return Err(ApiError::Data(
+                        "batch source has no finite rows left after drop-row scrubbing".into(),
+                    ));
+                }
                 let pool = self.pool();
                 let design = Design::build_on(&data, self.d, self.eps, &pool);
                 // time only the sampling itself (scores + draw), keeping
@@ -342,7 +379,8 @@ impl Session {
                 // the pre-facade harness, which shared one design build
                 let sw = Stopwatch::start();
                 let mut rng = Rng::new(self.seed);
-                let cs = build_coreset_on(&design, self.method, self.budget, &mut rng, &pool);
+                let cs =
+                    build_coreset_on(&design, self.method, self.budget, &mut rng, &pool, sink);
                 let seconds = sw.secs();
                 Ok(Sketch::Batch { data, design, cs, seconds })
             }
@@ -358,6 +396,8 @@ impl Session {
                 pipeline.seed = self.seed;
                 pipeline.queue_cap = self.queue_cap;
                 pipeline.buffer_factor = self.buffer_factor;
+                pipeline.on_invalid = self.on_invalid;
+                pipeline.sink = sink.clone();
                 pipeline.consumers = if self.consumers > 0 {
                     self.consumers
                 } else if self.threads > 0 {
@@ -365,7 +405,9 @@ impl Session {
                 } else {
                     parallel::threads()
                 };
-                let (out, stats) = pipeline.run(shards);
+                // a StreamError converts into ApiError::Stream with its
+                // shard/consumer provenance intact
+                let (out, stats) = pipeline.run(shards)?;
                 let seconds = sw.secs();
                 if out.is_empty() {
                     return Err(ApiError::Data("shard stream produced no rows".into()));
@@ -382,7 +424,13 @@ impl Session {
         }
     }
 
-    fn batch_report(&self, data: &Mat, cs: &Coreset, seconds: f64) -> CoresetReport {
+    fn batch_report(
+        &self,
+        data: &Mat,
+        cs: &Coreset,
+        seconds: f64,
+        sink: &DegradeSink,
+    ) -> CoresetReport {
         CoresetReport {
             method: cs.method.name(),
             requested: self.budget,
@@ -394,6 +442,7 @@ impl Session {
             rows: data.select_rows(&cs.indices),
             weights: cs.weights.clone(),
             stream: None,
+            degradations: sink.snapshot(),
             seconds,
         }
     }
@@ -405,6 +454,7 @@ impl Session {
         n_hull: usize,
         stats: StreamStats,
         seconds: f64,
+        sink: &DegradeSink,
     ) -> CoresetReport {
         CoresetReport {
             method: self.method.name(),
@@ -417,8 +467,30 @@ impl Session {
             rows,
             weights,
             stream: Some(stats),
+            degradations: sink.snapshot(),
             seconds,
         }
+    }
+}
+
+/// Apply the session's [`InvalidPolicy`] to a batch source. Clean data
+/// passes through untouched (borrowed sources stay zero-copy — the scan
+/// never writes); dirty data is scrubbed on an owned copy, or rejected
+/// with a typed error under [`InvalidPolicy::Error`].
+fn scrub_batch<'a>(
+    data: Cow<'a, Mat>,
+    policy: InvalidPolicy,
+    sink: &DegradeSink,
+) -> Result<Cow<'a, Mat>, ApiError> {
+    if data.data.iter().all(|x| x.is_finite()) {
+        return Ok(data);
+    }
+    match scrub_invalid(data.into_owned(), policy, sink) {
+        Ok(m) => Ok(Cow::Owned(m)),
+        Err((row, col)) => Err(ApiError::Data(format!(
+            "non-finite value at row {row}, column {col} \
+             (policy: error; set on_invalid to mask or drop)"
+        ))),
     }
 }
 
@@ -450,6 +522,13 @@ pub struct CoresetReport {
     pub weights: Vec<f64>,
     /// streaming statistics (`None` on the batch path)
     pub stream: Option<StreamStats>,
+    /// Numerical/robustness fallbacks taken during the run: ridge-jitter
+    /// Cholesky recoveries, MVEE non-convergence, uniform score
+    /// fallbacks, scrubbed rows, shard retries, … A clean run reports
+    /// [`Degradations::is_clean`] — anything else means the result is
+    /// still valid but was produced through a documented degradation,
+    /// visible here instead of a log line or a panic.
+    pub degradations: Degradations,
     /// wall-clock seconds spent sampling: the score computation + draw
     /// on the batch path (excluding the design build, matching the
     /// paper tables' sampling-time column), the whole pipeline run on

@@ -200,14 +200,16 @@ impl DataSource for NamedSource {
             let j = load_dataset(&self.name, 2, &mut probe)?.cols;
             let name = self.name.clone();
             let mut rng = Rng::new(seed);
+            // the name resolved during the probe draw above and the
+            // registry is static, so this lookup cannot fail by the time
+            // the stream is pulled
+            #[allow(clippy::expect_used)]
+            let gen = move |m| {
+                load_dataset(&name, m, &mut rng)
+                    .expect("dataset name validated before streaming")
+            };
             return Ok(SourceInput::Stream(Box::new(GenShards::new(
-                move |m| {
-                    load_dataset(&name, m, &mut rng)
-                        .expect("dataset name validated before streaming")
-                },
-                j,
-                self.n,
-                shard,
+                gen, j, self.n, shard,
             ))));
         }
         let mut rng = Rng::new(seed);
@@ -290,7 +292,7 @@ mod tests {
             SourceInput::Stream(mut s) => {
                 assert_eq!(s.dim(), 2);
                 let mut total = 0;
-                while let Some(shard) = s.next_shard() {
+                while let Some(shard) = s.next_shard().unwrap() {
                     total += shard.rows;
                 }
                 assert_eq!(total, 10);

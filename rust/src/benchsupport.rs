@@ -130,6 +130,9 @@ pub fn run_sim_table(title: &str, k: usize, csv: &str) {
         let data = dgp.generate(n, &mut rng);
         let runner = TableRunner::new(&data, 7, bench_fit_options(scale), 0xBEEF);
         let all: Vec<_> = methods.iter().map(|&m| runner.run(m, k, reps)).collect();
+        // bench_methods() returns a fixed non-empty slice, so a missing
+        // baseline is a harness bug worth a loud stop, not a user error
+        #[allow(clippy::expect_used)]
         let baseline = all.last().expect("bench_methods is non-empty");
         for stats in &all {
             let mut row = vec![dgp.name().to_string()];
@@ -172,6 +175,9 @@ pub fn run_equity_table(title: &str, n_stocks: usize, csv: &str) {
     );
     for &k in &ks {
         let all: Vec<_> = methods.iter().map(|&m| runner.run(m, k, reps)).collect();
+        // bench_methods() returns a fixed non-empty slice, so a missing
+        // baseline is a harness bug worth a loud stop, not a user error
+        #[allow(clippy::expect_used)]
         let baseline = all.last().expect("bench_methods is non-empty");
         for stats in &all {
             let mut row = vec![format!("{k}")];

@@ -82,6 +82,10 @@ pub fn run_method(
     let d = full.spec.d;
     for rep in 0..reps {
         let rep_seed = seed ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(rep as u64 + 1));
+        // the harness constructs its own knobs (validated tags, k ≥ 1)
+        // and feeds non-empty in-memory matrices, so these two cannot
+        // fail; a panic here is a harness bug, not a user-input error
+        #[allow(clippy::expect_used)]
         let session = SessionBuilder::new()
             .method_tag(method)
             .budget(k)
@@ -90,6 +94,7 @@ pub fn run_method(
             .fit_options(opts.clone())
             .build()
             .expect("harness session knobs are valid by construction");
+        #[allow(clippy::expect_used)]
         let model = session
             .fit(data)
             .expect("harness data sources are non-empty");

@@ -9,4 +9,4 @@ pub mod pipeline;
 
 pub use config::ExperimentConfig;
 pub use experiment::{run_method, summarize, FullFit, MethodStats};
-pub use pipeline::{StreamingPipeline, StreamStats};
+pub use pipeline::{StreamError, StreamStats, StreamingPipeline, SHARD_RETRY_LIMIT};

@@ -9,23 +9,82 @@
 //! the final coreset is identical for any number of consumers. The
 //! final coreset is fitted exactly like an in-memory one.
 //!
+//! Fault tolerance (ISSUE 6):
+//!
+//! * `ShardSource::next_shard` returns `Result`; **transient** read
+//!   errors are retried up to [`SHARD_RETRY_LIMIT`] times with
+//!   attempt-count (not wall-clock) backoff, and a retried read does
+//!   **not** consume a sequence number — so a run that recovers from
+//!   transient faults is bit-identical to the fault-free run.
+//! * **Fatal** errors (and transient ones that exhaust the budget)
+//!   trigger an orderly shutdown: an abort flag stops the producer,
+//!   consumers drain out of their channel/condvar waits, every lock is
+//!   poison-recovering, and the first error (smallest shard sequence)
+//!   surfaces as a typed [`StreamError`] instead of a panic or hang.
+//! * Empty shards are skipped without consuming a sequence number;
+//!   non-finite cells are handled per the session's
+//!   [`InvalidPolicy`](crate::data::InvalidPolicy) by the producer in
+//!   sequence order (deterministic at any consumer count). Every such
+//!   event is recorded into the run's shared
+//!   [`DegradeSink`](crate::util::degrade::DegradeSink).
+//!
 //! The pipeline holds only a `Method` tag; every per-method decision
 //! inside the leaf/tree reduces (scores, hull budget) dispatches
 //! through the strategy registry (`coreset::strategy`), so any
 //! registered method — the §4 ellipsoid ones included — streams end to
 //! end with the same determinism guarantees (pinned at consumers
-//! {1, 4} by `tests/pipeline_e2e.rs`).
+//! {1, 4} by `tests/pipeline_e2e.rs` and `tests/fault_injection.rs`).
 
 use crate::coreset::merge_reduce::{reduce_with, MergeReduce, WeightedRows};
 use crate::coreset::Method;
-use crate::data::ShardSource;
+use crate::data::{scrub_invalid, InvalidPolicy, ShardError, ShardSource};
 use crate::linalg::Mat;
+use crate::util::degrade::DegradeSink;
 use crate::util::parallel;
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::sync_channel;
 use std::sync::{Condvar, Mutex};
+
+/// How many times a [`ShardError::Transient`] read is retried before it
+/// is escalated to a fatal stream error. Retries are attempt-counted,
+/// never slept — wall-clock backoff would not help a deterministic
+/// in-process source and would make runs timing-dependent.
+pub const SHARD_RETRY_LIMIT: usize = 3;
+
+/// A typed streaming failure: what went wrong, at which shard, and (for
+/// consumer-side failures) on which consumer. Converted to
+/// `ApiError::Stream` at the facade boundary.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StreamError {
+    /// Sequence number of the shard being handled when the error hit
+    /// (`None` for failures not attributable to one shard, e.g. the
+    /// final tree collapse).
+    pub shard_seq: Option<usize>,
+    /// Index of the consumer worker that failed (`None` for
+    /// producer-side and reducer-side failures).
+    pub consumer: Option<usize>,
+    /// Human-readable cause.
+    pub message: String,
+}
+
+impl fmt::Display for StreamError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "stream error")?;
+        if let Some(seq) = self.shard_seq {
+            write!(f, " at shard {seq}")?;
+        }
+        if let Some(c) = self.consumer {
+            write!(f, " (consumer {c})")?;
+        }
+        write!(f, ": {}", self.message)
+    }
+}
+
+impl std::error::Error for StreamError {}
 
 /// Diagnostics from a streaming run.
 #[derive(Clone, Debug)]
@@ -58,24 +117,18 @@ pub struct StreamingPipeline {
     /// consumer workers running leaf reduces in parallel (defaults to
     /// the global worker count; results do not depend on this)
     pub consumers: usize,
+    /// what to do with non-finite cells at ingestion (producer-side,
+    /// sequence order — deterministic at any consumer count)
+    pub on_invalid: InvalidPolicy,
+    /// degradation accounting shared with the whole run (retries, empty
+    /// shards, scrubbed rows, reduce-side numerical fallbacks)
+    pub(crate) sink: DegradeSink,
 }
 
 impl StreamingPipeline {
-    /// Deprecated public constructor — configure streaming through the
-    /// facade instead (`SessionBuilder::queue_cap` / `buffer_factor` /
-    /// `consumers`, then `Session::fit` on a shard source). The shim
-    /// stays for one release.
-    #[deprecated(
-        since = "0.2.0",
-        note = "use mctm_coreset::prelude::SessionBuilder and feed Session::fit a shard \
-                source; this constructor will be removed next release"
-    )]
-    pub fn new(method: Method, k: usize, d: usize) -> Self {
-        Self::assemble(method, k, d)
-    }
-
-    /// Crate-internal constructor behind `api::Session` (and the shim
-    /// above).
+    /// Crate-internal constructor behind `api::Session` (the pre-0.3
+    /// `StreamingPipeline::new` shim has been removed — configure
+    /// streaming through `SessionBuilder`).
     pub(crate) fn assemble(method: Method, k: usize, d: usize) -> Self {
         StreamingPipeline {
             method,
@@ -86,6 +139,8 @@ impl StreamingPipeline {
             seed: 0xC0FF_EE,
             buffer_factor: 4,
             consumers: parallel::threads(),
+            on_invalid: InvalidPolicy::default(),
+            sink: DegradeSink::new(),
         }
     }
 
@@ -96,33 +151,45 @@ impl StreamingPipeline {
     /// of stream length. Consumers pull shards from the shared channel,
     /// leaf-reduce them with deterministic per-shard RNGs, and send the
     /// leaves to the in-order tree reducer.
-    pub fn run(&self, mut source: impl ShardSource + Send + 'static) -> (WeightedRows, StreamStats) {
+    ///
+    /// On failure (fatal shard read, exhausted retries, invalid data
+    /// under [`InvalidPolicy::Error`], a reduce that cannot proceed)
+    /// every thread is signalled to stop, the bounded channels drain,
+    /// and the first error in sequence order is returned — the run
+    /// never panics or deadlocks on a faulty source.
+    pub fn run(
+        &self,
+        mut source: impl ShardSource + Send + 'static,
+    ) -> Result<(WeightedRows, StreamStats), StreamError> {
         let sw = Stopwatch::start();
         let consumers = self.consumers.max(1);
         let (shard_tx, shard_rx) = sync_channel::<(usize, Mat)>(self.queue_cap);
-        let producer = std::thread::spawn(move || {
-            let mut produced = 0usize;
-            for seq in 0usize.. {
-                match source.next_shard() {
-                    Some(shard) => {
-                        produced += shard.rows;
-                        if shard_tx.send((seq, shard)).is_err() {
-                            break; // consumers dropped
-                        }
-                    }
-                    None => break,
-                }
-            }
-            produced
-        });
+
+        // shared failure state: the first error in *sequence order* wins
+        // (deterministic at any consumer count); the abort flag tells
+        // every thread to wind down
+        let error: Mutex<Option<StreamError>> = Mutex::new(None);
+        let abort = AtomicBool::new(false);
+        // Bounded reorder window: a consumer may not start reducing a
+        // shard more than `window` sequence numbers ahead of the
+        // in-order reducer, so the reorder buffer — and with it total
+        // memory — stays bounded even when one early shard is slow and
+        // the other consumers race ahead. The consumer holding the
+        // next-to-fold sequence never waits (seq < folded + window),
+        // so the window cannot deadlock.
+        let window = self.queue_cap + consumers;
+        let progress = (Mutex::new(0usize), Condvar::new());
 
         let mut mr = MergeReduce::new(self.method, self.k, self.d, self.eps, self.seed);
         mr.buffer_factor = self.buffer_factor;
+        mr.sink = self.sink.clone();
         // reducer-side merges run concurrently with busy consumers — the
         // consumers are the parallelism, so the tree reduces stay serial
         mr.pool = crate::util::parallel::Pool::new(1);
         let k_buffer = self.buffer_factor * self.k;
         let (method, d, eps, base_seed) = (self.method, self.d, self.eps, self.seed);
+        let on_invalid = self.on_invalid;
+        let sink = self.sink.clone();
 
         // the consumers ARE the parallelism when fanned out — but a
         // single consumer may use the full worker pool inside its leaf
@@ -141,93 +208,300 @@ impl StreamingPipeline {
         let shard_rx = Mutex::new(shard_rx);
         let (leaf_tx, leaf_rx) =
             sync_channel::<(usize, WeightedRows, usize)>(self.queue_cap + consumers);
-        // Bounded reorder window: a consumer may not start reducing a
-        // shard more than `window` sequence numbers ahead of the
-        // in-order reducer, so the reorder buffer — and with it total
-        // memory — stays bounded even when one early shard is slow and
-        // the other consumers race ahead. The consumer holding the
-        // next-to-fold sequence never waits (seq < folded + window),
-        // so the window cannot deadlock.
-        let window = self.queue_cap + consumers;
-        let progress = (Mutex::new(0usize), Condvar::new());
-        std::thread::scope(|s| {
-            for _ in 0..consumers {
+
+        // record an error (keeping the one with the smallest shard
+        // sequence — deterministic regardless of which thread loses the
+        // race) and signal everyone to stop. Declared outside the scope
+        // so scoped threads can borrow it.
+        let fail = |err: StreamError| {
+            let mut slot = lock_ok(&error);
+            let replace = match &*slot {
+                None => true,
+                Some(old) => seq_rank(err.shard_seq) < seq_rank(old.shard_seq),
+            };
+            if replace {
+                *slot = Some(err);
+            }
+            drop(slot);
+            abort.store(true, Ordering::SeqCst);
+            // wake consumers parked on the reorder window
+            progress.1.notify_all();
+        };
+
+        let (out, n_seen) = std::thread::scope(|s| {
+            // ---- producer: read shards, retry transients, scrub ----
+            let producer = s.spawn({
+                let fail = &fail;
+                let abort = &abort;
+                let sink = sink.clone();
+                move || {
+                    let j = source.dim();
+                    let mut produced = 0usize;
+                    let mut seq = 0usize;
+                    'stream: loop {
+                        if abort.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        // bounded, attempt-counted retry: a transient
+                        // fault re-requests the SAME shard, so seq (and
+                        // with it every downstream RNG) is untouched
+                        let mut attempts = 0usize;
+                        let shard = loop {
+                            match source.next_shard() {
+                                Ok(s) => break s,
+                                Err(ShardError::Transient(_)) if attempts < SHARD_RETRY_LIMIT => {
+                                    attempts += 1;
+                                    sink.shard_retry();
+                                }
+                                Err(e) => {
+                                    let kind = match e {
+                                        ShardError::Transient(_) => "transient (retries exhausted)",
+                                        ShardError::Fatal(_) => "fatal",
+                                    };
+                                    fail(StreamError {
+                                        shard_seq: Some(seq),
+                                        consumer: None,
+                                        message: format!("{kind} shard read error: {}", e.message()),
+                                    });
+                                    break 'stream;
+                                }
+                            }
+                        };
+                        let Some(shard) = shard else { break };
+                        // spurious empty shards are skipped without
+                        // consuming a sequence number, so they cannot
+                        // shift downstream RNG streams
+                        if shard.rows == 0 {
+                            sink.empty_shard_skipped();
+                            continue;
+                        }
+                        if shard.cols != j {
+                            fail(StreamError {
+                                shard_seq: Some(seq),
+                                consumer: None,
+                                message: format!(
+                                    "shard dimension mismatch: {} columns, source dim {j}",
+                                    shard.cols
+                                ),
+                            });
+                            break;
+                        }
+                        // invalid-cell policy runs here, in sequence
+                        // order, so scrubbing is deterministic at any
+                        // consumer count
+                        let shard = match scrub_invalid(shard, on_invalid, &sink) {
+                            Ok(m) => m,
+                            Err((row, col)) => {
+                                fail(StreamError {
+                                    shard_seq: Some(seq),
+                                    consumer: None,
+                                    message: format!(
+                                        "non-finite value at shard {seq}, row {row}, column {col} \
+                                         (policy: error; set on_invalid to mask or drop)"
+                                    ),
+                                });
+                                break;
+                            }
+                        };
+                        if shard.rows == 0 {
+                            // every row dropped: nothing to stream
+                            sink.empty_shard_skipped();
+                            continue;
+                        }
+                        produced += shard.rows;
+                        if shard_tx.send((seq, shard)).is_err() {
+                            break; // consumers dropped (downstream abort)
+                        }
+                        seq += 1;
+                    }
+                    produced
+                }
+            });
+
+            // ---- consumers: leaf-reduce shards in parallel ----
+            for ci in 0..consumers {
                 let shard_rx = &shard_rx;
                 let leaf_tx = leaf_tx.clone();
                 let progress = &progress;
-                s.spawn(move || loop {
-                    // recv under the lock serializes the *take*, not the
-                    // reduce — workers overlap on the expensive part
-                    let msg = shard_rx.lock().expect("shard queue poisoned").recv();
-                    match msg {
-                        Ok((seq, shard)) => {
-                            {
-                                let (folded, cv) = progress;
-                                let mut guard = folded.lock().expect("progress poisoned");
-                                while seq >= *guard + window {
-                                    guard = cv.wait(guard).expect("progress poisoned");
+                let abort = &abort;
+                let fail = &fail;
+                let leaf_pool = &leaf_pool;
+                let sink = sink.clone();
+                s.spawn(move || {
+                    'work: loop {
+                        if abort.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        // recv under the lock serializes the *take*, not
+                        // the reduce — workers overlap on the expensive
+                        // part
+                        let msg = lock_ok(shard_rx).recv();
+                        match msg {
+                            Ok((seq, shard)) => {
+                                // bounded reorder window: don't run too
+                                // far ahead of the in-order reducer
+                                {
+                                    let (folded, cv) = progress;
+                                    let mut guard = lock_ok_guarded(folded);
+                                    while seq >= *guard + window
+                                        && !abort.load(Ordering::SeqCst)
+                                    {
+                                        guard = cv
+                                            .wait(guard)
+                                            .unwrap_or_else(|e| e.into_inner());
+                                    }
+                                }
+                                if abort.load(Ordering::SeqCst) {
+                                    break 'work;
+                                }
+                                let n_raw = shard.rows;
+                                let mut rng = Rng::new(shard_seed(base_seed, seq));
+                                let leaf = match reduce_with(
+                                    &WeightedRows::new(shard, vec![1.0; n_raw]),
+                                    method,
+                                    k_buffer,
+                                    d,
+                                    eps,
+                                    &mut rng,
+                                    leaf_pool,
+                                    &sink,
+                                ) {
+                                    Ok(l) => l,
+                                    Err(e) => {
+                                        fail(StreamError {
+                                            shard_seq: Some(seq),
+                                            consumer: Some(ci),
+                                            message: format!("leaf reduce failed: {e}"),
+                                        });
+                                        break 'work;
+                                    }
+                                };
+                                if leaf_tx.send((seq, leaf, n_raw)).is_err() {
+                                    break 'work;
                                 }
                             }
-                            let n_raw = shard.rows;
-                            let mut rng = Rng::new(shard_seed(base_seed, seq));
-                            let leaf = reduce_with(
-                                &WeightedRows::new(shard, vec![1.0; n_raw]),
-                                method,
-                                k_buffer,
-                                d,
-                                eps,
-                                &mut rng,
-                                &leaf_pool,
-                            );
-                            if leaf_tx.send((seq, leaf, n_raw)).is_err() {
-                                break;
-                            }
+                            Err(_) => break 'work, // producer done, drained
                         }
-                        Err(_) => break, // producer done, channel drained
+                    }
+                    // abort path: keep draining the shard queue so a
+                    // producer blocked on the full bounded channel can
+                    // observe the abort flag and exit — without this,
+                    // a fatal consumer-side error could deadlock the
+                    // producer on `send`
+                    while abort.load(Ordering::SeqCst) {
+                        if lock_ok(shard_rx).recv().is_err() {
+                            break;
+                        }
                     }
                 });
             }
             drop(leaf_tx); // only worker clones remain
 
+            // ---- reducer: fold leaves in sequence order ----
             // reorder buffer: fold leaves into the tree in shard order,
-            // so the merge RNG stream is independent of scheduling
+            // so the merge RNG stream is independent of scheduling. The
+            // recv loop keeps draining after an abort so no consumer
+            // stays blocked on the bounded leaf channel.
             let mut pending: BTreeMap<usize, (WeightedRows, usize)> = BTreeMap::new();
             let mut next_seq = 0usize;
             for (seq, leaf, n_raw) in leaf_rx.iter() {
                 n_shards += 1;
+                if abort.load(Ordering::SeqCst) {
+                    continue; // drain without folding
+                }
                 pending.insert(seq, (leaf, n_raw));
                 peak_reorder = peak_reorder.max(pending.len());
                 if pending.contains_key(&next_seq) {
                     while let Some((leaf, n_raw)) = pending.remove(&next_seq) {
-                        mr.push_reduced(leaf, n_raw);
+                        if let Err(e) = mr.push_reduced(leaf, n_raw) {
+                            fail(StreamError {
+                                shard_seq: Some(next_seq),
+                                consumer: None,
+                                message: format!("tree reduce failed: {e}"),
+                            });
+                            break;
+                        }
                         next_seq += 1;
                     }
                     // publish progress and wake consumers waiting on the
                     // reorder window
                     let (folded, cv) = &progress;
-                    *folded.lock().expect("progress poisoned") = next_seq;
+                    *lock_ok_guarded(folded) = next_seq;
                     cv.notify_all();
                 }
             }
-            assert!(pending.is_empty(), "lost shard sequence numbers");
+            if !pending.is_empty() && lock_ok(&error).is_none() {
+                // gaps with no recorded failure would mean lost shards —
+                // surface it as a typed error rather than asserting
+                fail(StreamError {
+                    shard_seq: Some(next_seq),
+                    consumer: None,
+                    message: format!(
+                        "lost shard sequence numbers: reducer stalled at {next_seq} with {} \
+                         leaves pending",
+                        pending.len()
+                    ),
+                });
+            }
+
+            let n_seen = match producer.join() {
+                Ok(n) => n,
+                Err(_) => {
+                    fail(StreamError {
+                        shard_seq: None,
+                        consumer: None,
+                        message: "producer thread panicked".into(),
+                    });
+                    0
+                }
+            };
+            (mr, n_seen)
         });
 
-        let n_seen = producer.join().expect("producer panicked");
-        let n_reduces = mr.n_reduces;
-        let out = mr.finish();
+        if let Some(err) = lock_ok(&error).take() {
+            return Err(err);
+        }
+        let n_reduces = out.n_reduces;
+        let coreset = out.finish().map_err(|e| StreamError {
+            shard_seq: None,
+            consumer: None,
+            message: format!("final tree collapse failed: {e}"),
+        })?;
         let stats = StreamStats {
             n_seen,
             n_shards,
             n_reduces,
-            coreset_size: out.len(),
+            coreset_size: coreset.len(),
             seconds: sw.secs(),
             // the bounded channel caps in-flight shards at queue_cap;
             // report the same conservative bound the serial reducer did
             peak_queue: self.queue_cap.min(n_shards),
             peak_reorder,
         };
-        (out, stats)
+        Ok((coreset, stats))
     }
+}
+
+/// Rank a shard sequence for "first error wins": attributable errors
+/// order by shard, unattributable ones (`None`) sort last.
+fn seq_rank(seq: Option<usize>) -> u64 {
+    match seq {
+        Some(s) => s as u64,
+        None => u64::MAX,
+    }
+}
+
+/// Poison-recovering lock: a worker that panicked while holding the
+/// mutex must not cascade into every other thread — the protected state
+/// (channel handle, error slot, progress counter) stays valid.
+fn lock_ok<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Same as [`lock_ok`]; separate name where the guard is held across a
+/// condvar wait (documentation aid only).
+fn lock_ok_guarded<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// Deterministic per-shard RNG seed: mixes the pipeline seed with the
@@ -241,6 +515,7 @@ fn shard_seed(base: u64, seq: usize) -> u64 {
 mod tests {
     use super::*;
     use crate::data::dgp::Dgp;
+    use crate::data::faulty::{FaultPlan, FaultySource};
     use crate::data::GenShards;
     use crate::util::rng::Rng;
 
@@ -256,7 +531,7 @@ mod tests {
             20_000,
             2_000,
         );
-        let (coreset, stats) = pipeline.run(source);
+        let (coreset, stats) = pipeline.run(source).unwrap();
         assert_eq!(stats.n_seen, 20_000);
         assert_eq!(stats.n_shards, 10);
         assert!(stats.n_reduces >= 10);
@@ -283,8 +558,8 @@ mod tests {
         p1.consumers = 1;
         let mut p8 = StreamingPipeline::assemble(Method::L2Hull, 40, 5);
         p8.consumers = 8;
-        let (c1, s1) = p1.run(make_source(99));
-        let (c8, s8) = p8.run(make_source(99));
+        let (c1, s1) = p1.run(make_source(99)).unwrap();
+        let (c8, s8) = p8.run(make_source(99)).unwrap();
         assert_eq!(s1.n_seen, s8.n_seen);
         assert_eq!(c1.weights, c8.weights);
         assert_eq!(c1.rows.data, c8.rows.data);
@@ -294,8 +569,51 @@ mod tests {
     fn empty_stream_is_empty_coreset() {
         let pipeline = StreamingPipeline::assemble(Method::Uniform, 10, 5);
         let source = GenShards::new(|n| Mat::zeros(n, 2), 2, 0, 100);
-        let (coreset, stats) = pipeline.run(source);
+        let (coreset, stats) = pipeline.run(source).unwrap();
         assert_eq!(stats.n_seen, 0);
         assert_eq!(coreset.len(), 0);
+    }
+
+    #[test]
+    fn transient_faults_recover_bit_identically() {
+        // the headline invariant at the pipeline level: recovered
+        // transient faults leave no trace in the coreset
+        let make_source = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            GenShards::new(
+                move |n| Dgp::BivariateNormal.generate(n, &mut rng),
+                2,
+                6_000,
+                1_000,
+            )
+        };
+        let pipeline = StreamingPipeline::assemble(Method::L2Hull, 40, 5);
+        let (clean, _) = pipeline.run(make_source(7)).unwrap();
+
+        let faulty = FaultySource::new(
+            make_source(7),
+            FaultPlan::new(13).with_transients(2, SHARD_RETRY_LIMIT),
+        );
+        let pipeline2 = StreamingPipeline::assemble(Method::L2Hull, 40, 5);
+        let (recovered, _) = pipeline2.run(faulty).unwrap();
+        assert_eq!(clean.weights, recovered.weights);
+        assert_eq!(clean.rows.data, recovered.rows.data);
+        assert!(pipeline2.sink.snapshot().shard_retries > 0);
+    }
+
+    #[test]
+    fn fatal_fault_is_typed_not_panic() {
+        let mut rng = Rng::new(3);
+        let source = GenShards::new(
+            move |n| Dgp::BivariateNormal.generate(n, &mut rng),
+            2,
+            6_000,
+            1_000,
+        );
+        let faulty = FaultySource::new(source, FaultPlan::new(5).with_fatal_at(2));
+        let pipeline = StreamingPipeline::assemble(Method::L2Hull, 40, 5);
+        let err = pipeline.run(faulty).unwrap_err();
+        assert_eq!(err.shard_seq, Some(2));
+        assert!(err.message.contains("fatal"), "{err}");
     }
 }

@@ -25,7 +25,8 @@
 //! CLI flag → batch builds → streaming Merge & Reduce — not just in the
 //! perf bench.
 
-use crate::linalg::{Cholesky, Mat};
+use crate::linalg::{cholesky_ridge_ladder, Mat};
+use crate::util::degrade::DegradeSink;
 use crate::util::parallel::{add_assign, tree_reduce, Pool, ROW_CHUNK};
 
 /// Result of the MVEE computation.
@@ -36,6 +37,10 @@ pub struct JohnEllipsoid {
     pub m: Mat,
     /// iterations used
     pub iters: usize,
+    /// whether the (1+ε) optimality criterion was met (false when the
+    /// iteration budget ran out or the moment matrix stopped factoring —
+    /// the ellipsoid is still usable, just not certified)
+    pub converged: bool,
 }
 
 /// Khachiyan's algorithm on the lifted points q_i = (x_i, 1) ∈ R^{d+1}:
@@ -47,6 +52,21 @@ pub fn john_ellipsoid(x: &Mat, eps: f64, max_iters: usize) -> JohnEllipsoid {
 
 /// [`john_ellipsoid`] on an explicit pool.
 pub fn john_ellipsoid_with(x: &Mat, eps: f64, max_iters: usize, pool: &Pool) -> JohnEllipsoid {
+    john_ellipsoid_sink(x, eps, max_iters, pool, &DegradeSink::new())
+}
+
+/// [`john_ellipsoid_with`] with degradation accounting: a moment matrix
+/// that fails to factor retries through the ridge ladder (recovery
+/// recorded); a terminal factor failure or an exhausted iteration
+/// budget is recorded instead of silently proceeding, and is also
+/// visible on the returned `converged` flag.
+pub fn john_ellipsoid_sink(
+    x: &Mat,
+    eps: f64,
+    max_iters: usize,
+    pool: &Pool,
+    sink: &DegradeSink,
+) -> JohnEllipsoid {
     let (n, d) = (x.rows, x.cols);
     assert!(n > d, "need more points than dimensions");
     let dl = d + 1; // lifted dimension
@@ -57,18 +77,30 @@ pub fn john_ellipsoid_with(x: &Mat, eps: f64, max_iters: usize, pool: &Pool) -> 
         q.row_mut(i)[d] = 1.0;
     }
     let mut iters = 0;
+    let mut converged = false;
     let mut m = weighted_moment_with(&q, &u, pool);
     for it in 0..max_iters {
         iters = it + 1;
-        // M with a tiny stabilizer, factor once per iteration
+        // M with a tiny stabilizer; the ladder's first attempt factors
+        // exactly this matrix, so clean runs are bit-identical
         let mut ms = m.clone();
         let stab = 1e-12 * ms.trace().max(1e-300) / dl as f64;
         for k in 0..dl {
             *ms.at_mut(k, k) += stab;
         }
-        let ch = match Cholesky::new(&ms) {
-            Ok(c) => c,
-            Err(_) => break,
+        let ch = match cholesky_ridge_ladder(&ms) {
+            Ok((c, rung)) => {
+                if rung > 0 {
+                    sink.gram_ridge_recovery(rung);
+                }
+                c
+            }
+            Err(_) => {
+                // keep the last factorable iterate rather than panic;
+                // record that rounding stopped on a factor break
+                sink.mvee_factor_break();
+                break;
+            }
         };
         // most violating point: row-sharded argmax with per-worker
         // scratch, merged in fixed tree order (earlier rows win ties)
@@ -92,6 +124,7 @@ pub fn john_ellipsoid_with(x: &Mat, eps: f64, max_iters: usize, pool: &Pool) -> 
             .unwrap_or((f64::NEG_INFINITY, usize::MAX))
         };
         if arg == usize::MAX || kappa_max <= (1.0 + eps) * dl as f64 {
+            converged = true;
             break;
         }
         // Khachiyan step toward the violator
@@ -102,7 +135,10 @@ pub fn john_ellipsoid_with(x: &Mat, eps: f64, max_iters: usize, pool: &Pool) -> 
         u[arg] += step;
         m = weighted_moment_with(&q, &u, pool);
     }
-    JohnEllipsoid { u, m, iters }
+    if !converged {
+        sink.mvee_nonconverged();
+    }
+    JohnEllipsoid { u, m, iters, converged }
 }
 
 /// Row-sharded M = Σ u_i q_i q_iᵀ: per-chunk upper-triangle partials in
@@ -155,17 +191,34 @@ pub fn ellipsoid_scores(x: &Mat, eps: f64) -> Vec<f64> {
 /// writes disjoint row chunks with per-worker scratch, sharing the one
 /// factorization — same disjoint-write pattern as the leverage kernel.
 pub fn ellipsoid_scores_with(x: &Mat, eps: f64, pool: &Pool) -> Vec<f64> {
+    ellipsoid_scores_sink(x, eps, pool, &DegradeSink::new())
+}
+
+/// [`ellipsoid_scores_with`] with degradation accounting: rounding
+/// non-convergence, factor-break recoveries, and the uniform-score
+/// fallback are all recorded into `sink` instead of passing silently.
+pub fn ellipsoid_scores_sink(x: &Mat, eps: f64, pool: &Pool, sink: &DegradeSink) -> Vec<f64> {
     let n = x.rows;
-    let je = john_ellipsoid_with(x, eps, 200, pool);
+    let je = john_ellipsoid_sink(x, eps, 200, pool, sink);
     let dl = x.cols + 1;
     let mut ms = je.m.clone();
     let stab = 1e-12 * ms.trace().max(1e-300) / dl as f64;
     for k in 0..dl {
         *ms.at_mut(k, k) += stab;
     }
-    let ch = match Cholesky::new(&ms) {
-        Ok(c) => c,
-        Err(_) => return vec![1.0; n],
+    let ch = match cholesky_ridge_ladder(&ms) {
+        Ok((c, rung)) => {
+            if rung > 0 {
+                sink.gram_ridge_recovery(rung);
+            }
+            c
+        }
+        Err(_) => {
+            // uniform scores keep the sampler total-order valid; the
+            // fallback is visible in the run's degradation record
+            sink.score_fallback();
+            return vec![1.0; n];
+        }
     };
     let mut out = vec![0.0; n];
     {
@@ -189,6 +242,7 @@ pub fn ellipsoid_scores_with(x: &Mat, eps: f64, pool: &Pool) -> Vec<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Cholesky;
     use crate::util::rng::Rng;
 
     fn cloud(n: usize, d: usize, seed: u64) -> Mat {
@@ -226,6 +280,21 @@ mod tests {
         let total: f64 = je.u.iter().sum();
         assert!((total - 1.0).abs() < 1e-9);
         assert!(je.u.iter().all(|&u| u >= 0.0));
+    }
+
+    #[test]
+    fn nonconvergence_is_recorded_not_silent() {
+        let x = cloud(200, 3, 5);
+        // one iteration cannot meet the (1+ε) certificate on a real cloud
+        let sink = DegradeSink::new();
+        let je = john_ellipsoid_sink(&x, 0.001, 1, &Pool::new(1), &sink);
+        assert!(!je.converged);
+        assert_eq!(sink.snapshot().mvee_nonconverged, 1);
+        // a generous budget converges and records nothing
+        let sink2 = DegradeSink::new();
+        let je2 = john_ellipsoid_sink(&x, 0.05, 500, &Pool::new(1), &sink2);
+        assert!(je2.converged);
+        assert!(sink2.snapshot().is_clean());
     }
 
     #[test]

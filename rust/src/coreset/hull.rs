@@ -374,9 +374,9 @@ pub fn exact_hull_2d(points: &Mat) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..n).collect();
     idx.sort_by(|&a, &b| {
         let (pa, pb) = (points.row(a), points.row(b));
-        pa[0].partial_cmp(&pb[0])
-            .unwrap()
-            .then(pa[1].partial_cmp(&pb[1]).unwrap())
+        // total_cmp: NaN coordinates sort deterministically instead of
+        // panicking the comparator
+        pa[0].total_cmp(&pb[0]).then(pa[1].total_cmp(&pb[1]))
     });
     let cross = |o: &[f64], a: &[f64], b: &[f64]| -> f64 {
         (a[0] - o[0]) * (b[1] - o[1]) - (a[1] - o[1]) * (b[0] - o[0])

@@ -13,7 +13,8 @@
 //! directly.
 
 use crate::basis::Design;
-use crate::linalg::{Cholesky, LinalgError, Mat};
+use crate::linalg::{cholesky_ridge_ladder, Cholesky, LinalgError, Mat};
+use crate::util::degrade::DegradeSink;
 use crate::util::parallel::{Pool, ROW_CHUNK};
 
 /// Relative ridge added to the Gram matrix before factorization. Keeps
@@ -33,6 +34,21 @@ pub fn leverage_scores_ridged(x: &Mat, gamma: f64) -> Result<Vec<f64>, LinalgErr
     leverage_scores_ridged_with(x, gamma, &Pool::current())
 }
 
+/// Factor a (stabilized) Gram matrix, recovering from `NotPosDef`
+/// through the escalating ridge-jitter ladder
+/// (`linalg::cholesky_ridge_ladder`). A first-attempt success factors
+/// the matrix exactly as given — bit-identical to a plain
+/// `Cholesky::new` — so clean runs are unaffected; a recovery is
+/// recorded into `sink` (rung included) so degraded scores are
+/// observable in `Diagnostics`/`CoresetReport`.
+fn factor_gram(g: &Mat, sink: &DegradeSink) -> Result<Cholesky, LinalgError> {
+    let (ch, rung) = cholesky_ridge_ladder(g)?;
+    if rung > 0 {
+        sink.gram_ridge_recovery(rung);
+    }
+    Ok(ch)
+}
+
 /// [`leverage_scores_ridged`] on an explicit pool. The Gram pass is
 /// row-sharded with a deterministic tree reduction and the scoring pass
 /// writes disjoint row chunks, so scores are bit-identical for any
@@ -42,13 +58,25 @@ pub fn leverage_scores_ridged_with(
     gamma: f64,
     pool: &Pool,
 ) -> Result<Vec<f64>, LinalgError> {
+    leverage_scores_ridged_sink(x, gamma, pool, &DegradeSink::new())
+}
+
+/// [`leverage_scores_ridged_with`] with degradation accounting: a Gram
+/// matrix that fails to factor retries through the ridge ladder and
+/// records the recovery into `sink` instead of erroring outright.
+pub fn leverage_scores_ridged_sink(
+    x: &Mat,
+    gamma: f64,
+    pool: &Pool,
+    sink: &DegradeSink,
+) -> Result<Vec<f64>, LinalgError> {
     let mut g = x.gram_with(pool);
     let d = g.rows;
     let stab = GRAM_RIDGE_REL * g.trace().max(1e-300) / d as f64;
     for i in 0..d {
         *g.at_mut(i, i) += gamma + stab;
     }
-    let ch = Cholesky::new(&g)?;
+    let ch = factor_gram(&g, sink)?;
     // score via an explicit L⁻¹ triangular matvec instead of a
     // forward-solve per row: same FLOPs, but no divisions in the inner
     // loop and contiguous row access — 2.1× on the J=10 pipeline (see
@@ -153,7 +181,17 @@ pub fn mctm_leverage_scores_with(
     design: &Design,
     pool: &Pool,
 ) -> Result<Vec<f64>, LinalgError> {
-    plane_leverage_scores(design, None, pool)
+    plane_leverage_scores(design, None, pool, &DegradeSink::new())
+}
+
+/// [`mctm_leverage_scores_with`] with degradation accounting (ridge
+/// ladder recoveries recorded into `sink` — see [`factor_gram`]).
+pub fn mctm_leverage_scores_sink(
+    design: &Design,
+    pool: &Pool,
+    sink: &DegradeSink,
+) -> Result<Vec<f64>, LinalgError> {
+    plane_leverage_scores(design, None, pool, sink)
 }
 
 /// Weighted MCTM leverage scores u_i(w) = w_i · b_iᵀ(Σ w b bᵀ)⁻¹ b_i,
@@ -172,9 +210,20 @@ pub fn weighted_mctm_leverage_scores_with(
     w: &[f64],
     pool: &Pool,
 ) -> Result<Vec<f64>, LinalgError> {
+    weighted_mctm_leverage_scores_sink(design, w, pool, &DegradeSink::new())
+}
+
+/// [`weighted_mctm_leverage_scores_with`] with degradation accounting
+/// (ridge ladder recoveries recorded into `sink`).
+pub fn weighted_mctm_leverage_scores_sink(
+    design: &Design,
+    w: &[f64],
+    pool: &Pool,
+    sink: &DegradeSink,
+) -> Result<Vec<f64>, LinalgError> {
     assert_eq!(design.n, w.len(), "weights length");
     let sqrt_w: Vec<f64> = w.iter().map(|wi| wi.max(0.0).sqrt()).collect();
-    plane_leverage_scores(design, Some(&sqrt_w), pool)
+    plane_leverage_scores(design, Some(&sqrt_w), pool, sink)
 }
 
 /// Gather stacked row i from the planes, scaled by `sqrt_w[i]` when
@@ -198,6 +247,7 @@ fn plane_leverage_scores(
     design: &Design,
     sqrt_w: Option<&[f64]>,
     pool: &Pool,
+    sink: &DegradeSink,
 ) -> Result<Vec<f64>, LinalgError> {
     let dj = design.j * design.d;
     if design.n == 0 || dj == 0 {
@@ -208,7 +258,7 @@ fn plane_leverage_scores(
     for i in 0..dj {
         *g.at_mut(i, i) += stab;
     }
-    let ch = Cholesky::new(&g)?;
+    let ch = factor_gram(&g, sink)?;
     let linv = ch.l_inverse();
     let mut scores = vec![0.0; design.n];
     let items: Vec<&mut [f64]> = scores.chunks_mut(ROW_CHUNK).collect();
@@ -290,7 +340,16 @@ pub fn sensitivity_scores_with(
     design: &Design,
     pool: &Pool,
 ) -> Result<Vec<f64>, LinalgError> {
-    let u = mctm_leverage_scores_with(design, pool)?;
+    sensitivity_scores_sink(design, pool, &DegradeSink::new())
+}
+
+/// [`sensitivity_scores_with`] with degradation accounting.
+pub fn sensitivity_scores_sink(
+    design: &Design,
+    pool: &Pool,
+    sink: &DegradeSink,
+) -> Result<Vec<f64>, LinalgError> {
+    let u = mctm_leverage_scores_sink(design, pool, sink)?;
     let n = design.n as f64;
     Ok(u.into_iter().map(|ui| ui + 1.0 / n).collect())
 }
@@ -457,6 +516,46 @@ mod tests {
             "{} vs {rhs}",
             weighted[9]
         );
+    }
+
+    #[test]
+    fn negative_ridge_recovers_through_ladder() {
+        // gamma is caller-controlled; a gamma more negative than the
+        // Gram diagonal makes the shifted matrix indefinite. The plain
+        // factorization fails, the ridge ladder recovers, and the
+        // recovery (with its rung) lands in the sink.
+        let mut rows = Vec::new();
+        for _ in 0..5 {
+            rows.push(vec![1.0, 0.0]);
+            rows.push(vec![0.0, 1.0]);
+        }
+        let x = Mat::from_rows(&rows); // Gram = diag(5, 5)
+        let pool = Pool::new(1);
+        let sink = DegradeSink::new();
+        let u = leverage_scores_ridged_sink(&x, -6.0, &pool, &sink).unwrap();
+        assert!(u.iter().all(|v| v.is_finite()));
+        let d = sink.snapshot();
+        assert_eq!(d.gram_ridge_recoveries, 1, "{d}");
+        assert!(d.gram_ridge_max_rung >= 1, "{d}");
+        // the sink-free wrapper still recovers (silently)
+        let u2 = leverage_scores_ridged_with(&x, -6.0, &pool).unwrap();
+        assert_eq!(u.len(), u2.len());
+    }
+
+    #[test]
+    fn sink_variant_is_bit_identical_on_clean_data() {
+        // attempt 0 of the ladder factors the untouched matrix, so the
+        // sink-threaded path cannot perturb clean runs
+        let mut rng = Rng::new(29);
+        let x = Mat::from_vec(100, 4, (0..400).map(|_| rng.normal()).collect());
+        let pool = Pool::new(1);
+        let sink = DegradeSink::new();
+        let a = leverage_scores_ridged_with(&x, 0.0, &pool).unwrap();
+        let b = leverage_scores_ridged_sink(&x, 0.0, &pool, &sink).unwrap();
+        for (p, q) in a.iter().zip(&b) {
+            assert_eq!(p.to_bits(), q.to_bits());
+        }
+        assert!(sink.snapshot().is_clean());
     }
 
     #[test]

@@ -16,8 +16,11 @@
 
 use super::samplers::Method;
 use super::strategy;
+use crate::anyhow;
 use crate::basis::Design;
 use crate::linalg::Mat;
+use crate::util::degrade::DegradeSink;
+use crate::util::error::Result;
 use crate::util::parallel::Pool;
 use crate::util::rng::Rng;
 
@@ -75,13 +78,20 @@ pub fn reduce(
     d: usize,
     eps: f64,
     rng: &mut Rng,
-) -> WeightedRows {
-    reduce_with(set, method, k, d, eps, rng, &Pool::current())
+    sink: &DegradeSink,
+) -> Result<WeightedRows> {
+    reduce_with(set, method, k, d, eps, rng, &Pool::current(), sink)
 }
 
 /// [`reduce`] on an explicit pool: callers that already fan out (the
 /// streaming consumers) pass `Pool::new(1)` so the basis/leverage
 /// kernels inside don't nest another layer of worker threads.
+///
+/// `Err` is reserved for unrecoverable numerical states (a sampling
+/// distribution that stays non-finite after every fallback); ordinary
+/// score failures degrade to weighted-uniform sampling and are recorded
+/// into `sink` instead.
+#[allow(clippy::too_many_arguments)]
 pub fn reduce_with(
     set: &WeightedRows,
     method: Method,
@@ -90,9 +100,10 @@ pub fn reduce_with(
     eps: f64,
     rng: &mut Rng,
     pool: &Pool,
-) -> WeightedRows {
+    sink: &DegradeSink,
+) -> Result<WeightedRows> {
     if set.len() <= k {
-        return set.clone();
+        return Ok(set.clone());
     }
     let design = Design::build_on(&set.rows, d, eps, pool);
     let n = set.len();
@@ -104,7 +115,7 @@ pub fn reduce_with(
     // and the returned scores already include the weight factor, so
     // they ARE the sampling probabilities up to normalization.
     let sampler = strategy::sampler(method);
-    let sens = sampler.reduce_scores(&design, &set.weights, pool);
+    let sens = sampler.reduce_scores(&design, &set.weights, pool, sink);
     let hull_budget = match sampler.hull_fraction() {
         Some(frac) => (frac * k as f64).ceil() as usize,
         None => 0,
@@ -126,9 +137,27 @@ pub fn reduce_with(
 
     // weighted importance sample over the complement (the weight factor
     // is already inside `sens` — see MethodSampler::reduce_scores)
-    let scaled: Vec<f64> = (0..n)
+    let mut scaled: Vec<f64> = (0..n)
         .map(|i| if hull_set.contains(&i) { 0.0 } else { sens[i] })
         .collect();
+    // a score vector the strategy layer could not keep finite and
+    // non-negative degrades to weighted-uniform; if even the prior
+    // weights are non-finite there is nothing sound to sample from
+    if scaled.iter().any(|x| !x.is_finite() || *x < 0.0) {
+        sink.score_fallback();
+        for (i, s) in scaled.iter_mut().enumerate() {
+            *s = if hull_set.contains(&i) {
+                0.0
+            } else {
+                set.weights[i].max(0.0)
+            };
+        }
+        if scaled.iter().any(|x| !x.is_finite()) {
+            return Err(anyhow!(
+                "reduce step: non-finite prior weights, cannot build a sampling distribution"
+            ));
+        }
+    }
     // sort for determinism: HashSet order varies per process, and the
     // row order feeds the next level's RNG-driven sampling
     let mut indices: Vec<usize> = hull_set.iter().cloned().collect();
@@ -147,7 +176,7 @@ pub fn reduce_with(
     // fresh provenance: the hull points this reduce pinned exactly (the
     // resampled complement replaces any earlier provenance)
     out.n_hull = hull_set.len();
-    out
+    Ok(out)
 }
 
 /// Merge & Reduce accumulator: push shards, get the final coreset.
@@ -168,6 +197,9 @@ pub struct MergeReduce {
     /// set `Pool::new(1)` so reducer-side merges don't pile a second
     /// layer of workers on top of busy consumer threads
     pub pool: Pool,
+    /// degradation accounting for every reduce this accumulator runs;
+    /// the streaming pipeline hands in the run's shared sink
+    pub sink: DegradeSink,
 }
 
 impl MergeReduce {
@@ -183,6 +215,7 @@ impl MergeReduce {
             n_reduces: 0,
             buffer_factor: 4,
             pool: Pool::current(),
+            sink: DegradeSink::new(),
         }
     }
 
@@ -195,7 +228,7 @@ impl MergeReduce {
     }
 
     /// Insert one shard of raw rows (weight 1 each).
-    pub fn push_shard(&mut self, rows: Mat) {
+    pub fn push_shard(&mut self, rows: Mat) -> Result<()> {
         let n_raw = rows.rows;
         let w = vec![1.0; n_raw];
         let leaf = reduce_with(
@@ -206,8 +239,9 @@ impl MergeReduce {
             self.eps,
             &mut self.rng,
             &self.pool,
-        );
-        self.push_reduced(leaf, n_raw);
+            &self.sink,
+        )?;
+        self.push_reduced(leaf, n_raw)
     }
 
     /// Insert a shard that was already leaf-reduced (to `k_buffer()`
@@ -215,7 +249,7 @@ impl MergeReduce {
     /// consumers, which run the leaf reduce on worker threads with
     /// per-shard RNGs and hand the results back in shard order.
     /// `n_raw` is the raw row count the leaf represents.
-    pub fn push_reduced(&mut self, leaf: WeightedRows, n_raw: usize) {
+    pub fn push_reduced(&mut self, leaf: WeightedRows, n_raw: usize) -> Result<()> {
         self.n_seen += n_raw;
         let mut carry = leaf;
         self.n_reduces += 1;
@@ -240,16 +274,18 @@ impl MergeReduce {
                         self.eps,
                         &mut self.rng,
                         &self.pool,
-                    );
+                        &self.sink,
+                    )?;
                     self.n_reduces += 1;
                     level += 1;
                 }
             }
         }
+        Ok(())
     }
 
     /// Collapse all levels into the final coreset (≤ k rows).
-    pub fn finish(mut self) -> WeightedRows {
+    pub fn finish(mut self) -> Result<WeightedRows> {
         let mut acc: Option<WeightedRows> = None;
         for b in self.buckets.drain(..).flatten() {
             acc = Some(match acc {
@@ -259,9 +295,18 @@ impl MergeReduce {
         }
         let acc = acc.unwrap_or_else(|| WeightedRows::new(Mat::zeros(0, 0), vec![]));
         if acc.len() > self.k {
-            reduce_with(&acc, self.method, self.k, self.d, self.eps, &mut self.rng, &self.pool)
+            reduce_with(
+                &acc,
+                self.method,
+                self.k,
+                self.d,
+                self.eps,
+                &mut self.rng,
+                &self.pool,
+                &self.sink,
+            )
         } else {
-            acc
+            Ok(acc)
         }
     }
 
@@ -284,10 +329,10 @@ mod tests {
     fn final_size_bounded() {
         let mut mr = MergeReduce::new(Method::L2Hull, 50, 5, 0.01, 1);
         for s in 0..8 {
-            mr.push_shard(random_rows(400, 2, 100 + s));
+            mr.push_shard(random_rows(400, 2, 100 + s)).unwrap();
         }
         assert_eq!(mr.n_seen, 3200);
-        let out = mr.finish();
+        let out = mr.finish().unwrap();
         assert!(out.len() <= 50, "final size {}", out.len());
         assert!(out.len() > 10);
     }
@@ -296,9 +341,9 @@ mod tests {
     fn total_weight_tracks_n() {
         let mut mr = MergeReduce::new(Method::L2Only, 60, 5, 0.01, 2);
         for s in 0..4 {
-            mr.push_shard(random_rows(500, 2, 200 + s));
+            mr.push_shard(random_rows(500, 2, 200 + s)).unwrap();
         }
-        let out = mr.finish();
+        let out = mr.finish().unwrap();
         let total: f64 = out.weights.iter().sum();
         // unbiased in expectation; tree depth adds variance
         assert!(
@@ -311,7 +356,7 @@ mod tests {
     fn levels_grow_logarithmically() {
         let mut mr = MergeReduce::new(Method::Uniform, 30, 5, 0.01, 3);
         for s in 0..16 {
-            mr.push_shard(random_rows(100, 2, 300 + s));
+            mr.push_shard(random_rows(100, 2, 300 + s)).unwrap();
         }
         // 16 shards → tree of depth log2(16)+1 = 5 max
         assert!(mr.levels() <= 5, "levels {}", mr.levels());
@@ -320,8 +365,8 @@ mod tests {
     #[test]
     fn small_stream_passes_through() {
         let mut mr = MergeReduce::new(Method::L2Hull, 100, 5, 0.01, 4);
-        mr.push_shard(random_rows(40, 2, 5));
-        let out = mr.finish();
+        mr.push_shard(random_rows(40, 2, 5)).unwrap();
+        let out = mr.finish().unwrap();
         assert_eq!(out.len(), 40);
         assert!(out.weights.iter().all(|&w| w == 1.0));
         // nothing was reduced, so nothing carries hull provenance
@@ -334,18 +379,18 @@ mod tests {
         // reduce; score-only methods stay at zero
         let mut mr = MergeReduce::new(Method::L2Hull, 40, 5, 0.01, 6);
         for s in 0..6 {
-            mr.push_shard(random_rows(400, 2, 400 + s));
+            mr.push_shard(random_rows(400, 2, 400 + s)).unwrap();
         }
-        let out = mr.finish();
+        let out = mr.finish().unwrap();
         assert!(out.len() <= 40);
         assert!(out.n_hull > 0, "hull reduce lost its provenance");
         assert!(out.n_hull <= out.len());
 
         let mut plain = MergeReduce::new(Method::L2Only, 40, 5, 0.01, 6);
         for s in 0..6 {
-            plain.push_shard(random_rows(400, 2, 500 + s));
+            plain.push_shard(random_rows(400, 2, 500 + s)).unwrap();
         }
-        assert_eq!(plain.finish().n_hull, 0);
+        assert_eq!(plain.finish().unwrap().n_hull, 0);
 
         // merge adds provenance counts; reduce replaces them
         let a = {

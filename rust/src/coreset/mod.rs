@@ -17,8 +17,8 @@
 //!   of the same hybrid.
 //! * `samplers` — the `Method` tags and the crate-internal
 //!   `build_coreset_on` construction. The public front door is the
-//!   facade (`mctm_coreset::prelude::SessionBuilder`); the old free
-//!   functions remain as `#[deprecated]` shims for one release.
+//!   facade (`mctm_coreset::prelude::SessionBuilder`); the pre-0.3
+//!   deprecated free-function shims have been removed.
 //! * `merge_reduce` — the streaming / distributed composition (§4);
 //!   per-method behaviour is dispatched through `strategy`, so every
 //!   registered method streams end to end.
@@ -30,10 +30,6 @@ pub mod merge_reduce;
 pub mod samplers;
 pub mod strategy;
 
-// the deprecated free-function shims stay re-exported for one release;
-// new code goes through `mctm_coreset::prelude::SessionBuilder`
-#[allow(deprecated)]
-pub use samplers::{build_coreset, build_coreset_with};
 pub use samplers::{Coreset, Method};
 pub use strategy::{MethodSampler, ScoreStrategy};
 
@@ -52,8 +48,16 @@ mod tests {
         let design = Design::build(&data, 5, 0.01);
         // registry-driven: new strategies (the ellipsoid pair included)
         // are covered here automatically, no hand-kept list
+        let sink = crate::util::degrade::DegradeSink::new();
         for method in Method::all() {
-            let cs = samplers::build_coreset_on(&design, method, 40, &mut rng, &Pool::current());
+            let cs = samplers::build_coreset_on(
+                &design,
+                method,
+                40,
+                &mut rng,
+                &Pool::current(),
+                &sink,
+            );
             assert!(!cs.indices.is_empty(), "{method:?} empty");
             assert!(cs.indices.len() <= 40 + 5, "{method:?} oversize");
             assert_eq!(cs.indices.len(), cs.weights.len());

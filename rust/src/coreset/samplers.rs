@@ -6,6 +6,7 @@
 
 use super::strategy;
 use crate::basis::Design;
+use crate::util::degrade::DegradeSink;
 use crate::util::parallel::Pool;
 use crate::util::rng::Rng;
 
@@ -89,37 +90,6 @@ impl Coreset {
     }
 }
 
-/// Build a coreset of target size `k` from a design, per `method`.
-///
-/// Deprecated entry point — construct coresets through the facade
-/// instead: `mctm_coreset::prelude::SessionBuilder` → `Session::coreset`
-/// / `Session::fit`. The shim stays for one release.
-#[deprecated(
-    since = "0.2.0",
-    note = "use mctm_coreset::prelude::SessionBuilder (Session::coreset / Session::fit); \
-            this free-function shim will be removed next release"
-)]
-pub fn build_coreset(design: &Design, method: Method, k: usize, rng: &mut Rng) -> Coreset {
-    build_coreset_on(design, method, k, rng, &Pool::current())
-}
-
-/// Deprecated pool-explicit twin of [`build_coreset`] — the facade's
-/// `SessionBuilder::threads` knob replaces the explicit pool argument.
-#[deprecated(
-    since = "0.2.0",
-    note = "use mctm_coreset::prelude::SessionBuilder with .threads(n); \
-            this free-function shim will be removed next release"
-)]
-pub fn build_coreset_with(
-    design: &Design,
-    method: Method,
-    k: usize,
-    rng: &mut Rng,
-    pool: &Pool,
-) -> Coreset {
-    build_coreset_on(design, method, k, rng, pool)
-}
-
 /// Crate-internal coreset construction on an explicit pool: every
 /// score/hull kernel inside (leverage, ellipsoid rounding, Gram, hull
 /// selection) runs on `pool`, and all of them are bit-identical for any
@@ -129,15 +99,17 @@ pub fn build_coreset_with(
 ///
 /// Dispatch goes through the strategy registry: the trivial `k ≥ n`
 /// identity coreset is handled here, everything else by the method's
-/// registered [`strategy::MethodSampler`]. Public callers reach this
-/// through `api::Session`; the old free functions above are deprecated
-/// shims over it.
+/// registered [`strategy::MethodSampler`]. Numerical fallbacks taken
+/// during scoring/sampling are recorded into `sink`. Public callers
+/// reach this through `api::Session` (the pre-0.3 free-function shims
+/// `build_coreset` / `build_coreset_with` are gone).
 pub(crate) fn build_coreset_on(
     design: &Design,
     method: Method,
     k: usize,
     rng: &mut Rng,
     pool: &Pool,
+    sink: &DegradeSink,
 ) -> Coreset {
     let n = design.n;
     assert!(k >= 1);
@@ -150,7 +122,7 @@ pub(crate) fn build_coreset_on(
             method,
         };
     }
-    strategy::sampler(method).sample(design, method, k, rng, pool)
+    strategy::sampler(method).sample(design, method, k, rng, pool, sink)
 }
 
 /// Extract the weight vector aligned with `design.select(&coreset.indices)`:
@@ -165,7 +137,7 @@ mod tests {
     use crate::linalg::Mat;
 
     fn bc(design: &Design, method: Method, k: usize, rng: &mut Rng) -> Coreset {
-        build_coreset_on(design, method, k, rng, &Pool::current())
+        build_coreset_on(design, method, k, rng, &Pool::current(), &DegradeSink::new())
     }
 
     fn toy_design(n: usize, seed: u64) -> Design {

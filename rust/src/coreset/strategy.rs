@@ -25,15 +25,16 @@
 //! Adding a method = one `Method` tag + one [`REGISTRY`] row. Nothing
 //! else in the codebase enumerates methods by hand.
 
-use super::ellipsoid::ellipsoid_scores_with;
+use super::ellipsoid::ellipsoid_scores_sink;
 use super::hull::select_hull_points_with;
 use super::leverage::{
-    default_ridge_with, leverage_scores_ridged_with, mctm_leverage_scores_with,
-    sensitivity_scores_with, weighted_mctm_leverage_scores_with,
+    default_ridge_with, leverage_scores_ridged_sink, mctm_leverage_scores_sink,
+    sensitivity_scores_sink, weighted_mctm_leverage_scores_sink,
 };
 use super::samplers::{Coreset, Method, HULL_SPLIT};
 use crate::basis::Design;
 use crate::linalg::LinalgError;
+use crate::util::degrade::DegradeSink;
 use crate::util::parallel::Pool;
 use crate::util::rng::{AliasTable, Rng};
 
@@ -51,7 +52,14 @@ pub trait ScoreStrategy: Sync {
     fn key(&self) -> &'static str;
 
     /// Per-observation sampling scores (higher ⇒ more likely kept).
-    fn scores(&self, design: &Design, pool: &Pool) -> Result<Vec<f64>, LinalgError>;
+    /// Numerical fallbacks taken along the way (ridge-ladder Gram
+    /// recoveries, MVEE non-convergence, …) are recorded into `sink`.
+    fn scores(
+        &self,
+        design: &Design,
+        pool: &Pool,
+        sink: &DegradeSink,
+    ) -> Result<Vec<f64>, LinalgError>;
 
     /// Per-observation sampling scores under **prior row weights** —
     /// the Merge & Reduce reduce step feeds each row's accumulated
@@ -72,8 +80,9 @@ pub trait ScoreStrategy: Sync {
         design: &Design,
         weights: &[f64],
         pool: &Pool,
+        sink: &DegradeSink,
     ) -> Result<Vec<f64>, LinalgError> {
-        let scores = self.scores(design, pool)?;
+        let scores = self.scores(design, pool, sink)?;
         Ok(scores.iter().zip(weights).map(|(s, w)| s * w).collect())
     }
 }
@@ -86,8 +95,13 @@ impl ScoreStrategy for L2Sensitivity {
         "l2"
     }
 
-    fn scores(&self, design: &Design, pool: &Pool) -> Result<Vec<f64>, LinalgError> {
-        sensitivity_scores_with(design, pool)
+    fn scores(
+        &self,
+        design: &Design,
+        pool: &Pool,
+        sink: &DegradeSink,
+    ) -> Result<Vec<f64>, LinalgError> {
+        sensitivity_scores_sink(design, pool, sink)
     }
 
     /// Weighted ℓ₂ sensitivities: leverage of the √w-scaled stacked
@@ -104,8 +118,9 @@ impl ScoreStrategy for L2Sensitivity {
         design: &Design,
         weights: &[f64],
         pool: &Pool,
+        sink: &DegradeSink,
     ) -> Result<Vec<f64>, LinalgError> {
-        let u = weighted_mctm_leverage_scores_with(design, weights, pool)?;
+        let u = weighted_mctm_leverage_scores_sink(design, weights, pool, sink)?;
         let n = design.n as f64;
         Ok(u.iter()
             .zip(weights)
@@ -122,10 +137,15 @@ impl ScoreStrategy for RidgeLeverage {
         "ridge"
     }
 
-    fn scores(&self, design: &Design, pool: &Pool) -> Result<Vec<f64>, LinalgError> {
+    fn scores(
+        &self,
+        design: &Design,
+        pool: &Pool,
+        sink: &DegradeSink,
+    ) -> Result<Vec<f64>, LinalgError> {
         let stacked = design.stacked();
         let gamma = default_ridge_with(&stacked, pool);
-        let mut u = leverage_scores_ridged_with(&stacked, gamma, pool)?;
+        let mut u = leverage_scores_ridged_sink(&stacked, gamma, pool, sink)?;
         let unif = 1.0 / design.n as f64;
         u.iter_mut().for_each(|x| *x += unif);
         Ok(u)
@@ -140,8 +160,13 @@ impl ScoreStrategy for RootLeverage {
         "root"
     }
 
-    fn scores(&self, design: &Design, pool: &Pool) -> Result<Vec<f64>, LinalgError> {
-        let u = mctm_leverage_scores_with(design, pool)?;
+    fn scores(
+        &self,
+        design: &Design,
+        pool: &Pool,
+        sink: &DegradeSink,
+    ) -> Result<Vec<f64>, LinalgError> {
+        let u = mctm_leverage_scores_sink(design, pool, sink)?;
         let n = design.n as f64;
         Ok(u.iter().map(|&x| x.max(0.0).sqrt() + 1.0 / n).collect())
     }
@@ -160,7 +185,12 @@ impl ScoreStrategy for EllipsoidScores {
         "ellipsoid"
     }
 
-    fn scores(&self, design: &Design, pool: &Pool) -> Result<Vec<f64>, LinalgError> {
+    fn scores(
+        &self,
+        design: &Design,
+        pool: &Pool,
+        sink: &DegradeSink,
+    ) -> Result<Vec<f64>, LinalgError> {
         let stacked = design.stacked();
         // the Khachiyan lift needs strictly more rows than lifted
         // dimensions; shorter designs fall back to uniform upstream
@@ -171,7 +201,7 @@ impl ScoreStrategy for EllipsoidScores {
                 stacked.rows
             )));
         }
-        Ok(ellipsoid_scores_with(&stacked, ELLIPSOID_EPS, pool))
+        Ok(ellipsoid_scores_sink(&stacked, ELLIPSOID_EPS, pool, sink))
     }
 }
 
@@ -179,10 +209,12 @@ impl ScoreStrategy for EllipsoidScores {
 /// hooks the Merge & Reduce `reduce` step needs.
 ///
 /// `sample` is called with `1 ≤ k < design.n` (the trivial `k ≥ n`
-/// identity coreset is handled by `build_coreset_with`); `method` is the
+/// identity coreset is handled by `build_coreset_on`); `method` is the
 /// registry tag recorded on the result (`Coreset::method`).
 pub trait MethodSampler: Sync {
-    /// Draw a coreset of target size `k`.
+    /// Draw a coreset of target size `k`. Score failures degrade to
+    /// uniform sampling; every such fallback (and every numerical
+    /// recovery inside the score computation) is recorded into `sink`.
     fn sample(
         &self,
         design: &Design,
@@ -190,6 +222,7 @@ pub trait MethodSampler: Sync {
         k: usize,
         rng: &mut Rng,
         pool: &Pool,
+        sink: &DegradeSink,
     ) -> Coreset;
 
     /// Per-row sampling scores for the weighted reduce step
@@ -197,8 +230,14 @@ pub trait MethodSampler: Sync {
     /// samples with `p_i ∝ reduce_scores[i]` and reweights by
     /// w_i/(k₁·p_i), which stays unbiased for any positive scores.
     /// `weights.len() == design.n`. Degenerate designs fall back to the
-    /// weights themselves (≡ weighted-uniform).
-    fn reduce_scores(&self, design: &Design, weights: &[f64], pool: &Pool) -> Vec<f64>;
+    /// weights themselves (≡ weighted-uniform), recorded into `sink`.
+    fn reduce_scores(
+        &self,
+        design: &Design,
+        weights: &[f64],
+        pool: &Pool,
+        sink: &DegradeSink,
+    ) -> Vec<f64>;
 
     /// Fraction of the reduce budget pinned to convex-hull points
     /// (`None` for non-hybrid methods).
@@ -220,6 +259,7 @@ impl MethodSampler for UniformSampler {
         k: usize,
         rng: &mut Rng,
         _pool: &Pool,
+        _sink: &DegradeSink,
     ) -> Coreset {
         let n = design.n;
         let indices = rng.sample_without_replacement(n, k);
@@ -232,7 +272,13 @@ impl MethodSampler for UniformSampler {
         }
     }
 
-    fn reduce_scores(&self, _design: &Design, weights: &[f64], _pool: &Pool) -> Vec<f64> {
+    fn reduce_scores(
+        &self,
+        _design: &Design,
+        weights: &[f64],
+        _pool: &Pool,
+        _sink: &DegradeSink,
+    ) -> Vec<f64> {
         // uniform over mass: p ∝ w (identical to the pre-weighted-score
         // behaviour, where all-ones scores were multiplied by w)
         weights.to_vec()
@@ -257,6 +303,7 @@ impl MethodSampler for HybridSampler {
         k: usize,
         rng: &mut Rng,
         pool: &Pool,
+        sink: &DegradeSink,
     ) -> Coreset {
         let (k1, k2) = match self.split {
             Some(alpha) => {
@@ -265,9 +312,12 @@ impl MethodSampler for HybridSampler {
             }
             None => (k, 0),
         };
-        let mut cs = match self.scores.scores(design, pool) {
-            Ok(s) => importance_sample(&s, k1, rng, method),
-            Err(_) => UniformSampler.sample(design, method, k1, rng, pool),
+        let mut cs = match self.scores.scores(design, pool, sink) {
+            Ok(s) => importance_sample(&s, k1, rng, method, sink),
+            Err(_) => {
+                sink.score_fallback();
+                UniformSampler.sample(design, method, k1, rng, pool, sink)
+            }
         };
         if k2 > 0 {
             // hull over derivative points {a'_ij}: map point index
@@ -288,10 +338,19 @@ impl MethodSampler for HybridSampler {
         cs
     }
 
-    fn reduce_scores(&self, design: &Design, weights: &[f64], pool: &Pool) -> Vec<f64> {
+    fn reduce_scores(
+        &self,
+        design: &Design,
+        weights: &[f64],
+        pool: &Pool,
+        sink: &DegradeSink,
+    ) -> Vec<f64> {
         self.scores
-            .weighted_scores(design, weights, pool)
-            .unwrap_or_else(|_| weights.to_vec())
+            .weighted_scores(design, weights, pool, sink)
+            .unwrap_or_else(|_| {
+                sink.score_fallback();
+                weights.to_vec()
+            })
     }
 
     fn hull_fraction(&self) -> Option<f64> {
@@ -300,7 +359,35 @@ impl MethodSampler for HybridSampler {
 }
 
 /// Draw `k` i.i.d. indices with probabilities ∝ scores; weight 1/(k p).
-fn importance_sample(scores: &[f64], k: usize, rng: &mut Rng, method: Method) -> Coreset {
+///
+/// A degenerate score vector (non-finite entries, negatives, or zero
+/// total — e.g. after masked rows zeroed every observation) degrades to
+/// uniform probabilities instead of panicking inside the alias-table
+/// build; the fallback is recorded into `sink`.
+fn importance_sample(
+    scores: &[f64],
+    k: usize,
+    rng: &mut Rng,
+    method: Method,
+    sink: &DegradeSink,
+) -> Coreset {
+    let total: f64 = scores.iter().sum();
+    let degenerate =
+        !(total.is_finite() && total > 0.0) || scores.iter().any(|s| !s.is_finite() || *s < 0.0);
+    if degenerate {
+        sink.score_fallback();
+        let n = scores.len();
+        let mut indices = Vec::with_capacity(k);
+        for _ in 0..k {
+            indices.push(rng.usize(n));
+        }
+        return Coreset {
+            weights: vec![n as f64 / k as f64; k],
+            indices,
+            n_hull: 0,
+            method,
+        };
+    }
     let table = AliasTable::new(scores);
     let mut indices = Vec::with_capacity(k);
     let mut weights = Vec::with_capacity(k);
@@ -403,6 +490,10 @@ pub static REGISTRY: &[StrategyEntry] = &[
 ];
 
 fn entry(method: Method) -> &'static StrategyEntry {
+    // a Method variant without a REGISTRY row is a compile-time-adjacent
+    // programming error (the registry test enumerates all_methods()),
+    // not a runtime condition a caller could handle
+    #[allow(clippy::expect_used)]
     REGISTRY
         .iter()
         .find(|e| e.method == method)
@@ -495,7 +586,7 @@ mod tests {
             &RootLeverage,
             &EllipsoidScores,
         ] {
-            let scores = s.scores(&design, &pool).unwrap();
+            let scores = s.scores(&design, &pool, &DegradeSink::new()).unwrap();
             assert_eq!(scores.len(), 300, "{} length", s.key());
             assert!(
                 scores.iter().all(|&x| x.is_finite() && x > 0.0),
@@ -509,7 +600,9 @@ mod tests {
     fn ellipsoid_rejects_short_designs() {
         // n = 8 ≤ dJ + 1 = 11 → Err, so samplers fall back to uniform
         let design = toy_design(8, 6);
-        assert!(EllipsoidScores.scores(&design, &Pool::new(1)).is_err());
+        assert!(EllipsoidScores
+            .scores(&design, &Pool::new(1), &DegradeSink::new())
+            .is_err());
     }
 
     #[test]
@@ -533,8 +626,9 @@ mod tests {
             &RootLeverage,
             &EllipsoidScores,
         ] {
-            let plain = s.scores(&design, &pool).unwrap();
-            let weighted = s.weighted_scores(&design, &ones, &pool).unwrap();
+            let sink = DegradeSink::new();
+            let plain = s.scores(&design, &pool, &sink).unwrap();
+            let weighted = s.weighted_scores(&design, &ones, &pool, &sink).unwrap();
             for (i, (a, b)) in plain.iter().zip(&weighted).enumerate() {
                 assert_eq!(
                     a.to_bits(),
@@ -556,13 +650,15 @@ mod tests {
         let pool = Pool::new(1);
         let mut w = vec![1.0; n];
         w[17] = 2.0;
-        let weighted = L2Sensitivity.weighted_scores(&design, &w, &pool).unwrap();
+        let weighted = L2Sensitivity
+            .weighted_scores(&design, &w, &pool, &DegradeSink::new())
+            .unwrap();
 
         // replicated design: row 17 appears twice
         let mut idx: Vec<usize> = (0..n).collect();
         idx.push(17);
         let dup = design.select(&idx);
-        let dup_scores = L2Sensitivity.scores(&dup, &pool).unwrap();
+        let dup_scores = L2Sensitivity.scores(&dup, &pool, &DegradeSink::new()).unwrap();
         // strip the uniform terms (1/n vs 1/(n+1) differ by design)
         let lhs = weighted[17] - 2.0 / n as f64;
         let rhs = (dup_scores[17] - 1.0 / (n + 1) as f64)
@@ -590,7 +686,25 @@ mod tests {
         // to unweighted ones
         let design = toy_design(8, 9);
         let w: Vec<f64> = (0..8).map(|i| 1.0 + i as f64).collect();
-        let got = ELLIPSOID.reduce_scores(&design, &w, &Pool::new(1));
+        let sink = DegradeSink::new();
+        let got = ELLIPSOID.reduce_scores(&design, &w, &Pool::new(1), &sink);
         assert_eq!(got, w);
+        // the fallback is recorded, not silent
+        assert_eq!(sink.snapshot().score_fallbacks, 1);
+    }
+
+    #[test]
+    fn degenerate_scores_degrade_to_uniform_not_panic() {
+        let sink = DegradeSink::new();
+        let mut rng = Rng::new(11);
+        // all-zero and NaN-bearing score vectors must not reach the
+        // alias-table assertions
+        for scores in [vec![0.0; 10], vec![1.0, f64::NAN, 1.0, 1.0]] {
+            let cs = importance_sample(&scores, 4, &mut rng, Method::L2Only, &sink);
+            assert_eq!(cs.indices.len(), 4);
+            assert!(cs.indices.iter().all(|&i| i < scores.len()));
+            assert!(cs.weights.iter().all(|w| w.is_finite() && *w > 0.0));
+        }
+        assert_eq!(sink.snapshot().score_fallbacks, 2);
     }
 }

@@ -2,6 +2,13 @@
 //! (`dataset=file:/path/to.csv`): numeric columns, optional header,
 //! comma/semicolon/tab separated. Not a general CSV parser — quoted
 //! fields are not supported (numeric matrices never need them).
+//!
+//! Malformed input is rejected with line- and column-numbered errors
+//! (both 1-based): ragged rows, non-numeric tokens, and non-finite
+//! tokens (`NaN`/`inf` parse as valid `f64` but are never valid
+//! observations — file data is validated strictly at parse time, so
+//! the session's `InvalidPolicy` only ever concerns in-memory and
+//! generated sources).
 
 use crate::linalg::Mat;
 use crate::anyhow;
@@ -30,33 +37,54 @@ pub fn parse_csv(text: &str) -> Result<Mat> {
             .map(|f| f.trim())
             .filter(|f| !f.is_empty())
             .collect();
-        let parsed: std::result::Result<Vec<f64>, _> =
-            fields.iter().map(|f| f.parse::<f64>()).collect();
-        match parsed {
-            Ok(vals) => {
-                if vals.is_empty() {
-                    continue;
+        let mut vals: Vec<f64> = Vec::with_capacity(fields.len());
+        let mut bad_token: Option<(usize, String)> = None;
+        for (col, f) in fields.iter().enumerate() {
+            match f.parse::<f64>() {
+                Ok(v) if v.is_finite() => vals.push(v),
+                // "nan"/"inf" parse as f64 but are rejected here: a
+                // non-finite token is data missingness, not a header
+                Ok(_) => {
+                    return Err(anyhow!(
+                        "line {}, column {}: non-finite value `{f}`",
+                        lineno + 1,
+                        col + 1
+                    ))
                 }
-                match ncol {
-                    None => ncol = Some(vals.len()),
-                    Some(c) if c != vals.len() => {
-                        return Err(anyhow!(
-                            "line {}: {} columns, expected {c}",
-                            lineno + 1,
-                            vals.len()
-                        ))
-                    }
-                    _ => {}
+                Err(e) => {
+                    bad_token = Some((col, e.to_string()));
+                    break;
                 }
-                rows.push(vals);
-            }
-            Err(_) if rows.is_empty() && lineno == 0 => {
-                // header line — skip
-            }
-            Err(e) => {
-                return Err(anyhow!("line {}: {e}", lineno + 1));
             }
         }
+        match bad_token {
+            // non-numeric first line with no data yet — header, skip
+            Some(_) if rows.is_empty() && lineno == 0 => continue,
+            Some((col, e)) => {
+                return Err(anyhow!(
+                    "line {}, column {}: `{}`: {e}",
+                    lineno + 1,
+                    col + 1,
+                    fields[col]
+                ))
+            }
+            None => {}
+        }
+        if vals.is_empty() {
+            continue;
+        }
+        match ncol {
+            None => ncol = Some(vals.len()),
+            Some(c) if c != vals.len() => {
+                return Err(anyhow!(
+                    "line {}: {} columns, expected {c}",
+                    lineno + 1,
+                    vals.len()
+                ))
+            }
+            _ => {}
+        }
+        rows.push(vals);
     }
     if rows.is_empty() {
         return Err(anyhow!("no numeric rows found"));
@@ -89,13 +117,34 @@ mod tests {
     }
 
     #[test]
-    fn rejects_ragged_rows() {
-        assert!(parse_csv("1,2\n3\n").is_err());
+    fn rejects_ragged_rows_with_line_number() {
+        let e = format!("{:#}", parse_csv("1,2\n3\n").unwrap_err());
+        assert!(e.contains("line 2"), "{e}");
+        assert!(e.contains("1 columns, expected 2"), "{e}");
     }
 
     #[test]
-    fn rejects_mid_file_garbage() {
-        assert!(parse_csv("1,2\nx,y\n").is_err());
+    fn rejects_mid_file_garbage_with_position() {
+        let e = format!("{:#}", parse_csv("1,2\n3,y\n").unwrap_err());
+        assert!(e.contains("line 2"), "{e}");
+        assert!(e.contains("column 2"), "{e}");
+        assert!(e.contains("`y`"), "{e}");
+    }
+
+    #[test]
+    fn rejects_non_finite_tokens_with_position() {
+        for (text, line, col) in [
+            ("1,2\nNaN,4\n", 2, 1),
+            ("1,2\n3,inf\n", 2, 2),
+            ("1,-inf\n", 1, 2),
+            // even on the first line: non-finite is data, not a header
+            ("nan,2\n3,4\n", 1, 1),
+        ] {
+            let e = format!("{:#}", parse_csv(text).unwrap_err());
+            assert!(e.contains("non-finite"), "{text:?}: {e}");
+            assert!(e.contains(&format!("line {line}")), "{text:?}: {e}");
+            assert!(e.contains(&format!("column {col}")), "{text:?}: {e}");
+        }
     }
 
     #[test]

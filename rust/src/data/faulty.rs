@@ -1,0 +1,267 @@
+//! Deterministic fault injection for the streaming pipeline.
+//!
+//! [`FaultySource`] wraps any [`ShardSource`] and injects faults from a
+//! seeded [`FaultPlan`]: transient read errors (retryable), fatal read
+//! errors, NaN/inf cell corruption, spurious empty shards, and
+//! mid-stream termination. Everything is a pure function of the plan,
+//! its seed, and the call sequence — no wall clock, no OS state — so a
+//! faulty run is exactly reproducible, which is what lets the test
+//! suite prove the headline invariant: a run with injected *transient*
+//! faults plus producer retries is **bit-identical** to the fault-free
+//! run (transient faults fire *before* the wrapped source is advanced,
+//! so a retry re-requests the same underlying shard).
+
+use super::{ShardError, ShardSource};
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Seeded description of which faults to inject where. All shard
+/// indices are 0-based positions in the *underlying* stream (spurious
+/// empty shards do not advance them).
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    /// Inject transient errors before every k-th underlying shard.
+    transient_every: Option<usize>,
+    /// Consecutive transient errors per injection site.
+    transient_repeats: usize,
+    /// Poison this many cells per delivered shard with NaN/inf.
+    nan_cells_per_shard: usize,
+    /// Emit one spurious zero-row shard before every k-th shard.
+    empty_before_every: Option<usize>,
+    /// Return a fatal error when the stream reaches this shard.
+    fatal_at_shard: Option<usize>,
+    /// End the stream (Ok(None)) when it reaches this shard.
+    truncate_at_shard: Option<usize>,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing (build it up with the `with_*`
+    /// methods). The seed drives only the corrupted-cell positions.
+    pub fn new(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            transient_every: None,
+            transient_repeats: 1,
+            nan_cells_per_shard: 0,
+            empty_before_every: None,
+            fatal_at_shard: None,
+            truncate_at_shard: None,
+        }
+    }
+
+    /// Transient errors before every `every`-th shard (1-based period),
+    /// `repeats` consecutive failures per site. `repeats` at or below
+    /// the producer's retry budget is recoverable; above it, the run
+    /// fails with a typed error.
+    pub fn with_transients(mut self, every: usize, repeats: usize) -> Self {
+        assert!(every > 0 && repeats > 0);
+        self.transient_every = Some(every);
+        self.transient_repeats = repeats;
+        self
+    }
+
+    /// Poison `cells` seeded positions per shard with NaN (even draws)
+    /// or +inf (odd draws).
+    pub fn with_nan_cells(mut self, cells: usize) -> Self {
+        self.nan_cells_per_shard = cells;
+        self
+    }
+
+    /// Emit a spurious zero-row shard before every `every`-th shard.
+    pub fn with_empty_shards(mut self, every: usize) -> Self {
+        assert!(every > 0);
+        self.empty_before_every = Some(every);
+        self
+    }
+
+    /// Fail fatally when the stream reaches shard `idx` (0-based).
+    pub fn with_fatal_at(mut self, idx: usize) -> Self {
+        self.fatal_at_shard = Some(idx);
+        self
+    }
+
+    /// Terminate the stream cleanly at shard `idx` (0-based).
+    pub fn with_truncation_at(mut self, idx: usize) -> Self {
+        self.truncate_at_shard = Some(idx);
+        self
+    }
+}
+
+/// A [`ShardSource`] adapter that injects the faults described by a
+/// [`FaultPlan`]. See the module docs for the determinism contract.
+pub struct FaultySource<S: ShardSource> {
+    inner: S,
+    plan: FaultPlan,
+    rng: Rng,
+    /// Underlying shards delivered so far = index of the next one.
+    delivered: usize,
+    /// Remaining transient failures at the current injection site.
+    transient_pending: usize,
+    /// Site the pending counter was armed for (avoids re-arming after
+    /// the retries at a site are exhausted).
+    transient_armed_for: Option<usize>,
+    /// Site a spurious empty shard was already emitted for.
+    empty_emitted_for: Option<usize>,
+}
+
+impl<S: ShardSource> FaultySource<S> {
+    pub fn new(inner: S, plan: FaultPlan) -> Self {
+        let rng = Rng::new(plan.seed);
+        FaultySource {
+            inner,
+            plan,
+            rng,
+            delivered: 0,
+            transient_pending: 0,
+            transient_armed_for: None,
+            empty_emitted_for: None,
+        }
+    }
+
+    fn poison(&mut self, mut shard: Mat) -> Mat {
+        let cells = shard.rows * shard.cols;
+        if cells == 0 {
+            return shard;
+        }
+        for k in 0..self.plan.nan_cells_per_shard {
+            let pos = self.rng.usize(cells);
+            shard.data[pos] = if k % 2 == 0 { f64::NAN } else { f64::INFINITY };
+        }
+        shard
+    }
+}
+
+impl<S: ShardSource> ShardSource for FaultySource<S> {
+    fn next_shard(&mut self) -> Result<Option<Mat>, ShardError> {
+        let idx = self.delivered;
+        if self.plan.fatal_at_shard == Some(idx) {
+            return Err(ShardError::Fatal(format!(
+                "injected fatal fault at shard {idx}"
+            )));
+        }
+        if self.plan.truncate_at_shard == Some(idx) {
+            return Ok(None);
+        }
+        // transient faults fire BEFORE touching the wrapped source, so
+        // a retry sees the exact same underlying shard
+        if let Some(every) = self.plan.transient_every {
+            if (idx + 1) % every == 0 && self.transient_armed_for != Some(idx) {
+                self.transient_armed_for = Some(idx);
+                self.transient_pending = self.plan.transient_repeats;
+            }
+            if self.transient_pending > 0 {
+                self.transient_pending -= 1;
+                return Err(ShardError::Transient(format!(
+                    "injected transient fault before shard {idx}"
+                )));
+            }
+        }
+        if let Some(every) = self.plan.empty_before_every {
+            if (idx + 1) % every == 0 && self.empty_emitted_for != Some(idx) {
+                self.empty_emitted_for = Some(idx);
+                return Ok(Some(Mat::zeros(0, self.inner.dim())));
+            }
+        }
+        match self.inner.next_shard()? {
+            Some(shard) => {
+                self.delivered += 1;
+                Ok(Some(self.poison(shard)))
+            }
+            None => Ok(None),
+        }
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::MatShards;
+
+    fn base(rows: usize) -> MatShards {
+        let data = Mat::from_vec(rows, 2, (0..rows * 2).map(|x| x as f64).collect());
+        MatShards::new(data, 2)
+    }
+
+    fn drain_with_retries<S: ShardSource>(mut src: S, max_retries: usize) -> Vec<Mat> {
+        let mut out = Vec::new();
+        loop {
+            let mut attempts = 0;
+            let shard = loop {
+                match src.next_shard() {
+                    Ok(s) => break s,
+                    Err(ShardError::Transient(_)) if attempts < max_retries => attempts += 1,
+                    Err(e) => panic!("unexpected {e}"),
+                }
+            };
+            match shard {
+                Some(s) if s.rows == 0 => continue,
+                Some(s) => out.push(s),
+                None => break,
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn transient_faults_then_identical_stream() {
+        let clean = drain_with_retries(base(10), 0);
+        let plan = FaultPlan::new(7).with_transients(2, 2);
+        let faulty = drain_with_retries(FaultySource::new(base(10), plan), 3);
+        assert_eq!(clean.len(), faulty.len());
+        for (a, b) in clean.iter().zip(&faulty) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn empty_shards_do_not_change_content() {
+        let clean = drain_with_retries(base(10), 0);
+        let plan = FaultPlan::new(7).with_empty_shards(2);
+        let faulty = drain_with_retries(FaultySource::new(base(10), plan), 0);
+        assert_eq!(clean.len(), faulty.len());
+        for (a, b) in clean.iter().zip(&faulty) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn fatal_fires_at_the_named_shard() {
+        let plan = FaultPlan::new(1).with_fatal_at(1);
+        let mut src = FaultySource::new(base(10), plan);
+        assert!(src.next_shard().unwrap().is_some());
+        assert!(matches!(src.next_shard(), Err(ShardError::Fatal(_))));
+        // idempotent: asking again still fails
+        assert!(matches!(src.next_shard(), Err(ShardError::Fatal(_))));
+    }
+
+    #[test]
+    fn truncation_ends_the_stream_cleanly() {
+        let plan = FaultPlan::new(1).with_truncation_at(2);
+        let shards = drain_with_retries(FaultySource::new(base(10), plan), 0);
+        assert_eq!(shards.len(), 2);
+    }
+
+    #[test]
+    fn nan_cells_are_injected_deterministically() {
+        let run = |seed| {
+            let plan = FaultPlan::new(seed).with_nan_cells(1);
+            drain_with_retries(FaultySource::new(base(6), plan), 0)
+        };
+        let a = run(3);
+        let b = run(3);
+        let total_bad: usize = a
+            .iter()
+            .map(|s| s.data.iter().filter(|x| !x.is_finite()).count())
+            .sum();
+        assert!(total_bad >= 1, "at least one cell poisoned");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                       y.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+        }
+    }
+}

@@ -1,19 +1,60 @@
 //! Workload generation: the paper's 14 two-dimensional simulation DGPs
 //! (§E.1.1), the synthetic Covertype-like terrain generator and the
 //! synthetic equity-return generator (§3.2 substitutions — DESIGN.md §5),
-//! plus a shard-iterator used by the streaming coordinator.
+//! plus a shard-iterator used by the streaming coordinator and the
+//! deterministic fault-injection adapter (`faulty`).
 
 pub mod covertype;
 pub mod csv;
 pub mod dgp;
 pub mod equity;
+pub mod faulty;
 
+use crate::util::degrade::DegradeSink;
 use crate::linalg::Mat;
+use std::fmt;
+
+/// A shard-read failure. `Transient` errors are retried by the
+/// streaming producer with a bounded, attempt-count backoff (no wall
+/// clock, so retried runs stay bit-identical to fault-free runs);
+/// `Fatal` errors — and transient errors that exhaust the retry
+/// budget — shut the pipeline down orderly and surface as
+/// `ApiError::Stream` with shard provenance.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShardError {
+    /// Retryable (e.g. a flaky read); the producer re-requests the
+    /// same shard without consuming a sequence number.
+    Transient(String),
+    /// Not retryable; the stream is shut down.
+    Fatal(String),
+}
+
+impl ShardError {
+    pub fn message(&self) -> &str {
+        match self {
+            ShardError::Transient(m) | ShardError::Fatal(m) => m,
+        }
+    }
+}
+
+impl fmt::Display for ShardError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShardError::Transient(m) => write!(f, "transient shard error: {m}"),
+            ShardError::Fatal(m) => write!(f, "fatal shard error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ShardError {}
 
 /// A source of data shards for the streaming pipeline.
 pub trait ShardSource {
-    /// Next shard of raw rows, or None when exhausted.
-    fn next_shard(&mut self) -> Option<Mat>;
+    /// Next shard of raw rows: `Ok(Some(mat))` delivers a shard,
+    /// `Ok(None)` ends the stream, `Err` reports a read failure
+    /// (transient errors are retried by the consumer — see
+    /// [`ShardError`]).
+    fn next_shard(&mut self) -> Result<Option<Mat>, ShardError>;
     /// Output dimension J.
     fn dim(&self) -> usize;
 }
@@ -21,12 +62,88 @@ pub trait ShardSource {
 // Boxed sources forward, so `api::SourceInput` can carry a type-erased
 // stream and hand it to the pipeline's generic `run`.
 impl<S: ShardSource + ?Sized> ShardSource for Box<S> {
-    fn next_shard(&mut self) -> Option<Mat> {
+    fn next_shard(&mut self) -> Result<Option<Mat>, ShardError> {
         (**self).next_shard()
     }
 
     fn dim(&self) -> usize {
         (**self).dim()
+    }
+}
+
+/// What to do with non-finite (NaN/±inf) cells at ingestion.
+///
+/// Set via `SessionBuilder::on_invalid`; applied by the streaming
+/// producer per shard (in sequence order, so scrubbing is deterministic
+/// at any consumer count) and by the batch path before the design is
+/// built. Every action is counted into the run's
+/// [`Degradations`](crate::util::degrade::Degradations) record.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum InvalidPolicy {
+    /// Reject the run with a typed error naming the first offending
+    /// shard/row/column (the default — bad data never enters silently).
+    #[default]
+    Error,
+    /// Zero out every row containing a non-finite cell (row count, and
+    /// therefore `n_seen`, is preserved).
+    MaskRow,
+    /// Remove every row containing a non-finite cell.
+    DropRow,
+}
+
+/// Scrub `data` in place per `policy`, recording into `sink`.
+///
+/// Returns `Err(row, col)` of the first offending cell under
+/// [`InvalidPolicy::Error`]; otherwise the (possibly smaller) matrix.
+/// Under `DropRow` the surviving rows keep their original order.
+pub fn scrub_invalid(
+    mut data: Mat,
+    policy: InvalidPolicy,
+    sink: &DegradeSink,
+) -> Result<Mat, (usize, usize)> {
+    let cols = data.cols;
+    // fast path: scan first so clean data is never copied or rewritten
+    let mut bad_rows: Vec<usize> = Vec::new();
+    let mut bad_cells = 0usize;
+    for r in 0..data.rows {
+        let row = data.row(r);
+        let cells = row.iter().filter(|x| !x.is_finite()).count();
+        if cells > 0 {
+            if policy == InvalidPolicy::Error {
+                let col = row
+                    .iter()
+                    .position(|x| !x.is_finite())
+                    .unwrap_or(0);
+                return Err((r, col));
+            }
+            bad_rows.push(r);
+            bad_cells += cells;
+        }
+    }
+    if bad_rows.is_empty() {
+        return Ok(data);
+    }
+    sink.invalid_cells(bad_cells);
+    match policy {
+        InvalidPolicy::Error => unreachable!("handled above"),
+        InvalidPolicy::MaskRow => {
+            for &r in &bad_rows {
+                for c in 0..cols {
+                    data.data[r * cols + c] = 0.0;
+                }
+            }
+            sink.rows_masked(bad_rows.len());
+            Ok(data)
+        }
+        InvalidPolicy::DropRow => {
+            let mut bad = vec![false; data.rows];
+            for &r in &bad_rows {
+                bad[r] = true;
+            }
+            let keep: Vec<usize> = (0..data.rows).filter(|&r| !bad[r]).collect();
+            sink.rows_dropped(bad_rows.len());
+            Ok(data.select_rows(&keep))
+        }
     }
 }
 
@@ -45,14 +162,14 @@ impl MatShards {
 }
 
 impl ShardSource for MatShards {
-    fn next_shard(&mut self) -> Option<Mat> {
+    fn next_shard(&mut self) -> Result<Option<Mat>, ShardError> {
         if self.pos >= self.data.rows {
-            return None;
+            return Ok(None);
         }
         let end = (self.pos + self.shard).min(self.data.rows);
         let idx: Vec<usize> = (self.pos..end).collect();
         self.pos = end;
-        Some(self.data.select_rows(&idx))
+        Ok(Some(self.data.select_rows(&idx)))
     }
 
     fn dim(&self) -> usize {
@@ -76,13 +193,13 @@ impl<F: FnMut(usize) -> Mat> GenShards<F> {
 }
 
 impl<F: FnMut(usize) -> Mat> ShardSource for GenShards<F> {
-    fn next_shard(&mut self) -> Option<Mat> {
+    fn next_shard(&mut self) -> Result<Option<Mat>, ShardError> {
         if self.remaining == 0 {
-            return None;
+            return Ok(None);
         }
         let take = self.shard.min(self.remaining);
         self.remaining -= take;
-        Some((self.gen)(take))
+        Ok(Some((self.gen)(take)))
     }
 
     fn dim(&self) -> usize {
@@ -100,7 +217,7 @@ mod tests {
         let mut src = MatShards::new(data, 4);
         let mut total = 0;
         let mut shards = 0;
-        while let Some(s) = src.next_shard() {
+        while let Some(s) = src.next_shard().unwrap() {
             total += s.rows;
             shards += 1;
             assert_eq!(s.cols, 2);
@@ -112,7 +229,56 @@ mod tests {
     #[test]
     fn gen_shards_respect_total() {
         let mut src = GenShards::new(|n| Mat::zeros(n, 3), 3, 10, 3);
-        let sizes: Vec<usize> = std::iter::from_fn(|| src.next_shard().map(|s| s.rows)).collect();
+        let sizes: Vec<usize> =
+            std::iter::from_fn(|| src.next_shard().unwrap().map(|s| s.rows)).collect();
         assert_eq!(sizes, vec![3, 3, 3, 1]);
+    }
+
+    fn dirty_mat() -> Mat {
+        // row 1 has a NaN, row 3 has an inf + a NaN
+        Mat::from_vec(
+            4,
+            2,
+            vec![1.0, 2.0, f64::NAN, 3.0, 4.0, 5.0, f64::INFINITY, f64::NAN],
+        )
+    }
+
+    #[test]
+    fn scrub_error_reports_first_cell() {
+        let sink = DegradeSink::new();
+        let err = scrub_invalid(dirty_mat(), InvalidPolicy::Error, &sink).unwrap_err();
+        assert_eq!(err, (1, 0));
+        assert!(sink.snapshot().is_clean(), "error path records nothing");
+    }
+
+    #[test]
+    fn scrub_mask_zeroes_rows_and_counts() {
+        let sink = DegradeSink::new();
+        let m = scrub_invalid(dirty_mat(), InvalidPolicy::MaskRow, &sink).unwrap();
+        assert_eq!(m.rows, 4);
+        assert_eq!(m.row(1), &[0.0, 0.0]);
+        assert_eq!(m.row(3), &[0.0, 0.0]);
+        assert_eq!(m.row(2), &[4.0, 5.0]);
+        let d = sink.snapshot();
+        assert_eq!((d.rows_masked, d.invalid_cells), (2, 3));
+    }
+
+    #[test]
+    fn scrub_drop_removes_rows_in_order() {
+        let sink = DegradeSink::new();
+        let m = scrub_invalid(dirty_mat(), InvalidPolicy::DropRow, &sink).unwrap();
+        assert_eq!(m.rows, 2);
+        assert_eq!(m.row(0), &[1.0, 2.0]);
+        assert_eq!(m.row(1), &[4.0, 5.0]);
+        assert_eq!(sink.snapshot().rows_dropped, 2);
+    }
+
+    #[test]
+    fn scrub_clean_is_identity() {
+        let sink = DegradeSink::new();
+        let m = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let out = scrub_invalid(m.clone(), InvalidPolicy::DropRow, &sink).unwrap();
+        assert_eq!(out.data, m.data);
+        assert!(sink.snapshot().is_clean());
     }
 }

@@ -13,11 +13,26 @@
 //! happens at the start of the next iteration.
 
 use super::{FitOptions, Objective};
+use crate::util::degrade::DegradeSink;
 
+/// [`minimize_with_sink`] with degradation accounting discarded.
 pub fn minimize(
+    obj: &dyn Objective,
+    x: Vec<f64>,
+    opts: &FitOptions,
+) -> (Vec<f64>, f64, usize, bool) {
+    minimize_with_sink(obj, x, opts, &DegradeSink::new())
+}
+
+/// Minimize `obj` from `x`, recording numerical fallbacks (non-finite
+/// start recovery, line-search failure) into `sink`. The sink never
+/// changes the iterates — same inputs give bit-identical output with or
+/// without a live sink.
+pub fn minimize_with_sink(
     obj: &dyn Objective,
     mut x: Vec<f64>,
     opts: &FitOptions,
+    sink: &DegradeSink,
 ) -> (Vec<f64>, f64, usize, bool) {
     let n = obj.dim();
     assert_eq!(x.len(), n);
@@ -43,6 +58,7 @@ pub fn minimize(
     let mut f = obj.value_grad_into(&x, &mut g);
     if !f.is_finite() {
         // fall back: shrink toward origin until finite
+        sink.nonfinite_start();
         for _ in 0..60 {
             for xi in x.iter_mut() {
                 *xi *= 0.5;
@@ -121,7 +137,10 @@ pub fn minimize(
             step *= 0.5;
         }
         if !accepted {
-            // line search failed: gradient is as good as it gets
+            // line search failed: the current point is as good as the
+            // backtracking budget can certify — stop here, but make the
+            // early exit visible instead of silently reporting success
+            sink.line_search_failure();
             converged = true;
             break;
         }

@@ -14,6 +14,7 @@ pub mod lbfgs;
 
 use crate::basis::Design;
 use crate::mctm::{self, ModelSpec, NllScratch, Params};
+use crate::util::degrade::DegradeSink;
 use crate::util::parallel::Pool;
 use crate::util::Stopwatch;
 use std::cell::RefCell;
@@ -150,9 +151,21 @@ pub struct FitResult {
 
 /// Minimize `obj` from `x0`.
 pub fn minimize(obj: &dyn Objective, x0: Vec<f64>, opts: &FitOptions) -> (Vec<f64>, f64, usize, bool) {
+    minimize_with_sink(obj, x0, opts, &DegradeSink::new())
+}
+
+/// [`minimize`] with optimizer fallbacks (non-finite start recovery,
+/// line-search failure) recorded into `sink`. The sink is pure
+/// accounting — iterates are bit-identical with or without it.
+pub fn minimize_with_sink(
+    obj: &dyn Objective,
+    x0: Vec<f64>,
+    opts: &FitOptions,
+    sink: &DegradeSink,
+) -> (Vec<f64>, f64, usize, bool) {
     match opts.optimizer {
         OptimizerKind::Adam => adam::minimize(obj, x0, opts),
-        OptimizerKind::Lbfgs => lbfgs::minimize(obj, x0, opts),
+        OptimizerKind::Lbfgs => lbfgs::minimize_with_sink(obj, x0, opts, sink),
     }
 }
 
@@ -167,11 +180,34 @@ pub fn fit_native(
     fit_with(&obj, spec, opts)
 }
 
+/// [`fit_native`] with degradation accounting — what `api::Session`
+/// calls so optimizer fallbacks land in the run's `Degradations` record.
+pub fn fit_native_with_sink(
+    spec: ModelSpec,
+    design: &Design,
+    weights: Vec<f64>,
+    opts: &FitOptions,
+    sink: &DegradeSink,
+) -> FitResult {
+    let obj = NativeNll::new(spec, design, weights);
+    fit_with_sink(&obj, spec, opts, sink)
+}
+
 /// Fit with an arbitrary objective (e.g. the XLA-backed one).
 pub fn fit_with(obj: &dyn Objective, spec: ModelSpec, opts: &FitOptions) -> FitResult {
+    fit_with_sink(obj, spec, opts, &DegradeSink::new())
+}
+
+/// [`fit_with`] recording optimizer fallbacks into `sink`.
+pub fn fit_with_sink(
+    obj: &dyn Objective,
+    spec: ModelSpec,
+    opts: &FitOptions,
+    sink: &DegradeSink,
+) -> FitResult {
     let sw = Stopwatch::start();
     let x0 = Params::init(spec).x;
-    let (x, nll, iters, converged) = minimize(obj, x0, opts);
+    let (x, nll, iters, converged) = minimize_with_sink(obj, x0, opts, sink);
     FitResult {
         params: Params::new(spec, x),
         nll,

@@ -3,6 +3,12 @@
 //! Scalable learning of multivariate distributions via coresets — a
 //! three-layer Rust + JAX + Pallas reproduction. See DESIGN.md.
 
+// User-reachable library code must not panic on fallible paths: every
+// unwrap/expect outside tests either converts to a typed error or
+// carries an #[allow] with a proof of unreachability. `make ci` runs
+// clippy with -D warnings, so a bare unwrap fails the build.
+#![cfg_attr(not(test), warn(clippy::unwrap_used, clippy::expect_used))]
+
 pub mod api;
 pub mod basis;
 pub mod benchsupport;
@@ -39,13 +45,15 @@ pub mod prelude {
     };
     pub use crate::coordinator::cli::Cli;
     pub use crate::coordinator::config::ExperimentConfig;
-    pub use crate::coordinator::pipeline::StreamStats;
+    pub use crate::coordinator::pipeline::{StreamError, StreamStats, SHARD_RETRY_LIMIT};
     pub use crate::coreset::{Coreset, Method};
     pub use crate::data::dgp::Dgp;
-    pub use crate::data::{GenShards, MatShards, ShardSource};
+    pub use crate::data::faulty::{FaultPlan, FaultySource};
+    pub use crate::data::{GenShards, InvalidPolicy, MatShards, ShardError, ShardSource};
     pub use crate::fit::{FitOptions, FitResult, OptimizerKind};
     pub use crate::linalg::Mat;
     pub use crate::mctm::{lambda_error, loglik_ratio, theta_l2, ModelSpec, Params};
+    pub use crate::util::degrade::{DegradeSink, Degradations};
     pub use crate::util::rng::Rng;
     pub use crate::util::{fmt_ms, mean, median, std_dev, Stopwatch};
 }

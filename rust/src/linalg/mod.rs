@@ -372,7 +372,10 @@ impl Cholesky {
                     s -= l.at(i, k) * l.at(j, k);
                 }
                 if i == j {
-                    if s <= 0.0 {
+                    // NaN pivots (overflowed or poisoned input) are
+                    // caught here as NotPosDef instead of silently
+                    // propagating NaN through every downstream solve
+                    if s.is_nan() || s <= 0.0 {
                         return Err(LinalgError::NotPosDef(i, s));
                     }
                     *l.at_mut(i, j) = s.sqrt();
@@ -447,6 +450,46 @@ impl Cholesky {
     pub fn log_det(&self) -> f64 {
         (0..self.l.rows).map(|i| self.l.at(i, i).ln()).sum::<f64>() * 2.0
     }
+}
+
+/// Relative rungs of the escalating ridge-jitter retry ladder used by
+/// [`cholesky_ridge_ladder`]: each rung adds `rung × scale` to the
+/// diagonal, where `scale` is the mean absolute diagonal of the failed
+/// matrix. The top rung (4×) recovers matrices whose smallest
+/// eigenvalue is as low as minus a few times the diagonal scale; beyond
+/// that the input is not meaningfully a Gram matrix and the caller gets
+/// the original `NotPosDef`.
+pub const RIDGE_LADDER_REL: [f64; 6] = [1e-8, 1e-6, 1e-4, 1e-2, 1.0, 4.0];
+
+/// Factor `g`, recovering from `NotPosDef` via an escalating
+/// ridge-jitter ladder: attempt 0 factors `g` exactly as given (so the
+/// clean path stays bit-identical to a plain [`Cholesky::new`]), then
+/// each bounded retry adds `RIDGE_LADDER_REL[rung] × mean |diag|` to a
+/// copy of the diagonal. Returns the factor and the rung that
+/// succeeded (0 = clean, no jitter). Exhausting the ladder returns the
+/// *original* failure, and non-finite diagonals fail fast (no amount
+/// of jitter fixes an inf/NaN Gram).
+pub fn cholesky_ridge_ladder(g: &Mat) -> Result<(Cholesky, usize), LinalgError> {
+    let first = match Cholesky::new(g) {
+        Ok(ch) => return Ok((ch, 0)),
+        Err(e) => e,
+    };
+    let n = g.rows;
+    let diag_scale = (0..n).map(|i| g.at(i, i).abs()).sum::<f64>() / n.max(1) as f64;
+    if !diag_scale.is_finite() || diag_scale <= 0.0 {
+        return Err(first);
+    }
+    for (rung, rel) in RIDGE_LADDER_REL.iter().enumerate() {
+        let mut jittered = g.clone();
+        let lambda = rel * diag_scale;
+        for i in 0..n {
+            *jittered.at_mut(i, i) = g.at(i, i) + lambda;
+        }
+        if let Ok(ch) = Cholesky::new(&jittered) {
+            return Ok((ch, rung + 1));
+        }
+    }
+    Err(first)
 }
 
 /// Thin Householder QR (R only, plus leverage helper via Q): used as a
@@ -630,6 +673,45 @@ mod tests {
     fn not_pos_def_detected() {
         let g = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eig −1
         assert!(Cholesky::new(&g).is_err());
+    }
+
+    #[test]
+    fn nan_pivot_is_not_pos_def() {
+        let g = Mat::from_rows(&[vec![f64::NAN, 0.0], vec![0.0, 1.0]]);
+        assert!(matches!(Cholesky::new(&g), Err(LinalgError::NotPosDef(0, _))));
+        let g2 = Mat::from_rows(&[vec![1.0, 0.0], vec![0.0, f64::NAN]]);
+        assert!(matches!(Cholesky::new(&g2), Err(LinalgError::NotPosDef(1, _))));
+    }
+
+    #[test]
+    fn ridge_ladder_clean_path_is_bit_identical() {
+        let mut rng = Rng::new(6);
+        let x = random_mat(&mut rng, 40, 4);
+        let g = x.gram();
+        let plain = Cholesky::new(&g).unwrap();
+        let (laddered, rung) = cholesky_ridge_ladder(&g).unwrap();
+        assert_eq!(rung, 0, "pos-def input must not be jittered");
+        for (a, b) in plain.l.data.iter().zip(&laddered.l.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn ridge_ladder_recovers_indefinite_matrix() {
+        // eigenvalues {−0.5, 2.5}: rungs up to 1e-2 leave it indefinite
+        // (scale = 1), rung 1.0 shifts eigenvalues to {0.5, 3.5}
+        let g = Mat::from_rows(&[vec![1.0, 1.5], vec![1.5, 1.0]]);
+        let (ch, rung) = cholesky_ridge_ladder(&g).unwrap();
+        assert!(rung >= 1, "must have taken a jitter rung");
+        assert!(ch.l.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn ridge_ladder_gives_up_on_non_finite_diag() {
+        let g = Mat::from_rows(&[vec![f64::INFINITY, 0.0], vec![0.0, 1.0]]);
+        assert!(cholesky_ridge_ladder(&g).is_err());
+        let g2 = Mat::from_rows(&[vec![f64::NAN, 0.0], vec![0.0, 1.0]]);
+        assert!(cholesky_ridge_ladder(&g2).is_err());
     }
 
     #[test]

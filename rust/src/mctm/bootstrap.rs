@@ -96,7 +96,7 @@ pub fn bootstrap_ci(
         (0..p)
             .map(|k| {
                 let mut vals: Vec<f64> = samples.iter().map(|s| s[k]).collect();
-                vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                vals.sort_by(f64::total_cmp);
                 let lo_i = ((vals.len() as f64) * alpha).floor() as usize;
                 let hi_i =
                     (((vals.len() as f64) * (1.0 - alpha)).ceil() as usize).min(vals.len()) - 1;
@@ -136,7 +136,14 @@ mod tests {
         let spec = ModelSpec::new(2, 6);
         let full = fit_native(spec, &design, Vec::new(), &quick_opts());
 
-        let cs = build_coreset_on(&design, Method::L2Hull, 200, &mut rng, &Pool::current());
+        let cs = build_coreset_on(
+            &design,
+            Method::L2Hull,
+            200,
+            &mut rng,
+            &Pool::current(),
+            &crate::util::degrade::DegradeSink::new(),
+        );
         let sub = design.select(&cs.indices);
         let point = fit_native(spec, &sub, cs.weights.clone(), &quick_opts());
         let boot = bootstrap_ci(

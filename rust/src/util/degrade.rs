@@ -1,0 +1,231 @@
+//! Degradation accounting: every graceful-fallback path in the crate
+//! (ridge-jitter recovery of a `NotPosDef` Gram, MVEE non-convergence,
+//! score-fallback-to-uniform, line-search failure, invalid-cell
+//! scrubbing, shard retries) records itself into a [`Degradations`]
+//! record instead of proceeding silently. The record is threaded into
+//! `CoresetReport`/`Diagnostics` by the session layer, so a degraded
+//! run is observable — never silent — while a clean run reports
+//! [`Degradations::is_clean`].
+//!
+//! All fields are **order-independent counters** (sums, plus one max).
+//! Consumer threads record concurrently, but because the set of events
+//! is determined by the data and the fixed Merge & Reduce tree shape —
+//! never by scheduling — the final record is deterministic for a given
+//! seed and source, at any thread/consumer count. This keeps the
+//! repo's bitwise-determinism pins intact.
+
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+/// Counters for every graceful-degradation path taken during one
+/// session run (sketch + fit). All zeros ⇔ the run was clean.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Degradations {
+    /// Gram factorizations that failed `NotPosDef` on the first attempt
+    /// and recovered via the escalating ridge-jitter ladder
+    /// (`linalg::cholesky_ridge_ladder`).
+    pub gram_ridge_recoveries: usize,
+    /// Deepest ladder rung (1-based) any recovery needed; 0 if none.
+    pub gram_ridge_max_rung: usize,
+    /// Khachiyan MVEE runs that hit the iteration cap without reaching
+    /// the (1+ε) certificate — scores are still usable, just coarser.
+    pub mvee_nonconverged: usize,
+    /// MVEE iterations abandoned because the moment matrix would not
+    /// factor even after the ridge ladder (scores fall back to the last
+    /// valid ellipsoid, or uniform).
+    pub mvee_factor_breaks: usize,
+    /// Score computations that fell back to uniform/previous weights
+    /// (strategy score error, degenerate sampling weights, guarded
+    /// small-n ellipsoid path).
+    pub score_fallbacks: usize,
+    /// L-BFGS line searches that failed to find an acceptable step
+    /// (the optimizer stops at the best point seen so far).
+    pub line_search_failures: usize,
+    /// Optimizer starts with a non-finite objective that had to be
+    /// shrunk toward the origin before iterating.
+    pub nonfinite_starts: usize,
+    /// Non-finite cells seen at ingestion (before masking/dropping).
+    pub invalid_cells: usize,
+    /// Rows zeroed by `InvalidPolicy::MaskRow`.
+    pub rows_masked: usize,
+    /// Rows removed by `InvalidPolicy::DropRow`.
+    pub rows_dropped: usize,
+    /// Transient shard-read errors that were retried (and succeeded —
+    /// exhausted retries surface as a typed stream error instead).
+    pub shard_retries: usize,
+    /// Zero-row shards skipped by the producer without consuming a
+    /// sequence number (so determinism is unaffected).
+    pub empty_shards_skipped: usize,
+}
+
+impl Degradations {
+    /// True iff no fallback of any kind was taken.
+    pub fn is_clean(&self) -> bool {
+        *self == Degradations::default()
+    }
+
+    /// Accumulate another record into this one (counter sums; the
+    /// ladder rung takes the max). Order-independent by construction.
+    pub fn merge(&mut self, other: &Degradations) {
+        self.gram_ridge_recoveries += other.gram_ridge_recoveries;
+        self.gram_ridge_max_rung = self.gram_ridge_max_rung.max(other.gram_ridge_max_rung);
+        self.mvee_nonconverged += other.mvee_nonconverged;
+        self.mvee_factor_breaks += other.mvee_factor_breaks;
+        self.score_fallbacks += other.score_fallbacks;
+        self.line_search_failures += other.line_search_failures;
+        self.nonfinite_starts += other.nonfinite_starts;
+        self.invalid_cells += other.invalid_cells;
+        self.rows_masked += other.rows_masked;
+        self.rows_dropped += other.rows_dropped;
+        self.shard_retries += other.shard_retries;
+        self.empty_shards_skipped += other.empty_shards_skipped;
+    }
+}
+
+impl fmt::Display for Degradations {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_clean() {
+            return write!(f, "clean");
+        }
+        let mut parts: Vec<String> = Vec::new();
+        let mut push = |name: &str, v: usize| {
+            if v > 0 {
+                parts.push(format!("{name}={v}"));
+            }
+        };
+        push("gram_ridge_recoveries", self.gram_ridge_recoveries);
+        push("gram_ridge_max_rung", self.gram_ridge_max_rung);
+        push("mvee_nonconverged", self.mvee_nonconverged);
+        push("mvee_factor_breaks", self.mvee_factor_breaks);
+        push("score_fallbacks", self.score_fallbacks);
+        push("line_search_failures", self.line_search_failures);
+        push("nonfinite_starts", self.nonfinite_starts);
+        push("invalid_cells", self.invalid_cells);
+        push("rows_masked", self.rows_masked);
+        push("rows_dropped", self.rows_dropped);
+        push("shard_retries", self.shard_retries);
+        push("empty_shards_skipped", self.empty_shards_skipped);
+        write!(f, "{}", parts.join(" "))
+    }
+}
+
+/// Cheap-to-clone handle that accumulates [`Degradations`] from any
+/// thread. The lock is poison-recovering (`into_inner` on a poisoned
+/// guard): a panicking worker elsewhere must never turn degradation
+/// *accounting* into a second panic.
+#[derive(Clone, Debug, Default)]
+pub struct DegradeSink {
+    inner: Arc<Mutex<Degradations>>,
+}
+
+impl DegradeSink {
+    pub fn new() -> Self {
+        DegradeSink::default()
+    }
+
+    /// Copy of the accumulated record so far.
+    pub fn snapshot(&self) -> Degradations {
+        self.with(|d| d.clone())
+    }
+
+    fn with<R>(&self, f: impl FnOnce(&mut Degradations) -> R) -> R {
+        // counters stay meaningful even if a holder panicked mid-update
+        let mut guard = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        f(&mut guard)
+    }
+
+    /// A Gram factorization recovered at ladder `rung` (1-based).
+    pub fn gram_ridge_recovery(&self, rung: usize) {
+        self.with(|d| {
+            d.gram_ridge_recoveries += 1;
+            d.gram_ridge_max_rung = d.gram_ridge_max_rung.max(rung);
+        });
+    }
+
+    pub fn mvee_nonconverged(&self) {
+        self.with(|d| d.mvee_nonconverged += 1);
+    }
+
+    pub fn mvee_factor_break(&self) {
+        self.with(|d| d.mvee_factor_breaks += 1);
+    }
+
+    pub fn score_fallback(&self) {
+        self.with(|d| d.score_fallbacks += 1);
+    }
+
+    pub fn line_search_failure(&self) {
+        self.with(|d| d.line_search_failures += 1);
+    }
+
+    pub fn nonfinite_start(&self) {
+        self.with(|d| d.nonfinite_starts += 1);
+    }
+
+    /// `cells` non-finite cells were found in one row.
+    pub fn invalid_cells(&self, cells: usize) {
+        self.with(|d| d.invalid_cells += cells);
+    }
+
+    pub fn rows_masked(&self, rows: usize) {
+        self.with(|d| d.rows_masked += rows);
+    }
+
+    pub fn rows_dropped(&self, rows: usize) {
+        self.with(|d| d.rows_dropped += rows);
+    }
+
+    pub fn shard_retry(&self) {
+        self.with(|d| d.shard_retries += 1);
+    }
+
+    pub fn empty_shard_skipped(&self) {
+        self.with(|d| d.empty_shards_skipped += 1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_by_default_and_display() {
+        let sink = DegradeSink::new();
+        let d = sink.snapshot();
+        assert!(d.is_clean());
+        assert_eq!(format!("{d}"), "clean");
+    }
+
+    #[test]
+    fn counters_accumulate_and_merge() {
+        let sink = DegradeSink::new();
+        sink.gram_ridge_recovery(2);
+        sink.gram_ridge_recovery(1);
+        sink.shard_retry();
+        sink.invalid_cells(3);
+        sink.rows_dropped(2);
+        let d = sink.snapshot();
+        assert_eq!(d.gram_ridge_recoveries, 2);
+        assert_eq!(d.gram_ridge_max_rung, 2);
+        assert_eq!(d.shard_retries, 1);
+        assert_eq!(d.invalid_cells, 3);
+        assert!(!d.is_clean());
+
+        let mut acc = Degradations::default();
+        acc.merge(&d);
+        acc.merge(&d);
+        assert_eq!(acc.gram_ridge_recoveries, 4);
+        assert_eq!(acc.gram_ridge_max_rung, 2);
+        assert_eq!(acc.rows_dropped, 4);
+        let s = format!("{acc}");
+        assert!(s.contains("gram_ridge_recoveries=4"), "{s}");
+    }
+
+    #[test]
+    fn sink_is_shared_across_clones() {
+        let sink = DegradeSink::new();
+        let clone = sink.clone();
+        clone.score_fallback();
+        assert_eq!(sink.snapshot().score_fallbacks, 1);
+    }
+}

@@ -3,6 +3,7 @@
 //! deterministic thread pool, and a tiny randomized property-test
 //! harness (the `proptest` crate is unavailable offline).
 
+pub mod degrade;
 pub mod error;
 pub mod parallel;
 pub mod proptest;
@@ -56,7 +57,7 @@ pub fn median(xs: &[f64]) -> f64 {
         return f64::NAN;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]

@@ -147,6 +147,10 @@ impl Pool {
                 }));
             }
             for h in handles {
+                // a worker panic means its chunk's result is gone — there
+                // is nothing sound to substitute, so propagate the panic
+                // rather than return silently wrong aggregates
+                #[allow(clippy::expect_used)]
                 parts.extend(h.join().expect("parallel worker panicked"));
             }
         });
@@ -188,7 +192,14 @@ impl Pool {
                 let queue = &queue;
                 let f = &f;
                 s.spawn(move || loop {
-                    let item = queue.lock().expect("work queue poisoned").next();
+                    // a panicked peer poisons the queue lock, but the
+                    // iterator state underneath is still valid — recover
+                    // it so the remaining workers drain the queue instead
+                    // of cascading the panic
+                    let item = queue
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .next();
                     match item {
                         Some((i, it)) => f(i, it),
                         None => break,

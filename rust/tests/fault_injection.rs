@@ -1,0 +1,299 @@
+//! Deterministic fault-injection suite (ISSUE 6): drives the public
+//! facade (`SessionBuilder` → `Session::coreset`/`fit`) against
+//! [`FaultySource`]-wrapped shard streams with seeded [`FaultPlan`]s.
+//!
+//! The headline invariants:
+//!   * a run whose transient faults are recovered by the bounded retry
+//!     loop is **bit-identical** to the fault-free run — at every
+//!     consumer fan-out × thread count combination;
+//!   * unrecoverable faults surface as typed `ApiError::Stream` with
+//!     shard provenance within bounded time — no panic, no hang — at
+//!     queue capacities down to 1 (maximum backpressure);
+//!   * every numerical / ingestion fallback is visible in
+//!     `CoresetReport::degradations` rather than a log line.
+
+use mctm_coreset::coreset::leverage::leverage_scores_ridged_sink;
+use mctm_coreset::prelude::*;
+use mctm_coreset::util::parallel::Pool;
+use std::time::Duration;
+
+const TOTAL: usize = 6_000;
+const SHARD: usize = 1_000;
+
+/// A fresh fault-free generator stream; the same `seed` always yields
+/// the same shard sequence, so a `FaultySource` wrapping it sees the
+/// identical underlying data as a clean run.
+fn clean_source(seed: u64) -> GenShards<impl FnMut(usize) -> Mat> {
+    let mut rng = Rng::new(seed);
+    GenShards::new(
+        move |n| Dgp::BivariateNormal.generate(n, &mut rng),
+        2,
+        TOTAL,
+        SHARD,
+    )
+}
+
+/// Erase the source type so the facade takes the streaming path for
+/// both clean and fault-wrapped sources through one code path.
+fn boxed(src: impl ShardSource + Send + 'static) -> Box<dyn ShardSource + Send> {
+    Box::new(src)
+}
+
+fn session(consumers: usize, threads: usize, queue_cap: usize, policy: InvalidPolicy) -> Session {
+    SessionBuilder::new()
+        .method("l2-hull")
+        .budget(60)
+        .basis_size(5)
+        .seed(11)
+        .consumers(consumers)
+        .threads(threads)
+        .queue_cap(queue_cap)
+        .on_invalid(policy)
+        .build()
+        .unwrap()
+}
+
+/// Run `f` on a helper thread and fail the test if it does not finish
+/// within `secs` — the "no hang" half of the orderly-shutdown contract.
+/// (The Rust test harness has no per-test timeout of its own, so a
+/// deadlocked pipeline would otherwise wedge CI forever.)
+fn with_timeout<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    rx.recv_timeout(Duration::from_secs(secs))
+        .expect("pipeline did not shut down within the timeout")
+}
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------- (a)
+// transient faults + retries are invisible in the result
+
+#[test]
+fn transient_faults_recover_bit_identically_across_fanout() {
+    let clean = session(1, 1, 4, InvalidPolicy::Error)
+        .coreset(boxed(clean_source(7)))
+        .unwrap();
+    assert!(clean.degradations.is_clean(), "{:?}", clean.degradations);
+    assert_eq!(clean.n_seen, TOTAL);
+
+    for consumers in [1, 4] {
+        for threads in [1, 2, 8] {
+            let faulty = FaultySource::new(
+                clean_source(7),
+                FaultPlan::new(13).with_transients(2, SHARD_RETRY_LIMIT),
+            );
+            let report = with_timeout(120, move || {
+                session(consumers, threads, 4, InvalidPolicy::Error)
+                    .coreset(boxed(faulty))
+                    .unwrap()
+            });
+            assert_eq!(
+                bits(&report.rows.data),
+                bits(&clean.rows.data),
+                "rows differ at consumers={consumers} threads={threads}"
+            );
+            assert_eq!(
+                bits(&report.weights),
+                bits(&clean.weights),
+                "weights differ at consumers={consumers} threads={threads}"
+            );
+            assert_eq!(report.n_seen, TOTAL);
+            // ... but the retries themselves are on the record
+            assert!(report.degradations.shard_retries > 0);
+        }
+    }
+}
+
+#[test]
+fn spurious_empty_shards_leave_no_trace_in_the_result() {
+    let clean = session(2, 2, 4, InvalidPolicy::Error)
+        .coreset(boxed(clean_source(19)))
+        .unwrap();
+    let faulty = FaultySource::new(clean_source(19), FaultPlan::new(5).with_empty_shards(2));
+    let report = session(2, 2, 4, InvalidPolicy::Error)
+        .coreset(boxed(faulty))
+        .unwrap();
+    assert_eq!(bits(&report.rows.data), bits(&clean.rows.data));
+    assert_eq!(bits(&report.weights), bits(&clean.weights));
+    assert_eq!(report.n_seen, TOTAL);
+    assert!(report.degradations.empty_shards_skipped > 0);
+}
+
+// ---------------------------------------------------------------- (b)
+// fatal faults: typed errors with provenance, orderly shutdown
+
+#[test]
+fn fatal_fault_surfaces_typed_stream_error_without_hanging() {
+    // queue_cap 1 is maximum backpressure (producer blocks on a full
+    // 1-slot channel while the abort propagates); 4 is the default
+    for queue_cap in [1, 4] {
+        for consumers in [1, 4] {
+            let faulty =
+                FaultySource::new(clean_source(7), FaultPlan::new(3).with_fatal_at(2));
+            let err = with_timeout(120, move || {
+                session(consumers, 1, queue_cap, InvalidPolicy::Error)
+                    .coreset(boxed(faulty))
+                    .unwrap_err()
+            });
+            match &err {
+                ApiError::Stream { shard_seq, .. } => assert_eq!(
+                    *shard_seq,
+                    Some(2),
+                    "queue_cap={queue_cap} consumers={consumers}"
+                ),
+                other => panic!("expected ApiError::Stream, got {other}"),
+            }
+            assert!(err.to_string().contains("fatal"), "{err}");
+        }
+    }
+}
+
+#[test]
+fn exhausted_transient_retries_escalate_to_typed_error() {
+    // one more consecutive failure than the retry budget ⇒ the bounded
+    // loop gives up on the very first shard and reports it
+    let faulty = FaultySource::new(
+        clean_source(7),
+        FaultPlan::new(17).with_transients(1, SHARD_RETRY_LIMIT + 1),
+    );
+    let err = with_timeout(120, move || {
+        session(2, 1, 4, InvalidPolicy::Error)
+            .coreset(boxed(faulty))
+            .unwrap_err()
+    });
+    match &err {
+        ApiError::Stream { shard_seq, .. } => assert_eq!(*shard_seq, Some(0)),
+        other => panic!("expected ApiError::Stream, got {other}"),
+    }
+    assert!(err.to_string().contains("retries exhausted"), "{err}");
+}
+
+#[test]
+fn truncated_stream_ends_cleanly_with_partial_data() {
+    // truncation is an early end-of-stream, not a fault: the pipeline
+    // finishes with whatever arrived
+    let faulty = FaultySource::new(clean_source(7), FaultPlan::new(2).with_truncation_at(3));
+    let report = session(2, 2, 4, InvalidPolicy::Error)
+        .coreset(boxed(faulty))
+        .unwrap();
+    assert_eq!(report.n_seen, 3 * SHARD);
+    assert!(report.size > 0);
+}
+
+// ---------------------------------------------------------------- (c)
+// ingestion policies + numerical degradation visibility
+
+#[test]
+fn nan_poison_with_error_policy_names_the_cell() {
+    let faulty = FaultySource::new(clean_source(7), FaultPlan::new(29).with_nan_cells(2));
+    let err = with_timeout(120, move || {
+        session(2, 1, 4, InvalidPolicy::Error)
+            .coreset(boxed(faulty))
+            .unwrap_err()
+    });
+    match &err {
+        ApiError::Stream { shard_seq, .. } => assert!(shard_seq.is_some()),
+        other => panic!("expected ApiError::Stream, got {other}"),
+    }
+    let msg = err.to_string();
+    assert!(msg.contains("non-finite"), "{msg}");
+    assert!(msg.contains("row") && msg.contains("column"), "{msg}");
+}
+
+#[test]
+fn mask_and_drop_policies_degrade_gracefully_on_the_record() {
+    let faulty = FaultySource::new(clean_source(7), FaultPlan::new(29).with_nan_cells(2));
+    let masked = session(2, 2, 4, InvalidPolicy::MaskRow)
+        .coreset(boxed(faulty))
+        .unwrap();
+    assert_eq!(masked.n_seen, TOTAL, "masking keeps every row");
+    assert!(masked.degradations.invalid_cells > 0);
+    assert!(masked.degradations.rows_masked > 0);
+
+    let faulty = FaultySource::new(clean_source(7), FaultPlan::new(29).with_nan_cells(2));
+    let dropped = session(2, 2, 4, InvalidPolicy::DropRow)
+        .coreset(boxed(faulty))
+        .unwrap();
+    assert!(dropped.degradations.rows_dropped > 0);
+    assert_eq!(
+        dropped.n_seen,
+        TOTAL - dropped.degradations.rows_dropped,
+        "n_seen counts only the rows that survived scrubbing"
+    );
+}
+
+#[test]
+fn batch_sources_respect_the_invalid_policy_too() {
+    let mut rng = Rng::new(31);
+    let mut data = Dgp::BivariateNormal.generate(500, &mut rng);
+    data.data[2 * 7 + 1] = f64::NAN;
+    data.data[2 * 100] = f64::INFINITY;
+
+    let err = session(1, 1, 4, InvalidPolicy::Error)
+        .coreset(&data)
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("non-finite") && msg.contains("row 7"), "{msg}");
+
+    let report = session(1, 1, 4, InvalidPolicy::MaskRow)
+        .coreset(&data)
+        .unwrap();
+    assert_eq!(report.degradations.invalid_cells, 2);
+    assert_eq!(report.degradations.rows_masked, 2);
+    assert_eq!(report.n_seen, 500);
+}
+
+#[test]
+fn ridge_ladder_recovery_is_recorded_not_fatal() {
+    // rows split between e₁ and e₂ give Gram = diag(5, 5); γ = −6 makes
+    // it diag(−1, −1) — indefinite, so the plain factorization fails and
+    // only the escalating ridge ladder can recover it
+    let mut v = Vec::with_capacity(20);
+    for i in 0..10 {
+        if i % 2 == 0 {
+            v.extend_from_slice(&[1.0, 0.0]);
+        } else {
+            v.extend_from_slice(&[0.0, 1.0]);
+        }
+    }
+    let x = Mat::from_vec(10, 2, v);
+    let sink = DegradeSink::new();
+    let scores = leverage_scores_ridged_sink(&x, -6.0, &Pool::new(2), &sink).unwrap();
+    assert!(scores.iter().all(|s| s.is_finite() && *s >= 0.0));
+    let d = sink.snapshot();
+    assert!(d.gram_ridge_recoveries >= 1, "{d:?}");
+    assert!(d.gram_ridge_max_rung >= 1, "{d:?}");
+    assert!(!d.is_clean());
+}
+
+#[test]
+fn fit_diagnostics_carry_stream_degradations() {
+    let mut rng = Rng::new(9);
+    let gen = GenShards::new(
+        move |n| Dgp::BivariateNormal.generate(n, &mut rng),
+        2,
+        3_000,
+        500,
+    );
+    let faulty = FaultySource::new(gen, FaultPlan::new(21).with_nan_cells(3));
+    let model = SessionBuilder::new()
+        .budget(60)
+        .basis_size(5)
+        .seed(11)
+        .consumers(2)
+        .on_invalid(InvalidPolicy::MaskRow)
+        .fit_options(FitOptions { max_iters: 60, ..Default::default() })
+        .build()
+        .unwrap()
+        .fit(boxed(faulty))
+        .unwrap();
+    let d = &model.diagnostics().coreset.degradations;
+    assert!(d.invalid_cells > 0, "{d:?}");
+    assert!(d.rows_masked > 0, "{d:?}");
+    assert!(model.diagnostics().fit_nll.is_finite());
+}

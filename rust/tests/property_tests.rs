@@ -245,7 +245,9 @@ fn prop_merge_reduce_size_and_weights() {
         |(rows, w, k, seed)| {
             let set = WeightedRows::new(rows.clone(), w.clone());
             let mut rng = Rng::new(*seed);
-            let red = reduce(&set, Method::L2Hull, *k, 5, 0.01, &mut rng);
+            let sink = mctm_coreset::util::degrade::DegradeSink::new();
+            let red = reduce(&set, Method::L2Hull, *k, 5, 0.01, &mut rng, &sink)
+                .map_err(|e| format!("reduce failed: {e}"))?;
             if red.len() > (*k).max(set.len().min(*k)) && red.len() > *k {
                 return Err(format!("size {} > k {k}", red.len()));
             }
