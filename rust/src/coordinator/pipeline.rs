@@ -45,7 +45,7 @@ use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 use std::collections::BTreeMap;
 use std::fmt;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::sync_channel;
 use std::sync::{Condvar, Mutex};
 
@@ -94,8 +94,9 @@ pub struct StreamStats {
     pub n_reduces: usize,
     pub coreset_size: usize,
     pub seconds: f64,
-    /// upper bound on the shard-queue depth (backpressure indicator:
-    /// never exceeds `queue_cap` — the bounded channel guarantees it)
+    /// max shard-queue depth observed at any send (backpressure
+    /// indicator: a value pinned at `queue_cap` means the consumers
+    /// were the bottleneck; never exceeds `queue_cap`)
     pub peak_queue: usize,
     /// max reorder-buffer depth observed: how far the fastest consumer
     /// ran ahead of the in-order tree reducer (≤ queue_cap + consumers)
@@ -205,6 +206,14 @@ impl StreamingPipeline {
 
         let mut n_shards = 0usize;
         let mut peak_reorder = 0usize;
+        // measured shard-queue occupancy: the producer bumps the depth
+        // before each send and records the post-send high-water mark;
+        // consumers decrement after each take. The depth can lag a
+        // take by one (item received, counter not yet decremented), so
+        // the recorded peak is clamped at `queue_cap` — the bounded
+        // channel itself can never hold more.
+        let q_depth = AtomicUsize::new(0);
+        let q_peak = AtomicUsize::new(0);
         let shard_rx = Mutex::new(shard_rx);
         let (leaf_tx, leaf_rx) =
             sync_channel::<(usize, WeightedRows, usize)>(self.queue_cap + consumers);
@@ -224,7 +233,15 @@ impl StreamingPipeline {
             }
             drop(slot);
             abort.store(true, Ordering::SeqCst);
-            // wake consumers parked on the reorder window
+            // wake consumers parked on the reorder window — take the
+            // window lock first so a waiter has either already observed
+            // the abort flag under the lock or is parked on the condvar
+            // and receives this notification. Notifying without the
+            // lock could fire between a waiter's abort check and its
+            // wait(), leaving it asleep forever (lost wakeup: the
+            // sleeper's leaf_tx clone would keep the reducer's recv
+            // loop alive and deadlock the run).
+            let _window = lock_ok(&progress.0);
             progress.1.notify_all();
         };
 
@@ -234,6 +251,8 @@ impl StreamingPipeline {
                 let fail = &fail;
                 let abort = &abort;
                 let sink = sink.clone();
+                let (q_depth, q_peak) = (&q_depth, &q_peak);
+                let queue_cap = self.queue_cap;
                 move || {
                     let j = source.dim();
                     let mut produced = 0usize;
@@ -248,10 +267,18 @@ impl StreamingPipeline {
                         let mut attempts = 0usize;
                         let shard = loop {
                             match source.next_shard() {
-                                Ok(s) => break s,
+                                Ok(s) => {
+                                    // count retries only once the read
+                                    // has recovered — exhausted budgets
+                                    // surface as a typed stream error,
+                                    // not as recorded retries
+                                    if attempts > 0 {
+                                        sink.shard_retries(attempts);
+                                    }
+                                    break s;
+                                }
                                 Err(ShardError::Transient(_)) if attempts < SHARD_RETRY_LIMIT => {
                                     attempts += 1;
-                                    sink.shard_retry();
                                 }
                                 Err(e) => {
                                     let kind = match e {
@@ -309,9 +336,12 @@ impl StreamingPipeline {
                             continue;
                         }
                         produced += shard.rows;
+                        q_depth.fetch_add(1, Ordering::SeqCst);
                         if shard_tx.send((seq, shard)).is_err() {
                             break; // consumers dropped (downstream abort)
                         }
+                        let depth = q_depth.load(Ordering::SeqCst);
+                        q_peak.fetch_max(depth.min(queue_cap), Ordering::SeqCst);
                         seq += 1;
                     }
                     produced
@@ -327,6 +357,7 @@ impl StreamingPipeline {
                 let fail = &fail;
                 let leaf_pool = &leaf_pool;
                 let sink = sink.clone();
+                let q_depth = &q_depth;
                 s.spawn(move || {
                     'work: loop {
                         if abort.load(Ordering::SeqCst) {
@@ -338,6 +369,7 @@ impl StreamingPipeline {
                         let msg = lock_ok(shard_rx).recv();
                         match msg {
                             Ok((seq, shard)) => {
+                                q_depth.fetch_sub(1, Ordering::SeqCst);
                                 // bounded reorder window: don't run too
                                 // far ahead of the in-order reducer
                                 {
@@ -392,6 +424,7 @@ impl StreamingPipeline {
                         if lock_ok(shard_rx).recv().is_err() {
                             break;
                         }
+                        q_depth.fetch_sub(1, Ordering::SeqCst);
                     }
                 });
             }
@@ -473,9 +506,7 @@ impl StreamingPipeline {
             n_reduces,
             coreset_size: coreset.len(),
             seconds: sw.secs(),
-            // the bounded channel caps in-flight shards at queue_cap;
-            // report the same conservative bound the serial reducer did
-            peak_queue: self.queue_cap.min(n_shards),
+            peak_queue: q_peak.load(Ordering::SeqCst),
             peak_reorder,
         };
         Ok((coreset, stats))

@@ -175,8 +175,11 @@ impl DegradeSink {
         self.with(|d| d.rows_dropped += rows);
     }
 
-    pub fn shard_retry(&self) {
-        self.with(|d| d.shard_retries += 1);
+    /// `n` transient shard-read retries that ended in a successful
+    /// read. The producer calls this once per recovered shard, after
+    /// the retry loop succeeds — exhausted budgets never land here.
+    pub fn shard_retries(&self, n: usize) {
+        self.with(|d| d.shard_retries += n);
     }
 
     pub fn empty_shard_skipped(&self) {
@@ -201,7 +204,7 @@ mod tests {
         let sink = DegradeSink::new();
         sink.gram_ridge_recovery(2);
         sink.gram_ridge_recovery(1);
-        sink.shard_retry();
+        sink.shard_retries(1);
         sink.invalid_cells(3);
         sink.rows_dropped(2);
         let d = sink.snapshot();
