@@ -4,7 +4,7 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: build test check ci fmt clippy doc example bench-compile bench-quick bench-perf artifacts
+.PHONY: build test check ci fmt clippy doc example bench-compile bench-quick bench-perf serve-smoke artifacts
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -42,8 +42,15 @@ check: fmt clippy doc test
 # crate attribute in rust/src/lib.rs, so with -D warnings any new
 # unwrap/expect outside tests fails CI unless explicitly #[allow]ed
 # with a justification.
-ci: fmt build test doc bench-compile
+ci: fmt build test doc bench-compile serve-smoke
 	$(CARGO) clippy --manifest-path $(MANIFEST) -- -D warnings
+
+# End-to-end persist & serve smoke (PR 7): save a model + sketch
+# artifact, verify same-seed byte-identical re-save, start mctm-serve
+# on an ephemeral port, and hit every query endpoint plus the pinned
+# edge cases over real HTTP. Reuses the release binaries from `build`.
+serve-smoke: build
+	bash scripts/serve_smoke.sh
 
 # Hot-path microbench at the smallest scale (CI smoke): serial vs
 # parallel medians for basis build, leverage, gram, nll_grad.

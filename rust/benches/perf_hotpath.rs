@@ -51,6 +51,9 @@ fn main() {
     // covertype scale (the 50k/200k rows are where blocking must win)
     bench_nll_sweep(&mut table, scale, iters, max_threads);
 
+    // ---- Serving layer: queries/sec over HTTP (ISSUE 7) --------------
+    bench_serving(&mut table, scale, max_threads);
+
     // ---- L1/L2 via PJRT ----------------------------------------------
     if Path::new("artifacts/manifest.json").exists() {
         bench_xla(&mut table, &data2, 2, iters);
@@ -302,6 +305,85 @@ fn bench_nll_sweep(table: &mut Table, scale: Scale, iters: usize, max_threads: u
         }
     }
     parallel::set_threads(max_threads);
+}
+
+/// ISSUE 7 sweep: sustained queries/sec through the HTTP serving layer
+/// (one fitted model, fresh connection per request — the server speaks
+/// `Connection: close`), at client concurrency {1, 4, max}. The mix
+/// rotates over the four cheap query kinds; sample rows dominate the
+/// response-size cost, the transform inversion dominates quantile.
+fn bench_serving(table: &mut Table, scale: Scale, max_threads: usize) {
+    use mctm_coreset::server::{ModelRegistry, Server};
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+    use std::sync::Arc;
+
+    let mut rng = Rng::new(42);
+    let data = Dgp::BivariateNormal.generate(2_000, &mut rng);
+    let model = SessionBuilder::new()
+        .budget(100)
+        .basis_size(5)
+        .seed(3)
+        .max_iters(60)
+        .build()
+        .unwrap()
+        .fit(&data)
+        .unwrap();
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("bench", model);
+    parallel::set_threads(max_threads); // worker count is read at run()
+    let handle = Server::bind("127.0.0.1:0", registry).unwrap().spawn();
+    let addr = handle.addr();
+
+    let per_client = scale.pick(60, 250, 600);
+    let targets = [
+        "/v1/models/bench/density?y=0.5,-0.25",
+        "/v1/models/bench/cdf?j=0&y=1.0",
+        "/v1/models/bench/quantile?j=1&p=0.75",
+        "/v1/models/bench/sample?n=8&seed=1",
+    ];
+    let mut sweep = vec![1usize, 4, max_threads];
+    sweep.retain(|&c| c <= max_threads.max(1));
+    sweep.sort_unstable();
+    sweep.dedup();
+    let mut serial_qps = f64::NAN;
+    for &clients in &sweep {
+        let sw = Stopwatch::start();
+        let workers: Vec<_> = (0..clients)
+            .map(|c| {
+                std::thread::spawn(move || {
+                    for i in 0..per_client {
+                        let t = targets[(c + i) % targets.len()];
+                        let mut s = TcpStream::connect(addr).unwrap();
+                        s.write_all(
+                            format!("GET {t} HTTP/1.1\r\nHost: bench\r\n\r\n").as_bytes(),
+                        )
+                        .unwrap();
+                        let mut resp = String::new();
+                        s.read_to_string(&mut resp).unwrap();
+                        assert!(resp.starts_with("HTTP/1.1 200"), "{t}: {resp}");
+                    }
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().unwrap();
+        }
+        let secs = sw.secs();
+        let qps = (clients * per_client) as f64 / secs;
+        if clients == 1 {
+            serial_qps = qps;
+        }
+        table.row(vec![
+            "serve HTTP qps".into(),
+            format!("{} query kinds", targets.len()),
+            format!("{clients}"),
+            format!("{secs:.4}"),
+            format!("{:.2}x", qps / serial_qps),
+            format!("{qps:.0} req/s"),
+        ]);
+    }
+    handle.stop();
 }
 
 /// XLA rows degrade gracefully at every step: a missing PJRT runtime

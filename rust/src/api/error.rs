@@ -42,6 +42,20 @@ pub enum ApiError {
     Backend(String),
     /// Malformed command-line invocation.
     Usage(String),
+    /// A persisted artifact could not be saved, loaded, or parsed:
+    /// IO failure, bad magic/version/kind, checksum mismatch from
+    /// corruption or truncation, or shape-incoherent content. The
+    /// loader never panics on bad bytes — every failure is this
+    /// variant.
+    Artifact(String),
+    /// The serving layer failed (socket bind/accept, malformed request
+    /// framing). Per-request problems are HTTP-level responses, not
+    /// errors; this variant is for failures of the server itself.
+    Server(String),
+    /// A query against a [`crate::api::FittedModel`] was invalid:
+    /// non-finite or out-of-range quantile level, NaN CDF input,
+    /// margin index out of range, dimension mismatch.
+    Query(String),
     /// The streaming pipeline failed mid-run (fatal shard read,
     /// exhausted transient retries, invalid data under
     /// `InvalidPolicy::Error`, a reduce that could not proceed). Carries
@@ -89,6 +103,9 @@ impl fmt::Display for ApiError {
                 write!(f, "unknown dataset `{name}` ({known})")
             }
             ApiError::Data(msg) => write!(f, "data source error: {msg}"),
+            ApiError::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            ApiError::Server(msg) => write!(f, "server error: {msg}"),
+            ApiError::Query(msg) => write!(f, "invalid query: {msg}"),
             ApiError::Io(msg) => write!(f, "{msg}"),
             ApiError::Backend(msg) => write!(f, "backend error: {msg}"),
             ApiError::Usage(msg) => write!(f, "{msg}"),

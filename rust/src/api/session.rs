@@ -28,8 +28,9 @@ use crate::coordinator::pipeline::{StreamingPipeline, StreamStats};
 use crate::coreset::samplers::build_coreset_on;
 use crate::coreset::{Coreset, Method};
 use crate::data::{scrub_invalid, InvalidPolicy};
-use crate::fit::{fit_native_with_sink, FitOptions, OptimizerKind};
+use crate::fit::{fit_native_warm_with_sink, fit_native_with_sink, FitOptions, OptimizerKind};
 use crate::linalg::Mat;
+use crate::runtime::artifact::{Artifact, ModelArtifact, ScalerState, SketchArtifact};
 use crate::util::degrade::{DegradeSink, Degradations};
 use crate::mctm::{self, density, ModelSpec, Params};
 use crate::util::parallel::{self, Pool};
@@ -37,6 +38,7 @@ use crate::util::rng::Rng;
 use crate::util::special::{norm_cdf, norm_quantile};
 use crate::util::Stopwatch;
 use std::borrow::Cow;
+use std::path::Path;
 
 /// Builder for a [`Session`]. Every knob is validated in [`Self::build`];
 /// invalid values surface as typed [`ApiError::Config`] /
@@ -313,8 +315,8 @@ impl Session {
     pub fn coreset<S: DataSource>(&self, source: S) -> Result<CoresetReport, ApiError> {
         let sink = DegradeSink::new();
         Ok(match self.sketch(source, &sink)? {
-            Sketch::Batch { data, cs, seconds, .. } => {
-                self.batch_report(&data, &cs, seconds, &sink)
+            Sketch::Batch { data, design, cs, seconds } => {
+                self.batch_report(&data, &design.scaler, &cs, seconds, &sink)
             }
             Sketch::Stream { rows, weights, n_hull, stats, seconds, .. } => {
                 self.stream_report(rows, weights, n_hull, stats, seconds, &sink)
@@ -337,7 +339,7 @@ impl Session {
                 let sub = design.select(&cs.indices);
                 let fit =
                     fit_native_with_sink(spec, &sub, cs.weights.clone(), &self.fit, &sink);
-                let report = self.batch_report(&data, &cs, seconds, &sink);
+                let report = self.batch_report(&data, &design.scaler, &cs, seconds, &sink);
                 Ok(FittedModel::assemble(spec, fit, design.scaler.clone(), report))
             }
             Sketch::Stream { rows, weights, n_hull, stats, j, seconds } => {
@@ -427,6 +429,7 @@ impl Session {
     fn batch_report(
         &self,
         data: &Mat,
+        scaler: &Scaler,
         cs: &Coreset,
         seconds: f64,
         sink: &DegradeSink,
@@ -441,6 +444,9 @@ impl Session {
             indices: Some(cs.indices.clone()),
             rows: data.select_rows(&cs.indices),
             weights: cs.weights.clone(),
+            // the full-data scaler: what a refit needs to rebuild the
+            // sub-design bit-identically without the original data
+            scaler: Some(scaler.clone()),
             stream: None,
             degradations: sink.snapshot(),
             seconds,
@@ -466,10 +472,102 @@ impl Session {
             indices: None,
             rows,
             weights,
+            // streamed fits scale on the coreset rows themselves, so a
+            // refit can (and does) rebuild the scaler from `rows`
+            scaler: None,
             stream: Some(stats),
             degradations: sink.snapshot(),
             seconds,
         }
+    }
+
+    /// Re-fit this session's model from a persisted sketch — the "fit
+    /// once, serve forever" path (ROADMAP item 1): load a
+    /// [`CoresetReport`] with [`CoresetReport::load`] and serve new
+    /// scenarios without ever re-reading the original data.
+    ///
+    /// Reproducibility: a batch sketch carries the full-data scaler, so
+    /// `refit` rebuilds the exact sub-design of the direct
+    /// [`Session::fit`] and — for the same session knobs — returns
+    /// **bit-identical** parameters. A streamed sketch refits the way
+    /// the direct streaming fit does (scaler fit on the coreset rows),
+    /// which is likewise bit-identical to it.
+    pub fn refit(&self, sketch: &CoresetReport) -> Result<FittedModel, ApiError> {
+        self.refit_inner(sketch, None)
+    }
+
+    /// [`Session::refit`] warm-started from a previous optimum — the
+    /// scenario-serving fast path: load one sketch, then fit many
+    /// stress shifts / what-if variants (different `fit_options`,
+    /// optimizer budgets, …) cheaply, each starting from the last
+    /// model's parameters instead of from scratch. `warm.spec` must
+    /// match the sketch's J and this session's basis size.
+    pub fn refit_warm(
+        &self,
+        sketch: &CoresetReport,
+        warm: &Params,
+    ) -> Result<FittedModel, ApiError> {
+        self.refit_inner(sketch, Some(warm))
+    }
+
+    fn refit_inner(
+        &self,
+        sketch: &CoresetReport,
+        warm: Option<&Params>,
+    ) -> Result<FittedModel, ApiError> {
+        let j = sketch.rows.cols;
+        if sketch.rows.rows == 0 || j == 0 {
+            return Err(ApiError::Data("sketch has no rows to refit on".into()));
+        }
+        if sketch.weights.len() != sketch.rows.rows {
+            return Err(ApiError::Data(format!(
+                "sketch has {} rows but {} weights",
+                sketch.rows.rows,
+                sketch.weights.len()
+            )));
+        }
+        let spec = ModelSpec::new(j, self.d);
+        if let Some(p) = warm {
+            if p.spec != spec {
+                return Err(ApiError::Query(format!(
+                    "warm-start params have shape J={} d={}, refit needs J={j} d={}",
+                    p.spec.j, p.spec.d, self.d
+                )));
+            }
+        }
+        let pool = self.pool();
+        let design = match &sketch.scaler {
+            Some(s) => {
+                if s.mins.len() != j {
+                    return Err(ApiError::Data(format!(
+                        "sketch scaler covers {} columns, rows have {j}",
+                        s.mins.len()
+                    )));
+                }
+                Design::build_with_scaler_on(&sketch.rows, self.d, s.clone(), &pool)
+            }
+            None => Design::build_on(&sketch.rows, self.d, self.eps, &pool),
+        };
+        let sink = DegradeSink::new();
+        let fit = match warm {
+            Some(p) => fit_native_warm_with_sink(
+                spec,
+                &design,
+                sketch.weights.clone(),
+                p.x.clone(),
+                &self.fit,
+                &sink,
+            ),
+            None => {
+                fit_native_with_sink(spec, &design, sketch.weights.clone(), &self.fit, &sink)
+            }
+        };
+        // the refit's diagnostics carry the sketch's provenance plus
+        // whatever the optimizer degraded through this run
+        let mut report = sketch.clone();
+        report.degradations.merge(&sink.snapshot());
+        let scaler = design.scaler.clone();
+        Ok(FittedModel::assemble(spec, fit, scaler, report))
     }
 }
 
@@ -529,11 +627,117 @@ pub struct CoresetReport {
     /// still valid but was produced through a documented degradation,
     /// visible here instead of a log line or a panic.
     pub degradations: Degradations,
+    /// Full-data scaler on the batch path (what [`Session::refit`]
+    /// needs to rebuild the exact sub-design without the original
+    /// data); `None` on the streaming path, where the direct fit
+    /// scales on the coreset rows themselves.
+    pub scaler: Option<Scaler>,
     /// wall-clock seconds spent sampling: the score computation + draw
     /// on the batch path (excluding the design build, matching the
     /// paper tables' sampling-time column), the whole pipeline run on
     /// the streaming path
     pub seconds: f64,
+}
+
+/// `basis::Scaler` → persisted state.
+fn scaler_state(s: &Scaler) -> ScalerState {
+    ScalerState { eps: s.eps, mins: s.mins.clone(), maxs: s.maxs.clone() }
+}
+
+/// Persisted state → `basis::Scaler`.
+fn scaler_from_state(s: &ScalerState) -> Scaler {
+    Scaler { mins: s.mins.clone(), maxs: s.maxs.clone(), eps: s.eps }
+}
+
+/// Resolve a persisted method name against the strategy registry,
+/// recovering the `&'static str` the in-memory reports carry.
+fn method_name_from_artifact(name: &str) -> Result<&'static str, ApiError> {
+    Method::parse(name)
+        .map(|m| m.name())
+        .map_err(|_| {
+            ApiError::Artifact(format!(
+                "artifact names unknown sampling method `{name}` \
+                 (written by a newer build?)"
+            ))
+        })
+}
+
+impl CoresetReport {
+    /// Persisted form of this sketch. Wall-clock fields (`seconds`,
+    /// `stream` timings), `indices`, and `degradations` are run
+    /// ephemera, deliberately excluded so the artifact bytes are a pure
+    /// function of the sketch content (same seed ⇒ same bytes).
+    pub fn to_artifact(&self) -> SketchArtifact {
+        SketchArtifact {
+            method: self.method.to_string(),
+            requested: self.requested,
+            n_hull: self.n_hull,
+            n_seen: self.n_seen,
+            rows: self.rows.clone(),
+            weights: self.weights.clone(),
+            scaler: self.scaler.as_ref().map(scaler_state),
+        }
+    }
+
+    /// Rebuild a report from its persisted form. Ephemeral fields come
+    /// back empty (`seconds = 0`, no `indices` / `stream` /
+    /// `degradations`); everything a [`Session::refit`] needs survives.
+    /// `total_weight` is recomputed with the same summation the
+    /// streaming report uses, so it is bitwise-stable across the trip.
+    pub fn from_artifact(a: &SketchArtifact) -> Result<CoresetReport, ApiError> {
+        if a.rows.rows == 0 || a.rows.cols == 0 {
+            return Err(ApiError::Artifact("sketch artifact has no rows".into()));
+        }
+        if a.weights.len() != a.rows.rows {
+            return Err(ApiError::Artifact(format!(
+                "sketch artifact has {} rows but {} weights",
+                a.rows.rows,
+                a.weights.len()
+            )));
+        }
+        if let Some(s) = &a.scaler {
+            if s.mins.len() != a.rows.cols || s.maxs.len() != a.rows.cols {
+                return Err(ApiError::Artifact(format!(
+                    "sketch artifact scaler covers {} columns, rows have {}",
+                    s.mins.len(),
+                    a.rows.cols
+                )));
+            }
+        }
+        Ok(CoresetReport {
+            method: method_name_from_artifact(&a.method)?,
+            requested: a.requested,
+            size: a.rows.rows,
+            n_hull: a.n_hull,
+            total_weight: a.weights.iter().sum(),
+            n_seen: a.n_seen,
+            indices: None,
+            rows: a.rows.clone(),
+            weights: a.weights.clone(),
+            scaler: a.scaler.as_ref().map(scaler_from_state),
+            stream: None,
+            degradations: Degradations::default(),
+            seconds: 0.0,
+        })
+    }
+
+    /// Persist this sketch (atomic write, checksummed format v1).
+    pub fn save(&self, path: &Path) -> Result<(), ApiError> {
+        Artifact::Sketch(self.to_artifact()).save(path)
+    }
+
+    /// Load a sketch persisted by [`CoresetReport::save`]. A model
+    /// artifact at `path` is a typed error, never a misparse.
+    pub fn load(path: &Path) -> Result<CoresetReport, ApiError> {
+        match Artifact::load(path)? {
+            Artifact::Sketch(a) => CoresetReport::from_artifact(&a),
+            Artifact::Model(_) => Err(ApiError::Artifact(format!(
+                "{} holds a model artifact, not a sketch \
+                 (load it with FittedModel::load)",
+                path.display()
+            ))),
+        }
+    }
 }
 
 /// Coreset + fit statistics carried by every [`FittedModel`].
@@ -604,6 +808,115 @@ impl FittedModel {
         &self.diagnostics
     }
 
+    /// Persisted form of this model's query state: the free parameter
+    /// vector x (ϑ and σ are pure bitwise functions of x, recomputed on
+    /// load), the scaler, and the coreset's summary provenance.
+    /// Wall-clock fields, coreset rows, and degradation counters are
+    /// run ephemera and deliberately excluded, so the artifact bytes
+    /// are a pure function of the fitted state (same seed ⇒ same
+    /// bytes).
+    pub fn to_artifact(&self) -> ModelArtifact {
+        let c = &self.diagnostics.coreset;
+        ModelArtifact {
+            j: self.spec.j,
+            d: self.spec.d,
+            x: self.params.x.clone(),
+            scaler: scaler_state(&self.scaler),
+            fit_nll: self.diagnostics.fit_nll,
+            fit_iters: self.diagnostics.fit_iters,
+            converged: self.diagnostics.converged,
+            method: c.method.to_string(),
+            requested: c.requested,
+            size: c.size,
+            n_hull: c.n_hull,
+            n_seen: c.n_seen,
+            total_weight: c.total_weight,
+        }
+    }
+
+    /// Rebuild a query-serving model from its persisted form. ϑ and σ
+    /// are recomputed from x through the same code the original fit
+    /// used, so every query (`log_density`, CDF, quantile, sampling
+    /// with the same RNG) is **bitwise identical** to the model that
+    /// was saved. Shape-incoherent artifacts are typed errors — this
+    /// never panics on bad content.
+    pub fn from_artifact(a: &ModelArtifact) -> Result<FittedModel, ApiError> {
+        if a.j == 0 || a.d < 2 {
+            return Err(ApiError::Artifact(format!(
+                "model artifact has invalid shape J={} d={}",
+                a.j, a.d
+            )));
+        }
+        let n_params = a.j * a.d + a.j * (a.j - 1) / 2;
+        if a.x.len() != n_params {
+            return Err(ApiError::Artifact(format!(
+                "model artifact J={} d={} needs {n_params} parameters, has {}",
+                a.j,
+                a.d,
+                a.x.len()
+            )));
+        }
+        if a.scaler.mins.len() != a.j || a.scaler.maxs.len() != a.j {
+            return Err(ApiError::Artifact(format!(
+                "model artifact scaler covers {} columns, model has J={}",
+                a.scaler.mins.len(),
+                a.j
+            )));
+        }
+        let method = method_name_from_artifact(&a.method)?;
+        let spec = ModelSpec::new(a.j, a.d);
+        let params = Params::new(spec, a.x.clone());
+        let theta = params.theta();
+        let sigmas = density::marginal_sigmas(&params);
+        Ok(FittedModel {
+            spec,
+            params,
+            scaler: scaler_from_state(&a.scaler),
+            theta,
+            sigmas,
+            diagnostics: Diagnostics {
+                coreset: CoresetReport {
+                    method,
+                    requested: a.requested,
+                    size: a.size,
+                    n_hull: a.n_hull,
+                    total_weight: a.total_weight,
+                    n_seen: a.n_seen,
+                    indices: None,
+                    rows: Mat::zeros(0, a.j),
+                    weights: Vec::new(),
+                    scaler: None,
+                    stream: None,
+                    degradations: Degradations::default(),
+                    seconds: 0.0,
+                },
+                fit_nll: a.fit_nll,
+                fit_iters: a.fit_iters,
+                fit_seconds: 0.0,
+                converged: a.converged,
+            },
+        })
+    }
+
+    /// Persist this model (atomic write, checksummed format v1).
+    /// `save(load(save(m))) == save(m)` byte for byte.
+    pub fn save(&self, path: &Path) -> Result<(), ApiError> {
+        Artifact::Model(self.to_artifact()).save(path)
+    }
+
+    /// Load a model persisted by [`FittedModel::save`]. A sketch
+    /// artifact at `path` is a typed error pointing at the right API.
+    pub fn load(path: &Path) -> Result<FittedModel, ApiError> {
+        match Artifact::load(path)? {
+            Artifact::Model(a) => FittedModel::from_artifact(&a),
+            Artifact::Sketch(_) => Err(ApiError::Artifact(format!(
+                "{} holds a sketch artifact, not a model \
+                 (load it with CoresetReport::load and fit via Session::refit)",
+                path.display()
+            ))),
+        }
+    }
+
     /// Joint log-density at a raw J-vector (original data scale).
     pub fn log_density(&self, y: &[f64]) -> f64 {
         density::log_joint_density(&self.params, &self.scaler, y)
@@ -629,10 +942,40 @@ impl FittedModel {
     }
 
     /// Marginal CDF F_j(y) of component `j` at raw value `y`.
+    ///
+    /// Pinned edge behavior: `y = +∞` returns exactly `1.0` and
+    /// `y = −∞` returns exactly `0.0` (any distribution's CDF limits),
+    /// rather than whatever the clamp-then-transform pipeline happens
+    /// to produce. `NaN` propagates to a `NaN` result — use
+    /// [`Self::try_cdf`] to get a typed error instead.
     pub fn marginal_cdf(&self, j: usize, y: f64) -> f64 {
         assert!(j < self.spec.j, "margin {j} out of range");
+        if y == f64::INFINITY {
+            return 1.0;
+        }
+        if y == f64::NEG_INFINITY {
+            return 0.0;
+        }
         let h = self.htilde(j, self.scaler.scale(j, y));
         norm_cdf(h / self.sigmas[j])
+    }
+
+    /// [`Self::marginal_cdf`] with a typed-error surface instead of
+    /// panics / NaN propagation: an out-of-range margin or a `NaN`
+    /// input is an [`ApiError::Query`]. ±∞ are valid inputs (exact
+    /// 1.0 / 0.0, as documented on `marginal_cdf`). This is what the
+    /// serving layer calls.
+    pub fn try_cdf(&self, j: usize, y: f64) -> Result<f64, ApiError> {
+        if j >= self.spec.j {
+            return Err(ApiError::Query(format!(
+                "margin {j} out of range (model has J = {})",
+                self.spec.j
+            )));
+        }
+        if y.is_nan() {
+            return Err(ApiError::Query("cdf input is NaN".into()));
+        }
+        Ok(self.marginal_cdf(j, y))
     }
 
     /// Marginal quantile F_j⁻¹(p) of component `j` (p ∈ (0, 1)). The
@@ -641,12 +984,48 @@ impl FittedModel {
     /// (≈ 1% at the default ε) beyond the observed data min/max, not
     /// exactly at it. The same applies to tail draws of `sample` /
     /// `sample_conditional`.
+    ///
+    /// Panics on p outside (0, 1) — including `NaN` — and on an
+    /// out-of-range margin; [`Self::try_quantile`] is the non-panicking
+    /// surface with pinned p = 0 / p = 1 semantics.
     pub fn marginal_quantile(&self, j: usize, p: f64) -> f64 {
         assert!(j < self.spec.j, "margin {j} out of range");
         assert!(p > 0.0 && p < 1.0, "quantile level {p} outside (0, 1)");
         let target = self.sigmas[j] * norm_quantile(p);
         let x = self.invert_htilde(j, target);
         self.scaler.unscale(j, x)
+    }
+
+    /// [`Self::marginal_quantile`] with pinned edge behavior and a
+    /// typed-error surface (what the serving layer calls):
+    ///
+    /// * `NaN` or p outside [0, 1] → [`ApiError::Query`] — never a
+    ///   panic, never a silently nonsensical number.
+    /// * p = 0 / p = 1 → the model's support edges
+    ///   `scaler.unscale(j, 0.0)` / `unscale(j, 1.0)` — the exact
+    ///   saturation limits of `marginal_quantile(j, p)` as p → 0⁺ / 1⁻
+    ///   (~ε/(1 − 2ε) beyond the observed data min/max), so the edge
+    ///   continuously extends the open-interval behavior.
+    pub fn try_quantile(&self, j: usize, p: f64) -> Result<f64, ApiError> {
+        if j >= self.spec.j {
+            return Err(ApiError::Query(format!(
+                "margin {j} out of range (model has J = {})",
+                self.spec.j
+            )));
+        }
+        // NaN fails this containment check too — no separate test
+        if !(0.0..=1.0).contains(&p) {
+            return Err(ApiError::Query(format!(
+                "quantile level {p} outside [0, 1]"
+            )));
+        }
+        if p == 0.0 {
+            return Ok(self.scaler.unscale(j, 0.0));
+        }
+        if p == 1.0 {
+            return Ok(self.scaler.unscale(j, 1.0));
+        }
+        Ok(self.marginal_quantile(j, p))
     }
 
     /// Draw `n` joint samples on the original data scale.

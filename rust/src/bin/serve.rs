@@ -1,0 +1,103 @@
+//! `mctm-serve` — the deployment-shaped serving binary: point it at a
+//! directory of persisted `*.mctm` model artifacts and it answers
+//! density / CDF / quantile / sample / conditional queries over HTTP
+//! until killed. Unlike `mctm-coreset serve` it carries no experiment
+//! configuration at all — fit and `save` elsewhere, serve here.
+//!
+//! USAGE: mctm-serve --models DIR [--addr HOST:PORT] [--threads N]
+
+use mctm_coreset::server::{ModelRegistry, Server};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn usage() -> &'static str {
+    "mctm-serve — serve persisted mctm-coreset model artifacts over HTTP
+
+USAGE:
+  mctm-serve --models DIR [--addr HOST:PORT] [--threads N]
+
+  --models DIR     directory of *.mctm model artifacts (written by
+                   `mctm-coreset save --out`), registered by file stem
+  --addr HOST:PORT bind address (default 127.0.0.1:7878; :0 picks a
+                   free port — the bound address is printed)
+  --threads N      worker threads (default: available parallelism)
+
+ENDPOINTS (GET, JSON):
+  /health   /metrics   /v1/models
+  /v1/models/{name}/density?y=a,b,…
+  /v1/models/{name}/cdf?j=0&y=1.5
+  /v1/models/{name}/quantile?j=0&p=0.5
+  /v1/models/{name}/sample?n=10&seed=1
+  /v1/models/{name}/conditional?given=a,b&n=5&seed=2"
+}
+
+fn parse_args() -> Result<(PathBuf, String), String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut models: Option<PathBuf> = None;
+    let mut addr = "127.0.0.1:7878".to_string();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--models" => {
+                models = Some(PathBuf::from(
+                    args.get(i + 1).ok_or("--models needs a value")?,
+                ));
+                i += 2;
+            }
+            "--addr" => {
+                addr = args.get(i + 1).ok_or("--addr needs a value")?.clone();
+                i += 2;
+            }
+            "--threads" => {
+                let n: usize = args
+                    .get(i + 1)
+                    .ok_or("--threads needs a value")?
+                    .parse()
+                    .map_err(|_| "--threads needs a positive integer".to_string())?;
+                mctm_coreset::util::parallel::set_threads(n);
+                i += 2;
+            }
+            "--help" | "-h" | "help" => {
+                println!("{}", usage());
+                std::process::exit(0);
+            }
+            other => return Err(format!("unknown flag {other}\n\n{}", usage())),
+        }
+    }
+    let models = models.ok_or_else(|| format!("--models DIR is required\n\n{}", usage()))?;
+    Ok((models, addr))
+}
+
+fn main() {
+    let (models, addr) = match parse_args() {
+        Ok(v) => v,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let registry = Arc::new(ModelRegistry::new());
+    match registry.load_dir(&models) {
+        Ok(0) => {
+            eprintln!("no *.mctm artifacts in {}", models.display());
+            std::process::exit(1);
+        }
+        Ok(n) => println!("loaded {n} model(s) from {}", models.display()),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+    for name in registry.names() {
+        println!("  {name}");
+    }
+    let server = match Server::bind(&addr, registry) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!("serving on http://{}", server.local_addr());
+    server.run();
+}

@@ -193,6 +193,33 @@ pub fn fit_native_with_sink(
     fit_with_sink(&obj, spec, opts, sink)
 }
 
+/// [`fit_native_with_sink`] starting from an explicit parameter vector
+/// instead of [`Params::init`] — the warm-start path behind
+/// `api::Session::refit_warm`: serving many stress/what-if scenarios
+/// off one persisted sketch reuses the previous optimum as the start,
+/// which typically converges in a fraction of the cold iterations.
+/// `x0.len()` must equal `spec.n_params()` (callers validate).
+pub fn fit_native_warm_with_sink(
+    spec: ModelSpec,
+    design: &Design,
+    weights: Vec<f64>,
+    x0: Vec<f64>,
+    opts: &FitOptions,
+    sink: &DegradeSink,
+) -> FitResult {
+    debug_assert_eq!(x0.len(), spec.n_params());
+    let obj = NativeNll::new(spec, design, weights);
+    let sw = Stopwatch::start();
+    let (x, nll, iters, converged) = minimize_with_sink(&obj, x0, opts, sink);
+    FitResult {
+        params: Params::new(spec, x),
+        nll,
+        iters,
+        seconds: sw.secs(),
+        converged,
+    }
+}
+
 /// Fit with an arbitrary objective (e.g. the XLA-backed one).
 pub fn fit_with(obj: &dyn Objective, spec: ModelSpec, opts: &FitOptions) -> FitResult {
     fit_with_sink(obj, spec, opts, &DegradeSink::new())

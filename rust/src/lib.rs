@@ -19,6 +19,7 @@ pub mod fit;
 pub mod linalg;
 pub mod mctm;
 pub mod runtime;
+pub mod server;
 pub mod util;
 
 /// The one-stop import for the public facade: builder → session →
@@ -53,6 +54,10 @@ pub mod prelude {
     pub use crate::fit::{FitOptions, FitResult, OptimizerKind};
     pub use crate::linalg::Mat;
     pub use crate::mctm::{lambda_error, loglik_ratio, theta_l2, ModelSpec, Params};
+    pub use crate::runtime::artifact::{
+        Artifact, ModelArtifact, ScalerState, SketchArtifact, ARTIFACT_MAGIC, ARTIFACT_VERSION,
+    };
+    pub use crate::server::{Metrics, MetricsSnapshot, ModelRegistry, Server, ServerHandle};
     pub use crate::util::degrade::{DegradeSink, Degradations};
     pub use crate::util::rng::Rng;
     pub use crate::util::{fmt_ms, mean, median, std_dev, Stopwatch};

@@ -1,0 +1,675 @@
+//! Versioned, deterministic, zero-dependency persistence for fitted
+//! models and coreset sketches — ROADMAP item 1's "fit once, serve
+//! forever" pillar.
+//!
+//! Two artifact kinds share one container format:
+//!
+//! * **model** — everything [`crate::api::FittedModel`] needs to answer
+//!   queries: the model shape (J, d), the free parameter vector x
+//!   (β then λ — the cached ϑ and σ are pure bitwise-deterministic
+//!   functions of x, so they are recomputed on load, never stored), the
+//!   min–max [`crate::basis::Scaler`] state, and the fit / coreset
+//!   summary that [`crate::api::Diagnostics`] reports.
+//! * **sketch** — a persisted [`crate::api::CoresetReport`]: coreset
+//!   rows, weights, hull provenance (`n_hull`), stream provenance
+//!   (`n_seen`, method, requested budget) and — on the batch path — the
+//!   full-data scaler, which is what lets [`crate::api::Session::refit`]
+//!   reproduce a direct fit bit-for-bit without re-reading the data.
+//!
+//! # Format (v1)
+//!
+//! Line-oriented ASCII. Every `f64` is serialized as the 16-hex-digit
+//! big-endian rendering of [`f64::to_bits`], so round-trips are
+//! **bitwise lossless** (including −0.0, subnormals, and the exact FP
+//! values determinism pins care about) and the writer is a pure
+//! function of the logical content — `save(load(save(m))) == save(m)`
+//! byte for byte. Wall-clock fields (`seconds`, `fit_seconds`) and
+//! run-local observability (stream stats, degradation counters, batch
+//! indices) are deliberately **not** part of the artifact: they vary
+//! across runs of the same seed and would break byte-determinism.
+//!
+//! ```text
+//! mctm-artifact v1 model\n     header: magic, version, kind
+//! j 2\n                        …typed key-prefixed fields…
+//! x 17 3ff0000000000000 …\n    vectors: count then hex words
+//! end 0123456789abcdef\n       FNV-1a 64 checksum of every prior byte
+//! ```
+//!
+//! The trailing checksum makes corruption and truncation first-class,
+//! typed failures ([`crate::api::ApiError::Artifact`]) instead of
+//! garbage models: a reader first verifies the `end` line, then parses
+//! strictly (every line's leading token must match the expected key).
+//! [`Artifact::save`] writes to a temp file and renames, so a killed
+//! process can never leave a half-written artifact under the final
+//! name.
+//!
+//! Compatibility promise: v1 artifacts will remain loadable; any
+//! incompatible change bumps the version token and readers keep
+//! understanding older versions (an *unknown, newer* version is a typed
+//! error naming both versions).
+
+use crate::api::ApiError;
+use crate::linalg::Mat;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Format version written by this build (the `v1` header token).
+pub const ARTIFACT_VERSION: u32 = 1;
+
+/// Magic token opening every artifact file.
+pub const ARTIFACT_MAGIC: &str = "mctm-artifact";
+
+/// Persisted min–max scaler state (`basis::Scaler` without behavior).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScalerState {
+    pub eps: f64,
+    pub mins: Vec<f64>,
+    pub maxs: Vec<f64>,
+}
+
+/// Persisted query state of a fitted model. See the module doc for
+/// what is (and deliberately is not) included.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelArtifact {
+    /// number of output components J
+    pub j: usize,
+    /// Bernstein basis size d
+    pub d: usize,
+    /// free parameter vector x (β row-major, then λ lower-triangular)
+    pub x: Vec<f64>,
+    /// min–max scaler fitted with the model
+    pub scaler: ScalerState,
+    /// final NLL on the (weighted) coreset
+    pub fit_nll: f64,
+    pub fit_iters: usize,
+    pub converged: bool,
+    /// registry name of the sampling method that built the coreset
+    pub method: String,
+    /// requested coreset budget k
+    pub requested: usize,
+    /// actual coreset size
+    pub size: usize,
+    /// hull-provenance count
+    pub n_hull: usize,
+    /// raw rows consumed to build the coreset
+    pub n_seen: usize,
+    /// Σ coreset weights
+    pub total_weight: f64,
+}
+
+/// Persisted coreset sketch: what [`crate::api::Session::refit`]
+/// consumes to serve new scenarios without re-reading data.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SketchArtifact {
+    /// registry name of the sampling method
+    pub method: String,
+    /// requested budget k
+    pub requested: usize,
+    /// hull-provenance count
+    pub n_hull: usize,
+    /// raw rows consumed to build this sketch
+    pub n_seen: usize,
+    /// coreset rows on the original data scale
+    pub rows: Mat,
+    /// per-row weights aligned with `rows`
+    pub weights: Vec<f64>,
+    /// the full-data scaler (batch sketches; `None` for streamed
+    /// sketches, whose direct fit scales on the coreset rows themselves)
+    pub scaler: Option<ScalerState>,
+}
+
+/// A parsed artifact of either kind.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Artifact {
+    Model(ModelArtifact),
+    Sketch(SketchArtifact),
+}
+
+impl Artifact {
+    /// The kind token written into the header line.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Artifact::Model(_) => "model",
+            Artifact::Sketch(_) => "sketch",
+        }
+    }
+
+    /// Canonical serialized bytes (pure function of the content).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = String::new();
+        // infallible: fmt::Write on String never errors
+        let _ = writeln!(out, "{ARTIFACT_MAGIC} v{ARTIFACT_VERSION} {}", self.kind());
+        match self {
+            Artifact::Model(m) => write_model(&mut out, m),
+            Artifact::Sketch(s) => write_sketch(&mut out, s),
+        }
+        let crc = fnv1a64(out.as_bytes());
+        let _ = writeln!(out, "end {crc:016x}");
+        out.into_bytes()
+    }
+
+    /// Parse serialized bytes: checksum first, then a strict
+    /// line-by-line read. Every failure — wrong magic, newer version,
+    /// unknown kind, truncation, bit flips, malformed fields — is a
+    /// typed [`ApiError::Artifact`], never a panic.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Artifact, ApiError> {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|_| bad("artifact is not valid UTF-8 (corrupted?)"))?;
+        // the `end <crc>` trailer guards everything before it
+        let end_at = text
+            .rfind("\nend ")
+            .ok_or_else(|| bad("truncated artifact: missing `end <checksum>` trailer"))?;
+        let body = &text[..end_at + 1]; // includes the trailing '\n'
+        let trailer = &text[end_at + 1..];
+        let crc_hex = trailer
+            .strip_prefix("end ")
+            .and_then(|t| t.strip_suffix('\n'))
+            .ok_or_else(|| bad("malformed `end` trailer"))?;
+        let stored = u64::from_str_radix(crc_hex.trim(), 16)
+            .map_err(|_| bad("malformed checksum in `end` trailer"))?;
+        let actual = fnv1a64(body.as_bytes());
+        if stored != actual {
+            return Err(bad(format!(
+                "checksum mismatch (stored {stored:016x}, computed {actual:016x}) — \
+                 artifact is corrupted or truncated"
+            )));
+        }
+        let mut r = Reader { lines: body.lines() };
+        let header = r.raw_line("header")?;
+        let mut h = header.split_whitespace();
+        match h.next() {
+            Some(ARTIFACT_MAGIC) => {}
+            _ => return Err(bad(format!("bad magic (expected `{ARTIFACT_MAGIC}`)"))),
+        }
+        match h.next() {
+            Some(v) if v == format!("v{ARTIFACT_VERSION}") => {}
+            Some(other) => {
+                return Err(bad(format!(
+                    "unsupported artifact version `{other}` (this build reads \
+                     v{ARTIFACT_VERSION} and older)"
+                )))
+            }
+            None => return Err(bad("header missing version token")),
+        }
+        let artifact = match h.next() {
+            Some("model") => Artifact::Model(read_model(&mut r)?),
+            Some("sketch") => Artifact::Sketch(read_sketch(&mut r)?),
+            Some(other) => return Err(bad(format!("unknown artifact kind `{other}`"))),
+            None => return Err(bad("header missing kind token")),
+        };
+        if let Some(extra) = r.lines.next() {
+            return Err(bad(format!("trailing data after artifact body: `{extra}`")));
+        }
+        Ok(artifact)
+    }
+
+    /// Write atomically: serialize, write `<path>.tmp`, rename into
+    /// place — a killed process never leaves a truncated file under the
+    /// final name.
+    pub fn save(&self, path: &Path) -> Result<(), ApiError> {
+        let bytes = self.to_bytes();
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, &bytes).map_err(|e| {
+            bad(format!("writing {}: {e}", tmp.display()))
+        })?;
+        std::fs::rename(&tmp, path).map_err(|e| {
+            bad(format!("renaming {} into place: {e}", path.display()))
+        })?;
+        Ok(())
+    }
+
+    /// Read and parse `path`.
+    pub fn load(path: &Path) -> Result<Artifact, ApiError> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| bad(format!("reading {}: {e}", path.display())))?;
+        Self::from_bytes(&bytes)
+            .map_err(|e| bad(format!("{}: {e}", path.display())))
+    }
+}
+
+fn bad(reason: impl Into<String>) -> ApiError {
+    ApiError::Artifact(reason.into())
+}
+
+/// FNV-1a 64-bit — tiny, dependency-free, and plenty to catch the
+/// truncation / bit-flip corruption the loader guards against (this is
+/// an integrity check, not a cryptographic one).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---- writers ---------------------------------------------------------
+
+fn hex(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+fn write_vec(out: &mut String, key: &str, v: &[f64]) {
+    let _ = write!(out, "{key} {}", v.len());
+    for x in v {
+        let _ = write!(out, " {}", hex(*x));
+    }
+    out.push('\n');
+}
+
+fn write_scaler(out: &mut String, s: &ScalerState) {
+    let _ = writeln!(out, "eps {}", hex(s.eps));
+    write_vec(out, "mins", &s.mins);
+    write_vec(out, "maxs", &s.maxs);
+}
+
+fn write_model(out: &mut String, m: &ModelArtifact) {
+    let _ = writeln!(out, "j {}", m.j);
+    let _ = writeln!(out, "d {}", m.d);
+    write_vec(out, "x", &m.x);
+    write_scaler(out, &m.scaler);
+    let _ = writeln!(out, "fit_nll {}", hex(m.fit_nll));
+    let _ = writeln!(out, "fit_iters {}", m.fit_iters);
+    let _ = writeln!(out, "converged {}", u8::from(m.converged));
+    let _ = writeln!(out, "method {}", m.method);
+    let _ = writeln!(out, "requested {}", m.requested);
+    let _ = writeln!(out, "size {}", m.size);
+    let _ = writeln!(out, "n_hull {}", m.n_hull);
+    let _ = writeln!(out, "n_seen {}", m.n_seen);
+    let _ = writeln!(out, "total_weight {}", hex(m.total_weight));
+}
+
+fn write_sketch(out: &mut String, s: &SketchArtifact) {
+    let _ = writeln!(out, "method {}", s.method);
+    let _ = writeln!(out, "requested {}", s.requested);
+    let _ = writeln!(out, "n_hull {}", s.n_hull);
+    let _ = writeln!(out, "n_seen {}", s.n_seen);
+    let _ = writeln!(out, "rows {} {}", s.rows.rows, s.rows.cols);
+    for r in 0..s.rows.rows {
+        let row = s.rows.row(r);
+        for (c, x) in row.iter().enumerate() {
+            if c > 0 {
+                out.push(' ');
+            }
+            out.push_str(&hex(*x));
+        }
+        out.push('\n');
+    }
+    write_vec(out, "weights", &s.weights);
+    match &s.scaler {
+        None => {
+            let _ = writeln!(out, "scaler 0");
+        }
+        Some(sc) => {
+            let _ = writeln!(out, "scaler 1");
+            write_scaler(out, sc);
+        }
+    }
+}
+
+// ---- strict reader ---------------------------------------------------
+
+struct Reader<'a> {
+    lines: std::str::Lines<'a>,
+}
+
+impl<'a> Reader<'a> {
+    fn raw_line(&mut self, what: &str) -> Result<&'a str, ApiError> {
+        self.lines
+            .next()
+            .ok_or_else(|| bad(format!("unexpected end of artifact (wanted {what})")))
+    }
+
+    /// Next line, validated to start with `key`; returns the remaining
+    /// whitespace-separated tokens.
+    fn field(&mut self, key: &str) -> Result<std::str::SplitWhitespace<'a>, ApiError> {
+        let line = self.raw_line(key)?;
+        let mut toks = line.split_whitespace();
+        match toks.next() {
+            Some(k) if k == key => Ok(toks),
+            Some(other) => Err(bad(format!("expected field `{key}`, found `{other}`"))),
+            None => Err(bad(format!("expected field `{key}`, found empty line"))),
+        }
+    }
+
+    fn usize_field(&mut self, key: &str) -> Result<usize, ApiError> {
+        let mut toks = self.field(key)?;
+        let tok = toks
+            .next()
+            .ok_or_else(|| bad(format!("field `{key}` missing its value")))?;
+        tok.parse()
+            .map_err(|_| bad(format!("field `{key}`: `{tok}` is not a count")))
+    }
+
+    fn f64_field(&mut self, key: &str) -> Result<f64, ApiError> {
+        let mut toks = self.field(key)?;
+        let tok = toks
+            .next()
+            .ok_or_else(|| bad(format!("field `{key}` missing its value")))?;
+        parse_hex_f64(key, tok)
+    }
+
+    fn bool_field(&mut self, key: &str) -> Result<bool, ApiError> {
+        match self.usize_field(key)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(bad(format!("field `{key}`: `{other}` is not a 0/1 flag"))),
+        }
+    }
+
+    fn string_field(&mut self, key: &str) -> Result<String, ApiError> {
+        let mut toks = self.field(key)?;
+        let tok = toks
+            .next()
+            .ok_or_else(|| bad(format!("field `{key}` missing its value")))?;
+        Ok(tok.to_string())
+    }
+
+    fn vec_field(&mut self, key: &str) -> Result<Vec<f64>, ApiError> {
+        let mut toks = self.field(key)?;
+        let n: usize = toks
+            .next()
+            .and_then(|t| t.parse().ok())
+            .ok_or_else(|| bad(format!("field `{key}` missing its element count")))?;
+        if n > MAX_ELEMS {
+            return Err(bad(format!("field `{key}`: count {n} is implausibly large")));
+        }
+        let mut out = Vec::with_capacity(n);
+        for tok in toks {
+            out.push(parse_hex_f64(key, tok)?);
+        }
+        if out.len() != n {
+            return Err(bad(format!(
+                "field `{key}`: declared {n} elements, found {}",
+                out.len()
+            )));
+        }
+        Ok(out)
+    }
+
+    fn scaler(&mut self) -> Result<ScalerState, ApiError> {
+        let eps = self.f64_field("eps")?;
+        let mins = self.vec_field("mins")?;
+        let maxs = self.vec_field("maxs")?;
+        if mins.len() != maxs.len() {
+            return Err(bad("scaler mins/maxs length mismatch"));
+        }
+        Ok(ScalerState { eps, mins, maxs })
+    }
+}
+
+/// Upper bound on any serialized element count — generous (a 1e8-cell
+/// sketch) but finite, so a corrupted count can't trigger an absurd
+/// allocation before the per-line length check catches it.
+const MAX_ELEMS: usize = 100_000_000;
+
+fn parse_hex_f64(key: &str, tok: &str) -> Result<f64, ApiError> {
+    if tok.len() != 16 {
+        return Err(bad(format!(
+            "field `{key}`: `{tok}` is not a 16-hex-digit f64"
+        )));
+    }
+    u64::from_str_radix(tok, 16)
+        .map(f64::from_bits)
+        .map_err(|_| bad(format!("field `{key}`: `{tok}` is not a 16-hex-digit f64")))
+}
+
+fn read_model(r: &mut Reader) -> Result<ModelArtifact, ApiError> {
+    let j = r.usize_field("j")?;
+    let d = r.usize_field("d")?;
+    let x = r.vec_field("x")?;
+    let scaler = r.scaler()?;
+    let fit_nll = r.f64_field("fit_nll")?;
+    let fit_iters = r.usize_field("fit_iters")?;
+    let converged = r.bool_field("converged")?;
+    let method = r.string_field("method")?;
+    let requested = r.usize_field("requested")?;
+    let size = r.usize_field("size")?;
+    let n_hull = r.usize_field("n_hull")?;
+    let n_seen = r.usize_field("n_seen")?;
+    let total_weight = r.f64_field("total_weight")?;
+    // shape coherence — catches artifacts assembled by hand or damaged
+    // in ways the checksum can't see (it only covers the stored bytes)
+    if j == 0 || d < 2 {
+        return Err(bad(format!("implausible model shape J={j}, d={d}")));
+    }
+    let expect = j * d + j * (j - 1) / 2;
+    if x.len() != expect {
+        return Err(bad(format!(
+            "parameter vector has {} entries, shape J={j} d={d} needs {expect}",
+            x.len()
+        )));
+    }
+    if scaler.mins.len() != j {
+        return Err(bad(format!(
+            "scaler covers {} columns, model has J={j}",
+            scaler.mins.len()
+        )));
+    }
+    Ok(ModelArtifact {
+        j,
+        d,
+        x,
+        scaler,
+        fit_nll,
+        fit_iters,
+        converged,
+        method,
+        requested,
+        size,
+        n_hull,
+        n_seen,
+        total_weight,
+    })
+}
+
+fn read_sketch(r: &mut Reader) -> Result<SketchArtifact, ApiError> {
+    let method = r.string_field("method")?;
+    let requested = r.usize_field("requested")?;
+    let n_hull = r.usize_field("n_hull")?;
+    let n_seen = r.usize_field("n_seen")?;
+    let mut dims = r.field("rows")?;
+    let n: usize = dims
+        .next()
+        .and_then(|t| t.parse().ok())
+        .ok_or_else(|| bad("field `rows` missing its row count"))?;
+    let cols: usize = dims
+        .next()
+        .and_then(|t| t.parse().ok())
+        .ok_or_else(|| bad("field `rows` missing its column count"))?;
+    let cells = n
+        .checked_mul(cols)
+        .filter(|&c| c <= MAX_ELEMS)
+        .ok_or_else(|| bad(format!("implausible sketch shape {n} × {cols}")))?;
+    let mut data = Vec::with_capacity(cells);
+    for i in 0..n {
+        let line = r.raw_line("a sketch row")?;
+        let before = data.len();
+        for tok in line.split_whitespace() {
+            data.push(parse_hex_f64("rows", tok)?);
+        }
+        if data.len() - before != cols {
+            return Err(bad(format!(
+                "sketch row {i} has {} values, expected {cols}",
+                data.len() - before
+            )));
+        }
+    }
+    let rows = Mat::from_vec(n, cols, data);
+    let weights = r.vec_field("weights")?;
+    if weights.len() != n {
+        return Err(bad(format!(
+            "sketch has {n} rows but {} weights",
+            weights.len()
+        )));
+    }
+    let scaler = if r.bool_field("scaler")? {
+        let sc = r.scaler()?;
+        if sc.mins.len() != cols {
+            return Err(bad(format!(
+                "sketch scaler covers {} columns, rows have {cols}",
+                sc.mins.len()
+            )));
+        }
+        Some(sc)
+    } else {
+        None
+    };
+    Ok(SketchArtifact {
+        method,
+        requested,
+        n_hull,
+        n_seen,
+        rows,
+        weights,
+        scaler,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_model() -> ModelArtifact {
+        ModelArtifact {
+            j: 2,
+            d: 3,
+            x: vec![-2.0, 0.5, 0.5, -2.0, 0.5, 0.5, 0.25],
+            scaler: ScalerState {
+                eps: 0.01,
+                mins: vec![-1.0, -3.5],
+                maxs: vec![2.0, 4.5],
+            },
+            fit_nll: 1.2345678901234567,
+            fit_iters: 42,
+            converged: true,
+            method: "l2-hull".into(),
+            requested: 100,
+            size: 104,
+            n_hull: 20,
+            n_seen: 10_000,
+            total_weight: 9_999.5,
+        }
+    }
+
+    fn sample_sketch(scaler: bool) -> SketchArtifact {
+        SketchArtifact {
+            method: "ellipsoid-hull".into(),
+            requested: 3,
+            n_hull: 1,
+            n_seen: 77,
+            rows: Mat::from_vec(3, 2, vec![0.1, -0.2, 1.5, f64::MIN_POSITIVE, -0.0, 3.25]),
+            weights: vec![10.0, 20.5, 46.5],
+            scaler: scaler.then(|| ScalerState {
+                eps: 0.01,
+                mins: vec![-0.0, -0.2],
+                maxs: vec![1.5, 3.25],
+            }),
+        }
+    }
+
+    #[test]
+    fn model_roundtrip_is_byte_identical() {
+        let a = Artifact::Model(sample_model());
+        let bytes = a.to_bytes();
+        let b = Artifact::from_bytes(&bytes).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(bytes, b.to_bytes());
+    }
+
+    #[test]
+    fn sketch_roundtrip_is_byte_identical_with_and_without_scaler() {
+        for with_scaler in [false, true] {
+            let a = Artifact::Sketch(sample_sketch(with_scaler));
+            let bytes = a.to_bytes();
+            let b = Artifact::from_bytes(&bytes).unwrap();
+            assert_eq!(a, b);
+            assert_eq!(bytes, b.to_bytes());
+        }
+    }
+
+    #[test]
+    fn special_float_values_survive_bitwise() {
+        let mut m = sample_model();
+        m.x[0] = -0.0;
+        m.x[1] = f64::MIN_POSITIVE / 2.0; // subnormal
+        m.fit_nll = f64::INFINITY;
+        m.total_weight = f64::NAN;
+        let bytes = Artifact::Model(m).to_bytes();
+        let Artifact::Model(back) = Artifact::from_bytes(&bytes).unwrap() else {
+            panic!("kind changed");
+        };
+        assert_eq!(back.x[0].to_bits(), (-0.0f64).to_bits());
+        assert_eq!(back.x[1].to_bits(), (f64::MIN_POSITIVE / 2.0).to_bits());
+        assert!(back.fit_nll.is_infinite());
+        assert!(back.total_weight.is_nan());
+    }
+
+    #[test]
+    fn truncation_at_every_prefix_is_a_typed_error() {
+        let bytes = Artifact::Model(sample_model()).to_bytes();
+        for cut in 0..bytes.len() {
+            match Artifact::from_bytes(&bytes[..cut]) {
+                Err(ApiError::Artifact(_)) => {}
+                other => panic!("prefix of {cut} bytes: expected typed error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bit_flips_are_typed_errors_or_exact_field_rejections() {
+        let bytes = Artifact::Sketch(sample_sketch(true)).to_bytes();
+        // flip a hex digit inside the body: checksum must catch it
+        let mut corrupt = bytes.clone();
+        let at = bytes.len() / 2;
+        corrupt[at] = if corrupt[at] == b'0' { b'1' } else { b'0' };
+        assert!(matches!(
+            Artifact::from_bytes(&corrupt),
+            Err(ApiError::Artifact(_))
+        ));
+    }
+
+    #[test]
+    fn wrong_magic_version_and_kind_are_typed_errors() {
+        let good = String::from_utf8(Artifact::Model(sample_model()).to_bytes()).unwrap();
+        for (from, to) in [
+            ("mctm-artifact v1 model", "wrong-magic v1 model"),
+            ("mctm-artifact v1 model", "mctm-artifact v99 model"),
+            ("mctm-artifact v1 model", "mctm-artifact v1 flavor"),
+        ] {
+            let mangled = good.replacen(from, to, 1);
+            // re-seal so only the header is wrong, not the checksum
+            let body_end = mangled.rfind("\nend ").unwrap() + 1;
+            let mut resealed = mangled[..body_end].to_string();
+            let crc = fnv1a64(resealed.as_bytes());
+            resealed.push_str(&format!("end {crc:016x}\n"));
+            match Artifact::from_bytes(resealed.as_bytes()) {
+                Err(ApiError::Artifact(msg)) => {
+                    assert!(
+                        msg.contains("magic") || msg.contains("version") || msg.contains("kind"),
+                        "unexpected message: {msg}"
+                    );
+                }
+                other => panic!("expected typed error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn save_load_through_disk() {
+        let dir = std::env::temp_dir().join("mctm_artifact_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.mctm");
+        let a = Artifact::Model(sample_model());
+        a.save(&path).unwrap();
+        assert_eq!(Artifact::load(&path).unwrap(), a);
+        // temp file must not linger
+        assert!(!path.with_extension("tmp").exists());
+        // missing file is typed, names the path
+        let missing = dir.join("nope.mctm");
+        match Artifact::load(&missing) {
+            Err(ApiError::Artifact(msg)) => assert!(msg.contains("nope.mctm")),
+            other => panic!("expected typed error, got {other:?}"),
+        }
+    }
+}

@@ -37,14 +37,26 @@ impl Manifest {
 
     /// Parse manifest JSON text.
     pub fn parse(text: &str, dir: &Path) -> Result<Self> {
-        let tile = extract_usize(text, "\"tile\"")
+        let arr_start = text
+            .find("\"entries\"")
+            .ok_or_else(|| anyhow!("manifest missing entries"))?;
+        // The top-level "tile" must be searched OUTSIDE the entries
+        // array: JSON key order is not guaranteed, and when "entries"
+        // precedes the top-level "tile" a whole-document scan would
+        // silently pick the first entry's per-kernel tile instead.
+        let tile = extract_usize(&text[..arr_start], "\"tile\"")
+            .or_else(|| {
+                // entries listed first: the top-level key lives after
+                // the array, so resume the scan past its MATCHING ']'
+                // (entries hold nested arrays like "inputs": [[15]],
+                // so the first ']' is not the array's end)
+                let after = skip_array(text, arr_start)?;
+                extract_usize(&text[after..], "\"tile\"")
+            })
             .ok_or_else(|| anyhow!("manifest missing top-level tile"))?;
         let mut entries = Vec::new();
         // entries are objects inside the "entries" array; split on '{'
         // after the array opens
-        let arr_start = text
-            .find("\"entries\"")
-            .ok_or_else(|| anyhow!("manifest missing entries"))?;
         let body = &text[arr_start..];
         for obj in body.split('{').skip(1) {
             let end = obj.find('}').unwrap_or(obj.len());
@@ -95,6 +107,43 @@ impl Manifest {
     pub fn path_of(&self, e: &ManifestEntry) -> PathBuf {
         self.dir.join(format!("{}.hlo.txt", e.name))
     }
+}
+
+/// Index just past the `]` closing the JSON array whose key starts at
+/// `key_at`. Tracks nesting depth (entries hold nested arrays like
+/// `"inputs": [[15]]`) and string literals (so a bracket inside a name
+/// can't unbalance the scan). `None` if the array never opens or never
+/// closes.
+fn skip_array(text: &str, key_at: usize) -> Option<usize> {
+    let bytes = text.as_bytes();
+    let open = key_at + text[key_at..].find('[')?;
+    let mut depth = 0usize;
+    let mut in_string = false;
+    let mut escaped = false;
+    for (off, &b) in bytes[open..].iter().enumerate() {
+        if in_string {
+            if escaped {
+                escaped = false;
+            } else if b == b'\\' {
+                escaped = true;
+            } else if b == b'"' {
+                in_string = false;
+            }
+            continue;
+        }
+        match b {
+            b'"' => in_string = true,
+            b'[' => depth += 1,
+            b']' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(open + off + 1);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
 }
 
 fn extract_string(obj: &str, key: &str) -> Option<String> {
@@ -148,6 +197,56 @@ mod tests {
             m.path_of(e),
             PathBuf::from("/tmp/a/nll_grad_j2_d7_t512.hlo.txt")
         );
+    }
+
+    /// Key-order permutation regression: `entries` listed BEFORE the
+    /// top-level `tile` (valid JSON — key order is never guaranteed).
+    /// The old whole-document scan silently picked the first entry's
+    /// per-kernel tile (1024 here) instead of the top-level 512.
+    const SAMPLE_ENTRIES_FIRST: &str = r#"{
+      "entries": [
+        {"name": "nll_grad_j2_d7_t1024", "kind": "nll_grad", "j": 2, "d": 7,
+         "tile": 1024, "n_params": 15, "inputs": [[15],[1024,2],[1024]],
+         "outputs": [[],[15]]},
+        {"name": "gram_d14_t1024", "kind": "gram", "dim": 14, "tile": 1024,
+         "inputs": [[1024,14]], "outputs": [[14,14]]}
+      ],
+      "dtype": "f64", "tile": 512
+    }"#;
+
+    #[test]
+    fn entries_before_toplevel_tile_parses_the_right_tile() {
+        let m = Manifest::parse(SAMPLE_ENTRIES_FIRST, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.tile, 512, "must not pick an entry's per-kernel tile");
+        assert_eq!(m.entries.len(), 2);
+        // per-entry tiles keep their own values
+        assert_eq!(m.nll_grad(2, 7).unwrap().tile, 1024);
+        assert_eq!(m.gram(14).unwrap().tile, 1024);
+    }
+
+    #[test]
+    fn missing_toplevel_tile_is_an_error_not_an_entry_tile() {
+        // entries have tiles but the document has no top-level tile at
+        // all: must error, not silently adopt 1024
+        let text = r#"{
+          "entries": [
+            {"name": "gram_d14_t1024", "kind": "gram", "dim": 14,
+             "tile": 1024, "inputs": [[1024,14]], "outputs": [[14,14]]}
+          ]
+        }"#;
+        let err = Manifest::parse(text, Path::new("/tmp/a")).unwrap_err();
+        assert!(format!("{err:#}").contains("top-level tile"));
+    }
+
+    #[test]
+    fn skip_array_handles_nesting_and_strings() {
+        let text = r#""entries": [[1,2],["a]b",[3]]] , "tile": 7"#;
+        let after = skip_array(text, 0).unwrap();
+        assert_eq!(&text[after..after + 2], " ,");
+        // unterminated array
+        assert!(skip_array(r#""entries": [[1,2]"#, 0).is_none());
+        // no array at all
+        assert!(skip_array(r#""entries": 3"#, 0).is_none());
     }
 
     #[test]

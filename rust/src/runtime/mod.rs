@@ -4,10 +4,12 @@
 //! Python is never on this path — the binary is self-contained once
 //! `make artifacts` has run.
 
+pub mod artifact;
 pub mod engine;
 pub mod manifest;
 pub mod objective;
 
+pub use artifact::{Artifact, ModelArtifact, ScalerState, SketchArtifact};
 pub use engine::{Engine, TiledNll};
 pub use manifest::{Manifest, ManifestEntry};
 pub use objective::XlaNll;

@@ -1,0 +1,741 @@
+//! The serving layer (ROADMAP item 1): fit once, serve forever.
+//!
+//! A [`ModelRegistry`] holds named, immutable [`FittedModel`]s behind
+//! `Arc`s (the model is `Send + Sync`, so queries never lock anything
+//! but the registry map itself). [`Server`] is a hand-rolled HTTP/1.1
+//! front end on `std::net` — the crate is zero-dependency, so there is
+//! no hyper/axum here, just a request-line parser, a bounded header
+//! read, and thread-per-worker connection handling sized by
+//! [`crate::util::parallel::threads`].
+//!
+//! Endpoints (GET only, JSON responses, `Connection: close`):
+//!
+//! | path | query | answer |
+//! |------|-------|--------|
+//! | `/health` | — | `{"status":"ok","models":N}` |
+//! | `/metrics` | — | per-endpoint request counters |
+//! | `/v1/models` | — | registered models + shape summary |
+//! | `/v1/models/{name}/density` | `y=a,b,…` | joint log-density + density |
+//! | `/v1/models/{name}/cdf` | `j=0&y=1.5` | marginal CDF |
+//! | `/v1/models/{name}/quantile` | `j=0&p=0.5` | marginal quantile |
+//! | `/v1/models/{name}/sample` | `n=10&seed=1` | joint draws |
+//! | `/v1/models/{name}/conditional` | `given=a,b&n=5&seed=2` | conditional draws |
+//!
+//! Determinism: sampling endpoints take an explicit `seed` and build a
+//! fresh [`Rng`] per request, so the same request returns the same
+//! bytes no matter which worker serves it or how many requests ran
+//! before. Floats render through Rust's shortest round-trip `Display`,
+//! so a client that parses a JSON number back gets the exact bits the
+//! model computed (non-finite values arrive as the strings `"NaN"`,
+//! `"inf"`, `"-inf"` — JSON has no literals for them).
+//!
+//! Invalid queries (bad `p`, NaN `y`, wrong dimension) are HTTP 400
+//! with the [`ApiError::Query`] message — the pinned edge semantics of
+//! [`FittedModel::try_cdf`] / [`FittedModel::try_quantile`] mean a
+//! malformed request can never panic a worker.
+
+use crate::api::{ApiError, FittedModel};
+use crate::util::parallel;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Largest request head (request line + headers) the server reads.
+const MAX_REQUEST_BYTES: usize = 8 * 1024;
+
+/// Cap on `n` for the sampling endpoints — a serving guard, not a
+/// model limit (one request must not allocate unbounded matrices).
+const MAX_SAMPLES_PER_REQUEST: usize = 100_000;
+
+/// Per-connection socket read timeout.
+const READ_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Named, shared, immutable fitted models. `insert` replaces; readers
+/// clone the `Arc` out so queries run entirely outside the lock.
+#[derive(Default)]
+pub struct ModelRegistry {
+    models: RwLock<HashMap<String, Arc<FittedModel>>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or replace) a model under `name`.
+    pub fn insert(&self, name: &str, model: FittedModel) {
+        let mut map = write_lock(&self.models);
+        map.insert(name.to_string(), Arc::new(model));
+    }
+
+    /// Shared handle to a registered model.
+    pub fn get(&self, name: &str) -> Option<Arc<FittedModel>> {
+        read_lock(&self.models).get(name).cloned()
+    }
+
+    /// Registered names, sorted (stable listings for clients & tests).
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = read_lock(&self.models).keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    pub fn len(&self) -> usize {
+        read_lock(&self.models).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Load every `*.mctm` model artifact in `dir`, registered under its
+    /// file stem. Any unreadable/corrupt artifact is a typed error —
+    /// a serving process must not come up with silently missing models.
+    pub fn load_dir(&self, dir: &Path) -> Result<usize, ApiError> {
+        let entries = std::fs::read_dir(dir)
+            .map_err(|e| ApiError::Artifact(format!("reading {}: {e}", dir.display())))?;
+        let mut loaded = 0;
+        for entry in entries {
+            let entry =
+                entry.map_err(|e| ApiError::Artifact(format!("reading {}: {e}", dir.display())))?;
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("mctm") {
+                continue;
+            }
+            let name = path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .ok_or_else(|| {
+                    ApiError::Artifact(format!("{}: non-UTF-8 file stem", path.display()))
+                })?
+                .to_string();
+            let model = FittedModel::load(&path)?;
+            self.insert(&name, model);
+            loaded += 1;
+        }
+        Ok(loaded)
+    }
+}
+
+fn read_lock<T>(lock: &RwLock<T>) -> std::sync::RwLockReadGuard<'_, T> {
+    lock.read().unwrap_or_else(|e| e.into_inner())
+}
+
+fn write_lock<T>(lock: &RwLock<T>) -> std::sync::RwLockWriteGuard<'_, T> {
+    lock.write().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Per-endpoint request counters (lock-free; relaxed ordering is fine
+/// for monotone counters read after the fact).
+#[derive(Default)]
+pub struct Metrics {
+    pub density: AtomicU64,
+    pub cdf: AtomicU64,
+    pub quantile: AtomicU64,
+    pub sample: AtomicU64,
+    pub conditional: AtomicU64,
+    pub models: AtomicU64,
+    pub health: AtomicU64,
+    pub metrics: AtomicU64,
+    /// every non-2xx response
+    pub errors: AtomicU64,
+}
+
+/// A plain-value copy of [`Metrics`] for assertions and reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub density: u64,
+    pub cdf: u64,
+    pub quantile: u64,
+    pub sample: u64,
+    pub conditional: u64,
+    pub models: u64,
+    pub health: u64,
+    pub metrics: u64,
+    pub errors: u64,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let get = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            density: get(&self.density),
+            cdf: get(&self.cdf),
+            quantile: get(&self.quantile),
+            sample: get(&self.sample),
+            conditional: get(&self.conditional),
+            models: get(&self.models),
+            health: get(&self.health),
+            metrics: get(&self.metrics),
+            errors: get(&self.errors),
+        }
+    }
+
+    fn to_json(&self) -> String {
+        let s = self.snapshot();
+        format!(
+            "{{\"density\":{},\"cdf\":{},\"quantile\":{},\"sample\":{},\
+             \"conditional\":{},\"models\":{},\"health\":{},\"metrics\":{},\
+             \"errors\":{}}}",
+            s.density,
+            s.cdf,
+            s.quantile,
+            s.sample,
+            s.conditional,
+            s.models,
+            s.health,
+            s.metrics,
+            s.errors
+        )
+    }
+}
+
+/// The HTTP front end. Bind, then either [`Server::run`] on the current
+/// thread or [`Server::spawn`] for a background server with a
+/// [`ServerHandle`] to stop it.
+pub struct Server {
+    listener: TcpListener,
+    addr: SocketAddr,
+    registry: Arc<ModelRegistry>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+}
+
+/// Handle to a background server: its bound address, live metrics, and
+/// an orderly [`ServerHandle::stop`].
+pub struct ServerHandle {
+    addr: SocketAddr,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    join: JoinHandle<()>,
+}
+
+impl ServerHandle {
+    /// The actual bound address (resolves `:0` to the kernel's pick).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Signal the accept loop, unblock it with a self-connection, and
+    /// join the server thread.
+    pub fn stop(self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // accept() is blocking; a throwaway connection wakes it so it
+        // can observe the flag
+        if let Ok(s) = TcpStream::connect(self.addr) {
+            drop(s);
+        }
+        let _ = self.join.join();
+    }
+}
+
+impl Server {
+    /// Bind to `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port).
+    pub fn bind(addr: &str, registry: Arc<ModelRegistry>) -> Result<Server, ApiError> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| ApiError::Server(format!("bind {addr}: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| ApiError::Server(format!("local_addr: {e}")))?;
+        Ok(Server {
+            listener,
+            addr: local,
+            registry,
+            metrics: Arc::new(Metrics::default()),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Serve until the stop flag is raised (see [`Server::spawn`] /
+    /// [`ServerHandle::stop`]). Connections are distributed to
+    /// [`parallel::threads`] worker threads over a channel; each worker
+    /// handles one connection at a time end-to-end (requests are small
+    /// and responses computed in-memory, so per-connection threads
+    /// would only add churn).
+    pub fn run(&self) {
+        let workers = parallel::threads().max(1);
+        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let rx = Arc::clone(&rx);
+            let registry = Arc::clone(&self.registry);
+            let metrics = Arc::clone(&self.metrics);
+            handles.push(std::thread::spawn(move || loop {
+                let next = {
+                    let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
+                    guard.recv()
+                };
+                match next {
+                    Ok(stream) => handle_connection(stream, &registry, &metrics),
+                    Err(_) => break, // sender dropped: server is stopping
+                }
+            }));
+        }
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if self.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    // a send can only fail if every worker died; drop
+                    // the connection rather than crash the acceptor
+                    let _ = tx.send(stream);
+                }
+                Err(_) => {
+                    if self.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    // transient accept failure (EMFILE, aborted
+                    // handshake): keep serving
+                }
+            }
+        }
+        drop(tx);
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    /// Run on a background thread; the returned handle stops it.
+    pub fn spawn(self) -> ServerHandle {
+        let addr = self.addr;
+        let metrics = Arc::clone(&self.metrics);
+        let stop = Arc::clone(&self.stop);
+        let join = std::thread::spawn(move || self.run());
+        ServerHandle { addr, metrics, stop, join }
+    }
+}
+
+/// One request–response exchange (`Connection: close` framing).
+fn handle_connection(mut stream: TcpStream, registry: &ModelRegistry, metrics: &Metrics) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let (status, body) = match read_request_head(&mut stream) {
+        Ok(head) => route(&head, registry, metrics),
+        Err(msg) => (400, format!("{{\"error\":{}}}", json_string(&msg))),
+    };
+    if status >= 400 {
+        metrics.errors.fetch_add(1, Ordering::Relaxed);
+    }
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Error",
+    };
+    let response = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.write_all(response.as_bytes());
+    let _ = stream.flush();
+}
+
+/// Read until the end-of-headers blank line, bounded by
+/// [`MAX_REQUEST_BYTES`]. Only the request line is ever inspected.
+fn read_request_head(stream: &mut TcpStream) -> Result<String, String> {
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    loop {
+        if buf.windows(4).any(|w| w == b"\r\n\r\n") {
+            break;
+        }
+        if buf.len() >= MAX_REQUEST_BYTES {
+            return Err("request head exceeds 8 KiB".into());
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => break, // peer closed; parse what we have
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) => return Err(format!("read: {e}")),
+        }
+    }
+    String::from_utf8(buf).map_err(|_| "request is not UTF-8".into())
+}
+
+/// Dispatch a parsed request head to an endpoint handler.
+fn route(head: &str, registry: &ModelRegistry, metrics: &Metrics) -> (u16, String) {
+    let request_line = head.lines().next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, target) = match (parts.next(), parts.next()) {
+        (Some(m), Some(t)) => (m, t),
+        _ => return bad_request("malformed request line"),
+    };
+    if method != "GET" {
+        return (
+            405,
+            format!(
+                "{{\"error\":{}}}",
+                json_string(&format!("method {method} not allowed (GET only)"))
+            ),
+        );
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    match path {
+        "/health" => {
+            metrics.health.fetch_add(1, Ordering::Relaxed);
+            (
+                200,
+                format!("{{\"status\":\"ok\",\"models\":{}}}", registry.len()),
+            )
+        }
+        "/metrics" => {
+            metrics.metrics.fetch_add(1, Ordering::Relaxed);
+            (200, metrics.to_json())
+        }
+        "/v1/models" => {
+            metrics.models.fetch_add(1, Ordering::Relaxed);
+            let items: Vec<String> = registry
+                .names()
+                .iter()
+                .filter_map(|name| {
+                    registry.get(name).map(|m| {
+                        let spec = m.spec();
+                        format!(
+                            "{{\"name\":{},\"j\":{},\"d\":{},\"method\":{},\"coreset_size\":{}}}",
+                            json_string(name),
+                            spec.j,
+                            spec.d,
+                            json_string(m.diagnostics().coreset.method),
+                            m.diagnostics().coreset.size
+                        )
+                    })
+                })
+                .collect();
+            (200, format!("{{\"models\":[{}]}}", items.join(",")))
+        }
+        _ => route_model_query(path, query, registry, metrics),
+    }
+}
+
+/// `/v1/models/{name}/{endpoint}` queries.
+fn route_model_query(
+    path: &str,
+    query: &str,
+    registry: &ModelRegistry,
+    metrics: &Metrics,
+) -> (u16, String) {
+    let rest = match path.strip_prefix("/v1/models/") {
+        Some(r) => r,
+        None => return not_found(path),
+    };
+    let (name, endpoint) = match rest.split_once('/') {
+        Some((n, e)) => (n, e),
+        None => return not_found(path),
+    };
+    let model = match registry.get(name) {
+        Some(m) => m,
+        None => {
+            return (
+                404,
+                format!(
+                    "{{\"error\":{}}}",
+                    json_string(&format!("no model named `{name}`"))
+                ),
+            )
+        }
+    };
+    let params = parse_query(query);
+    let result = match endpoint {
+        "density" => {
+            metrics.density.fetch_add(1, Ordering::Relaxed);
+            q_density(&model, &params)
+        }
+        "cdf" => {
+            metrics.cdf.fetch_add(1, Ordering::Relaxed);
+            q_cdf(&model, &params)
+        }
+        "quantile" => {
+            metrics.quantile.fetch_add(1, Ordering::Relaxed);
+            q_quantile(&model, &params)
+        }
+        "sample" => {
+            metrics.sample.fetch_add(1, Ordering::Relaxed);
+            q_sample(&model, &params)
+        }
+        "conditional" => {
+            metrics.conditional.fetch_add(1, Ordering::Relaxed);
+            q_conditional(&model, &params)
+        }
+        _ => return not_found(path),
+    };
+    match result {
+        Ok(body) => (200, body),
+        Err(msg) => bad_request(&msg),
+    }
+}
+
+fn q_density(model: &FittedModel, params: &[(String, String)]) -> Result<String, String> {
+    let y = f64_list_param(params, "y")?;
+    let j = model.spec().j;
+    if y.len() != j {
+        return Err(format!("`y` has {} components, model has J = {j}", y.len()));
+    }
+    if y.iter().any(|v| v.is_nan()) {
+        return Err("`y` contains NaN".into());
+    }
+    let ld = model.log_density(&y);
+    Ok(format!(
+        "{{\"y\":{},\"log_density\":{},\"density\":{}}}",
+        json_f64_array(&y),
+        json_f64(ld),
+        json_f64(ld.exp())
+    ))
+}
+
+fn q_cdf(model: &FittedModel, params: &[(String, String)]) -> Result<String, String> {
+    let j = usize_param(params, "j", 0)?;
+    let y = f64_param(params, "y")?;
+    let v = model.try_cdf(j, y).map_err(|e| e.to_string())?;
+    Ok(format!(
+        "{{\"j\":{j},\"y\":{},\"cdf\":{}}}",
+        json_f64(y),
+        json_f64(v)
+    ))
+}
+
+fn q_quantile(model: &FittedModel, params: &[(String, String)]) -> Result<String, String> {
+    let j = usize_param(params, "j", 0)?;
+    let p = f64_param(params, "p")?;
+    let v = model.try_quantile(j, p).map_err(|e| e.to_string())?;
+    Ok(format!(
+        "{{\"j\":{j},\"p\":{},\"quantile\":{}}}",
+        json_f64(p),
+        json_f64(v)
+    ))
+}
+
+fn q_sample(model: &FittedModel, params: &[(String, String)]) -> Result<String, String> {
+    let n = usize_param(params, "n", 1)?;
+    let seed = u64_param(params, "seed", 0)?;
+    check_sample_count(n)?;
+    let mut rng = Rng::new(seed);
+    let draws = model.sample(n, &mut rng);
+    Ok(format!(
+        "{{\"n\":{n},\"seed\":{seed},\"rows\":{}}}",
+        json_mat(&draws)
+    ))
+}
+
+fn q_conditional(model: &FittedModel, params: &[(String, String)]) -> Result<String, String> {
+    let given = f64_list_param(params, "given")?;
+    let n = usize_param(params, "n", 1)?;
+    let seed = u64_param(params, "seed", 0)?;
+    check_sample_count(n)?;
+    let j = model.spec().j;
+    if given.len() > j {
+        return Err(format!(
+            "`given` conditions on {} components, model has J = {j}",
+            given.len()
+        ));
+    }
+    if given.iter().any(|v| !v.is_finite()) {
+        return Err("`given` contains non-finite values".into());
+    }
+    let mut rng = Rng::new(seed);
+    let draws = model.sample_conditional(&given, n, &mut rng);
+    Ok(format!(
+        "{{\"given\":{},\"n\":{n},\"seed\":{seed},\"rows\":{}}}",
+        json_f64_array(&given),
+        json_mat(&draws)
+    ))
+}
+
+fn check_sample_count(n: usize) -> Result<(), String> {
+    if n == 0 {
+        return Err("`n` must be ≥ 1".into());
+    }
+    if n > MAX_SAMPLES_PER_REQUEST {
+        return Err(format!("`n` = {n} exceeds per-request cap {MAX_SAMPLES_PER_REQUEST}"));
+    }
+    Ok(())
+}
+
+fn bad_request(msg: &str) -> (u16, String) {
+    (400, format!("{{\"error\":{}}}", json_string(msg)))
+}
+
+fn not_found(path: &str) -> (u16, String) {
+    (
+        404,
+        format!(
+            "{{\"error\":{}}}",
+            json_string(&format!("no endpoint at `{path}`"))
+        ),
+    )
+}
+
+/// Split a query string into key/value pairs. No percent-decoding: the
+/// grammar of every parameter (numbers, commas, model names) never
+/// needs it, and rejecting early beats decoding wrong.
+fn parse_query(query: &str) -> Vec<(String, String)> {
+    query
+        .split('&')
+        .filter(|kv| !kv.is_empty())
+        .map(|kv| match kv.split_once('=') {
+            Some((k, v)) => (k.to_string(), v.to_string()),
+            None => (kv.to_string(), String::new()),
+        })
+        .collect()
+}
+
+fn str_param<'a>(params: &'a [(String, String)], key: &str) -> Option<&'a str> {
+    params.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+fn f64_param(params: &[(String, String)], key: &str) -> Result<f64, String> {
+    let raw = str_param(params, key).ok_or_else(|| format!("missing parameter `{key}`"))?;
+    raw.parse::<f64>().map_err(|_| format!("`{key}`: `{raw}` is not a number"))
+}
+
+fn f64_list_param(params: &[(String, String)], key: &str) -> Result<Vec<f64>, String> {
+    let raw = str_param(params, key).ok_or_else(|| format!("missing parameter `{key}`"))?;
+    raw.split(',')
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse::<f64>().map_err(|_| format!("`{key}`: `{t}` is not a number")))
+        .collect()
+}
+
+fn usize_param(params: &[(String, String)], key: &str, default: usize) -> Result<usize, String> {
+    match str_param(params, key) {
+        None => Ok(default),
+        Some(raw) => raw
+            .parse::<usize>()
+            .map_err(|_| format!("`{key}`: `{raw}` is not a non-negative integer")),
+    }
+}
+
+fn u64_param(params: &[(String, String)], key: &str, default: u64) -> Result<u64, String> {
+    match str_param(params, key) {
+        None => Ok(default),
+        Some(raw) => raw
+            .parse::<u64>()
+            .map_err(|_| format!("`{key}`: `{raw}` is not a non-negative integer")),
+    }
+}
+
+/// JSON number via shortest round-trip `Display`; non-finite values as
+/// strings (JSON has no literals for them).
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else if v.is_nan() {
+        "\"NaN\"".into()
+    } else if v > 0.0 {
+        "\"inf\"".into()
+    } else {
+        "\"-inf\"".into()
+    }
+}
+
+fn json_f64_array(vs: &[f64]) -> String {
+    let items: Vec<String> = vs.iter().map(|&v| json_f64(v)).collect();
+    format!("[{}]", items.join(","))
+}
+
+fn json_mat(m: &crate::linalg::Mat) -> String {
+    let rows: Vec<String> = (0..m.rows).map(|r| json_f64_array(m.row(r))).collect();
+    format!("[{}]", rows.join(","))
+}
+
+/// Minimal JSON string escaping (quotes, backslash, control bytes).
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_f64_round_trips_and_handles_non_finite() {
+        for &v in &[0.1, -0.0, 1.0 / 3.0, 1e-300, f64::MIN_POSITIVE, 12345.6789] {
+            let s = json_f64(v);
+            let back: f64 = s.parse().unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{s}");
+        }
+        assert_eq!(json_f64(f64::NAN), "\"NaN\"");
+        assert_eq!(json_f64(f64::INFINITY), "\"inf\"");
+        assert_eq!(json_f64(f64::NEG_INFINITY), "\"-inf\"");
+    }
+
+    #[test]
+    fn json_string_escapes() {
+        assert_eq!(json_string("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
+        assert_eq!(json_string("\u{1}"), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn query_parsing() {
+        let p = parse_query("j=1&y=2.5&flag");
+        assert_eq!(usize_param(&p, "j", 0).unwrap(), 1);
+        assert_eq!(f64_param(&p, "y").unwrap(), 2.5);
+        assert_eq!(str_param(&p, "flag"), Some(""));
+        assert!(f64_param(&p, "missing").is_err());
+        assert_eq!(usize_param(&p, "missing", 7).unwrap(), 7);
+        assert_eq!(
+            f64_list_param(&parse_query("y=1.5,-2,inf"), "y").unwrap(),
+            vec![1.5, -2.0, f64::INFINITY]
+        );
+        assert!(f64_list_param(&parse_query("y=1.5,abc"), "y").is_err());
+    }
+
+    #[test]
+    fn registry_basics() {
+        let reg = ModelRegistry::new();
+        assert!(reg.is_empty());
+        assert!(reg.get("nope").is_none());
+        assert_eq!(reg.names(), Vec::<String>::new());
+    }
+
+    #[test]
+    fn metrics_snapshot_counts() {
+        let m = Metrics::default();
+        m.density.fetch_add(3, Ordering::Relaxed);
+        m.errors.fetch_add(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.density, 3);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.cdf, 0);
+        assert!(m.to_json().contains("\"density\":3"));
+    }
+}

@@ -1,0 +1,286 @@
+//! PR 7 acceptance tests for the artifact layer: byte-identical
+//! save → load → save round-trips, bitwise-equal queries from a loaded
+//! model (single- and multi-threaded), `Session::refit` reproducing the
+//! direct fit from a persisted sketch on both ingestion paths, and
+//! corruption always surfacing as a typed error — never a panic.
+
+use mctm_coreset::prelude::*;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn temp_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("mctm_artifact_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn small_session() -> Session {
+    SessionBuilder::new()
+        .method("l2-hull")
+        .budget(80)
+        .basis_size(5)
+        .seed(19)
+        .max_iters(60)
+        .build()
+        .unwrap()
+}
+
+fn small_data() -> Mat {
+    let mut rng = Rng::new(401);
+    Dgp::BivariateNormal.generate(900, &mut rng)
+}
+
+#[test]
+fn model_save_load_save_is_byte_identical() {
+    let model = small_session().fit(&small_data()).unwrap();
+    let bytes1 = Artifact::Model(model.to_artifact()).to_bytes();
+    let reparsed = Artifact::from_bytes(&bytes1).unwrap();
+    assert_eq!(reparsed.to_bytes(), bytes1, "save(load(save(m))) != save(m)");
+
+    // and through the filesystem
+    let p1 = temp_path("model_a.mctm");
+    let p2 = temp_path("model_b.mctm");
+    model.save(&p1).unwrap();
+    let loaded = FittedModel::load(&p1).unwrap();
+    loaded.save(&p2).unwrap();
+    assert_eq!(
+        std::fs::read(&p1).unwrap(),
+        std::fs::read(&p2).unwrap(),
+        "on-disk round trip is not byte-identical"
+    );
+}
+
+#[test]
+fn sketch_save_load_save_is_byte_identical() {
+    let report = small_session().coreset(&small_data()).unwrap();
+    let bytes1 = Artifact::Sketch(report.to_artifact()).to_bytes();
+    let reparsed = Artifact::from_bytes(&bytes1).unwrap();
+    assert_eq!(reparsed.to_bytes(), bytes1);
+
+    let p1 = temp_path("sketch_a.mctm");
+    let p2 = temp_path("sketch_b.mctm");
+    report.save(&p1).unwrap();
+    let loaded = CoresetReport::load(&p1).unwrap();
+    loaded.save(&p2).unwrap();
+    assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+}
+
+#[test]
+fn same_seed_same_bytes_across_runs() {
+    // the artifact deliberately excludes wall-clock fields, so two
+    // independent same-seed runs persist identical bytes
+    let data = small_data();
+    let m1 = small_session().fit(&data).unwrap();
+    let m2 = small_session().fit(&data).unwrap();
+    assert_eq!(
+        Artifact::Model(m1.to_artifact()).to_bytes(),
+        Artifact::Model(m2.to_artifact()).to_bytes()
+    );
+    let s1 = small_session().coreset(&data).unwrap();
+    let s2 = small_session().coreset(&data).unwrap();
+    assert_eq!(
+        Artifact::Sketch(s1.to_artifact()).to_bytes(),
+        Artifact::Sketch(s2.to_artifact()).to_bytes()
+    );
+}
+
+#[test]
+fn loaded_model_queries_are_bitwise_identical() {
+    let model = small_session().fit(&small_data()).unwrap();
+    let p = temp_path("model_queries.mctm");
+    model.save(&p).unwrap();
+    let loaded = FittedModel::load(&p).unwrap();
+
+    assert_eq!(loaded.params().x, model.params().x);
+    let probes = [[-1.3, 0.4], [0.0, 0.0], [2.1, -0.7], [0.33, 1.9]];
+    for y in &probes {
+        assert_eq!(
+            loaded.log_density(y).to_bits(),
+            model.log_density(y).to_bits(),
+            "log-density differs at {y:?}"
+        );
+    }
+    for j in 0..2 {
+        for &y in &[-2.0, -0.5, 0.0, 1.5] {
+            assert_eq!(
+                loaded.marginal_cdf(j, y).to_bits(),
+                model.marginal_cdf(j, y).to_bits()
+            );
+        }
+        for &p in &[0.05, 0.5, 0.95] {
+            assert_eq!(
+                loaded.marginal_quantile(j, p).to_bits(),
+                model.marginal_quantile(j, p).to_bits()
+            );
+        }
+    }
+    // sampling with the same caller-owned RNG draws identical bits
+    let mut r1 = Rng::new(777);
+    let mut r2 = Rng::new(777);
+    let d1 = model.sample(50, &mut r1);
+    let d2 = loaded.sample(50, &mut r2);
+    assert_eq!(d1.data, d2.data);
+}
+
+#[test]
+fn loaded_model_is_bitwise_identical_across_thread_counts() {
+    // acceptance: queries on the loaded model are identical whether the
+    // process serves them from 1 thread or 8 concurrently
+    let model = small_session().fit(&small_data()).unwrap();
+    let p = temp_path("model_threads.mctm");
+    model.save(&p).unwrap();
+    let loaded = Arc::new(FittedModel::load(&p).unwrap());
+
+    let reference: Vec<u64> = (0..32)
+        .map(|i| {
+            let t = i as f64 / 32.0;
+            let y = [-2.0 + 4.0 * t, 2.0 - 4.0 * t];
+            loaded.log_density(&y).to_bits()
+                ^ loaded.marginal_cdf(0, y[0]).to_bits().rotate_left(1)
+                ^ loaded
+                    .marginal_quantile(1, 0.05 + 0.9 * t)
+                    .to_bits()
+                    .rotate_left(2)
+        })
+        .collect();
+
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            let m = Arc::clone(&loaded);
+            let expect = reference.clone();
+            std::thread::spawn(move || {
+                for (i, &want) in expect.iter().enumerate() {
+                    let t = i as f64 / 32.0;
+                    let y = [-2.0 + 4.0 * t, 2.0 - 4.0 * t];
+                    let got = m.log_density(&y).to_bits()
+                        ^ m.marginal_cdf(0, y[0]).to_bits().rotate_left(1)
+                        ^ m.marginal_quantile(1, 0.05 + 0.9 * t).to_bits().rotate_left(2);
+                    assert_eq!(got, want, "thread-side query diverged at probe {i}");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn refit_from_persisted_batch_sketch_reproduces_direct_fit() {
+    // acceptance: Session::refit from a persisted sketch reproduces the
+    // direct-fit parameters bit-for-bit (the sketch carries the
+    // full-data scaler, so the sub-design rebuilds identically)
+    let data = small_data();
+    let session = small_session();
+    let direct = session.fit(&data).unwrap();
+
+    let p = temp_path("refit_batch.mctm");
+    session.coreset(&data).unwrap().save(&p).unwrap();
+    let sketch = CoresetReport::load(&p).unwrap();
+    let refit = session.refit(&sketch).unwrap();
+
+    assert_eq!(refit.params().x, direct.params().x, "refit ϑ diverged from direct fit");
+    assert_eq!(
+        refit.diagnostics().fit_nll.to_bits(),
+        direct.diagnostics().fit_nll.to_bits()
+    );
+    // and the refitted model answers queries identically
+    assert_eq!(
+        refit.marginal_quantile(0, 0.5).to_bits(),
+        direct.marginal_quantile(0, 0.5).to_bits()
+    );
+}
+
+#[test]
+fn refit_from_persisted_stream_sketch_reproduces_direct_fit() {
+    let mut rng = Rng::new(402);
+    let data = Dgp::NormalMixture.generate(6_000, &mut rng);
+    let session = SessionBuilder::new()
+        .method("l2-hull")
+        .budget(60)
+        .basis_size(5)
+        .seed(23)
+        .max_iters(60)
+        .build()
+        .unwrap();
+    let direct = session.fit(MatShards::new(data.clone(), 1_500)).unwrap();
+
+    let p = temp_path("refit_stream.mctm");
+    session
+        .coreset(MatShards::new(data.clone(), 1_500))
+        .unwrap()
+        .save(&p)
+        .unwrap();
+    let sketch = CoresetReport::load(&p).unwrap();
+    assert!(sketch.scaler.is_none(), "stream sketches carry no full-data scaler");
+    let refit = session.refit(&sketch).unwrap();
+    assert_eq!(refit.params().x, direct.params().x);
+}
+
+#[test]
+fn refit_warm_converges_to_a_model_quickly() {
+    let data = small_data();
+    let session = small_session();
+    let direct = session.fit(&data).unwrap();
+    let sketch = session.coreset(&data).unwrap();
+
+    // warm-start from the direct optimum: the optimizer should stop in
+    // (far) fewer iterations than the cold refit and land at the same
+    // solution neighborhood
+    let warm = session.refit_warm(&sketch, direct.params()).unwrap();
+    assert!(
+        warm.diagnostics().fit_iters <= direct.diagnostics().fit_iters,
+        "warm start took {} iters, cold took {}",
+        warm.diagnostics().fit_iters,
+        direct.diagnostics().fit_iters
+    );
+    assert!((warm.diagnostics().fit_nll - direct.diagnostics().fit_nll).abs() < 1e-6);
+
+    // shape-mismatched warm start is a typed error
+    let other = SessionBuilder::new().basis_size(7).budget(80).seed(19).build().unwrap();
+    assert!(matches!(
+        other.refit_warm(&sketch, direct.params()).unwrap_err(),
+        ApiError::Query(_)
+    ));
+}
+
+#[test]
+fn corrupted_and_truncated_artifacts_are_typed_errors() {
+    let model = small_session().fit(&small_data()).unwrap();
+    let p = temp_path("corrupt_src.mctm");
+    model.save(&p).unwrap();
+    let good = std::fs::read(&p).unwrap();
+
+    // truncation at several prefixes: typed error, never a panic
+    for frac in [0, 1, good.len() / 4, good.len() / 2, good.len() - 2] {
+        let p_trunc = temp_path("corrupt_trunc.mctm");
+        std::fs::write(&p_trunc, &good[..frac]).unwrap();
+        assert!(
+            matches!(FittedModel::load(&p_trunc), Err(ApiError::Artifact(_))),
+            "truncation at {frac} bytes must be a typed error"
+        );
+    }
+
+    // single bit flip in the middle: checksum catches it
+    let mut flipped = good.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x01;
+    let p_flip = temp_path("corrupt_flip.mctm");
+    std::fs::write(&p_flip, &flipped).unwrap();
+    assert!(matches!(FittedModel::load(&p_flip), Err(ApiError::Artifact(_))));
+
+    // kind confusion: a sketch is not a model and vice versa
+    let p_sketch = temp_path("corrupt_kind.mctm");
+    small_session().coreset(&small_data()).unwrap().save(&p_sketch).unwrap();
+    let err = FittedModel::load(&p_sketch).unwrap_err();
+    assert!(
+        format!("{err}").contains("sketch"),
+        "kind-confusion error should name the actual kind: {err}"
+    );
+    assert!(matches!(CoresetReport::load(&p), Err(ApiError::Artifact(_))));
+
+    // missing file names the path
+    let missing = temp_path("does_not_exist.mctm");
+    let err = FittedModel::load(&missing).unwrap_err();
+    assert!(format!("{err}").contains("does_not_exist"));
+}

@@ -1,0 +1,121 @@
+//! PR 7 bugfix pins for the query surface's edge semantics:
+//! `try_quantile` / `try_cdf` turn garbage levels into typed errors,
+//! p = 0 / p = 1 and y = ±∞ have exact documented answers, and the
+//! legacy panicking contracts of `marginal_quantile` stay intact.
+
+use mctm_coreset::prelude::*;
+
+fn fitted() -> FittedModel {
+    let mut rng = Rng::new(614);
+    let data = Dgp::BivariateNormal.generate(900, &mut rng);
+    SessionBuilder::new()
+        .budget(80)
+        .basis_size(5)
+        .seed(47)
+        .max_iters(60)
+        .build()
+        .unwrap()
+        .fit(&data)
+        .unwrap()
+}
+
+#[test]
+fn try_quantile_rejects_non_finite_and_out_of_range_levels() {
+    let m = fitted();
+    for bad in [f64::NAN, -0.1, 1.0001, f64::INFINITY, f64::NEG_INFINITY, -0.0 - f64::EPSILON] {
+        let err = m.try_quantile(0, bad).unwrap_err();
+        assert!(
+            matches!(err, ApiError::Query(_)),
+            "p = {bad} should be a typed Query error, got {err:?}"
+        );
+    }
+    // out-of-range margin is a typed error too, checked before p
+    assert!(matches!(m.try_quantile(7, 0.5), Err(ApiError::Query(_))));
+    assert!(matches!(m.try_quantile(7, f64::NAN), Err(ApiError::Query(_))));
+}
+
+#[test]
+fn try_quantile_pins_the_support_edges_at_p_0_and_1() {
+    let m = fitted();
+    for j in 0..2 {
+        let lo = m.try_quantile(j, 0.0).unwrap();
+        let hi = m.try_quantile(j, 1.0).unwrap();
+        // documented clamp: exactly the unscaled endpoints of the
+        // transformation's axis (~ε/(1−2ε) beyond the data min/max)
+        assert_eq!(lo.to_bits(), m.scaler().unscale(j, 0.0).to_bits());
+        assert_eq!(hi.to_bits(), m.scaler().unscale(j, 1.0).to_bits());
+        assert!(lo.is_finite() && hi.is_finite());
+        // continuity: the open-interval quantiles saturate toward the
+        // pinned edges (extreme p may hit them exactly), never beyond
+        assert!(lo <= m.try_quantile(j, 1e-9).unwrap());
+        assert!(hi >= m.try_quantile(j, 1.0 - 1e-9).unwrap());
+        assert!(lo < m.try_quantile(j, 0.5).unwrap());
+        assert!(hi > m.try_quantile(j, 0.5).unwrap());
+    }
+}
+
+#[test]
+fn try_quantile_agrees_with_marginal_quantile_inside_the_open_interval() {
+    let m = fitted();
+    for &p in &[1e-6, 0.05, 0.25, 0.5, 0.9, 1.0 - 1e-9] {
+        for j in 0..2 {
+            assert_eq!(
+                m.try_quantile(j, p).unwrap().to_bits(),
+                m.marginal_quantile(j, p).to_bits()
+            );
+        }
+    }
+}
+
+#[test]
+fn marginal_quantile_keeps_its_panicking_contract() {
+    // existing callers rely on the assert; the typed surface is opt-in
+    let m = fitted();
+    for bad in [0.0, 1.0, -0.5, 1.5, f64::NAN] {
+        let m2 = m.clone();
+        assert!(
+            std::panic::catch_unwind(move || m2.marginal_quantile(0, bad)).is_err(),
+            "marginal_quantile({bad}) should panic"
+        );
+    }
+}
+
+#[test]
+fn cdf_at_infinities_is_exactly_zero_and_one() {
+    let m = fitted();
+    for j in 0..2 {
+        assert_eq!(m.marginal_cdf(j, f64::INFINITY).to_bits(), 1.0f64.to_bits());
+        assert_eq!(m.marginal_cdf(j, f64::NEG_INFINITY).to_bits(), 0.0f64.to_bits());
+        assert_eq!(m.try_cdf(j, f64::INFINITY).unwrap(), 1.0);
+        assert_eq!(m.try_cdf(j, f64::NEG_INFINITY).unwrap(), 0.0);
+        // and the CDF stays monotone into the far tails
+        assert!(m.marginal_cdf(j, 1e300) <= 1.0);
+        assert!(m.marginal_cdf(j, -1e300) >= 0.0);
+        assert!(m.marginal_cdf(j, 1e300) >= m.marginal_cdf(j, 0.0));
+    }
+}
+
+#[test]
+fn try_cdf_rejects_nan_and_bad_margins() {
+    let m = fitted();
+    assert!(matches!(m.try_cdf(0, f64::NAN), Err(ApiError::Query(_))));
+    assert!(matches!(m.try_cdf(9, 0.5), Err(ApiError::Query(_))));
+    // the panicking surface propagates NaN instead (documented)
+    assert!(m.marginal_cdf(0, f64::NAN).is_nan());
+}
+
+#[test]
+fn quantile_cdf_edges_survive_persistence() {
+    // edge semantics must be a property of the model, not of the
+    // process that fitted it
+    let m = fitted();
+    let path = std::env::temp_dir().join("mctm_query_edges.mctm");
+    m.save(&path).unwrap();
+    let loaded = FittedModel::load(&path).unwrap();
+    assert_eq!(
+        loaded.try_quantile(0, 0.0).unwrap().to_bits(),
+        m.try_quantile(0, 0.0).unwrap().to_bits()
+    );
+    assert_eq!(loaded.try_cdf(1, f64::INFINITY).unwrap(), 1.0);
+    assert!(matches!(loaded.try_quantile(0, 2.0), Err(ApiError::Query(_))));
+}

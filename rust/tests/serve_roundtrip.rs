@@ -1,0 +1,228 @@
+//! PR 7 acceptance tests for the serving layer: a background server
+//! answers every query kind concurrently without error, responses are
+//! deterministic and parse back to the exact bits the model computes,
+//! per-endpoint metrics count requests, and error paths are HTTP
+//! statuses — never worker panics.
+
+use mctm_coreset::prelude::*;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+
+fn serve_model() -> (ServerHandle, FittedModel) {
+    let mut rng = Rng::new(510);
+    let data = Dgp::BivariateNormal.generate(900, &mut rng);
+    let session = SessionBuilder::new()
+        .method("l2-hull")
+        .budget(80)
+        .basis_size(5)
+        .seed(31)
+        .max_iters(60)
+        .build()
+        .unwrap();
+    let model = session.fit(&data).unwrap();
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("demo", model.clone());
+    let server = Server::bind("127.0.0.1:0", registry).unwrap();
+    (server.spawn(), model)
+}
+
+/// Minimal HTTP/1.1 client: one request, read to EOF (the server
+/// speaks `Connection: close`), return (status, body).
+fn http_get(addr: SocketAddr, target: &str) -> (u16, String) {
+    http_request(addr, &format!("GET {target} HTTP/1.1\r\nHost: test\r\n\r\n"))
+}
+
+fn http_request(addr: SocketAddr, raw: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(raw.as_bytes()).unwrap();
+    let mut response = String::new();
+    stream.read_to_string(&mut response).unwrap();
+    let status: u16 = response
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let body = response
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
+
+/// Pull a numeric field out of the flat JSON the server emits.
+fn json_field(body: &str, key: &str) -> f64 {
+    let pat = format!("\"{key}\":");
+    let at = body.find(&pat).unwrap_or_else(|| panic!("no `{key}` in {body}"));
+    let rest = &body[at + pat.len()..];
+    let end = rest
+        .find(|c: char| c == ',' || c == '}' || c == ']')
+        .unwrap_or(rest.len());
+    rest[..end].parse().unwrap_or_else(|_| panic!("`{key}` not numeric in {body}"))
+}
+
+#[test]
+fn serves_every_query_kind_concurrently_without_error() {
+    let (handle, model) = serve_model();
+    let addr = handle.addr();
+
+    // acceptance: ≥ 4 query kinds, concurrently, all 200
+    let targets = [
+        "/v1/models/demo/density?y=0.5,-0.25",
+        "/v1/models/demo/cdf?j=0&y=1.0",
+        "/v1/models/demo/quantile?j=1&p=0.75",
+        "/v1/models/demo/sample?n=5&seed=9",
+        "/v1/models/demo/conditional?given=0.8&n=4&seed=11",
+    ];
+    let handles: Vec<_> = (0..8)
+        .map(|w| {
+            std::thread::spawn(move || {
+                for t in &targets {
+                    let (status, body) = http_get(addr, t);
+                    assert_eq!(status, 200, "worker {w}: {t} -> {status}: {body}");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // responses parse back to the exact bits the model computes
+    let (_, body) = http_get(addr, "/v1/models/demo/cdf?j=0&y=1.0");
+    let got = json_field(&body, "cdf");
+    assert_eq!(got.to_bits(), model.try_cdf(0, 1.0).unwrap().to_bits());
+    let (_, body) = http_get(addr, "/v1/models/demo/quantile?j=1&p=0.75");
+    assert_eq!(
+        json_field(&body, "quantile").to_bits(),
+        model.try_quantile(1, 0.75).unwrap().to_bits()
+    );
+    let (_, body) = http_get(addr, "/v1/models/demo/density?y=0.5,-0.25");
+    assert_eq!(
+        json_field(&body, "log_density").to_bits(),
+        model.log_density(&[0.5, -0.25]).to_bits()
+    );
+
+    // seeded sampling is deterministic across requests (and workers)
+    let (_, s1) = http_get(addr, "/v1/models/demo/sample?n=5&seed=9");
+    let (_, s2) = http_get(addr, "/v1/models/demo/sample?n=5&seed=9");
+    assert_eq!(s1, s2, "same seed must return identical bytes");
+    let (_, s3) = http_get(addr, "/v1/models/demo/sample?n=5&seed=10");
+    assert_ne!(s1, s3, "different seed must differ");
+
+    handle.stop();
+}
+
+#[test]
+fn listing_health_and_metrics_report_server_state() {
+    let (handle, _model) = serve_model();
+    let addr = handle.addr();
+
+    let (status, body) = http_get(addr, "/health");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"models\":1"), "{body}");
+
+    let (status, body) = http_get(addr, "/v1/models");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"name\":\"demo\""), "{body}");
+    assert!(body.contains("\"j\":2"), "{body}");
+
+    for _ in 0..3 {
+        http_get(addr, "/v1/models/demo/cdf?j=0&y=0.0");
+    }
+    http_get(addr, "/v1/models/demo/quantile?j=0&p=0.5");
+    let (status, body) = http_get(addr, "/metrics");
+    assert_eq!(status, 200);
+    assert_eq!(json_field(&body, "cdf") as u64, 3);
+    assert_eq!(json_field(&body, "quantile") as u64, 1);
+
+    // the live handle sees the same counters
+    let snap = handle.metrics().snapshot();
+    assert_eq!(snap.cdf, 3);
+    assert_eq!(snap.quantile, 1);
+    assert_eq!(snap.health, 1);
+
+    handle.stop();
+}
+
+#[test]
+fn error_paths_are_http_statuses_not_panics() {
+    let (handle, _model) = serve_model();
+    let addr = handle.addr();
+
+    // unknown model / endpoint / path → 404
+    assert_eq!(http_get(addr, "/v1/models/nope/cdf?j=0&y=1").0, 404);
+    assert_eq!(http_get(addr, "/v1/models/demo/nope").0, 404);
+    assert_eq!(http_get(addr, "/nope").0, 404);
+
+    // invalid queries → 400 with the typed message
+    let (status, body) = http_get(addr, "/v1/models/demo/quantile?j=0&p=1.5");
+    assert_eq!(status, 400);
+    assert!(body.contains("outside [0, 1]"), "{body}");
+    assert_eq!(http_get(addr, "/v1/models/demo/quantile?j=0&p=NaN").0, 400);
+    assert_eq!(http_get(addr, "/v1/models/demo/cdf?j=0&y=NaN").0, 400);
+    assert_eq!(http_get(addr, "/v1/models/demo/cdf?j=9&y=0.5").0, 400);
+    assert_eq!(http_get(addr, "/v1/models/demo/density?y=1.0").0, 400); // J mismatch
+    assert_eq!(http_get(addr, "/v1/models/demo/sample?n=0").0, 400);
+    assert_eq!(http_get(addr, "/v1/models/demo/cdf?j=0").0, 400); // missing y
+
+    // pinned edge semantics over the wire: p=0/1 and y=±inf are valid
+    let (status, body) = http_get(addr, "/v1/models/demo/cdf?j=0&y=inf");
+    assert_eq!(status, 200);
+    assert_eq!(json_field(&body, "cdf"), 1.0);
+    assert_eq!(http_get(addr, "/v1/models/demo/quantile?j=0&p=0").0, 200);
+    assert_eq!(http_get(addr, "/v1/models/demo/quantile?j=0&p=1").0, 200);
+
+    // non-GET → 405
+    let (status, _) =
+        http_request(addr, "POST /v1/models/demo/cdf?j=0&y=1 HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert_eq!(status, 405);
+
+    // the server survived all of it and still answers
+    assert_eq!(http_get(addr, "/health").0, 200);
+    let errors = handle.metrics().snapshot().errors;
+    assert!(errors >= 10, "error counter should track non-2xx responses, got {errors}");
+
+    handle.stop();
+}
+
+#[test]
+fn registry_load_dir_serves_saved_artifacts() {
+    let dir = std::env::temp_dir().join("mctm_serve_dir_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    // stale files from earlier runs would fail the count below
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        std::fs::remove_file(entry.unwrap().path()).unwrap();
+    }
+
+    let mut rng = Rng::new(512);
+    let data = Dgp::BivariateNormal.generate(700, &mut rng);
+    let session = SessionBuilder::new()
+        .budget(60)
+        .basis_size(5)
+        .seed(5)
+        .max_iters(50)
+        .build()
+        .unwrap();
+    let model = session.fit(&data).unwrap();
+    model.save(&dir.join("alpha.mctm")).unwrap();
+    model.save(&dir.join("beta.mctm")).unwrap();
+    std::fs::write(dir.join("ignored.txt"), "not an artifact").unwrap();
+
+    let registry = Arc::new(ModelRegistry::new());
+    assert_eq!(registry.load_dir(&dir).unwrap(), 2);
+    assert_eq!(registry.names(), vec!["alpha".to_string(), "beta".to_string()]);
+
+    let handle = Server::bind("127.0.0.1:0", registry).unwrap().spawn();
+    let (status, body) = http_get(handle.addr(), "/v1/models");
+    assert_eq!(status, 200);
+    assert!(body.contains("alpha") && body.contains("beta"), "{body}");
+    let (status, _) = http_get(handle.addr(), "/v1/models/alpha/quantile?j=0&p=0.5");
+    assert_eq!(status, 200);
+    handle.stop();
+
+    // a corrupt artifact in the directory is a typed load error
+    std::fs::write(dir.join("bad.mctm"), b"mctm-artifact v1 model\ngarbage\n").unwrap();
+    let fresh = ModelRegistry::new();
+    assert!(matches!(fresh.load_dir(&dir), Err(ApiError::Artifact(_))));
+}

@@ -1,0 +1,99 @@
+#!/usr/bin/env bash
+# End-to-end smoke of the persist & serve loop (ISSUE 7):
+#   1. `mctm-coreset save`  — fit once, write model + sketch artifacts
+#   2. `mctm-coreset load`  — both artifacts parse and summarize
+#   3. same-seed re-save    — artifact bytes are byte-identical
+#   4. `mctm-serve`         — serve the model directory over HTTP and
+#      hit every query endpoint (density, cdf, quantile, sample,
+#      conditional), the listing/health/metrics endpoints, one pinned
+#      edge case (cdf at +inf), and one typed 400.
+# Wired into `make ci` via the serve-smoke target.
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+BIN="${MCTM_BIN:-$ROOT/target/release/mctm-coreset}"
+SERVE_BIN="${MCTM_SERVE_BIN:-$ROOT/target/release/mctm-serve}"
+TMP="$(mktemp -d)"
+SERVER_PID=""
+trap '[ -n "$SERVER_PID" ] && kill "$SERVER_PID" 2>/dev/null; rm -rf "$TMP"' EXIT
+
+if [ ! -x "$BIN" ] || [ ! -x "$SERVE_BIN" ]; then
+    echo "== building release binaries =="
+    cargo build --release --manifest-path "$ROOT/rust/Cargo.toml"
+fi
+
+CFG=(--set n=2000 --set k=200 --set d=5 --set max_iters=60)
+mkdir -p "$TMP/models"
+
+echo "== save: fit once, persist model + sketch =="
+"$BIN" save --out "$TMP/models/demo.mctm" --sketch "$TMP/demo_sketch.mctm" "${CFG[@]}"
+
+echo "== load: both artifact kinds parse =="
+"$BIN" load "$TMP/models/demo.mctm" | grep -q "model artifact"
+"$BIN" load "$TMP/demo_sketch.mctm" | grep -q "sketch artifact"
+
+echo "== determinism: same seed, same bytes =="
+"$BIN" save --out "$TMP/demo2.mctm" "${CFG[@]}"
+cmp "$TMP/models/demo.mctm" "$TMP/demo2.mctm"
+
+echo "== serve: bring up the HTTP layer on an ephemeral port =="
+"$SERVE_BIN" --models "$TMP/models" --addr 127.0.0.1:0 >"$TMP/serve.log" 2>&1 &
+SERVER_PID=$!
+ADDR=""
+for _ in $(seq 1 100); do
+    ADDR="$(sed -n 's|^serving on \(http://[0-9.:]*\)$|\1|p' "$TMP/serve.log")"
+    [ -n "$ADDR" ] && break
+    kill -0 "$SERVER_PID" 2>/dev/null || { cat "$TMP/serve.log"; exit 1; }
+    sleep 0.1
+done
+[ -n "$ADDR" ] || { echo "server never announced its address"; cat "$TMP/serve.log"; exit 1; }
+echo "   $ADDR"
+
+echo "== query every endpoint =="
+python3 - "$ADDR" <<'PYEOF'
+import json
+import sys
+import urllib.error
+import urllib.request
+
+addr = sys.argv[1]
+
+def get(path):
+    with urllib.request.urlopen(addr + path, timeout=10) as r:
+        return json.loads(r.read().decode())
+
+models = get("/v1/models")["models"]
+assert [m["name"] for m in models] == ["demo"], models
+
+d = get("/v1/models/demo/density?y=0.5,-0.25")
+assert isinstance(d["log_density"], float), d
+c = get("/v1/models/demo/cdf?j=0&y=1.0")
+assert 0.0 <= c["cdf"] <= 1.0, c
+q = get("/v1/models/demo/quantile?j=0&p=0.5")
+assert isinstance(q["quantile"], float), q
+s = get("/v1/models/demo/sample?n=5&seed=3")
+assert len(s["rows"]) == 5 and len(s["rows"][0]) == 2, s
+assert s == get("/v1/models/demo/sample?n=5&seed=3"), "seeded sampling not deterministic"
+k = get("/v1/models/demo/conditional?given=0.8&n=4&seed=7")
+assert len(k["rows"]) == 4 and k["rows"][0][0] == 0.8, k
+
+# pinned edge semantics over the wire
+assert get("/v1/models/demo/cdf?j=0&y=inf")["cdf"] == 1.0
+assert get("/v1/models/demo/cdf?j=0&y=-inf")["cdf"] == 0.0
+
+# invalid queries are typed 400s, not worker deaths
+try:
+    get("/v1/models/demo/quantile?j=0&p=1.5")
+    raise SystemExit("p=1.5 should be HTTP 400")
+except urllib.error.HTTPError as e:
+    assert e.code == 400, e.code
+
+m = get("/metrics")
+assert m["density"] >= 1 and m["cdf"] >= 4 and m["quantile"] >= 2, m
+assert m["sample"] >= 2 and m["conditional"] >= 1 and m["errors"] >= 1, m
+h = get("/health")
+assert h["status"] == "ok" and h["models"] == 1, h
+print("   metrics:", json.dumps(m))
+PYEOF
+
+echo "serve smoke OK"
