@@ -4,7 +4,7 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: build test check ci fmt clippy doc example bench-compile bench-quick bench-perf serve-smoke artifacts
+.PHONY: build test check ci fmt clippy doc example bench-compile bench-quick bench-perf bench-json serve-smoke artifacts
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -60,6 +60,13 @@ bench-quick:
 # Full-scale hot-path bench (feeds EXPERIMENTS.md §Perf).
 bench-perf:
 	$(CARGO) bench --manifest-path $(MANIFEST) --bench perf_hotpath
+
+# Machine-readable per-kernel medians (PR 8): scalar-vs-SIMD backend and
+# thread sweeps for nll_grad, the conditional panel path and serving
+# qps, dumped to BENCH_PR8.json at the repo root. CI runs this at
+# MCTM_BENCH_SCALE=fast as a compile-and-run smoke.
+bench-json:
+	MCTM_BENCH_JSON=BENCH_PR8.json $(CARGO) bench --manifest-path $(MANIFEST) --bench perf_hotpath
 
 # AOT-compile the XLA/Pallas artifacts consumed by the PJRT runtime.
 artifacts:

@@ -7,19 +7,64 @@
 //! Each parallel-ported path is timed at thread counts {1, 2, 4, max}
 //! (serial-vs-parallel medians + scaling); `MCTM_THREADS` pins the max.
 //! Results feed EXPERIMENTS.md §Perf (before/after iteration log).
+//!
+//! PR 8: the NLL sweep and the conditional path run once per kernel
+//! backend (Scalar, and Simd where AVX2+FMA is detected), and setting
+//! `MCTM_BENCH_JSON=<path>` additionally dumps those rows — plus the
+//! serving-qps rows — as machine-readable JSON (`make bench-json`
+//! writes BENCH_PR8.json at the repo root).
 
 use mctm_coreset::basis::Design;
 use mctm_coreset::benchsupport::{banner, results_dir, time_median, Scale};
 use mctm_coreset::coreset::ellipsoid::ellipsoid_scores;
 use mctm_coreset::coreset::hull::{dist_to_hull_batch, select_hull_points};
 use mctm_coreset::coreset::leverage::mctm_leverage_scores;
-use mctm_coreset::linalg::Cholesky;
+use mctm_coreset::linalg::{simd, Cholesky};
 use mctm_coreset::mctm;
+use mctm_coreset::mctm::conditional::{
+    cond_nll_grad_reference, cond_nll_grad_with, CondDesign, CondSpec,
+};
 use mctm_coreset::prelude::*;
 use mctm_coreset::runtime::{Engine, TiledNll};
 use mctm_coreset::util::parallel;
-use mctm_coreset::util::report::Table;
+use mctm_coreset::util::report::{Json, Table};
 use std::path::Path;
+
+/// Accumulates the PR 8 machine-readable rows; dumped as JSON when
+/// `MCTM_BENCH_JSON` names an output path, otherwise discarded.
+struct JsonRows(Vec<Json>);
+
+impl JsonRows {
+    /// `throughput` is (value, unit), e.g. `(rows_per_s, "row/s")`.
+    fn row(
+        &mut self,
+        kernel: &str,
+        backend: &str,
+        config: &str,
+        threads: usize,
+        median_s: f64,
+        throughput: (f64, &str),
+    ) {
+        self.0.push(Json::Obj(vec![
+            ("kernel".into(), Json::Str(kernel.into())),
+            ("backend".into(), Json::Str(backend.into())),
+            ("config".into(), Json::Str(config.into())),
+            ("threads".into(), Json::Num(threads as f64)),
+            ("median_s".into(), Json::Num(median_s)),
+            ("throughput".into(), Json::Num(throughput.0)),
+            ("unit".into(), Json::Str(throughput.1.into())),
+        ]));
+    }
+}
+
+/// The backends this host can run: Scalar always, Simd when detected.
+fn backend_sweep() -> Vec<(KernelBackend, &'static str)> {
+    let mut v = vec![(KernelBackend::Scalar, "scalar")];
+    if simd_available() {
+        v.push((KernelBackend::Simd, "simd"));
+    }
+    v
+}
 
 fn main() {
     let scale = Scale::from_env();
@@ -45,14 +90,19 @@ fn main() {
     let data10 = mctm_coreset::data::covertype::generate(n / 2, &mut rng);
     bench_native(&mut table, "J=10 d=7", &data10, iters, max_threads);
 
-    // ---- L3-b: blocked-kernel sweep (ISSUE 5) ------------------------
+    // ---- L3-b: blocked-kernel sweep (ISSUE 5 / PR 8) -----------------
     // serial row-at-a-time reference vs the blocked plane-major kernel
-    // at threads {1, 2, 4, max}; shapes from simulation to beyond
-    // covertype scale (the 50k/200k rows are where blocking must win)
-    bench_nll_sweep(&mut table, scale, iters, max_threads);
+    // per backend at threads {1, 2, 4, max}; shapes from simulation to
+    // beyond covertype scale (the 50k/200k rows are where blocking and
+    // the SIMD lanes must win)
+    let mut json = JsonRows(Vec::new());
+    bench_nll_sweep(&mut table, &mut json, scale, iters, max_threads);
+
+    // ---- Conditional path: row-at-a-time vs panel kernels (PR 8) -----
+    bench_conditional(&mut table, &mut json, scale, iters, max_threads);
 
     // ---- Serving layer: queries/sec over HTTP (ISSUE 7) --------------
-    bench_serving(&mut table, scale, max_threads);
+    bench_serving(&mut table, &mut json, scale, max_threads);
 
     // ---- L1/L2 via PJRT ----------------------------------------------
     if Path::new("artifacts/manifest.json").exists() {
@@ -65,6 +115,20 @@ fn main() {
     // leave the global pool at the benchmark's max for any later code
     parallel::set_threads(max_threads);
     table.emit(Some(&results_dir().join("perf_hotpath.csv")));
+
+    if let Ok(path) = std::env::var("MCTM_BENCH_JSON") {
+        let doc = Json::Obj(vec![
+            ("bench".into(), Json::Str("perf_hotpath".into())),
+            ("scale".into(), Json::Str(format!("{scale:?}").to_ascii_lowercase())),
+            ("max_threads".into(), Json::Num(max_threads as f64)),
+            ("simd_available".into(), Json::Str(simd_available().to_string())),
+            ("rows".into(), Json::Arr(json.0)),
+        ]);
+        match doc.save(Path::new(&path)) {
+            Ok(()) => println!("saved {path}"),
+            Err(e) => eprintln!("warn: could not save {path}: {e}"),
+        }
+    }
 }
 
 /// Thread counts to sweep: 1, 2, 4, …, up to the configured max.
@@ -252,13 +316,20 @@ fn bench_native(table: &mut Table, cfg: &str, data: &Mat, iters: usize, max_thre
     parallel::set_threads(max_threads);
 }
 
-/// ISSUE 5 sweep: `nll_grad` — the optimizer inner loop — as
+/// ISSUE 5 / PR 8 sweep: `nll_grad` — the optimizer inner loop — as
 /// serial row-at-a-time reference (`nll_grad_reference`) vs the
-/// blocked plane-major kernel at threads {1, 2, 4, max}, over
-/// (n, J, d) ∈ {(5k, 3, 8), (50k, 5, 8), (200k, 10, 8)}. The fast
+/// blocked plane-major kernel per backend at threads {1, 2, 4, max},
+/// over (n, J, d) ∈ {(5k, 3, 8), (50k, 5, 8), (200k, 10, 8)}. The fast
 /// (CI-smoke) scale runs only the smallest shape; the sweep feeds
-/// EXPERIMENTS.md §Perf iteration 7.
-fn bench_nll_sweep(table: &mut Table, scale: Scale, iters: usize, max_threads: usize) {
+/// EXPERIMENTS.md §Perf iterations 7 and 10.
+fn bench_nll_sweep(
+    table: &mut Table,
+    json: &mut JsonRows,
+    scale: Scale,
+    iters: usize,
+    max_threads: usize,
+) {
+    let ambient = simd::backend();
     let shapes: &[(usize, usize, usize)] = if scale == Scale::Fast {
         &[(5_000, 3, 8)]
     } else {
@@ -272,7 +343,8 @@ fn bench_nll_sweep(table: &mut Table, scale: Scale, iters: usize, max_threads: u
         let p = Params::init(spec);
         let cfg = format!("n={n} J={j} d={d}");
 
-        // serial row-at-a-time baseline (the pre-refactor kernel)
+        // serial row-at-a-time baseline (the pre-refactor kernel; does
+        // not dispatch, so it is timed once per shape)
         parallel::set_threads(1);
         let t_ref = time_median(iters, || {
             std::hint::black_box(mctm::nll_grad_reference(&design, &[], &p));
@@ -285,24 +357,102 @@ fn bench_nll_sweep(table: &mut Table, scale: Scale, iters: usize, max_threads: u
             "1.00x".into(),
             format!("{:.1} Mrow/s", n as f64 / t_ref / 1e6),
         ]);
+        json.row("nll_grad_ref", "rows", &cfg, 1, t_ref, (n as f64 / t_ref, "row/s"));
 
-        // blocked plane-major kernel, thread sweep; speedup column is
-        // relative to the row-at-a-time reference so the single-thread
-        // row isolates the blocking win from the threading win
-        for &t in &thread_sweep(max_threads) {
-            parallel::set_threads(t);
-            let sec = time_median(iters, || {
-                std::hint::black_box(mctm::nll_grad(&design, &[], &p));
-            });
-            table.row(vec![
-                "L3 nll_grad blocked".into(),
-                cfg.clone(),
-                format!("{t}"),
-                format!("{sec:.4}"),
-                format!("{:.2}x", t_ref / sec),
-                format!("{:.1} Mrow/s", n as f64 / sec / 1e6),
-            ]);
+        // blocked plane-major kernel per backend, thread sweep; speedup
+        // column is relative to the row-at-a-time reference so the
+        // single-thread rows isolate the blocking and SIMD wins from
+        // the threading win
+        for &(b, tag) in &backend_sweep() {
+            simd::set_backend(b);
+            for &t in &thread_sweep(max_threads) {
+                parallel::set_threads(t);
+                let sec = time_median(iters, || {
+                    std::hint::black_box(mctm::nll_grad(&design, &[], &p));
+                });
+                table.row(vec![
+                    format!("L3 nll_grad blocked/{tag}"),
+                    cfg.clone(),
+                    format!("{t}"),
+                    format!("{sec:.4}"),
+                    format!("{:.2}x", t_ref / sec),
+                    format!("{:.1} Mrow/s", n as f64 / sec / 1e6),
+                ]);
+                json.row("nll_grad_blocked", tag, &cfg, t, sec, (n as f64 / sec, "row/s"));
+            }
         }
+        simd::set_backend(ambient);
+    }
+    parallel::set_threads(max_threads);
+}
+
+/// PR 8: the conditional objective — row-at-a-time reference
+/// (`cond_nll_grad_reference`) vs the panel-kernel blocked engine, per
+/// backend, at threads {1, 2, 4, max}. J = 2 response dimensions with a
+/// q = 2 covariate shift, d = 8 basis functions.
+fn bench_conditional(
+    table: &mut Table,
+    json: &mut JsonRows,
+    scale: Scale,
+    iters: usize,
+    max_threads: usize,
+) {
+    let ambient = simd::backend();
+    let shapes: &[usize] = if scale == Scale::Fast {
+        &[5_000]
+    } else {
+        &[5_000, 50_000, 200_000]
+    };
+    let (j, d, q) = (2usize, 8usize, 2usize);
+    let spec = CondSpec::new(j, d, q);
+    for &n in shapes {
+        let mut rng = Rng::new(0xC0ED + n as u64);
+        let y = Mat::from_vec(n, j, (0..n * j).map(|_| rng.normal()).collect());
+        let x = Mat::from_vec(n, q, (0..n * q).map(|_| rng.normal()).collect());
+        let cd = CondDesign::build(&y, &x, d, 0.01);
+        let params: Vec<f64> = (0..spec.n_params()).map(|_| 0.2 * rng.normal()).collect();
+        let cfg = format!("n={n} J={j} d={d} q={q}");
+
+        // serial row-at-a-time baseline (naive dots; no dispatch)
+        parallel::set_threads(1);
+        let t_ref = time_median(iters, || {
+            std::hint::black_box(cond_nll_grad_reference(&cd, &[], spec, &params));
+        });
+        table.row(vec![
+            "L3 cond_nll_grad rows (ref)".into(),
+            cfg.clone(),
+            "1".into(),
+            format!("{t_ref:.4}"),
+            "1.00x".into(),
+            format!("{:.1} Mrow/s", n as f64 / t_ref / 1e6),
+        ]);
+        json.row("cond_nll_grad_ref", "rows", &cfg, 1, t_ref, (n as f64 / t_ref, "row/s"));
+
+        for &(b, tag) in &backend_sweep() {
+            simd::set_backend(b);
+            for &t in &thread_sweep(max_threads) {
+                parallel::set_threads(t);
+                let sec = time_median(iters, || {
+                    std::hint::black_box(cond_nll_grad_with(
+                        &cd,
+                        &[],
+                        spec,
+                        &params,
+                        &parallel::Pool::current(),
+                    ));
+                });
+                table.row(vec![
+                    format!("L3 cond_nll_grad panel/{tag}"),
+                    cfg.clone(),
+                    format!("{t}"),
+                    format!("{sec:.4}"),
+                    format!("{:.2}x", t_ref / sec),
+                    format!("{:.1} Mrow/s", n as f64 / sec / 1e6),
+                ]);
+                json.row("cond_nll_grad_panel", tag, &cfg, t, sec, (n as f64 / sec, "row/s"));
+            }
+        }
+        simd::set_backend(ambient);
     }
     parallel::set_threads(max_threads);
 }
@@ -312,7 +462,7 @@ fn bench_nll_sweep(table: &mut Table, scale: Scale, iters: usize, max_threads: u
 /// `Connection: close`), at client concurrency {1, 4, max}. The mix
 /// rotates over the four cheap query kinds; sample rows dominate the
 /// response-size cost, the transform inversion dominates quantile.
-fn bench_serving(table: &mut Table, scale: Scale, max_threads: usize) {
+fn bench_serving(table: &mut Table, json: &mut JsonRows, scale: Scale, max_threads: usize) {
     use mctm_coreset::server::{ModelRegistry, Server};
     use std::io::{Read, Write};
     use std::net::TcpStream;
@@ -382,6 +532,14 @@ fn bench_serving(table: &mut Table, scale: Scale, max_threads: usize) {
             format!("{:.2}x", qps / serial_qps),
             format!("{qps:.0} req/s"),
         ]);
+        json.row(
+            "serve_http",
+            "-",
+            &format!("{} query kinds", targets.len()),
+            clients,
+            secs,
+            (qps, "req/s"),
+        );
     }
     handle.stop();
 }

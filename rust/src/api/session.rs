@@ -29,6 +29,7 @@ use crate::coreset::samplers::build_coreset_on;
 use crate::coreset::{Coreset, Method};
 use crate::data::{scrub_invalid, InvalidPolicy};
 use crate::fit::{fit_native_warm_with_sink, fit_native_with_sink, FitOptions, OptimizerKind};
+use crate::linalg::simd::{self, KernelBackend};
 use crate::linalg::Mat;
 use crate::runtime::artifact::{Artifact, ModelArtifact, ScalerState, SketchArtifact};
 use crate::util::degrade::{DegradeSink, Degradations};
@@ -57,6 +58,7 @@ pub struct SessionBuilder {
     buffer_factor: usize,
     on_invalid: InvalidPolicy,
     fit: FitOptions,
+    kernel_backend: Option<KernelBackend>,
 }
 
 impl Default for SessionBuilder {
@@ -74,6 +76,7 @@ impl Default for SessionBuilder {
             buffer_factor: 4,
             on_invalid: InvalidPolicy::Error,
             fit: FitOptions::default(),
+            kernel_backend: None,
         }
     }
 }
@@ -162,6 +165,20 @@ impl SessionBuilder {
         self
     }
 
+    /// Kernel backend for the blocked linear-algebra kernels:
+    /// [`KernelBackend::Scalar`] is the bit-exact reference (every
+    /// bitwise determinism pin holds), [`KernelBackend::Simd`] the
+    /// AVX2+FMA lane kernels (≤ 1e-12 relative agreement, internally
+    /// deterministic). Omit for auto (`MCTM_SIMD` env override, else
+    /// runtime feature detection). The selection is applied at
+    /// [`Self::build`] and is process-global — it pins the dispatch for
+    /// every session in this process; a `Simd` request on a host
+    /// without AVX2+FMA clamps to `Scalar`.
+    pub fn kernel_backend(mut self, backend: KernelBackend) -> Self {
+        self.kernel_backend = Some(backend);
+        self
+    }
+
     /// Full optimizer configuration.
     pub fn fit_options(mut self, opts: FitOptions) -> Self {
         self.fit = opts;
@@ -217,6 +234,9 @@ impl SessionBuilder {
         }
         if self.fit.max_iters == 0 {
             return Err(ApiError::config("max_iters", "must be ≥ 1"));
+        }
+        if let Some(b) = self.kernel_backend {
+            simd::set_backend(b);
         }
         Ok(Session {
             method,

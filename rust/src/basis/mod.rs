@@ -313,18 +313,41 @@ impl Design {
 
     /// Restrict to a subset of observations (coreset restriction).
     pub fn select(&self, idx: &[usize]) -> Design {
+        let mut out = Design {
+            n: 0,
+            j: self.j,
+            d: self.d,
+            a: Vec::new(),
+            ad: Vec::new(),
+            scaler: self.scaler.clone(),
+        };
+        self.select_into(idx, &mut out);
+        out
+    }
+
+    /// [`Design::select`] into a caller-owned `Design`, reusing its
+    /// buffers — the bootstrap replicate loop calls this with one
+    /// hoisted sub-design so resampling allocates nothing once the
+    /// buffers reach capacity (`tests/fit_alloc.rs`). Same gather as
+    /// `select`, so the result is identical.
+    pub fn select_into(&self, idx: &[usize], out: &mut Design) {
         let (j, d) = (self.j, self.d);
         let m = idx.len();
-        let mut a = vec![0.0; m * j * d];
-        let mut ad = vec![0.0; m * j * d];
+        out.n = m;
+        out.j = j;
+        out.d = d;
+        out.a.resize(m * j * d, 0.0);
+        out.ad.resize(m * j * d, 0.0);
         for jj in 0..j {
             for (t, &i) in idx.iter().enumerate() {
                 let at = (jj * m + t) * d;
-                a[at..at + d].copy_from_slice(self.a_row(i, jj));
-                ad[at..at + d].copy_from_slice(self.ad_row(i, jj));
+                out.a[at..at + d].copy_from_slice(self.a_row(i, jj));
+                out.ad[at..at + d].copy_from_slice(self.ad_row(i, jj));
             }
         }
-        Design { n: m, j, d, a, ad, scaler: self.scaler.clone() }
+        out.scaler.mins.clone_from(&self.scaler.mins);
+        out.scaler.maxs.clone_from(&self.scaler.maxs);
+        out.scaler.eps = self.scaler.eps;
     }
 }
 

@@ -273,6 +273,19 @@ fn plane_leverage_scores(
     Ok(scores)
 }
 
+/// Minimum stacked width dJ at which [`stacked_gram_with`] switches to
+/// the L2-tiled SYRK path. Below this the dJ×dJ accumulator already
+/// fits comfortably in L2 and tiling is pure overhead.
+const GRAM_TILE_GATE: usize = 80;
+/// Rows gathered per panel in the tiled path. Must be a multiple of 4
+/// so panel boundaries align with the 4-row SYRK blocks — that
+/// alignment is what keeps the tiled accumulation order bit-identical
+/// to the untiled sweep.
+const GRAM_PANEL_ROWS: usize = 128;
+/// Column tile width for the tiled path: a GRAM_TILE×GRAM_TILE f64
+/// tile of G is 32 KiB, so tile + row panel stay L2-resident.
+const GRAM_TILE: usize = 64;
+
 /// Gram of the stacked design BᵀB ∈ R^{dJ×dJ} computed straight from
 /// the basis planes: per `ROW_CHUNK` shard, four stacked rows at a
 /// time are gathered into a scratch panel and fed through the SAME
@@ -284,33 +297,97 @@ fn plane_leverage_scores(
 /// n × dJ copy. With `sqrt_w` it computes the weighted Gram
 /// Σ w·b bᵀ by scaling each gathered row — bit-identical to scaling a
 /// materialized stacked matrix first.
+///
+/// At dJ ≥ [`GRAM_TILE_GATE`] the per-chunk sweep is additionally
+/// L2-tiled: [`GRAM_PANEL_ROWS`] stacked rows are gathered into a
+/// panel once, then the upper triangle of G is updated one
+/// [`GRAM_TILE`]-wide (i, j) tile at a time via the `_range` SYRK
+/// kernels, replaying the panel per tile so the G working set stays
+/// cache-resident. Because the panel height is a multiple of 4, each G
+/// entry still sees the same ascending 4-row blocks with the same
+/// 4-term update expression, so the tiled path is bit-identical to the
+/// untiled one (on either kernel backend) — the gate is perf-only.
 fn stacked_gram_with(
     design: &Design,
     sqrt_w: Option<&[f64]>,
     pool: &Pool,
 ) -> crate::linalg::Mat {
-    use crate::linalg::{syrk_upper_row1, syrk_upper_rows4};
+    use crate::linalg::{
+        syrk_upper_row1, syrk_upper_row1_range, syrk_upper_rows4, syrk_upper_rows4_range,
+    };
     use crate::util::parallel::{add_assign, tree_reduce};
     let dj = design.j * design.d;
+    let tiled = dj >= GRAM_TILE_GATE;
     let partials = pool.map_chunks(design.n, ROW_CHUNK, |_, range| {
         let mut g = vec![0.0; dj * dj];
-        let mut rows = vec![0.0; 4 * dj];
         let (lo, hi) = (range.start, range.end);
-        let mut r = lo;
-        while r + 4 <= hi {
-            for t in 0..4 {
-                gather_stacked_row(design, r + t, sqrt_w, &mut rows[t * dj..(t + 1) * dj]);
+        if tiled {
+            let mut panel = vec![0.0; GRAM_PANEL_ROWS * dj];
+            let ntiles = dj.div_ceil(GRAM_TILE);
+            let mut plo = lo;
+            while plo < hi {
+                let phi = (plo + GRAM_PANEL_ROWS).min(hi);
+                let prows = phi - plo;
+                for t in 0..prows {
+                    gather_stacked_row(
+                        design,
+                        plo + t,
+                        sqrt_w,
+                        &mut panel[t * dj..(t + 1) * dj],
+                    );
+                }
+                for it in 0..ntiles {
+                    let ir = it * GRAM_TILE..((it + 1) * GRAM_TILE).min(dj);
+                    for jt in it..ntiles {
+                        let jr = jt * GRAM_TILE..((jt + 1) * GRAM_TILE).min(dj);
+                        let mut t = 0;
+                        while t + 4 <= prows {
+                            let blk = &panel[t * dj..(t + 4) * dj];
+                            let (r0, rest) = blk.split_at(dj);
+                            let (r1, rest) = rest.split_at(dj);
+                            let (r2, r3) = rest.split_at(dj);
+                            syrk_upper_rows4_range(
+                                r0,
+                                r1,
+                                r2,
+                                r3,
+                                ir.clone(),
+                                jr.clone(),
+                                &mut g,
+                            );
+                            t += 4;
+                        }
+                        while t < prows {
+                            syrk_upper_row1_range(
+                                &panel[t * dj..(t + 1) * dj],
+                                ir.clone(),
+                                jr.clone(),
+                                &mut g,
+                            );
+                            t += 1;
+                        }
+                    }
+                }
+                plo = phi;
             }
-            let (r0, rest) = rows.split_at(dj);
-            let (r1, rest) = rest.split_at(dj);
-            let (r2, r3) = rest.split_at(dj);
-            syrk_upper_rows4(r0, r1, r2, r3, &mut g);
-            r += 4;
-        }
-        while r < hi {
-            gather_stacked_row(design, r, sqrt_w, &mut rows[..dj]);
-            syrk_upper_row1(&rows[..dj], &mut g);
-            r += 1;
+        } else {
+            let mut rows = vec![0.0; 4 * dj];
+            let mut r = lo;
+            while r + 4 <= hi {
+                for t in 0..4 {
+                    gather_stacked_row(design, r + t, sqrt_w, &mut rows[t * dj..(t + 1) * dj]);
+                }
+                let (r0, rest) = rows.split_at(dj);
+                let (r1, rest) = rest.split_at(dj);
+                let (r2, r3) = rest.split_at(dj);
+                syrk_upper_rows4(r0, r1, r2, r3, &mut g);
+                r += 4;
+            }
+            while r < hi {
+                gather_stacked_row(design, r, sqrt_w, &mut rows[..dj]);
+                syrk_upper_row1(&rows[..dj], &mut g);
+                r += 1;
+            }
         }
         g
     });
@@ -450,6 +527,38 @@ mod tests {
                         "n={n} t={t} row {i}: {a} vs {b}"
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_stacked_gram_matches_materialized_bitwise() {
+        // dJ = 90 crosses GRAM_TILE_GATE, so this drives the L2-tiled
+        // SYRK path against the untiled materialized Gram; n = 2102
+        // spans two ROW_CHUNK shards with a non-multiple-of-4 tail and
+        // a short final panel
+        let design = random_design(2102, 10, 9, 47);
+        assert!(design.j * design.d >= GRAM_TILE_GATE);
+        let mut rng = Rng::new(48);
+        let sw: Vec<f64> = (0..2102).map(|_| rng.uniform(0.25, 3.0).sqrt()).collect();
+        for t in [1usize, 2] {
+            let pool = Pool::new(t);
+            let tiled = stacked_gram_with(&design, None, &pool);
+            let full = design.stacked().gram_with(&pool);
+            for (k, (a, b)) in tiled.data.iter().zip(&full.data).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "t={t} entry {k}");
+            }
+            // weighted: scale a materialized stacked copy first
+            let wtiled = stacked_gram_with(&design, Some(&sw), &pool);
+            let mut sm = design.stacked();
+            for i in 0..sm.rows {
+                for c in 0..sm.cols {
+                    sm.data[i * sm.cols + c] *= sw[i];
+                }
+            }
+            let wfull = sm.gram_with(&pool);
+            for (k, (a, b)) in wtiled.data.iter().zip(&wfull.data).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "t={t} weighted entry {k}");
             }
         }
     }

@@ -52,6 +52,7 @@ pub mod prelude {
     pub use crate::data::faulty::{FaultPlan, FaultySource};
     pub use crate::data::{GenShards, InvalidPolicy, MatShards, ShardError, ShardSource};
     pub use crate::fit::{FitOptions, FitResult, OptimizerKind};
+    pub use crate::linalg::simd::{simd_available, KernelBackend};
     pub use crate::linalg::Mat;
     pub use crate::mctm::{lambda_error, loglik_ratio, theta_l2, ModelSpec, Params};
     pub use crate::runtime::artifact::{

@@ -7,8 +7,26 @@
 //! four rows at a time, and row-sharded across the deterministic worker
 //! pool (`util::parallel`): fixed chunking + tree reduction keep results
 //! bit-identical for any thread count.
+//!
+//! ## Kernel backends
+//!
+//! The hot kernels — [`panel_matvec`], [`panel_accum_t`],
+//! [`panel_accum_t1`] and the syrk updates — exist in two
+//! implementations selected once per process through
+//! [`simd::KernelBackend`] (see the [`simd`] module for the selection
+//! and numerical-contract details): the **Scalar** bodies
+//! (`*_scalar`, kept verbatim as the bit-exact reference every bitwise
+//! pin is stated against) and the AVX2+FMA **Simd** variants. The
+//! public entry points here dispatch on [`simd::backend()`]; within
+//! one backend every determinism guarantee (thread count, consumer
+//! count, chunking) holds unchanged, because the lane/blocking shape
+//! depends only on the problem size.
+
+pub mod simd;
 
 use crate::util::parallel::{add_assign, tree_reduce, Pool, ROW_CHUNK};
+use simd::KernelBackend;
+use std::ops::Range;
 
 /// Row-major dense f64 matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -162,32 +180,88 @@ impl Mat {
 /// stacked Gram (`coreset::leverage`), so both accumulate in the same
 /// floating-point order **by construction** — the bitwise-identity
 /// contract between the two paths lives here, not in two hand-synced
-/// copies.
-pub(crate) fn syrk_upper_rows4(r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64], g: &mut [f64]) {
+/// copies. Dispatches on the active [`simd::KernelBackend`].
+pub fn syrk_upper_rows4(r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64], g: &mut [f64]) {
     let d = r0.len();
-    for i in 0..d {
+    syrk_upper_rows4_range(r0, r1, r2, r3, 0..d, 0..d, g)
+}
+
+/// [`syrk_upper_rows4`] restricted to the (i, j) tile `ir × jr` of the
+/// upper triangle (j additionally clamped to j ≥ i) — the building
+/// block of the L2-tiled stacked Gram in `coreset::leverage`. With
+/// `ir = jr = 0..d` this *is* the full-width update: per entry the
+/// 4-term expression and accumulation order are identical, so tiled
+/// and untiled accumulation are bit-identical on either backend.
+pub fn syrk_upper_rows4_range(
+    r0: &[f64],
+    r1: &[f64],
+    r2: &[f64],
+    r3: &[f64],
+    ir: Range<usize>,
+    jr: Range<usize>,
+    g: &mut [f64],
+) {
+    match simd::backend() {
+        KernelBackend::Scalar => syrk_upper_rows4_range_scalar(r0, r1, r2, r3, ir, jr, g),
+        KernelBackend::Simd => simd::syrk_upper_rows4_range_simd(r0, r1, r2, r3, ir, jr, g),
+    }
+}
+
+/// The scalar reference body of [`syrk_upper_rows4_range`] (bit-exact
+/// baseline for the Simd variant).
+pub fn syrk_upper_rows4_range_scalar(
+    r0: &[f64],
+    r1: &[f64],
+    r2: &[f64],
+    r3: &[f64],
+    ir: Range<usize>,
+    jr: Range<usize>,
+    g: &mut [f64],
+) {
+    let d = r0.len();
+    for i in ir {
         let (a0, a1, a2, a3) = (r0[i], r1[i], r2[i], r3[i]);
         if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
             continue;
         }
         let grow = &mut g[i * d..(i + 1) * d];
-        for j in i..d {
+        for j in jr.start.max(i)..jr.end {
             grow[j] += a0 * r0[j] + a1 * r1[j] + a2 * r2[j] + a3 * r3[j];
         }
     }
 }
 
 /// Single-row rank-1 syrk update — the remainder companion of
-/// [`syrk_upper_rows4`].
-pub(crate) fn syrk_upper_row1(row: &[f64], g: &mut [f64]) {
+/// [`syrk_upper_rows4`]. Dispatches on the active backend.
+pub fn syrk_upper_row1(row: &[f64], g: &mut [f64]) {
     let d = row.len();
-    for i in 0..d {
+    syrk_upper_row1_range(row, 0..d, 0..d, g)
+}
+
+/// [`syrk_upper_row1`] restricted to an (i, j) tile — the remainder
+/// companion of [`syrk_upper_rows4_range`].
+pub fn syrk_upper_row1_range(row: &[f64], ir: Range<usize>, jr: Range<usize>, g: &mut [f64]) {
+    match simd::backend() {
+        KernelBackend::Scalar => syrk_upper_row1_range_scalar(row, ir, jr, g),
+        KernelBackend::Simd => simd::syrk_upper_row1_range_simd(row, ir, jr, g),
+    }
+}
+
+/// The scalar reference body of [`syrk_upper_row1_range`].
+pub fn syrk_upper_row1_range_scalar(
+    row: &[f64],
+    ir: Range<usize>,
+    jr: Range<usize>,
+    g: &mut [f64],
+) {
+    let d = row.len();
+    for i in ir {
         let xi = row[i];
         if xi == 0.0 {
             continue;
         }
         let grow = &mut g[i * d..(i + 1) * d];
-        for j in i..d {
+        for j in jr.start.max(i)..jr.end {
             grow[j] += xi * row[j];
         }
     }
@@ -239,12 +313,25 @@ fn matmul_row_block(a: &Mat, b: &Mat, row0: usize, out: &mut [f64]) {
 /// Panel GEMV: `out[r] = Σ_k panel[r·d + k] · v[k]` for the
 /// `out.len()` rows of a contiguous (rows × d) panel — the blocked
 /// matrix–vector kernel behind the plane-major NLL evaluation
-/// (`mctm::model`). Four accumulator chains per pass over `v` (the
-/// [`Mat::matmul_with`] 4-row blocking idiom) quarter the reload
-/// traffic of row-at-a-time dots, while each row's k-order stays that
-/// of the naive dot — so every output element is bit-identical to
-/// row-at-a-time evaluation.
+/// (`mctm::model`). Dispatches on the active [`simd::KernelBackend`]:
+/// the Scalar body keeps each row's k-order that of the naive dot (so
+/// every output element is bit-identical to row-at-a-time evaluation);
+/// the Simd body accumulates in f64×4 FMA lanes with a horizontal
+/// reduction (≤ 1e-12 relative agreement, internally deterministic).
 pub fn panel_matvec(panel: &[f64], d: usize, v: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(panel.len(), out.len() * d);
+    debug_assert_eq!(v.len(), d);
+    match simd::backend() {
+        KernelBackend::Scalar => panel_matvec_scalar(panel, d, v, out),
+        KernelBackend::Simd => simd::panel_matvec_simd(panel, d, v, out),
+    }
+}
+
+/// The scalar reference body of [`panel_matvec`]: four accumulator
+/// chains per pass over `v` (the [`Mat::matmul_with`] 4-row blocking
+/// idiom) quarter the reload traffic of row-at-a-time dots, while each
+/// row's k-order stays that of the naive dot.
+pub fn panel_matvec_scalar(panel: &[f64], d: usize, v: &[f64], out: &mut [f64]) {
     let rows = out.len();
     debug_assert_eq!(panel.len(), rows * d);
     debug_assert_eq!(v.len(), d);
@@ -282,11 +369,29 @@ pub fn panel_matvec(panel: &[f64], d: usize, v: &[f64], out: &mut [f64]) {
 /// Transposed-panel accumulation: `acc[k] += Σ_r ca[r]·a[r·d + k] +
 /// cad[r]·ad[r·d + k]` over two parallel (rows × d) panels — the
 /// gradient update ∂θ_j += A_jᵀ·c_a + A'_jᵀ·c_ad of the blocked NLL
-/// kernel. Four rows per pass so each load of the accumulator row
-/// absorbs four updates; the adds into `acc[k]` stay row-sequential
-/// (one `+=` per row, each row's pair combined as `ca·a + cad·ad`), so
-/// the accumulated values are bit-identical to a row-at-a-time loop.
+/// kernel. Dispatches on the active [`simd::KernelBackend`]; the
+/// Scalar body is bit-identical to a row-at-a-time loop, the Simd body
+/// vectorizes over k with FMA (≤ 1e-12 relative agreement).
 pub fn panel_accum_t(
+    a_panel: &[f64],
+    ad_panel: &[f64],
+    d: usize,
+    ca: &[f64],
+    cad: &[f64],
+    acc: &mut [f64],
+) {
+    match simd::backend() {
+        KernelBackend::Scalar => panel_accum_t_scalar(a_panel, ad_panel, d, ca, cad, acc),
+        KernelBackend::Simd => simd::panel_accum_t_simd(a_panel, ad_panel, d, ca, cad, acc),
+    }
+}
+
+/// The scalar reference body of [`panel_accum_t`]: four rows per pass
+/// so each load of the accumulator row absorbs four updates; the adds
+/// into `acc[k]` stay row-sequential (one `+=` per row, each row's
+/// pair combined as `ca·a + cad·ad`), so the accumulated values are
+/// bit-identical to a row-at-a-time loop.
+pub fn panel_accum_t_scalar(
     a_panel: &[f64],
     ad_panel: &[f64],
     d: usize,
@@ -327,6 +432,54 @@ pub fn panel_accum_t(
         let (c, e) = (ca[r], cad[r]);
         for k in 0..d {
             acc[k] += c * a[k] + e * b[k];
+        }
+        r += 1;
+    }
+}
+
+/// Single-panel transposed accumulation: `acc[k] += Σ_r c[r]·panel[r·d
+/// + k]` — the Γ-gradient update ∂γ_j += Xᵀ·c_a of the blocked
+/// conditional kernel (`mctm::conditional`). A separate kernel rather
+/// than [`panel_accum_t`] with a zero coefficient panel, because `0 ·
+/// x` must never touch the second panel at all (a masked row may hold
+/// NaN, and 0·NaN would poison the accumulator). Dispatches on the
+/// active backend.
+pub fn panel_accum_t1(panel: &[f64], d: usize, c: &[f64], acc: &mut [f64]) {
+    match simd::backend() {
+        KernelBackend::Scalar => panel_accum_t1_scalar(panel, d, c, acc),
+        KernelBackend::Simd => simd::panel_accum_t1_simd(panel, d, c, acc),
+    }
+}
+
+/// The scalar reference body of [`panel_accum_t1`]: one `+=` per row
+/// into each `acc[k]`, rows ascending, so the accumulated values are
+/// bit-identical to a row-at-a-time `acc[k] += c·x[k]` loop.
+pub fn panel_accum_t1_scalar(panel: &[f64], d: usize, c: &[f64], acc: &mut [f64]) {
+    let rows = c.len();
+    debug_assert_eq!(panel.len(), rows * d);
+    debug_assert_eq!(acc.len(), d);
+    let mut r = 0usize;
+    while r + 4 <= rows {
+        let p0 = &panel[r * d..(r + 1) * d];
+        let p1 = &panel[(r + 1) * d..(r + 2) * d];
+        let p2 = &panel[(r + 2) * d..(r + 3) * d];
+        let p3 = &panel[(r + 3) * d..(r + 4) * d];
+        let (c0, c1, c2, c3) = (c[r], c[r + 1], c[r + 2], c[r + 3]);
+        for k in 0..d {
+            let mut g = acc[k];
+            g += c0 * p0[k];
+            g += c1 * p1[k];
+            g += c2 * p2[k];
+            g += c3 * p3[k];
+            acc[k] = g;
+        }
+        r += 4;
+    }
+    while r < rows {
+        let p = &panel[r * d..(r + 1) * d];
+        let cv = c[r];
+        for k in 0..d {
+            acc[k] += cv * p[k];
         }
         r += 1;
     }
@@ -817,12 +970,14 @@ mod tests {
 
     #[test]
     fn panel_matvec_bitwise_matches_row_dots() {
+        // the SCALAR body is the bit-exact one (the Simd dispatch forks
+        // FP order — its agreement pin lives in tests/simd_kernels.rs)
         let mut rng = Rng::new(31);
         let (rows, d) = (23, 6); // odd row count exercises the remainder path
         let panel: Vec<f64> = (0..rows * d).map(|_| rng.normal()).collect();
         let v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
         let mut out = vec![0.0; rows];
-        panel_matvec(&panel, d, &v, &mut out);
+        panel_matvec_scalar(&panel, d, &v, &mut out);
         for r in 0..rows {
             let mut s = 0.0;
             for k in 0..d {
@@ -841,7 +996,7 @@ mod tests {
         let ca: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
         let cad: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
         let mut acc = vec![0.0; d];
-        panel_accum_t(&a, &b, d, &ca, &cad, &mut acc);
+        panel_accum_t_scalar(&a, &b, d, &ca, &cad, &mut acc);
         let mut want = vec![0.0; d];
         for r in 0..rows {
             for k in 0..d {
@@ -850,6 +1005,56 @@ mod tests {
         }
         for k in 0..d {
             assert_eq!(acc[k].to_bits(), want[k].to_bits(), "k={k}");
+        }
+    }
+
+    #[test]
+    fn panel_accum_t1_bitwise_matches_row_loop() {
+        let mut rng = Rng::new(33);
+        let (rows, d) = (19, 3); // remainder rows + small d
+        let p: Vec<f64> = (0..rows * d).map(|_| rng.normal()).collect();
+        let c: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+        let mut acc = vec![0.0; d];
+        panel_accum_t1_scalar(&p, d, &c, &mut acc);
+        let mut want = vec![0.0; d];
+        for r in 0..rows {
+            for k in 0..d {
+                want[k] += c[r] * p[r * d + k];
+            }
+        }
+        for k in 0..d {
+            assert_eq!(acc[k].to_bits(), want[k].to_bits(), "k={k}");
+        }
+    }
+
+    #[test]
+    fn tiled_syrk_ranges_cover_full_update_bitwise() {
+        // splitting the upper triangle into (i, j) tiles and replaying
+        // the SAME 4-row update per tile must reproduce the full-width
+        // update bit for bit — the contract the L2-tiled stacked Gram
+        // (coreset::leverage) is built on
+        let mut rng = Rng::new(34);
+        let d = 11; // not a multiple of the 3-wide tiles below
+        let rows: Vec<Vec<f64>> =
+            (0..4).map(|_| (0..d).map(|_| rng.normal()).collect()).collect();
+        let mut g_full = vec![0.0; d * d];
+        syrk_upper_rows4_range_scalar(
+            &rows[0], &rows[1], &rows[2], &rows[3], 0..d, 0..d, &mut g_full,
+        );
+        let tile = 3;
+        let ntiles = d.div_ceil(tile);
+        let mut g_tiled = vec![0.0; d * d];
+        for it in 0..ntiles {
+            let ir = it * tile..((it + 1) * tile).min(d);
+            for jt in it..ntiles {
+                let jr = jt * tile..((jt + 1) * tile).min(d);
+                syrk_upper_rows4_range_scalar(
+                    &rows[0], &rows[1], &rows[2], &rows[3], ir.clone(), jr, &mut g_tiled,
+                );
+            }
+        }
+        for (k, (a, b)) in g_full.iter().zip(&g_tiled).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "entry {k}");
         }
     }
 

@@ -1,0 +1,544 @@
+//! Runtime-dispatched SIMD variants of the blocked linear-algebra
+//! kernels: explicit f64×4-lane (AVX2 + FMA) implementations of
+//! [`panel_matvec`](crate::linalg::panel_matvec),
+//! [`panel_accum_t`](crate::linalg::panel_accum_t),
+//! [`panel_accum_t1`](crate::linalg::panel_accum_t1) and the syrk
+//! updates behind the Gram paths, selected once per process through
+//! [`KernelBackend`].
+//!
+//! ## Backend selection
+//!
+//! The backend is a process global resolved exactly like the worker
+//! count in `util::parallel`: the `MCTM_SIMD` environment variable
+//! (`off` / `0` / `false` / `scalar` force the scalar reference path)
+//! is consulted first, then `is_x86_feature_detected!` picks Simd when
+//! the host has AVX2 + FMA. [`set_backend`] overrides at runtime (the
+//! facade's `SessionBuilder::kernel_backend` and the benches use it);
+//! a Simd request on a host without the features clamps to Scalar, so
+//! [`backend`] never returns an unrunnable variant.
+//!
+//! ## Numerical contract — per-backend guarantees
+//!
+//! * **Scalar** is the bit-exact reference: every pre-existing bitwise
+//!   pin (blocked ≡ row-at-a-time, plane-direct ≡ materialized,
+//!   threads/consumers/artifact reproduction) holds unchanged.
+//! * **Simd** forks the floating-point summation order (4-wide FMA
+//!   lanes + horizontal reduction), so it is pinned to ≤ 1e-12
+//!   *relative* agreement with Scalar (`tests/simd_kernels.rs`) — and
+//!   it is internally deterministic: the lane grouping depends only on
+//!   the problem shape, never on threads, so same seed + same backend
+//!   ⇒ bitwise-same results. Cross-backend bit-identity is explicitly
+//!   NOT claimed.
+//!
+//! The kernels themselves live here as `unsafe` `#[target_feature]`
+//! functions plus safe wrappers that fall back to the scalar reference
+//! on non-x86_64 targets; the public dispatching entry points stay in
+//! `linalg` so call sites are untouched.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Which kernel implementation the process runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// Bit-exact reference kernels (scalar f64, 4-row blocking only).
+    Scalar,
+    /// AVX2 + FMA f64×4-lane kernels (x86_64 with runtime detection).
+    Simd,
+}
+
+impl KernelBackend {
+    fn to_tag(self) -> usize {
+        match self {
+            KernelBackend::Scalar => 1,
+            KernelBackend::Simd => 2,
+        }
+    }
+
+    fn from_tag(tag: usize) -> KernelBackend {
+        if tag == 2 {
+            KernelBackend::Simd
+        } else {
+            KernelBackend::Scalar
+        }
+    }
+}
+
+/// 0 = unresolved (env / feature detection on first use), 1 = Scalar,
+/// 2 = Simd — the same lazy-global idiom as `parallel::GLOBAL_THREADS`.
+static BACKEND: AtomicUsize = AtomicUsize::new(0);
+
+/// Whether the AVX2 + FMA kernels can run on this host.
+pub fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+fn resolve_default_backend() -> KernelBackend {
+    if let Ok(v) = std::env::var("MCTM_SIMD") {
+        let v = v.trim().to_ascii_lowercase();
+        if matches!(v.as_str(), "off" | "0" | "false" | "scalar") {
+            return KernelBackend::Scalar;
+        }
+    }
+    if simd_available() {
+        KernelBackend::Simd
+    } else {
+        KernelBackend::Scalar
+    }
+}
+
+/// Pin the kernel backend. A `Simd` request on a host without
+/// AVX2 + FMA clamps to `Scalar` (the choice never changes
+/// correctness — Scalar is the reference — only throughput and the
+/// FP summation order).
+pub fn set_backend(b: KernelBackend) {
+    let b = if b == KernelBackend::Simd && !simd_available() {
+        KernelBackend::Scalar
+    } else {
+        b
+    };
+    BACKEND.store(b.to_tag(), Ordering::SeqCst);
+}
+
+/// The active kernel backend: `MCTM_SIMD` env override, else AVX2+FMA
+/// auto-detection, else whatever [`set_backend`] chose — resolved once
+/// and cached (compare-exchange so a lazy init never clobbers a
+/// concurrent explicit [`set_backend`]).
+pub fn backend() -> KernelBackend {
+    match BACKEND.load(Ordering::SeqCst) {
+        0 => {
+            let b = resolve_default_backend();
+            match BACKEND.compare_exchange(0, b.to_tag(), Ordering::SeqCst, Ordering::SeqCst) {
+                Ok(_) => b,
+                Err(current) => KernelBackend::from_tag(current),
+            }
+        }
+        tag => KernelBackend::from_tag(tag),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! The AVX2 + FMA kernel bodies. All of them assume the same slice
+    //! shapes their scalar twins `debug_assert`, and are only reachable
+    //! through the safe wrappers below after a runtime feature check.
+    use std::arch::x86_64::*;
+    use std::ops::Range;
+
+    /// Horizontal sums of four accumulators into `[Σs0, Σs1, Σs2, Σs3]`.
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hsum4(s0: __m256d, s1: __m256d, s2: __m256d, s3: __m256d) -> [f64; 4] {
+        // hadd pairs within 128-bit halves; the permutes regroup the
+        // low/high halves per accumulator so one add finishes all four.
+        let t0 = _mm256_hadd_pd(s0, s1);
+        let t1 = _mm256_hadd_pd(s2, s3);
+        let lo = _mm256_permute2f128_pd(t0, t1, 0x20);
+        let hi = _mm256_permute2f128_pd(t0, t1, 0x31);
+        let mut out = [0.0f64; 4];
+        _mm256_storeu_pd(out.as_mut_ptr(), _mm256_add_pd(lo, hi));
+        out
+    }
+
+    /// # Safety
+    /// Requires AVX2 + FMA; `panel.len() == out.len() * d`, `v.len() == d`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn panel_matvec(panel: &[f64], d: usize, v: &[f64], out: &mut [f64]) {
+        let rows = out.len();
+        let vp = v.as_ptr();
+        let d4 = d & !3;
+        let mut r = 0usize;
+        while r + 4 <= rows {
+            let p0 = panel.as_ptr().add(r * d);
+            let p1 = p0.add(d);
+            let p2 = p1.add(d);
+            let p3 = p2.add(d);
+            let mut s0 = _mm256_setzero_pd();
+            let mut s1 = _mm256_setzero_pd();
+            let mut s2 = _mm256_setzero_pd();
+            let mut s3 = _mm256_setzero_pd();
+            let mut k = 0usize;
+            while k < d4 {
+                let vk = _mm256_loadu_pd(vp.add(k));
+                s0 = _mm256_fmadd_pd(_mm256_loadu_pd(p0.add(k)), vk, s0);
+                s1 = _mm256_fmadd_pd(_mm256_loadu_pd(p1.add(k)), vk, s1);
+                s2 = _mm256_fmadd_pd(_mm256_loadu_pd(p2.add(k)), vk, s2);
+                s3 = _mm256_fmadd_pd(_mm256_loadu_pd(p3.add(k)), vk, s3);
+                k += 4;
+            }
+            let mut sums = hsum4(s0, s1, s2, s3);
+            while k < d {
+                let vk = *vp.add(k);
+                sums[0] += *p0.add(k) * vk;
+                sums[1] += *p1.add(k) * vk;
+                sums[2] += *p2.add(k) * vk;
+                sums[3] += *p3.add(k) * vk;
+                k += 1;
+            }
+            out[r] = sums[0];
+            out[r + 1] = sums[1];
+            out[r + 2] = sums[2];
+            out[r + 3] = sums[3];
+            r += 4;
+        }
+        while r < rows {
+            let p = panel.as_ptr().add(r * d);
+            let mut acc = _mm256_setzero_pd();
+            let mut k = 0usize;
+            while k < d4 {
+                acc = _mm256_fmadd_pd(
+                    _mm256_loadu_pd(p.add(k)),
+                    _mm256_loadu_pd(vp.add(k)),
+                    acc,
+                );
+                k += 4;
+            }
+            let mut lanes = [0.0f64; 4];
+            _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+            let mut s = (lanes[0] + lanes[2]) + (lanes[1] + lanes[3]);
+            while k < d {
+                s += *p.add(k) * *vp.add(k);
+                k += 1;
+            }
+            out[r] = s;
+            r += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 + FMA; panel lengths `ca.len() * d`, `cad.len() ==
+    /// ca.len()`, `acc.len() == d`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn panel_accum_t(
+        a_panel: &[f64],
+        ad_panel: &[f64],
+        d: usize,
+        ca: &[f64],
+        cad: &[f64],
+        acc: &mut [f64],
+    ) {
+        let rows = ca.len();
+        let d4 = d & !3;
+        let mut r = 0usize;
+        while r + 4 <= rows {
+            let a0 = a_panel.as_ptr().add(r * d);
+            let a1 = a0.add(d);
+            let a2 = a1.add(d);
+            let a3 = a2.add(d);
+            let b0 = ad_panel.as_ptr().add(r * d);
+            let b1 = b0.add(d);
+            let b2 = b1.add(d);
+            let b3 = b2.add(d);
+            let c0 = _mm256_set1_pd(ca[r]);
+            let c1 = _mm256_set1_pd(ca[r + 1]);
+            let c2 = _mm256_set1_pd(ca[r + 2]);
+            let c3 = _mm256_set1_pd(ca[r + 3]);
+            let e0 = _mm256_set1_pd(cad[r]);
+            let e1 = _mm256_set1_pd(cad[r + 1]);
+            let e2 = _mm256_set1_pd(cad[r + 2]);
+            let e3 = _mm256_set1_pd(cad[r + 3]);
+            let mut k = 0usize;
+            while k < d4 {
+                let mut g = _mm256_loadu_pd(acc.as_ptr().add(k));
+                g = _mm256_fmadd_pd(c0, _mm256_loadu_pd(a0.add(k)), g);
+                g = _mm256_fmadd_pd(e0, _mm256_loadu_pd(b0.add(k)), g);
+                g = _mm256_fmadd_pd(c1, _mm256_loadu_pd(a1.add(k)), g);
+                g = _mm256_fmadd_pd(e1, _mm256_loadu_pd(b1.add(k)), g);
+                g = _mm256_fmadd_pd(c2, _mm256_loadu_pd(a2.add(k)), g);
+                g = _mm256_fmadd_pd(e2, _mm256_loadu_pd(b2.add(k)), g);
+                g = _mm256_fmadd_pd(c3, _mm256_loadu_pd(a3.add(k)), g);
+                g = _mm256_fmadd_pd(e3, _mm256_loadu_pd(b3.add(k)), g);
+                _mm256_storeu_pd(acc.as_mut_ptr().add(k), g);
+                k += 4;
+            }
+            while k < d {
+                let mut g = acc[k];
+                g += ca[r] * *a0.add(k) + cad[r] * *b0.add(k);
+                g += ca[r + 1] * *a1.add(k) + cad[r + 1] * *b1.add(k);
+                g += ca[r + 2] * *a2.add(k) + cad[r + 2] * *b2.add(k);
+                g += ca[r + 3] * *a3.add(k) + cad[r + 3] * *b3.add(k);
+                acc[k] = g;
+                k += 1;
+            }
+            r += 4;
+        }
+        while r < rows {
+            let a = a_panel.as_ptr().add(r * d);
+            let b = ad_panel.as_ptr().add(r * d);
+            let c = _mm256_set1_pd(ca[r]);
+            let e = _mm256_set1_pd(cad[r]);
+            let mut k = 0usize;
+            while k < d4 {
+                let mut g = _mm256_loadu_pd(acc.as_ptr().add(k));
+                g = _mm256_fmadd_pd(c, _mm256_loadu_pd(a.add(k)), g);
+                g = _mm256_fmadd_pd(e, _mm256_loadu_pd(b.add(k)), g);
+                _mm256_storeu_pd(acc.as_mut_ptr().add(k), g);
+                k += 4;
+            }
+            while k < d {
+                acc[k] += ca[r] * *a.add(k) + cad[r] * *b.add(k);
+                k += 1;
+            }
+            r += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 + FMA; `panel.len() == c.len() * d`, `acc.len() == d`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn panel_accum_t1(panel: &[f64], d: usize, c: &[f64], acc: &mut [f64]) {
+        let rows = c.len();
+        let d4 = d & !3;
+        let mut r = 0usize;
+        while r + 4 <= rows {
+            let p0 = panel.as_ptr().add(r * d);
+            let p1 = p0.add(d);
+            let p2 = p1.add(d);
+            let p3 = p2.add(d);
+            let c0 = _mm256_set1_pd(c[r]);
+            let c1 = _mm256_set1_pd(c[r + 1]);
+            let c2 = _mm256_set1_pd(c[r + 2]);
+            let c3 = _mm256_set1_pd(c[r + 3]);
+            let mut k = 0usize;
+            while k < d4 {
+                let mut g = _mm256_loadu_pd(acc.as_ptr().add(k));
+                g = _mm256_fmadd_pd(c0, _mm256_loadu_pd(p0.add(k)), g);
+                g = _mm256_fmadd_pd(c1, _mm256_loadu_pd(p1.add(k)), g);
+                g = _mm256_fmadd_pd(c2, _mm256_loadu_pd(p2.add(k)), g);
+                g = _mm256_fmadd_pd(c3, _mm256_loadu_pd(p3.add(k)), g);
+                _mm256_storeu_pd(acc.as_mut_ptr().add(k), g);
+                k += 4;
+            }
+            while k < d {
+                let mut g = acc[k];
+                g += c[r] * *p0.add(k);
+                g += c[r + 1] * *p1.add(k);
+                g += c[r + 2] * *p2.add(k);
+                g += c[r + 3] * *p3.add(k);
+                acc[k] = g;
+                k += 1;
+            }
+            r += 4;
+        }
+        while r < rows {
+            let p = panel.as_ptr().add(r * d);
+            let cv = _mm256_set1_pd(c[r]);
+            let mut k = 0usize;
+            while k < d4 {
+                let mut g = _mm256_loadu_pd(acc.as_ptr().add(k));
+                g = _mm256_fmadd_pd(cv, _mm256_loadu_pd(p.add(k)), g);
+                _mm256_storeu_pd(acc.as_mut_ptr().add(k), g);
+                k += 4;
+            }
+            while k < d {
+                acc[k] += c[r] * *p.add(k);
+                k += 1;
+            }
+            r += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 + FMA; `r0..r3` same length `dcols`, `g` a flat
+    /// `dcols × dcols` buffer, `ir`/`jr` within `[0, dcols]`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn syrk_upper_rows4_range(
+        r0: &[f64],
+        r1: &[f64],
+        r2: &[f64],
+        r3: &[f64],
+        ir: Range<usize>,
+        jr: Range<usize>,
+        g: &mut [f64],
+    ) {
+        let dcols = r0.len();
+        for i in ir {
+            let (a0, a1, a2, a3) = (r0[i], r1[i], r2[i], r3[i]);
+            if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                continue;
+            }
+            let va0 = _mm256_set1_pd(a0);
+            let va1 = _mm256_set1_pd(a1);
+            let va2 = _mm256_set1_pd(a2);
+            let va3 = _mm256_set1_pd(a3);
+            let grow = g.as_mut_ptr().add(i * dcols);
+            let mut j = jr.start.max(i);
+            while j + 4 <= jr.end {
+                let mut gv = _mm256_loadu_pd(grow.add(j));
+                gv = _mm256_fmadd_pd(va0, _mm256_loadu_pd(r0.as_ptr().add(j)), gv);
+                gv = _mm256_fmadd_pd(va1, _mm256_loadu_pd(r1.as_ptr().add(j)), gv);
+                gv = _mm256_fmadd_pd(va2, _mm256_loadu_pd(r2.as_ptr().add(j)), gv);
+                gv = _mm256_fmadd_pd(va3, _mm256_loadu_pd(r3.as_ptr().add(j)), gv);
+                _mm256_storeu_pd(grow.add(j), gv);
+                j += 4;
+            }
+            while j < jr.end {
+                // scalar FMA chain in the SAME order as the vector
+                // lanes, so an entry's bits never depend on whether the
+                // tile grouping lands it in the 4-wide or remainder
+                // path — this is what keeps the L2-tiled Gram
+                // bit-identical to the untiled sweep on this backend
+                let g0 = a0.mul_add(r0[j], *grow.add(j));
+                let g1 = a1.mul_add(r1[j], g0);
+                let g2 = a2.mul_add(r2[j], g1);
+                *grow.add(j) = a3.mul_add(r3[j], g2);
+                j += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 + FMA; same shape contract as
+    /// [`syrk_upper_rows4_range`] with a single row.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn syrk_upper_row1_range(
+        row: &[f64],
+        ir: Range<usize>,
+        jr: Range<usize>,
+        g: &mut [f64],
+    ) {
+        let dcols = row.len();
+        for i in ir {
+            let xi = row[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let vxi = _mm256_set1_pd(xi);
+            let grow = g.as_mut_ptr().add(i * dcols);
+            let mut j = jr.start.max(i);
+            while j + 4 <= jr.end {
+                let mut gv = _mm256_loadu_pd(grow.add(j));
+                gv = _mm256_fmadd_pd(vxi, _mm256_loadu_pd(row.as_ptr().add(j)), gv);
+                _mm256_storeu_pd(grow.add(j), gv);
+                j += 4;
+            }
+            while j < jr.end {
+                // scalar FMA to match the vector lanes (see rows4)
+                *grow.add(j) = xi.mul_add(row[j], *grow.add(j));
+                j += 1;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Safe Simd entry points. On x86_64 they run the AVX2+FMA bodies after
+// asserting availability; on other targets they degrade to the scalar
+// reference so the crate builds and behaves identically everywhere.
+// `tests/simd_kernels.rs` calls these directly (guarded on
+// `simd_available()`) to pin Simd-vs-Scalar agreement per kernel.
+
+/// SIMD [`crate::linalg::panel_matvec`]. Panics (debug) if the host
+/// lacks AVX2+FMA on x86_64; scalar fallback elsewhere.
+pub fn panel_matvec_simd(panel: &[f64], d: usize, v: &[f64], out: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        debug_assert!(simd_available(), "Simd backend on non-AVX2 host");
+        unsafe { x86::panel_matvec(panel, d, v, out) }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        super::panel_matvec_scalar(panel, d, v, out)
+    }
+}
+
+/// SIMD [`crate::linalg::panel_accum_t`].
+pub fn panel_accum_t_simd(
+    a_panel: &[f64],
+    ad_panel: &[f64],
+    d: usize,
+    ca: &[f64],
+    cad: &[f64],
+    acc: &mut [f64],
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        debug_assert!(simd_available(), "Simd backend on non-AVX2 host");
+        unsafe { x86::panel_accum_t(a_panel, ad_panel, d, ca, cad, acc) }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        super::panel_accum_t_scalar(a_panel, ad_panel, d, ca, cad, acc)
+    }
+}
+
+/// SIMD [`crate::linalg::panel_accum_t1`].
+pub fn panel_accum_t1_simd(panel: &[f64], d: usize, c: &[f64], acc: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        debug_assert!(simd_available(), "Simd backend on non-AVX2 host");
+        unsafe { x86::panel_accum_t1(panel, d, c, acc) }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        super::panel_accum_t1_scalar(panel, d, c, acc)
+    }
+}
+
+/// SIMD [`crate::linalg::syrk_upper_rows4_range`].
+pub fn syrk_upper_rows4_range_simd(
+    r0: &[f64],
+    r1: &[f64],
+    r2: &[f64],
+    r3: &[f64],
+    ir: std::ops::Range<usize>,
+    jr: std::ops::Range<usize>,
+    g: &mut [f64],
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        debug_assert!(simd_available(), "Simd backend on non-AVX2 host");
+        unsafe { x86::syrk_upper_rows4_range(r0, r1, r2, r3, ir, jr, g) }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        super::syrk_upper_rows4_range_scalar(r0, r1, r2, r3, ir, jr, g)
+    }
+}
+
+/// SIMD [`crate::linalg::syrk_upper_row1_range`].
+pub fn syrk_upper_row1_range_simd(
+    row: &[f64],
+    ir: std::ops::Range<usize>,
+    jr: std::ops::Range<usize>,
+    g: &mut [f64],
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        debug_assert!(simd_available(), "Simd backend on non-AVX2 host");
+        unsafe { x86::syrk_upper_row1_range(row, ir, jr, g) }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        super::syrk_upper_row1_range_scalar(row, ir, jr, g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_tags_roundtrip() {
+        for b in [KernelBackend::Scalar, KernelBackend::Simd] {
+            assert_eq!(KernelBackend::from_tag(b.to_tag()), b);
+        }
+        // unknown tags degrade to the reference backend
+        assert_eq!(KernelBackend::from_tag(0), KernelBackend::Scalar);
+        assert_eq!(KernelBackend::from_tag(7), KernelBackend::Scalar);
+    }
+
+    #[test]
+    fn backend_resolves_to_a_runnable_variant() {
+        let b = backend();
+        if b == KernelBackend::Simd {
+            assert!(simd_available());
+        }
+    }
+}

@@ -8,7 +8,7 @@
 
 use super::params::{ModelSpec, Params};
 use crate::basis::Design;
-use crate::fit::{fit_native, FitOptions};
+use crate::fit::{minimize, FitOptions, NativeNll};
 use crate::util::rng::{AliasTable, Rng};
 
 /// A per-parameter percentile interval.
@@ -68,26 +68,38 @@ pub fn bootstrap_ci(
     let mut warm_opts = opts.clone();
     warm_opts.max_iters = opts.max_iters.min(120);
 
+    // hoisted replicate state: the resample index buffer, the
+    // sub-design (gathered in place via `Design::select_into`), the
+    // uniform replicate weights and the cold-start vector are allocated
+    // once and reused across every replicate — `tests/fit_alloc.rs`
+    // pins that per-replicate allocations stay flat
+    let m = n; // resample size = coreset size
+    let init_x = Params::init(spec).x;
+    let rw = vec![total_w / m as f64; m];
+    let mut idx: Vec<usize> = Vec::with_capacity(m);
+    let mut sub = design.select(&[]);
+
     let mut free_samples: Vec<Vec<f64>> = Vec::with_capacity(replicates);
     let mut theta_samples: Vec<Vec<f64>> = Vec::with_capacity(replicates);
     for _ in 0..replicates {
-        let m = n; // resample size = coreset size
-        let mut idx = Vec::with_capacity(m);
+        idx.clear();
         for _ in 0..m {
             idx.push(table.sample(rng));
         }
-        let sub = design.select(&idx);
-        let rw = vec![total_w / m as f64; m];
-        let mut fit = fit_native(spec, &sub, rw, &warm_opts);
-        // restart from point estimate is handled inside fit_native via
-        // Params::init; warm start instead:
-        let obj = crate::fit::NativeNll::new(spec, &sub, vec![total_w / m as f64; m]);
-        let (x, nll, _, _) = crate::fit::minimize(&obj, point.x.clone(), &warm_opts);
-        if nll.is_finite() && nll <= fit.nll {
-            fit.params = Params::new(spec, x);
-        }
-        theta_samples.push(fit.params.theta());
-        free_samples.push(fit.params.x);
+        design.select_into(&idx, &mut sub);
+        // one objective per replicate, two starts — cold (the default
+        // init, as `fit_native` would) and warm (the point estimate) —
+        // keeping whichever converges lower
+        let obj = NativeNll::new(spec, &sub, rw.clone());
+        let (xc, nll_c, _, _) = minimize(&obj, init_x.clone(), &warm_opts);
+        let (xw, nll_w, _, _) = minimize(&obj, point.x.clone(), &warm_opts);
+        let params = if nll_w.is_finite() && nll_w <= nll_c {
+            Params::new(spec, xw)
+        } else {
+            Params::new(spec, xc)
+        };
+        theta_samples.push(params.theta());
+        free_samples.push(params.x);
     }
 
     let alpha = (1.0 - level) / 2.0;
@@ -120,6 +132,7 @@ mod tests {
     use crate::coreset::samplers::build_coreset_on;
     use crate::coreset::Method;
     use crate::data::dgp::Dgp;
+    use crate::fit::fit_native;
     use crate::util::parallel::Pool;
 
     fn quick_opts() -> FitOptions {

@@ -10,10 +10,31 @@
 //! machinery carries over verbatim with the stacked rows extended to
 //! b_i = (a_1(y_i1), …, a_J(y_iJ), x_i) ∈ R^{dJ+q} — exactly the
 //! claimed +q dimension dependence.
+//!
+//! ## Blocked evaluation
+//!
+//! Since PR 8 the conditional NLL runs the same fused blocked engine as
+//! the unconditional kernel (`mctm::model::nll_impl`): per `ROW_CHUNK`
+//! shard, margin panels H/H' via [`crate::linalg::panel_matvec`], the
+//! feature shift X·γ_j through the SAME panel GEMV over the contiguous
+//! feature rows, the triangular λ combination + loss on the whole
+//! chunk, and the gradient via [`crate::linalg::panel_accum_t`]
+//! (θ block) / [`crate::linalg::panel_accum_t1`] (Γ block) over maximal
+//! nonzero-weight runs. The pre-PR-8 row-at-a-time kernel is retained as
+//! [`cond_nll_grad_reference`]; on the Scalar backend the blocked path
+//! reproduces it bit for bit at any thread count (pinned in
+//! `tests/simd_kernels.rs`), on the Simd backend agreement is ≤ 1e-12
+//! relative (see `linalg::simd`). [`CondNll`] holds a reusable
+//! [`CondScratch`] so the optimizer loop — and every bootstrap
+//! replicate reusing the objective — allocates nothing per evaluation
+//! above the worker pool (`tests/fit_alloc.rs`).
 
-use super::params::{softplus, ModelSpec};
+use super::model::ETA_FLOOR;
+use super::params::{sigmoid, softplus, ModelSpec};
 use crate::basis::Design;
-use crate::linalg::Mat;
+use crate::linalg::{panel_accum_t, panel_accum_t1, panel_matvec, Mat};
+use crate::util::parallel::{add_assign, tree_reduce, Pool, ROW_CHUNK};
+use std::cell::RefCell;
 
 /// Shape of a conditional MCTM: J outputs, d basis functions, q
 /// features.
@@ -39,13 +60,15 @@ impl CondSpec {
         ModelSpec::new(self.j, self.d)
     }
 
+    /// Start of the Γ block in the free vector (β | Γ | λ).
     #[inline]
-    fn gamma_off(&self) -> usize {
+    pub fn gamma_off(&self) -> usize {
         self.j * self.d
     }
 
+    /// Start of the λ block in the free vector (β | Γ | λ).
     #[inline]
-    fn lambda_off(&self) -> usize {
+    pub fn lambda_off(&self) -> usize {
         self.j * self.d + self.j * self.q
     }
 }
@@ -81,9 +104,306 @@ impl CondDesign {
     }
 }
 
+/// Reusable per-call scratch of the blocked conditional kernel: the ϑ
+/// materialization buffer and the hoisted λ row offsets — the
+/// conditional twin of `mctm::model::NllScratch`. [`CondNll`] holds one
+/// per objective so repeated evaluations (optimizer iterations,
+/// bootstrap replicates) allocate nothing at this layer.
+pub struct CondScratch {
+    theta: Vec<f64>,
+    lam_off: Vec<usize>,
+}
+
+impl CondScratch {
+    pub fn new(spec: CondSpec) -> Self {
+        CondScratch {
+            theta: vec![0.0; spec.j * spec.d],
+            lam_off: (0..spec.j).map(|jj| jj * jj.saturating_sub(1) / 2).collect(),
+        }
+    }
+}
+
+/// Per-chunk partial of the conditional NLL/gradient; merged by the
+/// same fixed-shape tree reduction as the unconditional kernel so
+/// results are bit-identical for any thread count.
+struct CondPartial {
+    total: f64,
+    grad_theta: Vec<f64>,
+    grad_gamma: Vec<f64>,
+    grad_lambda: Vec<f64>,
+}
+
 /// Weighted conditional NLL and gradient w.r.t. the free vector
-/// (β | Γ | λ). Same loss as Eq. (1) with the shifted h̃.
+/// (β | Γ | λ). Same loss as Eq. (1) with the shifted h̃. Allocating
+/// convenience over [`cond_nll_grad_into_with`] on the ambient pool.
 pub fn cond_nll_grad(
+    cd: &CondDesign,
+    weights: &[f64],
+    spec: CondSpec,
+    params: &[f64],
+) -> (f64, Vec<f64>) {
+    cond_nll_grad_with(cd, weights, spec, params, &Pool::current())
+}
+
+/// [`cond_nll_grad`] on an explicit pool.
+pub fn cond_nll_grad_with(
+    cd: &CondDesign,
+    weights: &[f64],
+    spec: CondSpec,
+    params: &[f64],
+    pool: &Pool,
+) -> (f64, Vec<f64>) {
+    let mut grad = vec![0.0; spec.n_params()];
+    let mut scratch = CondScratch::new(spec);
+    let v = cond_nll_grad_into_with(cd, weights, spec, params, &mut grad, &mut scratch, pool);
+    (v, grad)
+}
+
+/// [`cond_nll_grad`] writing into a caller-owned gradient buffer
+/// through a reusable [`CondScratch`] — the allocation-free path
+/// `CondNll::value_grad_into` drives.
+pub fn cond_nll_grad_into_with(
+    cd: &CondDesign,
+    weights: &[f64],
+    spec: CondSpec,
+    params: &[f64],
+    grad: &mut [f64],
+    scratch: &mut CondScratch,
+    pool: &Pool,
+) -> f64 {
+    assert_eq!(grad.len(), spec.n_params(), "gradient buffer length");
+    cond_nll_impl(cd, weights, spec, params, Some(grad), scratch, pool)
+}
+
+/// Value-only conditional NLL through caller-owned scratch — the
+/// allocation-free value path (`CondNll::value`).
+pub fn cond_nll_with_scratch(
+    cd: &CondDesign,
+    weights: &[f64],
+    spec: CondSpec,
+    params: &[f64],
+    scratch: &mut CondScratch,
+    pool: &Pool,
+) -> f64 {
+    cond_nll_impl(cd, weights, spec, params, None, scratch, pool)
+}
+
+/// The fused blocked conditional evaluation (see the module doc): the
+/// unconditional engine plus a feature-shift panel X·γ_j added onto H
+/// and a Γ-gradient panel Xᵀ·c_a per margin. Every accumulator's
+/// floating-point order equals the row-at-a-time reference
+/// ([`cond_nll_grad_reference`]) on the Scalar backend.
+fn cond_nll_impl(
+    cd: &CondDesign,
+    weights: &[f64],
+    spec: CondSpec,
+    params: &[f64],
+    grad: Option<&mut [f64]>,
+    scratch: &mut CondScratch,
+    pool: &Pool,
+) -> f64 {
+    let (j, d, q) = (spec.j, spec.d, spec.q);
+    assert_eq!(params.len(), spec.n_params());
+    let design = &cd.design;
+    assert_eq!(design.j, j, "design J mismatch");
+    assert_eq!(design.d, d, "design d mismatch");
+    assert_eq!(cd.x.cols, q, "feature width mismatch");
+    assert_eq!(cd.x.rows, design.n, "feature rows mismatch");
+    assert!(
+        weights.is_empty() || weights.len() == design.n,
+        "weights length"
+    );
+    assert_eq!(scratch.theta.len(), j * d, "scratch spec mismatch");
+
+    // θ from β (cumulative softplus, as unconditional)
+    for jj in 0..j {
+        let b = &params[jj * d..(jj + 1) * d];
+        let t = &mut scratch.theta[jj * d..(jj + 1) * d];
+        t[0] = b[0];
+        for k in 1..d {
+            t[k] = t[k - 1] + softplus(b[k]);
+        }
+    }
+    let theta: &[f64] = &scratch.theta;
+    let lam_off: &[usize] = &scratch.lam_off;
+    let gamma = &params[spec.gamma_off()..spec.lambda_off()];
+    let lam = &params[spec.lambda_off()..];
+    let want_grad = grad.is_some();
+    let n_lam = j * (j - 1) / 2;
+
+    let partials = pool.map_chunks(design.n, ROW_CHUNK, |_, range| {
+        let lo = range.start;
+        let cl = range.len();
+        // margin panels over this chunk, then the feature shift X·γ_j
+        // added elementwise — htil[jj·cl + r] = a_rᵀθ_j + x_rᵀγ_j with
+        // the shift dot in the same order as the reference row loop
+        let mut h = vec![0.0; j * cl];
+        let mut hd = vec![0.0; j * cl];
+        let mut sh = vec![0.0; cl];
+        let xchunk = &cd.x.data[lo * q..(lo + cl) * q];
+        for jj in 0..j {
+            let th = &theta[jj * d..(jj + 1) * d];
+            let pa = &design.a_plane(jj)[lo * d..(lo + cl) * d];
+            let pad = &design.ad_plane(jj)[lo * d..(lo + cl) * d];
+            panel_matvec(pa, d, th, &mut h[jj * cl..(jj + 1) * cl]);
+            panel_matvec(pad, d, th, &mut hd[jj * cl..(jj + 1) * cl]);
+            panel_matvec(xchunk, q, &gamma[jj * q..(jj + 1) * q], &mut sh);
+            let hj = &mut h[jj * cl..(jj + 1) * cl];
+            for r in 0..cl {
+                hj[r] += sh[r];
+            }
+        }
+        let mut part = CondPartial {
+            total: 0.0,
+            grad_theta: vec![0.0; if want_grad { j * d } else { 0 }],
+            grad_gamma: vec![0.0; if want_grad { j * q } else { 0 }],
+            grad_lambda: vec![0.0; if want_grad { n_lam } else { 0 }],
+        };
+        let mut z = vec![0.0; if want_grad { j * cl } else { 0 }];
+
+        // triangular λ combination + loss, rows in chunk order
+        for r in 0..cl {
+            let w = if weights.is_empty() { 1.0 } else { weights[lo + r] };
+            if w == 0.0 {
+                continue;
+            }
+            let mut li = 0usize;
+            let mut loss = 0.0;
+            for jj in 0..j {
+                let mut zv = h[jj * cl + r];
+                for ll in 0..jj {
+                    zv += lam[li + ll] * h[ll * cl + r];
+                }
+                if want_grad {
+                    z[jj * cl + r] = zv;
+                }
+                let hdv = hd[jj * cl + r].max(ETA_FLOOR);
+                loss += 0.5 * zv * zv - hdv.ln();
+                li += jj;
+            }
+            part.total += w * loss;
+        }
+
+        if want_grad {
+            // per-row coefficient panels + λ gradient (O(J²) per row)
+            let mut ca = vec![0.0; j * cl];
+            let mut cad = vec![0.0; j * cl];
+            for r in 0..cl {
+                let w = if weights.is_empty() { 1.0 } else { weights[lo + r] };
+                if w == 0.0 {
+                    continue; // excluded from the panel runs below too
+                }
+                for ll in 0..j {
+                    let mut gh = z[ll * cl + r];
+                    for jj in (ll + 1)..j {
+                        gh += lam[lam_off[jj] + ll] * z[jj * cl + r];
+                    }
+                    ca[ll * cl + r] = w * gh;
+                }
+                for jj in 0..j {
+                    let hdv = hd[jj * cl + r].max(ETA_FLOOR);
+                    cad[jj * cl + r] = -w / hdv;
+                }
+                // λ gradient: ∂loss/∂λ_jl = z_j · h̃_l
+                let mut li = 0usize;
+                for jj in 1..j {
+                    for ll in 0..jj {
+                        part.grad_lambda[li + ll] += w * z[jj * cl + r] * h[ll * cl + r];
+                    }
+                    li += jj;
+                }
+            }
+            // maximal nonzero-weight runs: zero-weight rows contribute
+            // nothing (their raw basis/feature values may be anything —
+            // a masked-out NaN must not poison the gradient via 0·NaN)
+            let mut runs: Vec<(usize, usize)> = Vec::new();
+            if weights.is_empty() {
+                runs.push((0, cl));
+            } else {
+                let mut s = 0usize;
+                while s < cl {
+                    if weights[lo + s] == 0.0 {
+                        s += 1;
+                        continue;
+                    }
+                    let mut e = s + 1;
+                    while e < cl && weights[lo + e] != 0.0 {
+                        e += 1;
+                    }
+                    runs.push((s, e));
+                    s = e;
+                }
+            }
+            for jj in 0..j {
+                let pa = design.a_plane(jj);
+                let pad = design.ad_plane(jj);
+                for &(s, e) in &runs {
+                    // θ_j += A_jᵀ·c_a + A'_jᵀ·c_ad
+                    panel_accum_t(
+                        &pa[(lo + s) * d..(lo + e) * d],
+                        &pad[(lo + s) * d..(lo + e) * d],
+                        d,
+                        &ca[jj * cl + s..jj * cl + e],
+                        &cad[jj * cl + s..jj * cl + e],
+                        &mut part.grad_theta[jj * d..(jj + 1) * d],
+                    );
+                    // Γ_j += Xᵀ·c_a (∂h̃_j/∂γ_j = x); the single-panel
+                    // kernel so no zero second panel risks 0·NaN
+                    panel_accum_t1(
+                        &cd.x.data[(lo + s) * q..(lo + e) * q],
+                        q,
+                        &ca[jj * cl + s..jj * cl + e],
+                        &mut part.grad_gamma[jj * q..(jj + 1) * q],
+                    );
+                }
+            }
+        }
+        part
+    });
+
+    let merged = tree_reduce(partials, |mut x, y| {
+        x.total += y.total;
+        add_assign(&mut x.grad_theta, &y.grad_theta);
+        add_assign(&mut x.grad_gamma, &y.grad_gamma);
+        add_assign(&mut x.grad_lambda, &y.grad_lambda);
+        x
+    })
+    .unwrap_or_else(|| CondPartial {
+        total: 0.0,
+        grad_theta: vec![0.0; if want_grad { j * d } else { 0 }],
+        grad_gamma: vec![0.0; if want_grad { j * q } else { 0 }],
+        grad_lambda: vec![0.0; if want_grad { n_lam } else { 0 }],
+    });
+
+    if let Some(g) = grad {
+        // chain θ → β (suffix sums + sigmoid) on the merged partial,
+        // then assemble g = (β | Γ | λ)
+        let mut gt = merged.grad_theta;
+        for jj in 0..j {
+            let b = &params[jj * d..(jj + 1) * d];
+            let gj = &mut gt[jj * d..(jj + 1) * d];
+            for k in (0..d - 1).rev() {
+                gj[k] += gj[k + 1];
+            }
+            for k in 1..d {
+                gj[k] *= sigmoid(b[k]);
+            }
+        }
+        g[..j * d].copy_from_slice(&gt);
+        g[spec.gamma_off()..spec.lambda_off()].copy_from_slice(&merged.grad_gamma);
+        g[spec.lambda_off()..].copy_from_slice(&merged.grad_lambda);
+    }
+    merged.total
+}
+
+/// The pre-PR-8 row-at-a-time conditional kernel, retained as the
+/// agreement baseline (the conditional twin of
+/// `mctm::model::nll_grad_reference`): fixed `ROW_CHUNK` shards
+/// processed row-at-a-time with naive dots, partials tree-reduced
+/// serially in chunk order — the exact floating-point accumulation
+/// shape the blocked kernel reproduces bit for bit on the Scalar
+/// backend. Single-threaded by construction; not a hot path.
+pub fn cond_nll_grad_reference(
     cd: &CondDesign,
     weights: &[f64],
     spec: CondSpec,
@@ -96,7 +416,6 @@ pub fn cond_nll_grad(
     assert_eq!(design.d, d);
     assert_eq!(cd.x.cols, q);
 
-    // θ from β (cumulative softplus, as unconditional)
     let mut theta = vec![0.0; j * d];
     for jj in 0..j {
         let b = &params[jj * d..(jj + 1) * d];
@@ -109,111 +428,163 @@ pub fn cond_nll_grad(
     let gamma = &params[spec.gamma_off()..spec.lambda_off()];
     let lam = &params[spec.lambda_off()..];
     let lam_off: Vec<usize> = (0..j).map(|jj| jj * jj.saturating_sub(1) / 2).collect();
+    let n_lam = j * (j - 1) / 2;
 
-    let mut total = 0.0;
-    let mut grad = vec![0.0; spec.n_params()];
-    let mut grad_theta = vec![0.0; j * d];
-    let (mut htil, mut hd, mut z, mut ghtil) =
-        (vec![0.0; j], vec![0.0; j], vec![0.0; j], vec![0.0; j]);
+    let partials: Vec<CondPartial> = Pool::chunk_ranges(design.n, ROW_CHUNK)
+        .into_iter()
+        .map(|range| {
+            let mut part = CondPartial {
+                total: 0.0,
+                grad_theta: vec![0.0; j * d],
+                grad_gamma: vec![0.0; j * q],
+                grad_lambda: vec![0.0; n_lam],
+            };
+            let (mut htil, mut hd, mut z, mut ghtil) =
+                (vec![0.0; j], vec![0.0; j], vec![0.0; j], vec![0.0; j]);
+            for i in range {
+                let w = if weights.is_empty() { 1.0 } else { weights[i] };
+                if w == 0.0 {
+                    continue;
+                }
+                let xi = cd.x.row(i);
+                for jj in 0..j {
+                    let th = &theta[jj * d..(jj + 1) * d];
+                    let (arow, adrow) = (design.a_row(i, jj), design.ad_row(i, jj));
+                    let mut ha = 0.0;
+                    let mut hb = 0.0;
+                    for k in 0..d {
+                        ha += arow[k] * th[k];
+                        hb += adrow[k] * th[k];
+                    }
+                    let g = &gamma[jj * q..(jj + 1) * q];
+                    let mut shift = 0.0;
+                    for c in 0..q {
+                        shift += g[c] * xi[c];
+                    }
+                    htil[jj] = ha + shift;
+                    hd[jj] = hb;
+                }
+                let mut li = 0usize;
+                for jj in 0..j {
+                    let mut zz = htil[jj];
+                    for ll in 0..jj {
+                        zz += lam[li + ll] * htil[ll];
+                    }
+                    z[jj] = zz;
+                    li += jj;
+                }
+                let mut loss = 0.0;
+                for jj in 0..j {
+                    let hdv = hd[jj].max(ETA_FLOOR);
+                    loss += 0.5 * z[jj] * z[jj] - hdv.ln();
+                }
+                part.total += w * loss;
 
-    for i in 0..design.n {
-        let w = if weights.is_empty() { 1.0 } else { weights[i] };
-        if w == 0.0 {
-            continue;
-        }
-        let xi = cd.x.row(i);
-        for jj in 0..j {
-            let th = &theta[jj * d..(jj + 1) * d];
-            let (arow, adrow) = (design.a_row(i, jj), design.ad_row(i, jj));
-            let mut ha = 0.0;
-            let mut hb = 0.0;
-            for k in 0..d {
-                ha += arow[k] * th[k];
-                hb += adrow[k] * th[k];
+                for ll in 0..j {
+                    let mut gh = z[ll];
+                    for jj in (ll + 1)..j {
+                        gh += lam[lam_off[jj] + ll] * z[jj];
+                    }
+                    ghtil[ll] = gh;
+                }
+                for jj in 0..j {
+                    let hdv = hd[jj].max(ETA_FLOOR);
+                    let ca = w * ghtil[jj];
+                    let cad = -w / hdv;
+                    let gt = &mut part.grad_theta[jj * d..(jj + 1) * d];
+                    let (arow, adrow) = (design.a_row(i, jj), design.ad_row(i, jj));
+                    for k in 0..d {
+                        gt[k] += ca * arow[k] + cad * adrow[k];
+                    }
+                    // Γ gradient: ∂h̃_j/∂γ_j = x
+                    let gg = &mut part.grad_gamma[jj * q..(jj + 1) * q];
+                    for c in 0..q {
+                        gg[c] += ca * xi[c];
+                    }
+                }
+                let mut li = 0usize;
+                for jj in 1..j {
+                    for ll in 0..jj {
+                        part.grad_lambda[li + ll] += w * z[jj] * htil[ll];
+                    }
+                    li += jj;
+                }
             }
-            let g = &gamma[jj * q..(jj + 1) * q];
-            let mut shift = 0.0;
-            for c in 0..q {
-                shift += g[c] * xi[c];
-            }
-            htil[jj] = ha + shift;
-            hd[jj] = hb;
-        }
-        for jj in 0..j {
-            let mut zz = htil[jj];
-            for ll in 0..jj {
-                zz += lam[lam_off[jj] + ll] * htil[ll];
-            }
-            z[jj] = zz;
-        }
-        let mut loss = 0.0;
-        for jj in 0..j {
-            let hdv = hd[jj].max(super::model::ETA_FLOOR);
-            loss += 0.5 * z[jj] * z[jj] - hdv.ln();
-        }
-        total += w * loss;
+            part
+        })
+        .collect();
+    let merged = tree_reduce(partials, |mut x, y| {
+        x.total += y.total;
+        add_assign(&mut x.grad_theta, &y.grad_theta);
+        add_assign(&mut x.grad_gamma, &y.grad_gamma);
+        add_assign(&mut x.grad_lambda, &y.grad_lambda);
+        x
+    })
+    .unwrap_or_else(|| CondPartial {
+        total: 0.0,
+        grad_theta: vec![0.0; j * d],
+        grad_gamma: vec![0.0; j * q],
+        grad_lambda: vec![0.0; n_lam],
+    });
 
-        // gradients
-        for ll in 0..j {
-            let mut gh = z[ll];
-            for jj in (ll + 1)..j {
-                gh += lam[lam_off[jj] + ll] * z[jj];
-            }
-            ghtil[ll] = gh;
-        }
-        for jj in 0..j {
-            let hdv = hd[jj].max(super::model::ETA_FLOOR);
-            let ca = w * ghtil[jj];
-            let cad = -w / hdv;
-            let gt = &mut grad_theta[jj * d..(jj + 1) * d];
-            let (arow, adrow) = (design.a_row(i, jj), design.ad_row(i, jj));
-            for k in 0..d {
-                gt[k] += ca * arow[k] + cad * adrow[k];
-            }
-            // Γ gradient: ∂h̃_j/∂γ_j = x
-            let gg = &mut grad[spec.gamma_off() + jj * q..spec.gamma_off() + (jj + 1) * q];
-            for c in 0..q {
-                gg[c] += ca * xi[c];
-            }
-        }
-        let goff = spec.lambda_off();
-        for jj in 1..j {
-            for ll in 0..jj {
-                grad[goff + lam_off[jj] + ll] += w * z[jj] * htil[ll];
-            }
-        }
-    }
-
-    // chain θ → β (suffix sums + sigmoid), write into the β block
+    // chain θ → β (suffix sums + sigmoid), assemble (β | Γ | λ)
+    let mut gt = merged.grad_theta;
     for jj in 0..j {
         let b = &params[jj * d..(jj + 1) * d];
-        let g = &mut grad_theta[jj * d..(jj + 1) * d];
+        let gj = &mut gt[jj * d..(jj + 1) * d];
         for k in (0..d - 1).rev() {
-            g[k] += g[k + 1];
+            gj[k] += gj[k + 1];
         }
         for k in 1..d {
-            g[k] *= super::params::sigmoid(b[k]);
+            gj[k] *= sigmoid(b[k]);
         }
     }
-    grad[..j * d].copy_from_slice(&grad_theta);
-    (total, grad)
+    let mut grad = vec![0.0; spec.n_params()];
+    grad[..j * d].copy_from_slice(&gt);
+    grad[spec.gamma_off()..spec.lambda_off()].copy_from_slice(&merged.grad_gamma);
+    grad[spec.lambda_off()..].copy_from_slice(&merged.grad_lambda);
+    (merged.total, grad)
 }
 
-/// Objective adapter for the generic optimizers.
+/// Objective adapter for the generic optimizers. Holds a reusable
+/// [`CondScratch`] behind a `RefCell` (the `Objective` surface is
+/// `&self`) so repeated evaluations — optimizer iterations, bootstrap
+/// replicates — never re-allocate the ϑ buffer or λ offsets.
 pub struct CondNll<'a> {
     pub spec: CondSpec,
     pub cd: &'a CondDesign,
     pub weights: Vec<f64>,
+    state: RefCell<CondScratch>,
+}
+
+impl<'a> CondNll<'a> {
+    pub fn new(spec: CondSpec, cd: &'a CondDesign, weights: Vec<f64>) -> Self {
+        assert!(weights.is_empty() || weights.len() == cd.design.n);
+        CondNll { spec, cd, weights, state: RefCell::new(CondScratch::new(spec)) }
+    }
 }
 
 impl crate::fit::Objective for CondNll<'_> {
     fn dim(&self) -> usize {
         self.spec.n_params()
     }
+
     fn value_grad_into(&self, x: &[f64], grad: &mut [f64]) -> f64 {
-        let (v, g) = cond_nll_grad(self.cd, &self.weights, self.spec, x);
-        grad.copy_from_slice(&g);
-        v
+        let mut st = self.state.borrow_mut();
+        cond_nll_grad_into_with(
+            self.cd,
+            &self.weights,
+            self.spec,
+            x,
+            grad,
+            &mut st,
+            &Pool::current(),
+        )
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        let mut st = self.state.borrow_mut();
+        cond_nll_with_scratch(self.cd, &self.weights, self.spec, x, &mut st, &Pool::current())
     }
 }
 
@@ -269,11 +640,49 @@ mod tests {
     }
 
     #[test]
+    fn blocked_matches_reference_per_backend() {
+        use crate::linalg::simd::{backend, KernelBackend};
+        // spans two ROW_CHUNK shards; masked + weighted rows; on the
+        // Scalar backend the blocked kernel must reproduce the
+        // row-at-a-time reference bit for bit at any thread count, on
+        // Simd to ≤1e-12 relative (the full cross-backend pin lives in
+        // tests/simd_kernels.rs)
+        let n = 2_500;
+        let (y, x) = toy(n, 2, 9);
+        let cd = CondDesign::build(&y, &x, 5, 0.01);
+        let spec = CondSpec::new(2, 5, 2);
+        let mut rng = Rng::new(10);
+        let params: Vec<f64> = (0..spec.n_params()).map(|_| 0.3 * rng.normal()).collect();
+        let mut w: Vec<f64> = (0..n).map(|_| rng.uniform(0.5, 2.0)).collect();
+        w[100] = 0.0;
+        w[2300] = 0.0; // masked rows in both chunks
+        let (vr, gr) = cond_nll_grad_reference(&cd, &w, spec, &params);
+        for t in [1usize, 2, 8] {
+            let pool = Pool::new(t);
+            let (vb, gb) = cond_nll_grad_with(&cd, &w, spec, &params, &pool);
+            if backend() == KernelBackend::Scalar {
+                assert_eq!(vb.to_bits(), vr.to_bits(), "t={t} value");
+                for (k, (a, b)) in gb.iter().zip(&gr).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "t={t} grad {k}");
+                }
+            } else {
+                assert!((vb - vr).abs() <= 1e-12 * vr.abs().max(1.0), "t={t}: {vb} vs {vr}");
+                for (k, (a, b)) in gb.iter().zip(&gr).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-12 * b.abs().max(1.0),
+                        "t={t} grad {k}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn recovers_conditional_shift() {
         let (y, x) = toy(3_000, 1, 3);
         let cd = CondDesign::build(&y, &x, 6, 0.01);
         let spec = CondSpec::new(2, 6, 1);
-        let obj = CondNll { spec, cd: &cd, weights: Vec::new() };
+        let obj = CondNll::new(spec, &cd, Vec::new());
         let opts = FitOptions { max_iters: 200, ..Default::default() };
         let (fit, nll_cond, _, _) = minimize(&obj, cond_init(spec), &opts);
         // γ₁ must be clearly non-zero (y₁ depends on x) and γ₂ ≈ 0
@@ -301,7 +710,7 @@ mod tests {
         let opts = FitOptions { max_iters: 150, ..Default::default() };
 
         // full conditional fit
-        let obj = CondNll { spec, cd: &cd, weights: Vec::new() };
+        let obj = CondNll::new(spec, &cd, Vec::new());
         let (full, _, _, _) = minimize(&obj, cond_init(spec), &opts);
 
         // leverage on the EXTENDED stacked matrix (dJ + q columns)
@@ -321,7 +730,7 @@ mod tests {
             w.push(1.0 / (k as f64 * table.p(i)));
         }
         let sub = cd.select(&idx);
-        let obj_sub = CondNll { spec, cd: &sub, weights: w };
+        let obj_sub = CondNll::new(spec, &sub, w);
         let (coreset_fit, _, _, _) = minimize(&obj_sub, cond_init(spec), &opts);
 
         // the conditional effect must survive the coreset

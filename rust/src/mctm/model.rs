@@ -33,14 +33,19 @@
 //!    the merged gradient.
 //!
 //! Shards merge by fixed-shape tree reduction, so results are
-//! bit-identical for any thread count; and every per-element
-//! accumulation order matches the pre-refactor row-at-a-time kernel
-//! (kept as [`nll_grad_reference`]), so values and gradients agree with
-//! it to the bit — pinned by `tests/nll_kernel.rs` at threads
-//! {1, 2, 8}; the facade-level consumer pins live in
-//! `tests/pipeline_e2e.rs`. See EXPERIMENTS.md
-//! §Perf iteration 7 for the blocked-kernel measurements; the earlier
-//! scratch-reuse finding this loop started from is §Perf iteration 1.
+//! bit-identical for any thread count. The kernels themselves dispatch
+//! per [`crate::linalg::simd::KernelBackend`] (PR 8): on the **Scalar**
+//! backend every per-element accumulation order matches the
+//! pre-refactor row-at-a-time kernel (kept as [`nll_grad_reference`]),
+//! so values and gradients agree with it to the bit — pinned by
+//! `tests/nll_kernel.rs` at threads {1, 2, 8}; on the **Simd** backend
+//! (AVX2+FMA lanes fork the FP summation order) agreement with the
+//! reference is ≤ 1e-12 relative, while thread-count bit-identity still
+//! holds because the lane grouping depends only on the problem shape.
+//! The facade-level consumer pins live in `tests/pipeline_e2e.rs`. See
+//! EXPERIMENTS.md §Perf iteration 7 for the blocked-kernel
+//! measurements; the earlier scratch-reuse finding this loop started
+//! from is §Perf iteration 1.
 
 use super::params::{ModelSpec, Params};
 use crate::basis::Design;
@@ -564,17 +569,30 @@ mod tests {
 
     #[test]
     fn blocked_matches_reference_bitwise() {
-        // the blocked kernel preserves every accumulation order of the
-        // row-at-a-time reference, so values AND gradients agree to the
-        // bit (the cross-shape randomized sweep is tests/nll_kernel.rs)
+        // the Scalar blocked kernel preserves every accumulation order
+        // of the row-at-a-time reference, so values AND gradients agree
+        // to the bit; on the Simd backend (forked FP order) the pin is
+        // the backend contract of ≤ 1e-12 relative (the cross-shape
+        // randomized sweep is tests/nll_kernel.rs)
+        use crate::linalg::simd::{backend, KernelBackend};
         let spec = ModelSpec::new(3, 6);
         let design = toy_design(120, 3, 6, 77);
         let p = random_params(spec, 78);
         let (v_ref, g_ref) = nll_grad_reference(&design, &[], &p);
         let (v, g) = nll_grad_with(&design, &[], &p, &Pool::new(1));
-        assert_eq!(v.to_bits(), v_ref.to_bits());
-        for (k, (a, b)) in g.iter().zip(&g_ref).enumerate() {
-            assert_eq!(a.to_bits(), b.to_bits(), "grad[{k}]: {a} vs {b}");
+        if backend() == KernelBackend::Scalar {
+            assert_eq!(v.to_bits(), v_ref.to_bits());
+            for (k, (a, b)) in g.iter().zip(&g_ref).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "grad[{k}]: {a} vs {b}");
+            }
+        } else {
+            assert!((v - v_ref).abs() <= 1e-12 * v_ref.abs().max(1.0));
+            for (k, (a, b)) in g.iter().zip(&g_ref).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-12 * b.abs().max(1.0),
+                    "grad[{k}]: {a} vs {b}"
+                );
+            }
         }
     }
 
@@ -605,12 +623,21 @@ mod tests {
         let v = nll(&design, &w, &p);
         let sub = design.select(&(1..7).collect::<Vec<_>>());
         assert!((v - nll(&sub, &[], &p)).abs() < 1e-10);
-        // the gradient skips them too — bitwise vs the reference
+        // the gradient skips them too — bitwise vs the reference on the
+        // Scalar backend, ≤ 1e-12 relative on Simd
+        use crate::linalg::simd::{backend, KernelBackend};
         let (vg, g) = nll_grad(&design, &w, &p);
         let (vr, gr) = nll_grad_reference(&design, &w, &p);
-        assert_eq!(vg.to_bits(), vr.to_bits());
-        for (a, b) in g.iter().zip(&gr) {
-            assert_eq!(a.to_bits(), b.to_bits());
+        if backend() == KernelBackend::Scalar {
+            assert_eq!(vg.to_bits(), vr.to_bits());
+            for (a, b) in g.iter().zip(&gr) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        } else {
+            assert!((vg - vr).abs() <= 1e-12 * vr.abs().max(1.0));
+            for (a, b) in g.iter().zip(&gr) {
+                assert!((a - b).abs() <= 1e-12 * b.abs().max(1.0), "{a} vs {b}");
+            }
         }
     }
 

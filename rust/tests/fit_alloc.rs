@@ -8,11 +8,20 @@
 //! allocations are the per-chunk worker buffers below the pool,
 //! amortized over `ROW_CHUNK` rows each.
 //!
+//! PR 8 extends the same discipline to the conditional objective
+//! (`CondNll` reuses its `CondScratch` across calls), to the bootstrap
+//! replicate loop (hoisted resample buffer + `Design::select_into` make
+//! the allocation cost exactly linear in the replicate count), and to
+//! `select_into` itself (zero allocations once the sub-design is at
+//! capacity).
+//!
 //! Everything runs inside ONE `#[test]` so no concurrent test can
 //! perturb the global counter.
 
 use mctm_coreset::basis::Design;
 use mctm_coreset::fit::{minimize, FitOptions, NativeNll, Objective, OptimizerKind};
+use mctm_coreset::mctm::bootstrap_ci;
+use mctm_coreset::mctm::conditional::{CondDesign, CondNll, CondSpec};
 use mctm_coreset::prelude::*;
 use mctm_coreset::util::parallel;
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -151,4 +160,81 @@ fn optimizer_loops_are_allocation_free_per_iteration() {
         2 * five,
         "NativeNll per-call allocation cost is not constant ({five} per 5 calls, {ten} per 10)"
     );
+
+    // CondNll steady state (PR 8): the panel-kernel conditional
+    // objective reuses its CondScratch across calls, so its per-call
+    // allocation cost is constant too — what remains is the fixed
+    // per-chunk partial below the pool
+    let q = 2usize;
+    let nc = 2_100usize; // > ROW_CHUNK: two chunks per evaluation
+    let y = Mat::from_vec(nc, 2, (0..nc * 2).map(|_| rng.normal()).collect());
+    let xmat = Mat::from_vec(nc, q, (0..nc * q).map(|_| rng.normal()).collect());
+    let cd = CondDesign::build(&y, &xmat, 5, 0.01);
+    let cspec = CondSpec::new(2, 5, q);
+    let cond = CondNll::new(cspec, &cd, Vec::new());
+    let cx = vec![0.1; cond.dim()];
+    let mut cgrad = vec![0.0; cond.dim()];
+    cond.value_grad_into(&cx, &mut cgrad); // warm the scratch
+    let five_c = allocs_during(|| {
+        for _ in 0..5 {
+            cond.value_grad_into(&cx, &mut cgrad);
+        }
+    });
+    let ten_c = allocs_during(|| {
+        for _ in 0..10 {
+            cond.value_grad_into(&cx, &mut cgrad);
+        }
+    });
+    assert_eq!(
+        ten_c,
+        2 * five_c,
+        "CondNll per-call allocation cost is not constant ({five_c} per 5 calls, {ten_c} per 10)"
+    );
+
+    // Bootstrap replicate loop (PR 8): the resample index buffer, the
+    // sub-design, the uniform replicate weights and the cold start are
+    // hoisted out of the loop, so extra replicates cost an exactly
+    // linear number of allocations. Adam has no line search, so each
+    // replicate's two refits allocate a fixed, deterministic amount;
+    // replicate counts stay well above the stable-sort small-slice
+    // threshold so the percentile step costs the same per call.
+    let bdata = Dgp::BivariateNormal.generate(400, &mut rng);
+    let bdesign = Design::build(&bdata, 4, 0.01);
+    let bspec = ModelSpec::new(2, 4);
+    let bpoint = Params::init(bspec);
+    let bopts = FitOptions {
+        optimizer: OptimizerKind::Adam,
+        max_iters: 8,
+        tol: 0.0,
+        learning_rate: 0.02,
+        history: 5,
+    };
+    let run_boot = |reps: usize| {
+        allocs_during(|| {
+            let mut brng = Rng::new(11);
+            std::hint::black_box(bootstrap_ci(
+                &bdesign, &[], &bpoint, reps, 0.9, &bopts, &mut brng,
+            ));
+        })
+    };
+    let _ = run_boot(64); // warm lazy state
+    let a64 = run_boot(64);
+    let a96 = run_boot(96);
+    let a128 = run_boot(128);
+    assert_eq!(
+        a128 - a96,
+        a96 - a64,
+        "bootstrap allocates superlinearly in replicates: {a64} @64, {a96} @96, {a128} @128"
+    );
+
+    // Design::select_into at capacity: re-gathering a same-size index
+    // set into a warmed sub-design must not touch the allocator at all
+    let idx: Vec<usize> = (0..200).map(|i| (7 * i) % bdesign.n).collect();
+    let mut sub = bdesign.select(&idx); // warmed to capacity
+    let gathers = allocs_during(|| {
+        for _ in 0..4 {
+            bdesign.select_into(&idx, &mut sub);
+        }
+    });
+    assert_eq!(gathers, 0, "select_into allocated at capacity: {gathers} allocs");
 }

@@ -5,8 +5,16 @@
 //! orders are preserved, so most pins here are bitwise — and (b) stay
 //! bit-identical across thread counts {1, 2, 8}, including when driven
 //! end-to-end through the facade.
+//!
+//! Since PR 8 the kernels dispatch per [`KernelBackend`]: agreement
+//! with the scalar reference is bitwise on the Scalar backend and
+//! ≤ 1e-12 relative on Simd (which forks the FP summation order), so
+//! the reference-comparison pins branch on the ambient backend. The
+//! same-backend pins (thread counts, value-vs-grad, facade) are
+//! backend-independent and stay bitwise unconditionally.
 
 use mctm_coreset::basis::Design;
+use mctm_coreset::linalg::simd::backend;
 use mctm_coreset::mctm::{
     self, nll_grad_reference, nll_grad_with, nll_parts_with, ModelSpec, Params,
 };
@@ -68,11 +76,20 @@ fn blocked_kernel_matches_reference_on_random_designs() {
                     "case {case}: grad[{k}] {a} vs reference {b}"
                 );
             }
-            // the blocked kernel preserves every accumulation order of
-            // the reference, so agreement is actually bitwise
-            assert_eq!(v.to_bits(), v_ref.to_bits(), "case {case}: value bits");
-            for (k, (a, b)) in g.iter().zip(&g_ref).enumerate() {
-                assert_eq!(a.to_bits(), b.to_bits(), "case {case}: grad[{k}] bits");
+            if backend() == KernelBackend::Scalar {
+                // the Scalar blocked kernel preserves every accumulation
+                // order of the reference, so agreement is bitwise
+                assert_eq!(v.to_bits(), v_ref.to_bits(), "case {case}: value bits");
+                for (k, (a, b)) in g.iter().zip(&g_ref).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "case {case}: grad[{k}] bits");
+                }
+            } else {
+                // Simd forks the summation order; the pin tightens to
+                // the backend contract of ≤ 1e-12 relative
+                assert!(rel_close(v, v_ref, 1e-12), "case {case}: {v} vs {v_ref}");
+                for (k, (a, b)) in g.iter().zip(&g_ref).enumerate() {
+                    assert!(rel_close(*a, *b, 1e-12), "case {case}: grad[{k}] {a} vs {b}");
+                }
             }
         }
     }
@@ -100,9 +117,20 @@ fn masked_nonfinite_rows_cannot_poison_the_gradient() {
     assert!(g_ref.iter().all(|g| g.is_finite()));
     for t in [1usize, 2] {
         let (v, g) = nll_grad_with(&design, &w, &p, &Pool::new(t));
-        assert_eq!(v.to_bits(), v_ref.to_bits(), "value at {t} threads");
-        for (k, (a, b)) in g.iter().zip(&g_ref).enumerate() {
-            assert_eq!(a.to_bits(), b.to_bits(), "grad[{k}] at {t} threads");
+        // the masking semantics hold on every backend: finite results,
+        // agreement with the reference per the backend contract
+        assert!(v.is_finite(), "value at {t} threads");
+        assert!(g.iter().all(|gk| gk.is_finite()), "gradient at {t} threads");
+        if backend() == KernelBackend::Scalar {
+            assert_eq!(v.to_bits(), v_ref.to_bits(), "value at {t} threads");
+            for (k, (a, b)) in g.iter().zip(&g_ref).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "grad[{k}] at {t} threads");
+            }
+        } else {
+            assert!(rel_close(v, v_ref, 1e-12), "value at {t} threads: {v} vs {v_ref}");
+            for (k, (a, b)) in g.iter().zip(&g_ref).enumerate() {
+                assert!(rel_close(*a, *b, 1e-12), "grad[{k}] at {t}: {a} vs {b}");
+            }
         }
     }
 }

@@ -1,0 +1,240 @@
+//! Per-backend kernel agreement pins (PR 8).
+//!
+//! Kernel-level property tests call the `*_scalar` reference bodies and
+//! the `*_simd` wrappers directly (no global dispatch involved), so
+//! they are safe under the parallel test harness; the single
+//! end-to-end test that toggles the process-global backend
+//! ([`backend_toggle_end_to_end`]) is the only one touching the
+//! dispatcher state, and restores the ambient selection when done.
+//!
+//! Contract under test (see `linalg::simd`): Scalar is bit-exact
+//! against every retained reference; Simd agrees to ≤ 1e-12 relative
+//! and is internally deterministic.
+
+use mctm_coreset::basis::Design;
+use mctm_coreset::linalg::simd::{
+    self, panel_accum_t1_simd, panel_accum_t_simd, panel_matvec_simd, simd_available,
+    syrk_upper_row1_range_simd, syrk_upper_rows4_range_simd, KernelBackend,
+};
+use mctm_coreset::linalg::{
+    panel_accum_t1_scalar, panel_accum_t_scalar, panel_matvec_scalar,
+    syrk_upper_row1_range_scalar, syrk_upper_rows4_range_scalar, Mat,
+};
+use mctm_coreset::mctm::conditional::{
+    cond_nll_grad_reference, cond_nll_grad_with, CondDesign, CondSpec,
+};
+use mctm_coreset::mctm::{nll_grad_with, ModelSpec, Params};
+use mctm_coreset::util::parallel::Pool;
+use mctm_coreset::util::rng::Rng;
+
+const REL_TOL: f64 = 1e-12;
+
+fn assert_close(a: &[f64], b: &[f64], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: length");
+    for (k, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= REL_TOL * y.abs().max(1.0),
+            "{tag}[{k}]: {x} vs {y}"
+        );
+    }
+}
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// The ambient backend the process would resolve on its own — used to
+/// restore global state after the toggling test.
+fn ambient_backend() -> KernelBackend {
+    if let Ok(v) = std::env::var("MCTM_SIMD") {
+        let v = v.trim().to_ascii_lowercase();
+        if matches!(v.as_str(), "off" | "0" | "false" | "scalar") {
+            return KernelBackend::Scalar;
+        }
+    }
+    if simd_available() {
+        KernelBackend::Simd
+    } else {
+        KernelBackend::Scalar
+    }
+}
+
+#[test]
+fn panel_matvec_simd_agrees_with_scalar() {
+    if !simd_available() {
+        return;
+    }
+    let mut rng = Rng::new(101);
+    // row counts exercise every 4-block/remainder split, d both below
+    // and above a lane width, incl. d % 4 ≠ 0
+    for (rows, d) in [(1usize, 3usize), (2, 8), (5, 4), (7, 5), (16, 12), (33, 11), (130, 6)] {
+        let panel = randv(&mut rng, rows * d);
+        let v = randv(&mut rng, d);
+        let mut out_s = vec![0.0; rows];
+        let mut out_v = vec![0.0; rows];
+        panel_matvec_scalar(&panel, d, &v, &mut out_s);
+        panel_matvec_simd(&panel, d, &v, &mut out_v);
+        assert_close(&out_v, &out_s, &format!("matvec {rows}x{d}"));
+        // internally deterministic: same inputs ⇒ bitwise-same
+        let mut out_v2 = vec![0.0; rows];
+        panel_matvec_simd(&panel, d, &v, &mut out_v2);
+        for (a, b) in out_v.iter().zip(&out_v2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}
+
+#[test]
+fn panel_accum_t_simd_agrees_with_scalar() {
+    if !simd_available() {
+        return;
+    }
+    let mut rng = Rng::new(102);
+    for (rows, d) in [(1usize, 5usize), (3, 4), (6, 9), (21, 7), (64, 13)] {
+        let a = randv(&mut rng, rows * d);
+        let b = randv(&mut rng, rows * d);
+        let ca = randv(&mut rng, rows);
+        let cad = randv(&mut rng, rows);
+        let init = randv(&mut rng, d); // nonzero starting accumulator
+        let mut acc_s = init.clone();
+        let mut acc_v = init.clone();
+        panel_accum_t_scalar(&a, &b, d, &ca, &cad, &mut acc_s);
+        panel_accum_t_simd(&a, &b, d, &ca, &cad, &mut acc_v);
+        assert_close(&acc_v, &acc_s, &format!("accum_t {rows}x{d}"));
+    }
+}
+
+#[test]
+fn panel_accum_t1_simd_agrees_with_scalar() {
+    if !simd_available() {
+        return;
+    }
+    let mut rng = Rng::new(103);
+    for (rows, d) in [(1usize, 2usize), (4, 6), (10, 3), (19, 8), (57, 5)] {
+        let p = randv(&mut rng, rows * d);
+        let c = randv(&mut rng, rows);
+        let init = randv(&mut rng, d);
+        let mut acc_s = init.clone();
+        let mut acc_v = init.clone();
+        panel_accum_t1_scalar(&p, d, &c, &mut acc_s);
+        panel_accum_t1_simd(&p, d, &c, &mut acc_v);
+        assert_close(&acc_v, &acc_s, &format!("accum_t1 {rows}x{d}"));
+    }
+}
+
+#[test]
+fn syrk_simd_agrees_with_scalar_and_is_tile_stable() {
+    if !simd_available() {
+        return;
+    }
+    let mut rng = Rng::new(104);
+    let d = 23; // odd width: remainder lanes in every tile
+    let rows: Vec<Vec<f64>> = (0..4).map(|_| randv(&mut rng, d)).collect();
+    let mut zero_row = randv(&mut rng, d);
+    zero_row[5] = 0.0; // exercise the zero-skip predicate
+    // full-width update
+    let mut g_s = vec![0.0; d * d];
+    let mut g_v = vec![0.0; d * d];
+    syrk_upper_rows4_range_scalar(&rows[0], &rows[1], &rows[2], &rows[3], 0..d, 0..d, &mut g_s);
+    syrk_upper_row1_range_scalar(&zero_row, 0..d, 0..d, &mut g_s);
+    syrk_upper_rows4_range_simd(&rows[0], &rows[1], &rows[2], &rows[3], 0..d, 0..d, &mut g_v);
+    syrk_upper_row1_range_simd(&zero_row, 0..d, 0..d, &mut g_v);
+    assert_close(&g_v, &g_s, "syrk full");
+    // tile-grouping stability: replaying the same update per (i, j)
+    // tile must reproduce the full-width SIMD result bit for bit (the
+    // property the L2-tiled Gram relies on — the scalar remainder of
+    // the SIMD kernel chains the exact same FMAs as the vector lanes)
+    let tile = 5;
+    let ntiles = d.div_ceil(tile);
+    let mut g_t = vec![0.0; d * d];
+    for it in 0..ntiles {
+        let ir = it * tile..((it + 1) * tile).min(d);
+        for jt in it..ntiles {
+            let jr = jt * tile..((jt + 1) * tile).min(d);
+            syrk_upper_rows4_range_simd(
+                &rows[0], &rows[1], &rows[2], &rows[3], ir.clone(), jr.clone(), &mut g_t,
+            );
+            syrk_upper_row1_range_simd(&zero_row, ir.clone(), jr, &mut g_t);
+        }
+    }
+    for (k, (a, b)) in g_t.iter().zip(&g_v).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "tiled syrk entry {k}");
+    }
+}
+
+fn random_design(n: usize, j: usize, d: usize, seed: u64) -> Design {
+    let mut rng = Rng::new(seed);
+    let data = Mat::from_vec(n, j, (0..n * j).map(|_| rng.normal()).collect());
+    Design::build(&data, d, 0.01)
+}
+
+/// The one test that toggles the process-global dispatch: pin Scalar,
+/// record NLL/grad/leverage and the conditional blocked-vs-reference
+/// bitwise identity, then flip to Simd and require ≤ 1e-12 relative
+/// agreement on everything — including masked zero-weight rows and a
+/// dJ ≥ 80 design that drives the L2-tiled Gram.
+#[test]
+fn backend_toggle_end_to_end() {
+    use mctm_coreset::coreset::leverage::mctm_leverage_scores_with;
+    let pool = Pool::new(2);
+    let n = 2_300;
+    let design = random_design(n, 3, 6, 201);
+    let wide = random_design(500, 10, 9, 202); // dJ = 90 ⇒ tiled Gram
+    let spec = ModelSpec::new(3, 6);
+    let mut rng = Rng::new(203);
+    let params = Params::new(
+        spec,
+        (0..spec.n_params()).map(|_| 0.3 * rng.normal()).collect(),
+    );
+    let mut w: Vec<f64> = (0..n).map(|_| rng.uniform(0.5, 2.0)).collect();
+    w[17] = 0.0;
+    w[2200] = 0.0; // masked rows in both chunks
+
+    // conditional problem
+    let q = 2;
+    let x = Mat::from_vec(n, q, (0..n * q).map(|_| rng.normal()).collect());
+    let y = Mat::from_vec(n, 2, (0..n * 2).map(|_| rng.normal()).collect());
+    let cspec = CondSpec::new(2, 5, q);
+    let cd = CondDesign::build(&y, &x, 5, 0.01);
+    let cparams: Vec<f64> = (0..cspec.n_params()).map(|_| 0.3 * rng.normal()).collect();
+
+    simd::set_backend(KernelBackend::Scalar);
+    let (v_s, g_s) = nll_grad_with(&design, &w, &params, &pool);
+    let lev_s = mctm_leverage_scores_with(&design, &pool).unwrap();
+    let lev_wide_s = mctm_leverage_scores_with(&wide, &pool).unwrap();
+    let (cv_s, cg_s) = cond_nll_grad_with(&cd, &w, cspec, &cparams, &pool);
+    // on the Scalar backend the blocked conditional kernel must equal
+    // the retained row-at-a-time reference bit for bit
+    let (cv_r, cg_r) = cond_nll_grad_reference(&cd, &w, cspec, &cparams);
+    assert_eq!(cv_s.to_bits(), cv_r.to_bits(), "cond value vs reference");
+    for (k, (a, b)) in cg_s.iter().zip(&cg_r).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "cond grad {k} vs reference");
+    }
+
+    if simd_available() {
+        simd::set_backend(KernelBackend::Simd);
+        let (v_v, g_v) = nll_grad_with(&design, &w, &params, &pool);
+        assert!(
+            (v_v - v_s).abs() <= REL_TOL * v_s.abs().max(1.0),
+            "nll: {v_v} vs {v_s}"
+        );
+        assert_close(&g_v, &g_s, "nll grad");
+        let lev_v = mctm_leverage_scores_with(&design, &pool).unwrap();
+        assert_close(&lev_v, &lev_s, "leverage");
+        let lev_wide_v = mctm_leverage_scores_with(&wide, &pool).unwrap();
+        assert_close(&lev_wide_v, &lev_wide_s, "leverage dJ=90");
+        let (cv_v, cg_v) = cond_nll_grad_with(&cd, &w, cspec, &cparams, &pool);
+        assert!(
+            (cv_v - cv_s).abs() <= REL_TOL * cv_s.abs().max(1.0),
+            "cond nll: {cv_v} vs {cv_s}"
+        );
+        assert_close(&cg_v, &cg_s, "cond grad");
+        // internal determinism on Simd: repeat ⇒ bitwise-same
+        let (cv_v2, cg_v2) = cond_nll_grad_with(&cd, &w, cspec, &cparams, &pool);
+        assert_eq!(cv_v.to_bits(), cv_v2.to_bits());
+        for (a, b) in cg_v.iter().zip(&cg_v2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+    simd::set_backend(ambient_backend());
+}
