@@ -4,7 +4,7 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: build test check ci fmt clippy doc example bench-compile bench-quick bench-perf bench-json serve-smoke artifacts
+.PHONY: build test check ci fmt clippy doc example bench-compile bench-quick bench-perf bench-json serve-smoke store-smoke artifacts
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -42,7 +42,7 @@ check: fmt clippy doc test
 # crate attribute in rust/src/lib.rs, so with -D warnings any new
 # unwrap/expect outside tests fails CI unless explicitly #[allow]ed
 # with a justification.
-ci: fmt build test doc bench-compile serve-smoke
+ci: fmt build test doc bench-compile serve-smoke store-smoke
 	$(CARGO) clippy --manifest-path $(MANIFEST) -- -D warnings
 
 # End-to-end persist & serve smoke (PR 7): save a model + sketch
@@ -51,6 +51,12 @@ ci: fmt build test doc bench-compile serve-smoke
 # edge cases over real HTTP. Reuses the release binaries from `build`.
 serve-smoke: build
 	bash scripts/serve_smoke.sh
+
+# Out-of-core ingestion smoke (PR 9): deterministic CSV -> `import` ->
+# store-backed fit byte-identical to the in-memory fit (artifact cmp),
+# plus the `store:` streaming registry path.
+store-smoke: build
+	bash scripts/store_smoke.sh
 
 # Hot-path microbench at the smallest scale (CI smoke): serial vs
 # parallel medians for basis build, leverage, gram, nll_grad.

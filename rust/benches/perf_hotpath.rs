@@ -104,6 +104,12 @@ fn main() {
     // ---- Serving layer: queries/sec over HTTP (ISSUE 7) --------------
     bench_serving(&mut table, &mut json, scale, max_threads);
 
+    // ---- Out-of-core ingestion: store drain vs in-memory (PR 9) ------
+    bench_store(&mut table, &mut json, scale, iters);
+
+    // ---- Sparse leverage on one-hot designs (PR 9) -------------------
+    bench_sparse_leverage(&mut table, &mut json, scale, iters, max_threads);
+
     // ---- L1/L2 via PJRT ----------------------------------------------
     if Path::new("artifacts/manifest.json").exists() {
         bench_xla(&mut table, &data2, 2, iters);
@@ -542,6 +548,132 @@ fn bench_serving(table: &mut Table, json: &mut JsonRows, scale: Scale, max_threa
         );
     }
     handle.stop();
+}
+
+/// PR 9: out-of-core ingestion cost — draining an on-disk column store
+/// shard-by-shard (seek + checksum + decode per chunk) vs the
+/// equivalent in-memory shard materialization (`MatShards` produces an
+/// owned `Mat` per shard via row selection, so the in-mem row times the
+/// same per-shard copy, not a whole-matrix clone). The gap is the price
+/// of fitting datasets that do not fit in RAM.
+fn bench_store(table: &mut Table, json: &mut JsonRows, scale: Scale, iters: usize) {
+    use mctm_coreset::data::store::{StoreReader, StoreWriter, DEFAULT_CHUNK_ROWS};
+
+    let n = scale.pick(20_000, 100_000, 400_000);
+    let cols = 8usize;
+    let chunk = DEFAULT_CHUNK_ROWS;
+    let mut rng = Rng::new(0x570E);
+    let data = Mat::from_vec(n, cols, (0..n * cols).map(|_| rng.normal()).collect());
+    let cfg = format!("n={n} d={cols} chunk={chunk}");
+
+    let dir = std::env::temp_dir().join(format!("mctm_bench_store_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bench.store");
+    {
+        let mut w = StoreWriter::create(&path, cols, chunk).unwrap();
+        w.push_mat(&data).unwrap();
+        w.finish().unwrap();
+    }
+
+    // in-memory reference: per-shard row selection on the resident Mat
+    let shard_idx: Vec<Vec<usize>> = (0..n)
+        .step_by(chunk)
+        .map(|lo| (lo..(lo + chunk).min(n)).collect())
+        .collect();
+    let t_mem = time_median(iters, || {
+        let mut rows = 0usize;
+        for ix in &shard_idx {
+            rows += std::hint::black_box(data.select_rows(ix)).rows;
+        }
+        assert_eq!(rows, n);
+    });
+    table.row(vec![
+        "ingest in-mem shards".into(),
+        cfg.clone(),
+        "1".into(),
+        format!("{t_mem:.4}"),
+        "1.00x".into(),
+        format!("{:.1} Mrow/s", n as f64 / t_mem / 1e6),
+    ]);
+    json.row("ingest_inmem", "-", &cfg, 1, t_mem, (n as f64 / t_mem, "row/s"));
+
+    // store drain: open + seek/checksum/decode every chunk
+    let t_store = time_median(iters, || {
+        let mut r = StoreReader::open(&path).unwrap();
+        let mut rows = 0usize;
+        while let Some(m) = r.next_shard().unwrap() {
+            rows += std::hint::black_box(m).rows;
+        }
+        assert_eq!(rows, n);
+    });
+    table.row(vec![
+        "ingest store drain".into(),
+        cfg.clone(),
+        "1".into(),
+        format!("{t_store:.4}"),
+        format!("{:.2}x", t_mem / t_store),
+        format!("{:.1} Mrow/s", n as f64 / t_store / 1e6),
+    ]);
+    json.row("ingest_store", "-", &cfg, 1, t_store, (n as f64 / t_store, "row/s"));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// PR 9: leverage scoring on one-hot-heavy designs — the CSR gather
+/// path (`sparse_leverage_scores_ridged_with`, O(nnz) Gram) vs
+/// densify-first on the same 54-column covertype one-hot block, at
+/// threads {1, 2, 4, max}. Bitwise equality of the two is pinned in the
+/// unit tests; this row measures what skipping the zeros buys.
+fn bench_sparse_leverage(
+    table: &mut Table,
+    json: &mut JsonRows,
+    scale: Scale,
+    iters: usize,
+    max_threads: usize,
+) {
+    use mctm_coreset::coreset::leverage::{
+        leverage_scores_ridged_with, sparse_leverage_scores_ridged_with,
+    };
+
+    let n = scale.pick(5_000, 50_000, 200_000);
+    let mut rng = Rng::new(0x01E5);
+    let sp = mctm_coreset::data::covertype::generate_onehot_sparse(n, &mut rng);
+    let dense = sp.to_dense();
+    let cfg = format!("n={n} d={} nnz/row=12", dense.cols);
+
+    let mut t_dense_serial = f64::NAN;
+    for &t in &thread_sweep(max_threads) {
+        parallel::set_threads(t);
+        let pool = parallel::Pool::current();
+        let sec_d = time_median(iters, || {
+            std::hint::black_box(leverage_scores_ridged_with(&dense, 0.0, &pool).unwrap());
+        });
+        if t == 1 {
+            t_dense_serial = sec_d;
+        }
+        table.row(vec![
+            "leverage dense (one-hot)".into(),
+            cfg.clone(),
+            format!("{t}"),
+            format!("{sec_d:.4}"),
+            format!("{:.2}x", t_dense_serial / sec_d),
+            format!("{:.1} Mrow/s", n as f64 / sec_d / 1e6),
+        ]);
+        json.row("leverage_dense", "-", &cfg, t, sec_d, (n as f64 / sec_d, "row/s"));
+
+        let sec_s = time_median(iters, || {
+            std::hint::black_box(sparse_leverage_scores_ridged_with(&sp, 0.0, &pool).unwrap());
+        });
+        table.row(vec![
+            "leverage sparse (csr)".into(),
+            cfg.clone(),
+            format!("{t}"),
+            format!("{sec_s:.4}"),
+            format!("{:.2}x", t_dense_serial / sec_s),
+            format!("{:.1} Mrow/s", n as f64 / sec_s / 1e6),
+        ]);
+        json.row("leverage_sparse", "-", &cfg, t, sec_s, (n as f64 / sec_s, "row/s"));
+    }
+    parallel::set_threads(max_threads);
 }
 
 /// XLA rows degrade gracefully at every step: a missing PJRT runtime

@@ -36,4 +36,4 @@ pub mod source;
 
 pub use error::ApiError;
 pub use session::{CoresetReport, Diagnostics, FittedModel, Session, SessionBuilder};
-pub use source::{load_dataset, DataSource, DgpSource, NamedSource, SourceInput};
+pub use source::{load_dataset, DataSource, DgpSource, NamedSource, SourceInput, StoreSource};

@@ -9,13 +9,17 @@
 //!   streaming: bounded-memory Merge & Reduce over the shard stream.
 //! * [`DgpSource`] / [`NamedSource`] → either, chosen at construction
 //!   (`batch` vs `stream`), with generation seeded from the session.
+//! * [`StoreSource`] → streaming from an on-disk column store
+//!   (`data::store`), one chunk in memory at a time.
 
 use super::error::ApiError;
 use crate::data::dgp::Dgp;
+use crate::data::store::StoreReader;
 use crate::data::{covertype, equity, GenShards, MatShards, ShardSource};
 use crate::linalg::Mat;
 use crate::util::rng::Rng;
 use std::borrow::Cow;
+use std::path::PathBuf;
 
 /// The concrete input [`crate::api::Session::fit`] consumes: either a
 /// fully materialized matrix (batch path) or a shard stream (Merge &
@@ -152,9 +156,42 @@ impl DataSource for DgpSource {
     }
 }
 
+/// An on-disk column store (`data::store`) as a data source: always
+/// the streaming path — the reader holds one chunk in memory at a
+/// time, so `Session::fit`/`coreset` run at O(budget + chunk) peak no
+/// matter how many rows the store holds. The store's own chunk
+/// geometry is the shard size; a store written with `chunk_rows` equal
+/// to an in-memory run's shard size produces a **bitwise-identical**
+/// coreset (pinned by `tests/store_roundtrip.rs`).
+#[derive(Clone, Debug)]
+pub struct StoreSource {
+    path: PathBuf,
+}
+
+impl StoreSource {
+    /// Stream the store file at `path` (as written by `mctm import` or
+    /// [`crate::data::store::StoreWriter`]).
+    pub fn new(path: impl Into<PathBuf>) -> Self {
+        StoreSource { path: path.into() }
+    }
+}
+
+impl DataSource for StoreSource {
+    fn into_input<'a>(self, _seed: u64) -> Result<SourceInput<'a>, ApiError>
+    where
+        Self: 'a,
+    {
+        let reader = StoreReader::open(&self.path).map_err(|e| {
+            ApiError::Io(format!("opening store {}: {e:#}", self.path.display()))
+        })?;
+        Ok(SourceInput::Stream(Box::new(reader)))
+    }
+}
+
 /// A dataset addressed by its registry name (any of the 14 DGP names,
-/// `covertype`, `stocks10`, `stocks20`, or `file:/path.csv`) — what the
-/// CLI `dataset` config key resolves through.
+/// `covertype`, `stocks10`, `stocks20`, `file:/path.csv`, or
+/// `store:/path.store`) — what the CLI `dataset` config key resolves
+/// through.
 #[derive(Clone, Debug)]
 pub struct NamedSource {
     name: String,
@@ -183,6 +220,13 @@ impl DataSource for NamedSource {
         if let Some(shard) = self.shard {
             if shard == 0 {
                 return Err(ApiError::config("shard", "shard size must be ≥ 1"));
+            }
+            if let Some(path) = self.name.strip_prefix("store:") {
+                // a store carries its own chunk geometry — stream it
+                // directly (the reader is the shard source; `shard` and
+                // the row total are generator parameters and don't
+                // apply to a file whose layout is fixed on disk)
+                return StoreSource::new(path).into_input(seed);
             }
             if self.name.starts_with("file:") {
                 // a CSV file does not re-generate rows per request the
@@ -221,8 +265,20 @@ impl DataSource for NamedSource {
 
 /// Resolve a dataset name to `n` materialized rows: the 14 DGP names
 /// (`Dgp::name`), the synthetic `covertype` / `stocks10` / `stocks20`
-/// generators, or `file:/path.csv` (capped to the first `n` rows).
+/// generators, `file:/path.csv`, or `store:/path.store` (files capped
+/// to the first `n` rows).
 pub fn load_dataset(name: &str, n: usize, rng: &mut Rng) -> Result<Mat, ApiError> {
+    if let Some(path) = name.strip_prefix("store:") {
+        let m = crate::data::store::read_all(std::path::Path::new(path))
+            .map_err(|e| ApiError::Io(format!("loading {path}: {e:#}")))?;
+        // honour the n cap, like file: (batch callers materialize; the
+        // streaming path above never does)
+        if m.rows > n {
+            let idx: Vec<usize> = (0..n).collect();
+            return Ok(m.select_rows(&idx));
+        }
+        return Ok(m);
+    }
     if let Some(path) = name.strip_prefix("file:") {
         let m = crate::data::csv::load_csv(std::path::Path::new(path))
             .map_err(|e| ApiError::Io(format!("loading {path}: {e:#}")))?;
@@ -250,7 +306,7 @@ pub fn load_dataset(name: &str, n: usize, rng: &mut Rng) -> Result<Mat, ApiError
     Err(ApiError::UnknownDataset {
         name: name.to_string(),
         known: format!(
-            "DGP names: {}; plus covertype, stocks10, stocks20, file:/path.csv",
+            "DGP names: {}; plus covertype, stocks10, stocks20, file:/path.csv, store:/path.store",
             Dgp::all().map(|d| d.name()).join(", ")
         ),
     })
@@ -320,6 +376,54 @@ mod tests {
         assert!(matches!(err, ApiError::UnknownDataset { .. }));
         let err = NamedSource::stream("nope", 100, 10).into_input(1).unwrap_err();
         assert!(matches!(err, ApiError::UnknownDataset { .. }));
+    }
+
+    #[test]
+    fn store_source_resolves_to_stream_and_covers_rows() {
+        use crate::data::store::StoreWriter;
+        let dir = std::env::temp_dir()
+            .join(format!("mctm_src_store_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.store");
+        let m = Mat::from_vec(10, 2, (0..20).map(|x| x as f64 + 0.5).collect());
+        let mut w = StoreWriter::create(&path, 2, 4).unwrap();
+        w.push_mat(&m).unwrap();
+        w.finish().unwrap();
+
+        match StoreSource::new(&path).into_input(1).unwrap() {
+            SourceInput::Stream(mut s) => {
+                assert_eq!(s.dim(), 2);
+                let mut total = 0;
+                while let Some(shard) = s.next_shard().unwrap() {
+                    total += shard.rows;
+                }
+                assert_eq!(total, 10);
+            }
+            SourceInput::Batch(_) => panic!("expected stream"),
+        }
+
+        // the registry's store: prefix reaches the same reader (stream)
+        // and materializes bitwise on the batch path, honouring the cap
+        let name = format!("store:{}", path.display());
+        match NamedSource::stream(&name, 999, 3).into_input(1).unwrap() {
+            SourceInput::Stream(mut s) => {
+                // shard geometry comes from the store, not the request
+                assert_eq!(s.next_shard().unwrap().unwrap().rows, 4);
+            }
+            SourceInput::Batch(_) => panic!("expected stream"),
+        }
+        let mut rng = Rng::new(1);
+        let full = load_dataset(&name, 100, &mut rng).unwrap();
+        for (a, b) in full.data.iter().zip(&m.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(load_dataset(&name, 3, &mut rng).unwrap().rows, 3);
+
+        let err = StoreSource::new(dir.join("missing.store"))
+            .into_input(1)
+            .unwrap_err();
+        assert!(matches!(err, ApiError::Io(_)));
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! directly.
 
 use crate::basis::Design;
+use crate::data::sparse::SparseMat;
 use crate::linalg::{cholesky_ridge_ladder, Cholesky, LinalgError, Mat};
 use crate::util::degrade::DegradeSink;
 use crate::util::parallel::{Pool, ROW_CHUNK};
@@ -111,6 +112,107 @@ fn linv_quad_form(linv: &Mat, xi: &[f64]) -> f64 {
         acc += z * z;
     }
     acc
+}
+
+/// Leverage scores of a CSR matrix (one-hot-heavy designs like the
+/// Covertype encoding — see `data::sparse`). Bit-identical to
+/// `leverage_scores(&x.to_dense())` without ever materializing the
+/// dense matrix.
+pub fn sparse_leverage_scores(x: &SparseMat) -> Result<Vec<f64>, LinalgError> {
+    sparse_leverage_scores_ridged_with(x, 0.0, &Pool::current())
+}
+
+/// Ridge variant of [`sparse_leverage_scores`] on an explicit pool.
+pub fn sparse_leverage_scores_ridged_with(
+    x: &SparseMat,
+    gamma: f64,
+    pool: &Pool,
+) -> Result<Vec<f64>, LinalgError> {
+    sparse_leverage_scores_ridged_sink(x, gamma, pool, &DegradeSink::new())
+}
+
+/// [`sparse_leverage_scores_ridged_with`] with degradation accounting —
+/// the sparse twin of [`leverage_scores_ridged_sink`]. Both passes
+/// gather each CSR row into a dense scratch row (bitwise the row the
+/// dense matrix holds: kept values keep their bits, dropped `+0.0`
+/// cells are refilled as `+0.0`) and feed the SAME kernels in the SAME
+/// order — `syrk_upper_rows4`/`syrk_upper_row1` on the identical chunk
+/// grid with the identical tree reduction for the Gram,
+/// `linv_quad_form` per row for the scores — so the result is
+/// **bit-identical** to densifying first. The win is cost, not values:
+/// the gather touches O(nnz) cells per pass and the SYRK row kernels
+/// skip zero multipliers, so one-hot blocks cost what they contain.
+pub fn sparse_leverage_scores_ridged_sink(
+    x: &SparseMat,
+    gamma: f64,
+    pool: &Pool,
+    sink: &DegradeSink,
+) -> Result<Vec<f64>, LinalgError> {
+    let mut g = sparse_gram_with(x, pool);
+    let d = g.rows;
+    let stab = GRAM_RIDGE_REL * g.trace().max(1e-300) / d as f64;
+    for i in 0..d {
+        *g.at_mut(i, i) += gamma + stab;
+    }
+    let ch = factor_gram(&g, sink)?;
+    let linv = ch.l_inverse();
+    let mut scores = vec![0.0; x.rows];
+    let items: Vec<&mut [f64]> = scores.chunks_mut(ROW_CHUNK).collect();
+    pool.for_items(items, |ci, chunk| {
+        let lo = ci * ROW_CHUNK;
+        let mut xi = vec![0.0; x.cols];
+        for (off, out) in chunk.iter_mut().enumerate() {
+            x.gather_row_into(lo + off, &mut xi);
+            *out = linv_quad_form(&linv, &xi);
+        }
+    });
+    Ok(scores)
+}
+
+/// Gram XᵀX of a CSR matrix: per `ROW_CHUNK` shard, four rows at a
+/// time are gathered into a dense scratch panel and fed through the
+/// same SYRK block updates as [`Mat::gram_with`] — identical chunk
+/// grid, 4-row blocking, accumulation order and tree reduction, so the
+/// result is bit-identical to `x.to_dense().gram_with(pool)` while the
+/// per-row work scales with the stored non-zeros.
+fn sparse_gram_with(x: &SparseMat, pool: &Pool) -> Mat {
+    use crate::linalg::{syrk_upper_row1, syrk_upper_rows4};
+    use crate::util::parallel::{add_assign, tree_reduce};
+    let d = x.cols;
+    let partials = pool.map_chunks(x.rows, ROW_CHUNK, |_, range| {
+        let mut g = vec![0.0; d * d];
+        let (lo, hi) = (range.start, range.end);
+        let mut rows = vec![0.0; 4 * d];
+        let mut r = lo;
+        while r + 4 <= hi {
+            for t in 0..4 {
+                x.gather_row_into(r + t, &mut rows[t * d..(t + 1) * d]);
+            }
+            let (r0, rest) = rows.split_at(d);
+            let (r1, rest) = rest.split_at(d);
+            let (r2, r3) = rest.split_at(d);
+            syrk_upper_rows4(r0, r1, r2, r3, &mut g);
+            r += 4;
+        }
+        while r < hi {
+            x.gather_row_into(r, &mut rows[..d]);
+            syrk_upper_row1(&rows[..d], &mut g);
+            r += 1;
+        }
+        g
+    });
+    let upper = tree_reduce(partials, |mut a, b| {
+        add_assign(&mut a, &b);
+        a
+    })
+    .unwrap_or_else(|| vec![0.0; d * d]);
+    let mut g = Mat::from_vec(d, d, upper);
+    for i in 0..d {
+        for j in (i + 1)..d {
+            g.data[j * d + i] = g.data[i * d + j];
+        }
+    }
+    g
 }
 
 /// Leverage scores of the rows of `x` under **prior row weights** `w`:
@@ -589,6 +691,44 @@ mod tests {
         let plain = mctm_leverage_scores_with(&design, &pool).unwrap();
         for (a, b) in wdirect.iter().zip(&plain) {
             assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn sparse_scores_match_densified_bitwise() {
+        // one-hot-heavy design: 4 continuous columns + 6 indicator
+        // columns, plus a stored -0.0 to pin the exact-bits contract;
+        // n = 2100 spans two ROW_CHUNK shards with a non-multiple-of-4
+        // tail
+        let mut rng = Rng::new(31);
+        let (n, d) = (2100usize, 10usize);
+        let mut data = vec![0.0f64; n * d];
+        for (r, row) in data.chunks_mut(d).enumerate() {
+            for v in row.iter_mut().take(4) {
+                *v = rng.normal();
+            }
+            row[4 + rng.usize(6)] = 1.0;
+            if r == 17 {
+                row[5] = -0.0; // kept by from_dense, must survive
+            }
+        }
+        let dense = Mat::from_vec(n, d, data);
+        let sparse = SparseMat::from_dense(&dense);
+        assert!(sparse.density() < 0.55, "{}", sparse.density());
+        for gamma in [0.0, default_ridge(&dense)] {
+            for t in [1usize, 2] {
+                let pool = Pool::new(t);
+                let via_dense = leverage_scores_ridged_with(&dense, gamma, &pool).unwrap();
+                let via_sparse =
+                    sparse_leverage_scores_ridged_with(&sparse, gamma, &pool).unwrap();
+                for (i, (a, b)) in via_dense.iter().zip(&via_sparse).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "gamma={gamma} t={t} row {i}: {a} vs {b}"
+                    );
+                }
+            }
         }
     }
 

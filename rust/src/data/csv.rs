@@ -23,56 +23,78 @@ pub fn load_csv(path: &Path) -> Result<Mat> {
     parse_csv(&text).with_context(|| format!("parsing {}", path.display()))
 }
 
+/// One parsed line of delimited numeric text — shared between the
+/// whole-file parser below and the bounded-memory streaming importer
+/// (`data::store::import_csv`), so both accept the exact same dialect.
+pub(crate) enum ParsedLine {
+    /// Blank, comment, or separator-only line — nothing to do.
+    Skip,
+    /// A numeric row.
+    Row(Vec<f64>),
+    /// A non-numeric token; callers decide header-vs-error (a bad first
+    /// line with no data yet is a header, anywhere else it's an error).
+    Bad { col: usize, token: String, reason: String },
+}
+
+/// Parse one line. Non-finite tokens are rejected here with a
+/// line/column-numbered error (both 1-based, hence `lineno`): they are
+/// data missingness, never a header, so no caller policy applies.
+pub(crate) fn parse_line(line: &str, lineno: usize) -> Result<ParsedLine> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(ParsedLine::Skip);
+    }
+    let fields: Vec<&str> = line
+        .split(|c| c == ',' || c == ';' || c == '\t')
+        .map(|f| f.trim())
+        .filter(|f| !f.is_empty())
+        .collect();
+    let mut vals: Vec<f64> = Vec::with_capacity(fields.len());
+    for (col, f) in fields.iter().enumerate() {
+        match f.parse::<f64>() {
+            Ok(v) if v.is_finite() => vals.push(v),
+            // "nan"/"inf" parse as f64 but are rejected here: a
+            // non-finite token is data missingness, not a header
+            Ok(_) => {
+                return Err(anyhow!(
+                    "line {}, column {}: non-finite value `{f}`",
+                    lineno + 1,
+                    col + 1
+                ))
+            }
+            Err(e) => {
+                return Ok(ParsedLine::Bad {
+                    col,
+                    token: (*f).to_string(),
+                    reason: e.to_string(),
+                })
+            }
+        }
+    }
+    if vals.is_empty() {
+        return Ok(ParsedLine::Skip);
+    }
+    Ok(ParsedLine::Row(vals))
+}
+
 /// Parse delimited numeric text into a matrix.
 pub fn parse_csv(text: &str) -> Result<Mat> {
     let mut rows: Vec<Vec<f64>> = Vec::new();
     let mut ncol = None;
     for (lineno, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
-        }
-        let fields: Vec<&str> = line
-            .split(|c| c == ',' || c == ';' || c == '\t')
-            .map(|f| f.trim())
-            .filter(|f| !f.is_empty())
-            .collect();
-        let mut vals: Vec<f64> = Vec::with_capacity(fields.len());
-        let mut bad_token: Option<(usize, String)> = None;
-        for (col, f) in fields.iter().enumerate() {
-            match f.parse::<f64>() {
-                Ok(v) if v.is_finite() => vals.push(v),
-                // "nan"/"inf" parse as f64 but are rejected here: a
-                // non-finite token is data missingness, not a header
-                Ok(_) => {
-                    return Err(anyhow!(
-                        "line {}, column {}: non-finite value `{f}`",
-                        lineno + 1,
-                        col + 1
-                    ))
-                }
-                Err(e) => {
-                    bad_token = Some((col, e.to_string()));
-                    break;
-                }
-            }
-        }
-        match bad_token {
+        let vals = match parse_line(line, lineno)? {
+            ParsedLine::Skip => continue,
             // non-numeric first line with no data yet — header, skip
-            Some(_) if rows.is_empty() && lineno == 0 => continue,
-            Some((col, e)) => {
+            ParsedLine::Bad { .. } if rows.is_empty() && lineno == 0 => continue,
+            ParsedLine::Bad { col, token, reason } => {
                 return Err(anyhow!(
-                    "line {}, column {}: `{}`: {e}",
+                    "line {}, column {}: `{token}`: {reason}",
                     lineno + 1,
-                    col + 1,
-                    fields[col]
+                    col + 1
                 ))
             }
-            None => {}
-        }
-        if vals.is_empty() {
-            continue;
-        }
+            ParsedLine::Row(vals) => vals,
+        };
         match ncol {
             None => ncol = Some(vals.len()),
             Some(c) if c != vals.len() => {

@@ -1,14 +1,17 @@
 //! Workload generation: the paper's 14 two-dimensional simulation DGPs
 //! (§E.1.1), the synthetic Covertype-like terrain generator and the
 //! synthetic equity-return generator (§3.2 substitutions — DESIGN.md §5),
-//! plus a shard-iterator used by the streaming coordinator and the
-//! deterministic fault-injection adapter (`faulty`).
+//! plus a shard-iterator used by the streaming coordinator, the
+//! deterministic fault-injection adapter (`faulty`), the out-of-core
+//! column store (`store`) and CSR sparse rows (`sparse`).
 
 pub mod covertype;
 pub mod csv;
 pub mod dgp;
 pub mod equity;
 pub mod faulty;
+pub mod sparse;
+pub mod store;
 
 use crate::util::degrade::DegradeSink;
 use crate::linalg::Mat;

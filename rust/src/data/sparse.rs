@@ -1,0 +1,196 @@
+//! CSR sparse rows for one-hot-heavy covariate blocks.
+//!
+//! Covertype-like designs are mostly one-hot: 10 continuous terrain
+//! columns plus 44 indicator columns, ~12 non-zeros out of 54 per row.
+//! [`SparseMat`] stores such matrices in compressed sparse row form so
+//! Gram accumulation and leverage scoring run at O(nnz) gather cost
+//! instead of O(n·d) — see `coreset::leverage::sparse_leverage_scores`,
+//! which gathers rows into the existing dense `syrk_upper_rows4` /
+//! `linv_quad_form` kernels and is **bitwise-identical** to densifying
+//! first (same kernels, same FP order, only the zero-skipping gather
+//! differs — and gathering writes the same `f64` bits a dense row holds).
+//!
+//! Conversions are exact: [`from_dense`](SparseMat::from_dense) drops
+//! only cells whose bit pattern is exactly `+0.0` (a stored `-0.0` is a
+//! real value and is kept), so `from_dense → to_dense` is lossless down
+//! to the bit level.
+
+use crate::linalg::Mat;
+
+/// A CSR (compressed sparse row) matrix of `f64` values.
+///
+/// `indptr` has `rows + 1` entries; row `r`'s non-zeros are
+/// `indices[indptr[r]..indptr[r+1]]` (strictly ascending column ids) and
+/// `values[indptr[r]..indptr[r+1]]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseMat {
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns (logical width).
+    pub cols: usize,
+    /// Row pointers, `rows + 1` entries.
+    pub indptr: Vec<usize>,
+    /// Column indices, strictly ascending within each row.
+    pub indices: Vec<usize>,
+    /// Non-zero values, parallel to `indices`.
+    pub values: Vec<f64>,
+}
+
+impl SparseMat {
+    /// An empty matrix with `cols` columns and no rows yet.
+    pub fn new(cols: usize) -> Self {
+        SparseMat { rows: 0, cols, indptr: vec![0], indices: Vec::new(), values: Vec::new() }
+    }
+
+    /// Append one row given as `(column, value)` pairs in strictly
+    /// ascending column order.
+    pub fn push_row(&mut self, entries: &[(usize, f64)]) {
+        let mut last: Option<usize> = None;
+        for &(c, v) in entries {
+            assert!(c < self.cols, "column {c} out of range (cols = {})", self.cols);
+            if let Some(p) = last {
+                assert!(c > p, "columns must be strictly ascending ({p} then {c})");
+            }
+            last = Some(c);
+            self.indices.push(c);
+            self.values.push(v);
+        }
+        self.rows += 1;
+        self.indptr.push(self.indices.len());
+    }
+
+    /// Compress a dense matrix, dropping only cells whose bit pattern is
+    /// exactly `+0.0` (so `-0.0` survives and
+    /// [`to_dense`](Self::to_dense) is bitwise-lossless).
+    pub fn from_dense(m: &Mat) -> Self {
+        let mut s = SparseMat::new(m.cols);
+        s.indptr.reserve(m.rows);
+        for r in 0..m.rows {
+            let row = m.row(r);
+            for (c, &v) in row.iter().enumerate() {
+                if v.to_bits() != 0 {
+                    s.indices.push(c);
+                    s.values.push(v);
+                }
+            }
+            s.rows += 1;
+            s.indptr.push(s.indices.len());
+        }
+        s
+    }
+
+    /// Expand back to a dense matrix (absent cells become `+0.0`).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (idx, val) = self.row(r);
+            for (&c, &v) in idx.iter().zip(val.iter()) {
+                m.data[r * self.cols + c] = v;
+            }
+        }
+        m
+    }
+
+    /// Number of stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Stored fraction: `nnz / (rows · cols)` (1.0 for an empty matrix).
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 1.0;
+        }
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// Row `r` as parallel `(indices, values)` slices.
+    pub fn row(&self, r: usize) -> (&[usize], &[f64]) {
+        let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Scatter row `r` into a dense buffer (`out.len() == cols`),
+    /// zero-filling first. The gathered row is bitwise-identical to the
+    /// dense row it came from (up to dropped `+0.0` cells), which is
+    /// what makes sparse scoring bit-compatible with the dense kernels.
+    pub fn gather_row_into(&self, r: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.cols);
+        out.fill(0.0);
+        let (idx, val) = self.row(r);
+        for (&c, &v) in idx.iter().zip(val.iter()) {
+            out[c] = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_dense_round_trips_bitwise() {
+        // includes -0.0 (kept) and +0.0 (dropped) and a subnormal
+        let m = Mat::from_vec(
+            3,
+            4,
+            vec![
+                1.0, 0.0, -0.0, 2.5, //
+                0.0, 0.0, 0.0, 0.0, //
+                f64::MIN_POSITIVE / 4.0, -3.0, 0.0, 4.0,
+            ],
+        );
+        let s = SparseMat::from_dense(&m);
+        assert_eq!(s.nnz(), 6); // -0.0 kept, the five +0.0 dropped
+        let back = s.to_dense();
+        assert_eq!(back.data.len(), m.data.len());
+        for (a, b) in m.data.iter().zip(back.data.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn push_row_matches_from_dense() {
+        let mut s = SparseMat::new(3);
+        s.push_row(&[(0, 1.0), (2, 2.0)]);
+        s.push_row(&[]);
+        s.push_row(&[(1, -4.5)]);
+        let d = s.to_dense();
+        let s2 = SparseMat::from_dense(&d);
+        assert_eq!(s, s2);
+        assert_eq!((s.rows, s.cols, s.nnz()), (3, 3, 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly ascending")]
+    fn push_row_rejects_unordered_columns() {
+        let mut s = SparseMat::new(3);
+        s.push_row(&[(2, 1.0), (1, 2.0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn push_row_rejects_out_of_range_column() {
+        let mut s = SparseMat::new(3);
+        s.push_row(&[(3, 1.0)]);
+    }
+
+    #[test]
+    fn gather_row_matches_dense_row() {
+        let m = Mat::from_vec(2, 3, vec![1.0, 0.0, 3.0, 0.0, 5.0, 0.0]);
+        let s = SparseMat::from_dense(&m);
+        let mut buf = vec![9.0; 3]; // stale garbage must be cleared
+        s.gather_row_into(1, &mut buf);
+        assert_eq!(buf, &[0.0, 5.0, 0.0]);
+        s.gather_row_into(0, &mut buf);
+        assert_eq!(buf, &[1.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn density_counts_stored_fraction() {
+        let m = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let s = SparseMat::from_dense(&m);
+        assert_eq!(s.density(), 0.5);
+        assert_eq!(SparseMat::new(4).density(), 1.0);
+    }
+}

@@ -1,0 +1,670 @@
+//! Out-of-core column store: a chunked, versioned binary on-disk format
+//! so a fit can stream datasets that never fit in RAM.
+//!
+//! The format reuses the artifact idioms (`runtime/artifact.rs`): every
+//! f64 is stored as its exact bit pattern (so store → read → store is
+//! byte-identical and a store-backed fit is bitwise-equal to the same
+//! rows in memory), every chunk carries an FNV-1a checksum, and writes
+//! are atomic (`.tmp` + rename). Zero external dependencies.
+//!
+//! ## Layout (version 1)
+//!
+//! ```text
+//! [0..16)   magic  "mctm-store v1" + 3 NUL bytes
+//! [16..24)  rows        u64 LE
+//! [24..32)  cols        u64 LE
+//! [32..40)  chunk_rows  u64 LE
+//! [40..48)  FNV-1a 64 of bytes [0..40), u64 LE
+//! then ceil(rows / chunk_rows) chunks, each:
+//! [0..8)    FNV-1a 64 of the payload, u64 LE
+//! [8..)     r_c · cols f64 bit patterns, u64 LE, column-major
+//! ```
+//!
+//! Chunk `c` holds `r_c = min(chunk_rows, rows − c·chunk_rows)` rows and
+//! starts at byte `48 + c·(8 + chunk_rows·cols·8)` — every chunk except
+//! the last is full, so readers seek straight to any chunk. Values are
+//! column-major *within a chunk* (each chunk is a small column store):
+//! unit-stride per-column scans without giving up row-chunked streaming.
+//!
+//! ## Memory model
+//!
+//! [`StoreWriter`] holds one chunk of rows; [`StoreReader`] reads one
+//! chunk per `next_shard` call. An import (CSV or generator → store) and
+//! a store-backed fit therefore both run at O(budget + chunk_rows·cols)
+//! peak memory, independent of the total row count — pinned by
+//! `tests/store_alloc.rs`.
+//!
+//! ## Failure semantics
+//!
+//! [`StoreReader::open`] validates the header checksum and the exact
+//! file length (a truncated or padded file is a typed error naming the
+//! byte counts). Per-chunk checksum mismatches surface as
+//! [`ShardError::Fatal`] naming the chunk and "checksum"; transient I/O
+//! errors surface as [`ShardError::Transient`] and are retried by the
+//! streaming producer under the PR-6 pins.
+
+use crate::anyhow;
+use crate::data::{csv, ShardError, ShardSource};
+use crate::linalg::Mat;
+use crate::runtime::artifact::fnv1a64;
+use crate::util::error::{Context, Result};
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// 13 magic characters + 3 NUL padding bytes = 16-byte magic.
+const MAGIC: &[u8; 16] = b"mctm-store v1\0\0\0";
+const HEADER_LEN: u64 = 48;
+/// Default rows per chunk for `mctm import` (matches the streaming
+/// pipeline's default shard size).
+pub const DEFAULT_CHUNK_ROWS: usize = 2048;
+
+fn header_bytes(rows: u64, cols: u64, chunk_rows: u64) -> [u8; 48] {
+    let mut h = [0u8; 48];
+    h[0..16].copy_from_slice(MAGIC);
+    h[16..24].copy_from_slice(&rows.to_le_bytes());
+    h[24..32].copy_from_slice(&cols.to_le_bytes());
+    h[32..40].copy_from_slice(&chunk_rows.to_le_bytes());
+    let crc = fnv1a64(&h[0..40]);
+    h[40..48].copy_from_slice(&crc.to_le_bytes());
+    h
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+/// Encode one chunk's rows (row-major `buf`, `r × cols`) as the on-disk
+/// column-major payload.
+fn encode_chunk(buf: &[f64], r: usize, cols: usize) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(r * cols * 8);
+    for col in 0..cols {
+        for row in 0..r {
+            payload.extend_from_slice(&buf[row * cols + col].to_bits().to_le_bytes());
+        }
+    }
+    payload
+}
+
+/// Streaming writer: buffers one chunk of rows, writes to `<path>.tmp`,
+/// and atomically renames on [`finish`](StoreWriter::finish). Dropping
+/// an unfinished writer removes the partial `.tmp` file.
+pub struct StoreWriter {
+    out: Option<BufWriter<File>>,
+    path: PathBuf,
+    tmp: PathBuf,
+    cols: usize,
+    chunk_rows: usize,
+    buf: Vec<f64>,
+    rows: u64,
+}
+
+impl StoreWriter {
+    /// Start writing a store at `path` for `cols`-wide rows, flushed in
+    /// chunks of `chunk_rows` rows.
+    pub fn create(path: &Path, cols: usize, chunk_rows: usize) -> Result<Self> {
+        if cols == 0 {
+            return Err(anyhow!("store must have at least one column"));
+        }
+        if chunk_rows == 0 {
+            return Err(anyhow!("chunk_rows must be positive"));
+        }
+        let tmp = tmp_path(path);
+        let file = File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        let mut out = BufWriter::new(file);
+        // placeholder header (rows = 0); patched by finish()
+        out.write_all(&header_bytes(0, cols as u64, chunk_rows as u64))
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        Ok(StoreWriter {
+            out: Some(out),
+            path: path.to_path_buf(),
+            tmp,
+            cols,
+            chunk_rows,
+            buf: Vec::with_capacity(chunk_rows * cols),
+            rows: 0,
+        })
+    }
+
+    /// Append one row (must have exactly `cols` values).
+    pub fn push_row(&mut self, row: &[f64]) -> Result<()> {
+        if row.len() != self.cols {
+            return Err(anyhow!(
+                "row has {} values, store expects {}",
+                row.len(),
+                self.cols
+            ));
+        }
+        self.buf.extend_from_slice(row);
+        self.rows += 1;
+        if self.buf.len() == self.chunk_rows * self.cols {
+            self.flush_chunk()?;
+        }
+        Ok(())
+    }
+
+    /// Append every row of a matrix.
+    pub fn push_mat(&mut self, m: &Mat) -> Result<()> {
+        for r in 0..m.rows {
+            self.push_row(m.row(r))?;
+        }
+        Ok(())
+    }
+
+    fn flush_chunk(&mut self) -> Result<()> {
+        let r = self.buf.len() / self.cols;
+        if r == 0 {
+            return Ok(());
+        }
+        let payload = encode_chunk(&self.buf, r, self.cols);
+        let crc = fnv1a64(&payload);
+        let out = match self.out.as_mut() {
+            Some(o) => o,
+            None => return Err(anyhow!("store writer already finished")),
+        };
+        out.write_all(&crc.to_le_bytes())
+            .and_then(|()| out.write_all(&payload))
+            .with_context(|| format!("writing {}", self.tmp.display()))?;
+        self.buf.clear();
+        Ok(())
+    }
+
+    /// Flush the tail chunk, patch the header with the final row count,
+    /// and atomically rename `.tmp` into place. Returns the row count.
+    pub fn finish(mut self) -> Result<u64> {
+        self.flush_chunk()?;
+        let out = match self.out.take() {
+            Some(o) => o,
+            None => return Err(anyhow!("store writer already finished")),
+        };
+        let mut file = out
+            .into_inner()
+            .map_err(|e| anyhow!("flushing {}: {}", self.tmp.display(), e.error()))?;
+        file.seek(SeekFrom::Start(0))
+            .and_then(|_| {
+                file.write_all(&header_bytes(
+                    self.rows,
+                    self.cols as u64,
+                    self.chunk_rows as u64,
+                ))
+            })
+            .with_context(|| format!("patching header of {}", self.tmp.display()))?;
+        drop(file);
+        std::fs::rename(&self.tmp, &self.path).with_context(|| {
+            format!("renaming {} -> {}", self.tmp.display(), self.path.display())
+        })?;
+        Ok(self.rows)
+    }
+}
+
+impl Drop for StoreWriter {
+    fn drop(&mut self) {
+        // finish() took `out`, so a remaining writer means an abandoned
+        // import — don't leave a half-written .tmp behind
+        if self.out.take().is_some() {
+            let _ = std::fs::remove_file(&self.tmp);
+        }
+    }
+}
+
+/// Seek-based chunk reader; implements [`ShardSource`], so a store
+/// streams straight into Merge & Reduce (`Session::fit`/`coreset` via
+/// `dataset=store:/path`) one chunk at a time.
+pub struct StoreReader {
+    file: File,
+    path: String,
+    rows: u64,
+    cols: usize,
+    chunk_rows: usize,
+    next_chunk: u64,
+}
+
+impl StoreReader {
+    /// Open and validate a store file (magic, header checksum, exact
+    /// file length — a truncated file is rejected here, not mid-read).
+    pub fn open(path: &Path) -> Result<Self> {
+        let mut file =
+            File::open(path).with_context(|| format!("opening {}", path.display()))?;
+        let mut h = [0u8; 48];
+        file.read_exact(&mut h)
+            .map_err(|e| match e.kind() {
+                std::io::ErrorKind::UnexpectedEof => {
+                    anyhow!("{}: truncated store header", path.display())
+                }
+                _ => anyhow!("{}: reading header: {e}", path.display()),
+            })?;
+        if &h[0..16] != MAGIC {
+            return Err(anyhow!("{}: not a mctm store file (bad magic)", path.display()));
+        }
+        let stored_crc = u64::from_le_bytes([
+            h[40], h[41], h[42], h[43], h[44], h[45], h[46], h[47],
+        ]);
+        if fnv1a64(&h[0..40]) != stored_crc {
+            return Err(anyhow!("{}: header checksum mismatch", path.display()));
+        }
+        let rows = u64::from_le_bytes([h[16], h[17], h[18], h[19], h[20], h[21], h[22], h[23]]);
+        let cols = u64::from_le_bytes([h[24], h[25], h[26], h[27], h[28], h[29], h[30], h[31]]);
+        let chunk_rows =
+            u64::from_le_bytes([h[32], h[33], h[34], h[35], h[36], h[37], h[38], h[39]]);
+        if cols == 0 || chunk_rows == 0 {
+            return Err(anyhow!("{}: corrupt header (zero cols/chunk_rows)", path.display()));
+        }
+        let n_chunks = rows.div_ceil(chunk_rows);
+        let expected = HEADER_LEN + n_chunks * 8 + rows * cols * 8;
+        let actual = file
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len();
+        if actual != expected {
+            return Err(anyhow!(
+                "{}: store file truncated or padded: expected {expected} bytes, found {actual}",
+                path.display()
+            ));
+        }
+        Ok(StoreReader {
+            file,
+            path: path.display().to_string(),
+            rows,
+            cols: cols as usize,
+            chunk_rows: chunk_rows as usize,
+            next_chunk: 0,
+        })
+    }
+
+    /// Total rows in the store.
+    pub fn rows(&self) -> u64 {
+        self.rows
+    }
+
+    /// Columns per row.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Rows per full chunk.
+    pub fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    /// Number of chunks (the last may be partial).
+    pub fn n_chunks(&self) -> u64 {
+        self.rows.div_ceil(self.chunk_rows as u64)
+    }
+
+    /// Rewind to the first chunk (a reader is reusable across fits).
+    pub fn reset(&mut self) {
+        self.next_chunk = 0;
+    }
+
+    fn read_chunk(&mut self, c: u64) -> Result<Mat, ShardError> {
+        let stride = 8 + (self.chunk_rows * self.cols * 8) as u64;
+        let offset = HEADER_LEN + c * stride;
+        let r = (self.rows - c * self.chunk_rows as u64).min(self.chunk_rows as u64) as usize;
+        let payload_len = r * self.cols * 8;
+        let io_err = |what: &str, e: std::io::Error, path: &str| match e.kind() {
+            // a short file is permanent corruption, not a flaky read
+            std::io::ErrorKind::UnexpectedEof => ShardError::Fatal(format!(
+                "{path}: store file truncated reading chunk {c} {what}"
+            )),
+            _ => ShardError::Transient(format!("{path}: chunk {c} {what}: {e}")),
+        };
+        self.file
+            .seek(SeekFrom::Start(offset))
+            .map_err(|e| io_err("seek", e, &self.path))?;
+        let mut crc_bytes = [0u8; 8];
+        self.file
+            .read_exact(&mut crc_bytes)
+            .map_err(|e| io_err("header", e, &self.path))?;
+        let mut payload = vec![0u8; payload_len];
+        self.file
+            .read_exact(&mut payload)
+            .map_err(|e| io_err("payload", e, &self.path))?;
+        let stored = u64::from_le_bytes(crc_bytes);
+        let computed = fnv1a64(&payload);
+        if stored != computed {
+            return Err(ShardError::Fatal(format!(
+                "{}: chunk {c} checksum mismatch (stored {stored:016x}, computed {computed:016x})",
+                self.path
+            )));
+        }
+        // decode column-major payload into a row-major Mat
+        let mut data = vec![0.0f64; r * self.cols];
+        for col in 0..self.cols {
+            for row in 0..r {
+                let o = (col * r + row) * 8;
+                let bits = u64::from_le_bytes([
+                    payload[o],
+                    payload[o + 1],
+                    payload[o + 2],
+                    payload[o + 3],
+                    payload[o + 4],
+                    payload[o + 5],
+                    payload[o + 6],
+                    payload[o + 7],
+                ]);
+                data[row * self.cols + col] = f64::from_bits(bits);
+            }
+        }
+        Ok(Mat::from_vec(r, self.cols, data))
+    }
+}
+
+impl ShardSource for StoreReader {
+    fn next_shard(&mut self) -> Result<Option<Mat>, ShardError> {
+        if self.next_chunk >= self.n_chunks() {
+            return Ok(None);
+        }
+        let c = self.next_chunk;
+        let m = self.read_chunk(c)?;
+        // only a successful read consumes the chunk — a transient error
+        // leaves the cursor in place so the producer's retry re-reads it
+        self.next_chunk = c + 1;
+        Ok(Some(m))
+    }
+
+    fn dim(&self) -> usize {
+        self.cols
+    }
+}
+
+/// Materialize a whole store in memory (the batch `dataset=store:` path;
+/// streaming fits should use [`StoreReader`] directly).
+pub fn read_all(path: &Path) -> Result<Mat> {
+    let mut reader = StoreReader::open(path)?;
+    let cols = reader.cols();
+    let mut data: Vec<f64> = Vec::with_capacity(reader.rows() as usize * cols);
+    let mut rows = 0usize;
+    loop {
+        match reader.next_shard() {
+            Ok(Some(m)) => {
+                rows += m.rows;
+                data.extend_from_slice(&m.data);
+            }
+            Ok(None) => break,
+            Err(e) => return Err(anyhow!("{}: {e}", path.display())),
+        }
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+/// Convert a CSV file (same dialect as `dataset=file:` — see
+/// [`csv`]) to a store in one bounded-memory pass: one line and one
+/// chunk live at a time, never the whole matrix. Returns (rows, cols).
+pub fn import_csv(src: &Path, out: &Path, chunk_rows: usize) -> Result<(u64, usize)> {
+    let file =
+        File::open(src).with_context(|| format!("reading {}", src.display()))?;
+    let reader = BufReader::new(file);
+    let mut writer: Option<StoreWriter> = None;
+    let mut ncol: Option<usize> = None;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.with_context(|| format!("reading {}", src.display()))?;
+        let parsed = csv::parse_line(&line, lineno)
+            .with_context(|| format!("parsing {}", src.display()))?;
+        let vals = match parsed {
+            csv::ParsedLine::Skip => continue,
+            // non-numeric first line with no data yet — header, skip
+            csv::ParsedLine::Bad { .. } if ncol.is_none() && lineno == 0 => continue,
+            csv::ParsedLine::Bad { col, token, reason } => {
+                return Err(anyhow!(
+                    "line {}, column {}: `{token}`: {reason}",
+                    lineno + 1,
+                    col + 1
+                ))
+                .with_context(|| format!("parsing {}", src.display()))
+            }
+            csv::ParsedLine::Row(vals) => vals,
+        };
+        match ncol {
+            None => ncol = Some(vals.len()),
+            Some(c) if c != vals.len() => {
+                return Err(anyhow!(
+                    "line {}: {} columns, expected {c}",
+                    lineno + 1,
+                    vals.len()
+                ))
+                .with_context(|| format!("parsing {}", src.display()))
+            }
+            _ => {}
+        }
+        let w = match &mut writer {
+            Some(w) => w,
+            None => {
+                let cols = vals.len();
+                writer = Some(StoreWriter::create(out, cols, chunk_rows)?);
+                match &mut writer {
+                    Some(w) => w,
+                    None => unreachable!("just created"),
+                }
+            }
+        };
+        w.push_row(&vals)?;
+    }
+    let (writer, cols) = match (writer, ncol) {
+        (Some(w), Some(c)) => (w, c),
+        _ => {
+            return Err(anyhow!("no numeric rows found"))
+                .with_context(|| format!("parsing {}", src.display()))
+        }
+    };
+    let rows = writer.finish()?;
+    Ok((rows, cols))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("mctm_store_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn random_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(rng.normal());
+        }
+        Mat::from_vec(rows, cols, data)
+    }
+
+    fn write_store(m: &Mat, path: &Path, chunk_rows: usize) {
+        let mut w = StoreWriter::create(path, m.cols, chunk_rows).unwrap();
+        w.push_mat(m).unwrap();
+        assert_eq!(w.finish().unwrap(), m.rows as u64);
+    }
+
+    #[test]
+    fn round_trip_is_bitwise() {
+        let dir = tmp_dir("roundtrip");
+        let path = dir.join("a.store");
+        let m = random_mat(23, 3, 7); // 23 rows, chunk 8 → partial tail
+        write_store(&m, &path, 8);
+        let back = read_all(&path).unwrap();
+        assert_eq!((back.rows, back.cols), (m.rows, m.cols));
+        for (a, b) in m.data.iter().zip(back.data.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn round_trip_preserves_special_bit_patterns() {
+        let dir = tmp_dir("bits");
+        let path = dir.join("b.store");
+        // −0.0, subnormals and exact extremes must survive exactly
+        let m = Mat::from_vec(
+            3,
+            2,
+            vec![
+                -0.0,
+                f64::MIN_POSITIVE / 2.0, // subnormal
+                f64::MAX,
+                f64::MIN,
+                1.0e-308,
+                -1.0e-308,
+            ],
+        );
+        write_store(&m, &path, 2);
+        let back = read_all(&path).unwrap();
+        for (a, b) in m.data.iter().zip(back.data.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.data[0].to_bits(), (-0.0f64).to_bits());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn reader_shards_match_chunk_geometry() {
+        let dir = tmp_dir("geometry");
+        let path = dir.join("c.store");
+        let m = random_mat(10, 2, 3);
+        write_store(&m, &path, 4);
+        let mut r = StoreReader::open(&path).unwrap();
+        assert_eq!((r.rows(), r.cols(), r.chunk_rows(), r.n_chunks()), (10, 2, 4, 3));
+        let sizes: Vec<usize> =
+            std::iter::from_fn(|| r.next_shard().unwrap().map(|s| s.rows)).collect();
+        assert_eq!(sizes, vec![4, 4, 2]);
+        r.reset();
+        assert_eq!(r.next_shard().unwrap().unwrap().rows, 4);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncated_file_is_typed_open_error() {
+        let dir = tmp_dir("trunc");
+        let path = dir.join("d.store");
+        write_store(&random_mat(9, 2, 5), &path, 4);
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 5]).unwrap();
+        let e = format!("{:#}", StoreReader::open(&path).unwrap_err());
+        assert!(e.contains("truncated"), "{e}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bit_flip_in_chunk_is_fatal_checksum_error() {
+        let dir = tmp_dir("flip");
+        let path = dir.join("e.store");
+        write_store(&random_mat(9, 2, 5), &path, 4);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0x40; // flip a payload bit in the last chunk
+        std::fs::write(&path, &bytes).unwrap();
+        let mut r = StoreReader::open(&path).unwrap();
+        assert!(r.next_shard().is_ok()); // chunk 0 intact
+        assert!(r.next_shard().is_ok()); // chunk 1 intact
+        match r.next_shard() {
+            Err(ShardError::Fatal(m)) => {
+                assert!(m.contains("checksum"), "{m}");
+                assert!(m.contains("chunk 2"), "{m}");
+            }
+            other => panic!("expected fatal checksum error, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bit_flip_in_header_rejected_at_open() {
+        let dir = tmp_dir("hdr");
+        let path = dir.join("f.store");
+        write_store(&random_mat(4, 2, 5), &path, 4);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[17] ^= 0x01; // corrupt the row count
+        std::fs::write(&path, &bytes).unwrap();
+        let e = format!("{:#}", StoreReader::open(&path).unwrap_err());
+        assert!(e.contains("header checksum mismatch"), "{e}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let dir = tmp_dir("magic");
+        let path = dir.join("g.store");
+        std::fs::write(&path, vec![0u8; 64]).unwrap();
+        let e = format!("{:#}", StoreReader::open(&path).unwrap_err());
+        assert!(e.contains("bad magic"), "{e}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn abandoned_writer_cleans_up_tmp() {
+        let dir = tmp_dir("abandon");
+        let path = dir.join("h.store");
+        {
+            let mut w = StoreWriter::create(&path, 2, 4).unwrap();
+            w.push_row(&[1.0, 2.0]).unwrap();
+            // dropped without finish()
+        }
+        assert!(!tmp_path(&path).exists(), "tmp file left behind");
+        assert!(!path.exists(), "final file must not appear without finish()");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn finish_is_atomic_rename() {
+        let dir = tmp_dir("atomic");
+        let path = dir.join("i.store");
+        write_store(&random_mat(4, 2, 1), &path, 4);
+        assert!(path.exists());
+        assert!(!tmp_path(&path).exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn import_csv_streams_and_round_trips() {
+        let dir = tmp_dir("import");
+        let csv_path = dir.join("in.csv");
+        let store_path = dir.join("in.store");
+        std::fs::write(
+            &csv_path,
+            "x,y\n# comment\n1.5,2\n-3,4.25\n\n5,6\n7,8\n9,10\n",
+        )
+        .unwrap();
+        let (rows, cols) = import_csv(&csv_path, &store_path, 2).unwrap();
+        assert_eq!((rows, cols), (5, 2));
+        let back = read_all(&store_path).unwrap();
+        let direct = csv::load_csv(&csv_path).unwrap();
+        assert_eq!(back.data.len(), direct.data.len());
+        for (a, b) in back.data.iter().zip(direct.data.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn import_csv_rejects_bad_input_with_position() {
+        let dir = tmp_dir("import_bad");
+        let csv_path = dir.join("bad.csv");
+        let store_path = dir.join("bad.store");
+        std::fs::write(&csv_path, "1,2\n3,oops\n").unwrap();
+        let e = format!(
+            "{:#}",
+            import_csv(&csv_path, &store_path, 4).unwrap_err()
+        );
+        assert!(e.contains("line 2"), "{e}");
+        assert!(e.contains("`oops`"), "{e}");
+        assert!(!store_path.exists(), "no store on failed import");
+        assert!(!tmp_path(&store_path).exists(), "no tmp on failed import");
+
+        std::fs::write(&csv_path, "1,2\n3\n").unwrap();
+        let e = format!(
+            "{:#}",
+            import_csv(&csv_path, &store_path, 4).unwrap_err()
+        );
+        assert!(e.contains("1 columns, expected 2"), "{e}");
+
+        std::fs::write(&csv_path, "# nothing\n").unwrap();
+        let e = format!(
+            "{:#}",
+            import_csv(&csv_path, &store_path, 4).unwrap_err()
+        );
+        assert!(e.contains("no numeric rows"), "{e}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -42,7 +42,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::api::{
         load_dataset, ApiError, CoresetReport, DataSource, DgpSource, Diagnostics,
-        FittedModel, NamedSource, Session, SessionBuilder, SourceInput,
+        FittedModel, NamedSource, Session, SessionBuilder, SourceInput, StoreSource,
     };
     pub use crate::coordinator::cli::Cli;
     pub use crate::coordinator::config::ExperimentConfig;
@@ -50,6 +50,8 @@ pub mod prelude {
     pub use crate::coreset::{Coreset, Method};
     pub use crate::data::dgp::Dgp;
     pub use crate::data::faulty::{FaultPlan, FaultySource};
+    pub use crate::data::sparse::SparseMat;
+    pub use crate::data::store::{StoreReader, StoreWriter};
     pub use crate::data::{GenShards, InvalidPolicy, MatShards, ShardError, ShardSource};
     pub use crate::fit::{FitOptions, FitResult, OptimizerKind};
     pub use crate::linalg::simd::{simd_available, KernelBackend};

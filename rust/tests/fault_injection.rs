@@ -271,6 +271,50 @@ fn ridge_ladder_recovery_is_recorded_not_fatal() {
     assert!(!d.is_clean());
 }
 
+// ---------------------------------------------------------------- (d)
+// fault machinery composes with the on-disk store (PR 9): the reader
+// is just another ShardSource, so FaultySource wraps it for free
+
+#[test]
+fn store_backed_transients_recover_bit_identically() {
+    let clean = session(1, 1, 4, InvalidPolicy::Error)
+        .coreset(boxed(clean_source(7)))
+        .unwrap();
+    assert!(clean.degradations.is_clean(), "{:?}", clean.degradations);
+
+    // drain the same generator shard-by-shard into a store, so the
+    // store's chunk sequence is exactly the GenShards shard sequence
+    let dir = std::env::temp_dir().join(format!("mctm_faultstore_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("rows.store");
+    {
+        let mut src = clean_source(7);
+        let mut w = StoreWriter::create(&path, 2, SHARD).unwrap();
+        while let Some(shard) = src.next_shard().unwrap() {
+            w.push_mat(&shard).unwrap();
+        }
+        assert_eq!(w.finish().unwrap(), TOTAL as u64);
+    }
+
+    // transient read faults injected on top of the disk reader recover
+    // to the exact bits of the clean generator run — which also proves
+    // store round-trip ≡ generator, end to end through the pipeline
+    let faulty = FaultySource::new(
+        StoreReader::open(&path).unwrap(),
+        FaultPlan::new(13).with_transients(2, SHARD_RETRY_LIMIT),
+    );
+    let report = with_timeout(120, move || {
+        session(2, 2, 4, InvalidPolicy::Error)
+            .coreset(boxed(faulty))
+            .unwrap()
+    });
+    assert_eq!(bits(&report.rows.data), bits(&clean.rows.data));
+    assert_eq!(bits(&report.weights), bits(&clean.weights));
+    assert_eq!(report.n_seen, TOTAL);
+    assert!(report.degradations.shard_retries > 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
 #[test]
 fn fit_diagnostics_carry_stream_degradations() {
     let mut rng = Rng::new(9);

@@ -1,0 +1,186 @@
+//! PR 9 out-of-core acceptance: a store-backed streaming fit is
+//! **bitwise-identical** to the equivalent in-memory `MatShards` fit —
+//! same seed, consumers {1, 4} × threads {1, 2, 8} — and the
+//! `store:`-prefixed registry path materializes the exact bits the
+//! store was written from. Typed-error surfaces (truncation at open,
+//! checksum at read) are pinned at the facade level too.
+
+use mctm_coreset::prelude::*;
+use std::path::PathBuf;
+use std::time::Duration;
+
+const TOTAL: usize = 6_000;
+const SHARD: usize = 1_000;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mctm_storetest_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn data() -> Mat {
+    Dgp::BivariateNormal.generate(TOTAL, &mut Rng::new(7))
+}
+
+/// Write `m` into a store whose chunk geometry equals the in-memory
+/// shard size — shard-sequence equality is what the bitwise pin needs.
+fn write_store(m: &Mat, path: &std::path::Path, chunk_rows: usize) {
+    let mut w = StoreWriter::create(path, m.cols, chunk_rows).unwrap();
+    w.push_mat(m).unwrap();
+    w.finish().unwrap();
+}
+
+fn session(consumers: usize, threads: usize) -> Session {
+    SessionBuilder::new()
+        .method("l2-hull")
+        .budget(60)
+        .basis_size(5)
+        .seed(11)
+        .consumers(consumers)
+        .threads(threads)
+        .build()
+        .unwrap()
+}
+
+fn with_timeout<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    rx.recv_timeout(Duration::from_secs(secs))
+        .expect("pipeline did not finish within the timeout")
+}
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn store_backed_coreset_is_bitwise_equal_to_mat_shards() {
+    let dir = tmp_dir("bitwise");
+    let path = dir.join("rows.store");
+    let m = data();
+    write_store(&m, &path, SHARD);
+
+    for consumers in [1usize, 4] {
+        for threads in [1usize, 2, 8] {
+            let inmem = {
+                let m = m.clone();
+                with_timeout(120, move || {
+                    session(consumers, threads)
+                        .coreset(MatShards::new(m, SHARD))
+                        .unwrap()
+                })
+            };
+            let stored = {
+                let path = path.clone();
+                with_timeout(120, move || {
+                    session(consumers, threads)
+                        .coreset(StoreSource::new(path))
+                        .unwrap()
+                })
+            };
+            assert_eq!(
+                bits(&stored.rows.data),
+                bits(&inmem.rows.data),
+                "rows differ at consumers={consumers} threads={threads}"
+            );
+            assert_eq!(
+                bits(&stored.weights),
+                bits(&inmem.weights),
+                "weights differ at consumers={consumers} threads={threads}"
+            );
+            assert_eq!(stored.n_seen, TOTAL);
+            assert_eq!(inmem.n_seen, TOTAL);
+            assert!(stored.degradations.is_clean(), "{:?}", stored.degradations);
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn store_registry_name_streams_and_batches_the_same_bits() {
+    let dir = tmp_dir("registry");
+    let path = dir.join("rows.store");
+    let m = data();
+    write_store(&m, &path, SHARD);
+    let name = format!("store:{}", path.display());
+
+    // batch path: `store:` materializes the exact bits written
+    let loaded = load_dataset(&name, TOTAL, &mut Rng::new(1)).unwrap();
+    assert_eq!(bits(&loaded.data), bits(&m.data));
+
+    // the batch coreset over the store equals the in-memory batch
+    // coreset over the same matrix
+    let via_store = session(1, 2)
+        .coreset(NamedSource::batch(name.as_str(), TOTAL))
+        .unwrap();
+    let via_mem = session(1, 2).coreset(&m).unwrap();
+    assert_eq!(bits(&via_store.rows.data), bits(&via_mem.rows.data));
+    assert_eq!(bits(&via_store.weights), bits(&via_mem.weights));
+
+    // the streaming registry path reaches the same reader the
+    // StoreSource does (chunk geometry from the store file)
+    let name2 = name.clone();
+    let streamed = with_timeout(120, move || {
+        session(2, 2)
+            .coreset(NamedSource::stream(name2.as_str(), TOTAL, SHARD))
+            .unwrap()
+    });
+    let direct = {
+        let path = path.clone();
+        with_timeout(120, move || {
+            session(2, 2).coreset(StoreSource::new(path)).unwrap()
+        })
+    };
+    assert_eq!(bits(&streamed.rows.data), bits(&direct.rows.data));
+    assert_eq!(bits(&streamed.weights), bits(&direct.weights));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn truncated_store_is_a_typed_io_error_at_open() {
+    let dir = tmp_dir("truncated");
+    let path = dir.join("rows.store");
+    write_store(&data(), &path, SHARD);
+    let full = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &full[..full.len() - 9]).unwrap();
+
+    let err = session(1, 1)
+        .coreset(StoreSource::new(path))
+        .unwrap_err();
+    match &err {
+        ApiError::Io(msg) => assert!(msg.contains("truncated"), "{msg}"),
+        other => panic!("expected ApiError::Io, got {other}"),
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn corrupted_chunk_surfaces_checksum_stream_error() {
+    let dir = tmp_dir("corrupt");
+    let path = dir.join("rows.store");
+    write_store(&data(), &path, SHARD);
+    // flip one payload bit inside chunk 2 (header is 48 bytes; each
+    // chunk is 8 + SHARD·2·8 bytes; offset 100 lands in the payload)
+    let stride = 8 + SHARD * 2 * 8;
+    let mut bytes = std::fs::read(&path).unwrap();
+    let off = 48 + 2 * stride + 100;
+    bytes[off] ^= 0x10;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let path2 = path.clone();
+    let err = with_timeout(120, move || {
+        session(2, 1)
+            .coreset(StoreSource::new(path2))
+            .unwrap_err()
+    });
+    match &err {
+        ApiError::Stream { shard_seq, .. } => assert_eq!(*shard_seq, Some(2)),
+        other => panic!("expected ApiError::Stream, got {other}"),
+    }
+    let msg = err.to_string();
+    assert!(msg.contains("checksum"), "{msg}");
+    assert!(msg.contains("fatal"), "{msg}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

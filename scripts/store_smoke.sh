@@ -1,0 +1,53 @@
+#!/usr/bin/env bash
+# End-to-end smoke of the out-of-core ingestion loop (PR 9):
+#   1. generate a deterministic CSV
+#   2. `mctm-coreset import` — one-pass conversion to a column store
+#   3. fit + save from the CSV and from the store with identical knobs;
+#      the artifacts must be BYTE-identical (artifacts serialize f64
+#      bits exactly, so `cmp` proves the store-backed fit is bitwise
+#      equal to the in-memory one)
+#   4. `mctm-coreset stream --set dataset=store:…` — the streaming
+#      registry path reads the store and sees every row
+# Wired into `make ci` via the store-smoke target.
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+BIN="${MCTM_BIN:-$ROOT/target/release/mctm-coreset}"
+TMP="$(mktemp -d)"
+trap 'rm -rf "$TMP"' EXIT
+
+if [ ! -x "$BIN" ]; then
+    echo "== building release binary =="
+    cargo build --release --manifest-path "$ROOT/rust/Cargo.toml"
+fi
+
+echo "== generate a deterministic 240-row CSV =="
+awk 'BEGIN {
+    for (i = 0; i < 240; i++)
+        printf "%.17g,%.17g\n", sin(i * 0.7) + 0.05 * i, cos(i * 1.3) - 0.02 * i
+}' >"$TMP/rows.csv"
+[ "$(wc -l <"$TMP/rows.csv")" -eq 240 ]
+
+echo "== import: CSV -> column store in one bounded-memory pass =="
+"$BIN" import --set "dataset=file:$TMP/rows.csv" \
+    --out "$TMP/rows.store" --chunk-rows 64
+
+CFG=(--set n=240 --set k=25 --set d=5 --set max_iters=80 --set seed=5)
+
+echo "== fit + save from the CSV (in-memory reference) =="
+"$BIN" save --out "$TMP/from_csv.mctm" --sketch "$TMP/from_csv_sketch.mctm" \
+    --set "dataset=file:$TMP/rows.csv" "${CFG[@]}"
+
+echo "== fit + save from the store (out-of-core path) =="
+"$BIN" save --out "$TMP/from_store.mctm" --sketch "$TMP/from_store_sketch.mctm" \
+    --set "dataset=store:$TMP/rows.store" "${CFG[@]}"
+
+echo "== store-backed artifacts are byte-identical to the CSV ones =="
+cmp "$TMP/from_csv.mctm" "$TMP/from_store.mctm"
+cmp "$TMP/from_csv_sketch.mctm" "$TMP/from_store_sketch.mctm"
+
+echo "== streaming registry path covers every stored row =="
+"$BIN" stream --set "dataset=store:$TMP/rows.store" "${CFG[@]}" \
+    | grep -q "stream: n=240"
+
+echo "store smoke OK"
