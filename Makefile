@@ -4,7 +4,7 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: build test check ci fmt clippy doc example bench-compile bench-quick bench-perf bench-json serve-smoke store-smoke artifacts
+.PHONY: build test check ci fmt clippy doc example bench-compile bench-quick bench-perf bench-json serve-smoke store-smoke dist-smoke artifacts
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -42,7 +42,7 @@ check: fmt clippy doc test
 # crate attribute in rust/src/lib.rs, so with -D warnings any new
 # unwrap/expect outside tests fails CI unless explicitly #[allow]ed
 # with a justification.
-ci: fmt build test doc bench-compile serve-smoke store-smoke
+ci: fmt build test doc bench-compile serve-smoke store-smoke dist-smoke
 	$(CARGO) clippy --manifest-path $(MANIFEST) -- -D warnings
 
 # End-to-end persist & serve smoke (PR 7): save a model + sketch
@@ -57,6 +57,12 @@ serve-smoke: build
 # plus the `store:` streaming registry path.
 store-smoke: build
 	bash scripts/store_smoke.sh
+
+# Distributed sketching smoke (PR 10): two local workers, `dist-fit`
+# artifacts byte-identical to the single-process `stream` run, and a
+# worker killed mid-run recovering to the exact same bytes.
+dist-smoke: build
+	bash scripts/dist_smoke.sh
 
 # Hot-path microbench at the smallest scale (CI smoke): serial vs
 # parallel medians for basis build, leverage, gram, nll_grad.

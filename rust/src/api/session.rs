@@ -56,6 +56,7 @@ pub struct SessionBuilder {
     consumers: Option<usize>,
     queue_cap: usize,
     buffer_factor: usize,
+    shard_retry_limit: usize,
     on_invalid: InvalidPolicy,
     fit: FitOptions,
     kernel_backend: Option<KernelBackend>,
@@ -74,6 +75,7 @@ impl Default for SessionBuilder {
             consumers: None,
             queue_cap: 4,
             buffer_factor: 4,
+            shard_retry_limit: crate::coordinator::pipeline::SHARD_RETRY_LIMIT,
             on_invalid: InvalidPolicy::Error,
             fit: FitOptions::default(),
             kernel_backend: None,
@@ -155,6 +157,17 @@ impl SessionBuilder {
         self
     }
 
+    /// How many times a transient shard-read error is retried before it
+    /// escalates to a fatal stream error (default
+    /// [`SHARD_RETRY_LIMIT`](crate::coordinator::pipeline::SHARD_RETRY_LIMIT)).
+    /// Retries are attempt-counted, never slept, so retried runs stay
+    /// bit-identical to fault-free runs. Also the per-worker transport
+    /// retry budget of [`Session::dist_fit`]. Must be ≥ 1.
+    pub fn shard_retry_limit(mut self, n: usize) -> Self {
+        self.shard_retry_limit = n;
+        self
+    }
+
     /// What to do with non-finite (NaN/±inf) cells at ingestion: reject
     /// the run with a typed error naming the offending shard/row/column
     /// (the default), zero out affected rows, or drop them. Every
@@ -232,6 +245,12 @@ impl SessionBuilder {
         if self.buffer_factor == 0 {
             return Err(ApiError::config("buffer_factor", "must be ≥ 1"));
         }
+        if self.shard_retry_limit == 0 {
+            return Err(ApiError::config(
+                "shard_retry_limit",
+                "must be ≥ 1 (a zero budget would turn every transient fault fatal)",
+            ));
+        }
         if self.fit.max_iters == 0 {
             return Err(ApiError::config("max_iters", "must be ≥ 1"));
         }
@@ -248,6 +267,7 @@ impl SessionBuilder {
             consumers: self.consumers.unwrap_or(0),
             queue_cap: self.queue_cap,
             buffer_factor: self.buffer_factor,
+            shard_retry_limit: self.shard_retry_limit,
             on_invalid: self.on_invalid,
             fit: self.fit,
         })
@@ -268,6 +288,7 @@ pub struct Session {
     consumers: usize,
     queue_cap: usize,
     buffer_factor: usize,
+    shard_retry_limit: usize,
     on_invalid: InvalidPolicy,
     fit: FitOptions,
 }
@@ -277,7 +298,10 @@ pub struct Session {
 /// samples the coreset (both derive from the session seed, but through
 /// different expansions — `Rng::new` seeds via SplitMix64, so any
 /// distinct input yields an uncorrelated sequence).
-fn source_seed(seed: u64) -> u64 {
+/// Crate-visible: distributed workers (`crate::dist`) resolve their
+/// dataset through the same salt so an N-worker run replays the exact
+/// shard stream the in-process pipeline would see.
+pub(crate) fn source_seed(seed: u64) -> u64 {
     seed ^ 0xA076_1D64_78BD_642F
 }
 
@@ -363,16 +387,100 @@ impl Session {
                 Ok(FittedModel::assemble(spec, fit, design.scaler.clone(), report))
             }
             Sketch::Stream { rows, weights, n_hull, stats, j, seconds } => {
-                let pool = self.pool();
-                let design = Design::build_on(&rows, self.d, self.eps, &pool);
-                let spec = ModelSpec::new(j, self.d);
-                let fit =
-                    fit_native_with_sink(spec, &design, weights.clone(), &self.fit, &sink);
-                let scaler = design.scaler.clone();
-                let report = self.stream_report(rows, weights, n_hull, stats, seconds, &sink);
-                Ok(FittedModel::assemble(spec, fit, scaler, report))
+                self.fit_streamed(rows, weights, n_hull, stats, j, seconds, &sink)
             }
         }
+    }
+
+    /// Fit on an already-streamed coreset (shared by the in-process
+    /// streaming path and the distributed one — the inputs are
+    /// bit-identical by construction, so the fits are too).
+    #[allow(clippy::too_many_arguments)]
+    fn fit_streamed(
+        &self,
+        rows: Mat,
+        weights: Vec<f64>,
+        n_hull: usize,
+        stats: StreamStats,
+        j: usize,
+        seconds: f64,
+        sink: &DegradeSink,
+    ) -> Result<FittedModel, ApiError> {
+        let pool = self.pool();
+        let design = Design::build_on(&rows, self.d, self.eps, &pool);
+        let spec = ModelSpec::new(j, self.d);
+        let fit = fit_native_with_sink(spec, &design, weights.clone(), &self.fit, sink);
+        let scaler = design.scaler.clone();
+        let report = self.stream_report(rows, weights, n_hull, stats, seconds, sink);
+        Ok(FittedModel::assemble(spec, fit, scaler, report))
+    }
+
+    /// Sketch a named dataset on remote workers (see [`crate::dist`])
+    /// — the distributed twin of `coreset(NamedSource::stream(..))`.
+    /// Bit-identical to the in-process run at any worker count, with
+    /// transport recoveries counted in
+    /// [`CoresetReport::degradations`].
+    pub fn dist_coreset(
+        &self,
+        workers: &[String],
+        dataset: &str,
+        total: usize,
+        shard: usize,
+    ) -> Result<CoresetReport, ApiError> {
+        let sink = DegradeSink::new();
+        let (out, stats, seconds) = self.dist_sketch(workers, dataset, total, shard, &sink)?;
+        Ok(self.stream_report(out.rows, out.weights, out.n_hull, stats, seconds, &sink))
+    }
+
+    /// Sketch a named dataset on remote workers and fit the MCTM on
+    /// the gathered coreset — the distributed twin of
+    /// `fit(NamedSource::stream(..))`, bit-identical to it even when
+    /// workers die mid-run and their ranges are reassigned.
+    pub fn dist_fit(
+        &self,
+        workers: &[String],
+        dataset: &str,
+        total: usize,
+        shard: usize,
+    ) -> Result<FittedModel, ApiError> {
+        let sink = DegradeSink::new();
+        let (out, stats, seconds) = self.dist_sketch(workers, dataset, total, shard, &sink)?;
+        let j = out.rows.cols;
+        self.fit_streamed(out.rows, out.weights, out.n_hull, stats, j, seconds, &sink)
+    }
+
+    /// Shared distributed-sketch driver: session knobs → `DistConfig`
+    /// → `run_distributed`, with the same empty-stream check the
+    /// in-process path applies.
+    fn dist_sketch(
+        &self,
+        workers: &[String],
+        dataset: &str,
+        total: usize,
+        shard: usize,
+        sink: &DegradeSink,
+    ) -> Result<(crate::coreset::merge_reduce::WeightedRows, StreamStats, f64), ApiError> {
+        let mut cfg = crate::dist::DistConfig::new(
+            workers.to_vec(),
+            dataset,
+            total,
+            shard,
+            self.method,
+            self.budget,
+            self.d,
+            self.eps,
+        );
+        cfg.seed = self.seed;
+        cfg.buffer_factor = self.buffer_factor;
+        cfg.on_invalid = self.on_invalid;
+        cfg.retry_limit = self.shard_retry_limit;
+        let sw = Stopwatch::start();
+        let (out, stats) = crate::dist::run_distributed(&cfg, sink)?;
+        let seconds = sw.secs();
+        if out.is_empty() {
+            return Err(ApiError::Data("shard stream produced no rows".into()));
+        }
+        Ok((out, stats, seconds))
     }
 
     fn sketch<'a, S: DataSource + 'a>(
@@ -419,6 +527,7 @@ impl Session {
                 pipeline.queue_cap = self.queue_cap;
                 pipeline.buffer_factor = self.buffer_factor;
                 pipeline.on_invalid = self.on_invalid;
+                pipeline.retry_limit = self.shard_retry_limit;
                 pipeline.sink = sink.clone();
                 pipeline.consumers = if self.consumers > 0 {
                     self.consumers
@@ -1171,6 +1280,10 @@ mod tests {
             SessionBuilder::new().queue_cap(0).build().unwrap_err(),
             ApiError::Config { .. }
         ));
+        match SessionBuilder::new().shard_retry_limit(0).build().unwrap_err() {
+            ApiError::Config { key, .. } => assert_eq!(key, "shard_retry_limit"),
+            other => panic!("expected Config error, got {other:?}"),
+        }
         let err = SessionBuilder::new().method("not-a-method").build().unwrap_err();
         match &err {
             ApiError::UnknownMethod { valid, .. } => {

@@ -48,7 +48,9 @@ mctm-coreset — scalable learning of multivariate distributions via coresets
 
 USAGE:
   mctm-coreset fit    [--config FILE] [--set key=value]... [--threads N]
-  mctm-coreset stream [--config FILE] [--set key=value]... [--shards N] [--shard-size N] [--threads N]
+  mctm-coreset stream [--config FILE] [--set key=value]... [--shards N] [--shard-size N] [--threads N] [--out FILE.mctm] [--sketch FILE.mctm]
+  mctm-coreset work   --listen HOST:PORT
+  mctm-coreset dist-fit --workers A,B,... [--shards N] [--shard-size N] [--out FILE.mctm] [--sketch FILE.mctm] [--config FILE] [--set key=value]...
   mctm-coreset import --out FILE.store [--chunk-rows N] [--config FILE] [--set key=value]...
   mctm-coreset save   --out FILE.mctm [--sketch FILE.mctm] [--config FILE] [--set key=value]...
   mctm-coreset load   FILE.mctm
@@ -63,6 +65,17 @@ OUT-OF-CORE:
   store at --out, holding one chunk (--chunk-rows rows, default 2048)
   in memory at a time. Fit it with `dataset=store:/path.store` — the
   fit then streams the store at O(budget + chunk) peak memory.
+
+DISTRIBUTED:
+  `work --listen HOST:PORT` starts a sketching worker (`:0` picks a
+  free port; the bound address is printed as `worker listening on …`).
+  `dist-fit --workers a:p1,b:p2,...` assigns each worker a disjoint
+  shard range of the configured dataset, folds the returned leaves in
+  fixed sequence order, and fits — byte-identical to a single-process
+  `stream` run of the same config at any worker count, even when a
+  worker dies mid-run and its range is reassigned (recoveries are
+  counted, never silent). The per-worker transport retry budget is the
+  `retry_limit` config key (default 3).
 
 PERSIST & SERVE:
   `save` fits per the config and writes a versioned, checksummed model
@@ -123,6 +136,10 @@ pub struct Cli {
     pub model_name: Option<String>,
     /// `import --chunk-rows N` — rows per store chunk
     pub chunk_rows: usize,
+    /// `work --listen HOST:PORT` (`:0` picks a free port)
+    pub listen: String,
+    /// `dist-fit --workers a,b,c` — worker addresses, comma-separated
+    pub workers: Vec<String>,
 }
 
 impl Cli {
@@ -140,6 +157,8 @@ impl Cli {
         let mut serve_fit = false;
         let mut model_name: Option<String> = None;
         let mut chunk_rows = crate::data::store::DEFAULT_CHUNK_ROWS;
+        let mut listen = "127.0.0.1:7900".to_string();
+        let mut workers: Vec<String> = Vec::new();
         let flag_value = |args: &[String], i: usize, flag: &str| {
             args.get(i + 1)
                 .cloned()
@@ -201,6 +220,18 @@ impl Cli {
                         .map_err(|e| ApiError::config("--chunk-rows", format!("`{v}`: {e}")))?;
                     i += 2;
                 }
+                "--listen" => {
+                    listen = flag_value(args, i, "--listen")?;
+                    i += 2;
+                }
+                "--workers" => {
+                    workers = flag_value(args, i, "--workers")?
+                        .split(',')
+                        .map(|s| s.trim().to_string())
+                        .filter(|s| !s.is_empty())
+                        .collect();
+                    i += 2;
+                }
                 "--fit" => {
                     serve_fit = true;
                     i += 1;
@@ -232,6 +263,8 @@ impl Cli {
             serve_fit,
             model_name,
             chunk_rows,
+            listen,
+            workers,
         })
     }
 
@@ -241,7 +274,22 @@ impl Cli {
         }
         match self.command.as_str() {
             "fit" => cmd_fit(&self.config),
-            "stream" => cmd_stream(&self.config, self.shards, self.shard_size),
+            "stream" => cmd_stream(
+                &self.config,
+                self.shards,
+                self.shard_size,
+                self.out.as_deref(),
+                self.sketch.as_deref(),
+            ),
+            "work" => cmd_work(&self.listen),
+            "dist-fit" => cmd_dist_fit(
+                &self.config,
+                &self.workers,
+                self.shards,
+                self.shard_size,
+                self.out.as_deref(),
+                self.sketch.as_deref(),
+            ),
             "import" => cmd_import(&self.config, self.out.as_deref(), self.chunk_rows),
             "save" => cmd_save(&self.config, self.out.as_deref(), self.sketch.as_deref()),
             "load" => cmd_load(&self.positional),
@@ -345,7 +393,13 @@ fn cmd_fit_xla(cfg: &ExperimentConfig, data: &Mat) -> Result<()> {
     Ok(())
 }
 
-fn cmd_stream(cfg: &ExperimentConfig, shards: usize, shard_size: usize) -> Result<()> {
+fn cmd_stream(
+    cfg: &ExperimentConfig,
+    shards: usize,
+    shard_size: usize,
+    out: Option<&Path>,
+    sketch: Option<&Path>,
+) -> Result<()> {
     let session = cfg.session()?;
     let source = NamedSource::stream(&cfg.dataset, shards * shard_size, shard_size);
     let model = session.fit(source)?;
@@ -368,7 +422,83 @@ fn cmd_stream(cfg: &ExperimentConfig, shards: usize, shard_size: usize) -> Resul
         "fit on streamed coreset: nll={:.4} iters={}",
         diag.fit_nll, diag.fit_iters
     );
+    save_fitted(&model, out, sketch)
+}
+
+/// Persist a fitted model / its sketch when the flags ask for it —
+/// shared by `stream` and `dist-fit` so the smoke script can `cmp`
+/// their artifacts byte for byte.
+fn save_fitted(
+    model: &crate::api::FittedModel,
+    out: Option<&Path>,
+    sketch: Option<&Path>,
+) -> Result<()> {
+    let diag = model.diagnostics();
+    if let Some(p) = out {
+        model.save(p)?;
+        println!("saved model  : -> {}", p.display());
+    }
+    if let Some(p) = sketch {
+        diag.coreset.save(p)?;
+        println!("saved sketch : -> {}", p.display());
+    }
     Ok(())
+}
+
+/// `work`: serve shard-range sketching jobs forever (the worker half
+/// of the distributed mode — see `dist::worker`). The bound address is
+/// announced on stdout for harnesses that listen on port 0.
+fn cmd_work(listen: &str) -> Result<()> {
+    use std::io::Write as _;
+    let worker = crate::dist::Worker::bind(listen)?;
+    println!("worker listening on {}", worker.local_addr()?);
+    // the announce line must cross a pipe before any coordinator can
+    // connect — piped stdout is block-buffered, so flush explicitly
+    let _ = std::io::stdout().flush();
+    worker.run();
+    Ok(())
+}
+
+/// `dist-fit`: the coordinator half — sketch the configured dataset on
+/// the given workers, fold, fit, and report exactly like `stream`
+/// (whose output it must reproduce byte for byte).
+fn cmd_dist_fit(
+    cfg: &ExperimentConfig,
+    workers: &[String],
+    shards: usize,
+    shard_size: usize,
+    out: Option<&Path>,
+    sketch: Option<&Path>,
+) -> Result<()> {
+    if workers.is_empty() {
+        return Err(anyhow!("dist-fit needs --workers A,B,... (at least one address)"));
+    }
+    let session = cfg.session()?;
+    let model = session.dist_fit(workers, &cfg.dataset, shards * shard_size, shard_size)?;
+    let diag = model.diagnostics();
+    let stream = diag
+        .coreset
+        .stream
+        .as_ref()
+        .ok_or_else(|| anyhow!("internal: distributed sketch carried no stream stats"))?;
+    println!(
+        "dist-fit: workers={} n={} shards={} reduces={} coreset={} total_weight={:.0} time={:.2}s",
+        workers.len(),
+        stream.n_seen,
+        stream.n_shards,
+        stream.n_reduces,
+        diag.coreset.size,
+        diag.coreset.total_weight,
+        stream.seconds
+    );
+    println!(
+        "fit on distributed coreset: nll={:.4} iters={}",
+        diag.fit_nll, diag.fit_iters
+    );
+    if !diag.coreset.degradations.is_clean() {
+        println!("recoveries: {}", diag.coreset.degradations);
+    }
+    save_fitted(&model, out, sketch)
 }
 
 /// `import`: convert the configured dataset to an on-disk column store

@@ -43,6 +43,9 @@ pub struct ExperimentConfig {
     /// env var if set, else available parallelism). Thread count never
     /// changes results — kernels are deterministic by construction.
     pub threads: usize,
+    /// transient-fault retry budget: shard reads in streaming runs and
+    /// per-worker transport attempts in `dist-fit` (must be ≥ 1)
+    pub retry_limit: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -60,6 +63,7 @@ impl Default for ExperimentConfig {
             fit: FitOptions::default(),
             out_dir: PathBuf::from("results"),
             threads: 0,
+            retry_limit: crate::coordinator::pipeline::SHARD_RETRY_LIMIT,
         }
     }
 }
@@ -132,6 +136,7 @@ impl ExperimentConfig {
                 };
             }
             "threads" => self.threads = parse_num(key, value)?,
+            "retry_limit" => self.retry_limit = parse_num(key, value)?,
             "max_iters" => self.fit.max_iters = parse_num(key, value)?,
             "tol" => self.fit.tol = parse_num(key, value)?,
             "learning_rate" => self.fit.learning_rate = parse_num(key, value)?,
@@ -150,6 +155,7 @@ impl ExperimentConfig {
             .budget(self.k)
             .basis_size(self.d)
             .seed(self.seed)
+            .shard_retry_limit(self.retry_limit)
             .fit_options(self.fit.clone());
         if self.threads > 0 {
             b = b.threads(self.threads);
@@ -235,6 +241,19 @@ mod tests {
         let msg = format!("{err:#}");
         for m in Method::all() {
             assert!(msg.contains(m.name()), "error should list {}: {msg}", m.name());
+        }
+    }
+
+    #[test]
+    fn retry_limit_key_maps_onto_the_builder_knob() {
+        let cfg = ExperimentConfig::load(None, &["retry_limit = 7".into()]).unwrap();
+        assert_eq!(cfg.retry_limit, 7);
+        assert!(cfg.session().is_ok());
+        // zero is rejected by the builder's validation, as a typed error
+        let bad = ExperimentConfig::load(None, &["retry_limit = 0".into()]).unwrap();
+        match bad.session().unwrap_err() {
+            ApiError::Config { key, .. } => assert_eq!(key, "shard_retry_limit"),
+            other => panic!("expected Config error, got {other:?}"),
         }
     }
 

@@ -121,6 +121,10 @@ pub struct StreamingPipeline {
     /// what to do with non-finite cells at ingestion (producer-side,
     /// sequence order — deterministic at any consumer count)
     pub on_invalid: InvalidPolicy,
+    /// transient-read retry budget per shard (defaults to
+    /// [`SHARD_RETRY_LIMIT`]; configured via
+    /// `SessionBuilder::shard_retry_limit`)
+    pub retry_limit: usize,
     /// degradation accounting shared with the whole run (retries, empty
     /// shards, scrubbed rows, reduce-side numerical fallbacks)
     pub(crate) sink: DegradeSink,
@@ -141,6 +145,7 @@ impl StreamingPipeline {
             buffer_factor: 4,
             consumers: parallel::threads(),
             on_invalid: InvalidPolicy::default(),
+            retry_limit: SHARD_RETRY_LIMIT,
             sink: DegradeSink::new(),
         }
     }
@@ -253,6 +258,7 @@ impl StreamingPipeline {
                 let sink = sink.clone();
                 let (q_depth, q_peak) = (&q_depth, &q_peak);
                 let queue_cap = self.queue_cap;
+                let retry_limit = self.retry_limit;
                 move || {
                     let j = source.dim();
                     let mut produced = 0usize;
@@ -277,7 +283,7 @@ impl StreamingPipeline {
                                     }
                                     break s;
                                 }
-                                Err(ShardError::Transient(_)) if attempts < SHARD_RETRY_LIMIT => {
+                                Err(ShardError::Transient(_)) if attempts < retry_limit => {
                                     attempts += 1;
                                 }
                                 Err(e) => {
@@ -538,7 +544,10 @@ fn lock_ok_guarded<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
 /// Deterministic per-shard RNG seed: mixes the pipeline seed with the
 /// shard's sequence number (SplitMix-style odd multiplier) so shard
 /// reduces are independent of which worker runs them and of each other.
-fn shard_seed(base: u64, seq: usize) -> u64 {
+/// Crate-visible: the distributed workers (`crate::dist`) must seed
+/// their leaf reduces identically for an N-worker run to be
+/// bit-identical to the in-process pipeline.
+pub(crate) fn shard_seed(base: u64, seq: usize) -> u64 {
     base ^ (seq as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
@@ -630,6 +639,44 @@ mod tests {
         assert_eq!(clean.weights, recovered.weights);
         assert_eq!(clean.rows.data, recovered.rows.data);
         assert!(pipeline2.sink.snapshot().shard_retries > 0);
+    }
+
+    #[test]
+    fn retry_limit_is_configurable() {
+        // a fault that needs more retries than the default budget
+        // succeeds under a raised limit and keeps the bytes identical
+        let make_source = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            GenShards::new(
+                move |n| Dgp::BivariateNormal.generate(n, &mut rng),
+                2,
+                4_000,
+                1_000,
+            )
+        };
+        let clean_pipeline = StreamingPipeline::assemble(Method::L2Hull, 30, 5);
+        let (clean, _) = clean_pipeline.run(make_source(17)).unwrap();
+
+        let deep_fault = || {
+            FaultySource::new(
+                make_source(17),
+                FaultPlan::new(9).with_transients(3, SHARD_RETRY_LIMIT + 2),
+            )
+        };
+        // default budget: exhausted, typed error
+        let default_pipeline = StreamingPipeline::assemble(Method::L2Hull, 30, 5);
+        let err = default_pipeline.run(deep_fault()).unwrap_err();
+        assert!(err.message.contains("retries exhausted"), "{err}");
+        // exhausted budgets record nothing (success-only accounting)
+        assert_eq!(default_pipeline.sink.snapshot().shard_retries, 0);
+
+        // raised budget: recovers bit-identically and records retries
+        let mut patient = StreamingPipeline::assemble(Method::L2Hull, 30, 5);
+        patient.retry_limit = SHARD_RETRY_LIMIT + 2;
+        let (recovered, _) = patient.run(deep_fault()).unwrap();
+        assert_eq!(clean.weights, recovered.weights);
+        assert_eq!(clean.rows.data, recovered.rows.data);
+        assert!(patient.sink.snapshot().shard_retries > 0);
     }
 
     #[test]

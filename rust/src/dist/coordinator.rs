@@ -1,0 +1,529 @@
+//! Distributed sketching coordinator: splits a dataset's shard-
+//! sequence space into one contiguous range per worker, drives each
+//! worker over TCP, and folds the returned leaves **in the same fixed
+//! sequence order as the in-process reducer** — so an N-worker run is
+//! bit-identical to `consumers = N` in one process, and (because leaf
+//! bytes depend only on `(data, seed, seq)`) stays bit-identical when
+//! a worker dies and its range is re-executed elsewhere.
+//!
+//! Failure semantics, in order of escalation:
+//!
+//! 1. **Transient transport faults** (connect refused, read timeout,
+//!    checksum mismatch, mid-range disconnect, worker-reported
+//!    transient job error) → reconnect and re-execute the whole range
+//!    on the same worker, up to the session's `shard_retry_limit`,
+//!    with short attempt-counted backoff. Counted into
+//!    [`Degradations::worker_retries`] — only once the range completes.
+//! 2. **Budget exhausted** → the worker is declared dead; its range
+//!    goes back on the shared queue and a healthy worker re-executes
+//!    it (deterministic reassignment, counted into
+//!    [`Degradations::range_reassignments`] at completion).
+//! 3. **Fatal faults** (protocol violation, version mismatch, unknown
+//!    dataset/method, exhausted *data* retries on the worker) → the
+//!    run aborts orderly and surfaces [`ApiError::Stream`] with
+//!    worker/range provenance. Idle workers are woken and exit; the
+//!    coordinator's `Release` frames (and worker-side idle timeouts)
+//!    leave no connection wedged.
+//! 4. **Every worker dead** with ranges unfinished → a typed error
+//!    naming the last failure, never a hang.
+//!
+//! [`Degradations::worker_retries`]: crate::util::degrade::Degradations::worker_retries
+//! [`Degradations::range_reassignments`]: crate::util::degrade::Degradations::range_reassignments
+
+use crate::api::error::ApiError;
+use crate::coordinator::pipeline::{StreamError, StreamStats, SHARD_RETRY_LIMIT};
+use crate::coreset::merge_reduce::{MergeReduce, WeightedRows};
+use crate::coreset::Method;
+use crate::data::InvalidPolicy;
+use crate::dist::faulty::{FaultState, TransportFaultPlan};
+use crate::dist::protocol::{
+    check_hello, hello_payload, parse_leaf, read_frame, write_frame, DoneReport, Frame, FrameKind,
+    JobSpec, TransportError, WireError,
+};
+use crate::util::degrade::DegradeSink;
+use crate::util::parallel::Pool;
+use crate::util::Stopwatch;
+use std::collections::{BTreeMap, VecDeque};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Everything a distributed sketch needs: worker addresses, the
+/// dataset (any `NamedSource` name — generator, `file:`, `store:`),
+/// the stream geometry, and the sketch knobs. Field-for-field these
+/// mirror the in-process `Pipeline`, because the contract is that the
+/// outputs are interchangeable.
+#[derive(Clone, Debug)]
+pub struct DistConfig {
+    /// worker addresses (`host:port`); one coordinator thread each
+    pub workers: Vec<String>,
+    /// dataset registry name, resolved identically on every worker
+    pub dataset: String,
+    /// total rows requested from the stream
+    pub total: usize,
+    /// rows per shard
+    pub shard: usize,
+    pub method: Method,
+    pub k: usize,
+    pub d: usize,
+    pub eps: f64,
+    pub seed: u64,
+    /// Merge & Reduce intermediate-level size multiplier
+    pub buffer_factor: usize,
+    /// non-finite-cell policy, applied by workers in sequence order
+    pub on_invalid: InvalidPolicy,
+    /// per-worker transport retry budget (and the workers' own data
+    /// retry budget) — the session's `shard_retry_limit` knob
+    pub retry_limit: usize,
+    /// read timeout per worker; workers heartbeat at half this period,
+    /// so only a dead or wedged worker ever trips it
+    pub heartbeat: Duration,
+    /// seeded transport-fault injection (tests only)
+    pub fault: Option<TransportFaultPlan>,
+}
+
+impl DistConfig {
+    pub fn new(
+        workers: Vec<String>,
+        dataset: impl Into<String>,
+        total: usize,
+        shard: usize,
+        method: Method,
+        k: usize,
+        d: usize,
+        eps: f64,
+    ) -> Self {
+        DistConfig {
+            workers,
+            dataset: dataset.into(),
+            total,
+            shard,
+            method,
+            k,
+            d,
+            eps,
+            seed: 0xC0FF_EE,
+            buffer_factor: 4,
+            on_invalid: InvalidPolicy::default(),
+            retry_limit: SHARD_RETRY_LIMIT,
+            heartbeat: Duration::from_secs(10),
+            fault: None,
+        }
+    }
+}
+
+/// One shard-sequence range awaiting execution. `hi = usize::MAX` on
+/// the last range absorbs the tail of the stream (the shard count is
+/// an estimate — empty shards consume no sequence numbers).
+#[derive(Clone, Debug)]
+struct RangeJob {
+    lo: usize,
+    hi: usize,
+    /// how many owners this range has already outlived
+    reassignments: usize,
+}
+
+impl RangeJob {
+    fn describe(&self) -> String {
+        if self.hi == usize::MAX {
+            format!("[{}, end)", self.lo)
+        } else {
+            format!("[{}, {})", self.lo, self.hi)
+        }
+    }
+}
+
+/// Shared work-queue state (guarded by one mutex, signalled by one
+/// condvar — same discipline as the in-process reorder buffer).
+struct Queue {
+    pending: VecDeque<RangeJob>,
+    completed: usize,
+    total: usize,
+}
+
+/// Run a distributed sketch: returns the final coreset and stream
+/// stats, bit-identical to the in-process pipeline on the same
+/// `(dataset, total, shard, knobs, seed)`. All degradation events —
+/// the workers' data-level ones and the coordinator's transport-level
+/// ones — are recorded into `sink`, each only once its range/run
+/// actually completes.
+pub fn run_distributed(
+    cfg: &DistConfig,
+    sink: &DegradeSink,
+) -> Result<(WeightedRows, StreamStats), ApiError> {
+    if cfg.workers.is_empty() {
+        return Err(ApiError::config("workers", "at least one worker address is required"));
+    }
+    if cfg.shard == 0 {
+        return Err(ApiError::config("shard", "shard size must be ≥ 1"));
+    }
+    if cfg.retry_limit == 0 {
+        return Err(ApiError::config("retry_limit", "must be ≥ 1"));
+    }
+    let sw = Stopwatch::start();
+
+    // one contiguous range per worker (fewer if the stream is short);
+    // contiguous ranges keep every worker's stream walk a single
+    // prefix + slice, and the fold below re-serializes them in order
+    let est_shards = cfg.total.div_ceil(cfg.shard).max(1);
+    let n_ranges = cfg.workers.len().min(est_shards);
+    let span = est_shards.div_ceil(n_ranges);
+    let jobs: VecDeque<RangeJob> = (0..n_ranges)
+        .map(|i| RangeJob {
+            lo: i * span,
+            hi: if i + 1 == n_ranges { usize::MAX } else { (i + 1) * span },
+            reassignments: 0,
+        })
+        .collect();
+
+    let queue = Mutex::new(Queue { pending: jobs, completed: 0, total: n_ranges });
+    let work_cv = Condvar::new();
+    let abort = AtomicBool::new(false);
+    let alive = AtomicUsize::new(cfg.workers.len());
+    // first fatal error wins; later ones are dropped (the run is
+    // already aborting)
+    let error: Mutex<Option<ApiError>> = Mutex::new(None);
+    // seq → (leaf, n_raw); duplicate re-executions are bit-identical,
+    // so or_insert keeps whichever landed first
+    let leaves: Mutex<BTreeMap<usize, (WeightedRows, usize)>> = Mutex::new(BTreeMap::new());
+    let fault = cfg.fault.clone().map(FaultState::new);
+
+    std::thread::scope(|s| {
+        for (widx, addr) in cfg.workers.iter().enumerate() {
+            let queue = &queue;
+            let work_cv = &work_cv;
+            let abort = &abort;
+            let alive = &alive;
+            let error = &error;
+            let leaves = &leaves;
+            let fault = fault.as_ref();
+            s.spawn(move || {
+                drive_worker(
+                    cfg, addr, widx, queue, work_cv, abort, alive, error, leaves, fault, sink,
+                );
+            });
+        }
+    });
+
+    if let Some(err) = error.lock().unwrap_or_else(|e| e.into_inner()).take() {
+        return Err(err);
+    }
+
+    // fold in strict sequence order — the same fixed tree as the
+    // in-process reducer, with the same serial reducer pool
+    let collected = std::mem::take(&mut *leaves.lock().unwrap_or_else(|e| e.into_inner()));
+    let mut mr = MergeReduce::new(cfg.method, cfg.k, cfg.d, cfg.eps, cfg.seed);
+    mr.buffer_factor = cfg.buffer_factor;
+    mr.sink = sink.clone();
+    mr.pool = Pool::new(1);
+    let n_shards = collected.len();
+    for (expect, (&seq, _)) in collected.iter().enumerate() {
+        if seq != expect {
+            return Err(StreamError {
+                shard_seq: Some(expect),
+                consumer: None,
+                message: format!(
+                    "lost shard sequence numbers: expected {expect}, next collected leaf is {seq}"
+                ),
+            }
+            .into());
+        }
+    }
+    for (seq, (leaf, n_raw)) in collected {
+        mr.push_reduced(leaf, n_raw).map_err(|e| {
+            ApiError::from(StreamError {
+                shard_seq: Some(seq),
+                consumer: None,
+                message: format!("tree reduce failed: {e}"),
+            })
+        })?;
+    }
+    let (n_seen, n_reduces) = (mr.n_seen, mr.n_reduces);
+    let coreset = mr.finish().map_err(|e| {
+        ApiError::from(StreamError {
+            shard_seq: None,
+            consumer: None,
+            message: format!("final tree collapse failed: {e}"),
+        })
+    })?;
+    let stats = StreamStats {
+        n_seen,
+        n_shards,
+        n_reduces,
+        coreset_size: coreset.len(),
+        seconds: sw.secs(),
+        // queue/reorder depth are in-process backpressure gauges; the
+        // distributed path has neither structure
+        peak_queue: 0,
+        peak_reorder: 0,
+    };
+    Ok((coreset, stats))
+}
+
+/// One coordinator thread: pop ranges off the shared queue and drive
+/// one worker through them until the work is done, the run aborts, or
+/// this worker exhausts its transport budget (→ reassignment).
+#[allow(clippy::too_many_arguments)]
+fn drive_worker(
+    cfg: &DistConfig,
+    addr: &str,
+    widx: usize,
+    queue: &Mutex<Queue>,
+    work_cv: &Condvar,
+    abort: &AtomicBool,
+    alive: &AtomicUsize,
+    error: &Mutex<Option<ApiError>>,
+    leaves: &Mutex<BTreeMap<usize, (WeightedRows, usize)>>,
+    fault: Option<&FaultState>,
+    sink: &DegradeSink,
+) {
+    loop {
+        // ---- claim a range (or find the run finished/aborted) ----
+        let job = {
+            let mut q = queue.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if abort.load(Ordering::SeqCst) || q.completed >= q.total {
+                    return;
+                }
+                if let Some(job) = q.pending.pop_front() {
+                    break job;
+                }
+                q = work_cv.wait(q).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+
+        // ---- execute it with a bounded transport-retry budget ----
+        let mut outcome = Err(TransportError::Transient("no attempt ran".into()));
+        let mut retries = 0usize;
+        for attempt in 0..=cfg.retry_limit {
+            if abort.load(Ordering::SeqCst) {
+                return;
+            }
+            if attempt > 0 {
+                // short, bounded backoff: a crashed worker needs a
+                // moment to matter either way, but wall-clock must stay
+                // off the determinism path (and it does — timing only
+                // decides WHO re-executes, and re-execution is
+                // bit-identical)
+                std::thread::sleep(Duration::from_millis((50 << (attempt - 1)).min(500)));
+            }
+            match attempt_range(cfg, addr, widx, &job, fault) {
+                Ok((range_leaves, done)) => {
+                    retries = attempt;
+                    outcome = Ok((range_leaves, done));
+                    break;
+                }
+                Err(TransportError::Fatal(m)) => {
+                    outcome = Err(TransportError::Fatal(m));
+                    break;
+                }
+                Err(TransportError::Transient(m)) => {
+                    outcome = Err(TransportError::Transient(m));
+                }
+            }
+        }
+
+        match outcome {
+            Ok((range_leaves, done)) => {
+                {
+                    let mut lv = leaves.lock().unwrap_or_else(|e| e.into_inner());
+                    for (seq, leaf, n_raw) in range_leaves {
+                        lv.entry(seq).or_insert((leaf, n_raw));
+                    }
+                }
+                // success-only accounting, in one batch per range: the
+                // worker's data-level record, then this range's
+                // transport recoveries — nothing reaches the run's
+                // sink until the range is actually delivered
+                sink.merge_record(&done.degradations);
+                if retries > 0 {
+                    sink.worker_retries(retries);
+                }
+                if job.reassignments > 0 {
+                    sink.range_reassignments(job.reassignments);
+                }
+                let mut q = queue.lock().unwrap_or_else(|e| e.into_inner());
+                q.completed += 1;
+                drop(q);
+                work_cv.notify_all();
+            }
+            Err(TransportError::Fatal(msg)) => {
+                set_error(
+                    error,
+                    ApiError::Stream {
+                        shard_seq: Some(job.lo),
+                        consumer: Some(widx),
+                        source: Box::new(ApiError::Data(format!(
+                            "worker {addr}, range {}: {msg}",
+                            job.describe()
+                        ))),
+                    },
+                );
+                abort.store(true, Ordering::SeqCst);
+                // take the queue lock before notifying so a thread
+                // between its abort check and its wait cannot miss the
+                // wakeup (same discipline as the pipeline's fail())
+                let _q = queue.lock().unwrap_or_else(|e| e.into_inner());
+                drop(_q);
+                work_cv.notify_all();
+                return;
+            }
+            Err(TransportError::Transient(msg)) => {
+                if abort.load(Ordering::SeqCst) {
+                    return;
+                }
+                // budget exhausted: this worker is dead. Reassign its
+                // range — unless it was the last one standing, in which
+                // case surface a typed error rather than spin forever.
+                let remaining = alive.fetch_sub(1, Ordering::SeqCst) - 1;
+                let mut q = queue.lock().unwrap_or_else(|e| e.into_inner());
+                let incomplete = q.completed < q.total;
+                q.pending.push_back(RangeJob {
+                    reassignments: job.reassignments + 1,
+                    ..job
+                });
+                if remaining == 0 && incomplete {
+                    set_error(
+                        error,
+                        ApiError::Stream {
+                            shard_seq: Some(job.lo),
+                            consumer: Some(widx),
+                            source: Box::new(ApiError::Data(format!(
+                                "every worker exhausted its transport retry budget \
+                                 (last failure on {addr}, range {}: {msg})",
+                                job.describe()
+                            ))),
+                        },
+                    );
+                    abort.store(true, Ordering::SeqCst);
+                }
+                drop(q);
+                work_cv.notify_all();
+                return;
+            }
+        }
+    }
+}
+
+/// One connection attempt at one range: connect, handshake, send the
+/// job, collect leaves until `Done`, release the worker.
+fn attempt_range(
+    cfg: &DistConfig,
+    addr: &str,
+    widx: usize,
+    job: &RangeJob,
+    fault: Option<&FaultState>,
+) -> Result<(Vec<(usize, WeightedRows, usize)>, DoneReport), TransportError> {
+    let target = resolve(addr)?;
+    let mut stream = TcpStream::connect_timeout(&target, cfg.heartbeat)
+        .map_err(|e| TransportError::Transient(format!("connecting to {addr}: {e}")))?;
+    stream
+        .set_read_timeout(Some(cfg.heartbeat))
+        .and_then(|_| stream.set_write_timeout(Some(cfg.heartbeat)))
+        .map_err(|e| TransportError::Transient(format!("configuring socket to {addr}: {e}")))?;
+    let _ = stream.set_nodelay(true);
+
+    write_frame(&mut stream, FrameKind::Hello, &hello_payload())?;
+    let reply = recv(&mut stream, fault, widx)?;
+    match reply.kind {
+        FrameKind::Hello => check_hello(&reply.payload)?,
+        FrameKind::Error => return Err(wire_error(&reply)?),
+        other => {
+            return Err(TransportError::Fatal(format!(
+                "expected Hello reply from {addr}, got {other:?}"
+            )))
+        }
+    }
+
+    let spec = JobSpec {
+        dataset: cfg.dataset.clone(),
+        total: cfg.total,
+        shard: cfg.shard,
+        lo: job.lo,
+        hi: job.hi,
+        method: cfg.method.name().to_string(),
+        k: cfg.k,
+        d: cfg.d,
+        eps: cfg.eps,
+        seed: cfg.seed,
+        buffer_factor: cfg.buffer_factor,
+        on_invalid: cfg.on_invalid,
+        retry_limit: cfg.retry_limit,
+        heartbeat_ms: cfg.heartbeat.as_millis().max(2) as u64,
+    };
+    write_frame(&mut stream, FrameKind::Job, &spec.to_payload())?;
+
+    let mut out = Vec::new();
+    loop {
+        let frame = recv(&mut stream, fault, widx)?;
+        match frame.kind {
+            // worker liveness while it sketches a long range
+            FrameKind::Ping => write_frame(&mut stream, FrameKind::Pong, &[])?,
+            FrameKind::Pong => {}
+            FrameKind::Leaf => out.push(parse_leaf(&frame.payload)?),
+            FrameKind::Done => {
+                let done = DoneReport::from_payload(&frame.payload)?;
+                if done.leaves != out.len() {
+                    // a frame went missing without tripping the
+                    // checksum path — treat the range as not delivered
+                    return Err(TransportError::Transient(format!(
+                        "worker sent {} leaves but reported {} — range re-executes",
+                        out.len(),
+                        done.leaves
+                    )));
+                }
+                // best-effort: a failed release only costs the worker
+                // its idle timeout
+                let _ = write_frame(&mut stream, FrameKind::Release, &[]);
+                return Ok((out, done));
+            }
+            FrameKind::Error => return Err(wire_error(&frame)?),
+            other => {
+                return Err(TransportError::Fatal(format!(
+                    "unexpected {other:?} frame from worker {addr}"
+                )))
+            }
+        }
+    }
+}
+
+fn recv(
+    stream: &mut TcpStream,
+    fault: Option<&FaultState>,
+    widx: usize,
+) -> Result<Frame, TransportError> {
+    match fault {
+        Some(f) => f.recv(stream, widx),
+        None => read_frame(stream),
+    }
+}
+
+/// Decode a worker's `Error` frame into the matching transport error
+/// (preserving its transient/fatal type and shard provenance).
+fn wire_error(frame: &Frame) -> Result<TransportError, TransportError> {
+    let we = WireError::from_payload(&frame.payload)?;
+    let msg = match we.seq {
+        Some(seq) => format!("worker job failed at shard {seq}: {}", we.message),
+        None => format!("worker job failed: {}", we.message),
+    };
+    Ok(if we.fatal { TransportError::Fatal(msg) } else { TransportError::Transient(msg) })
+}
+
+fn resolve(addr: &str) -> Result<SocketAddr, TransportError> {
+    // resolution failures are fatal: retrying a name that doesn't
+    // parse cannot succeed, and a typo should fail loudly
+    addr.to_socket_addrs()
+        .map_err(|e| TransportError::Fatal(format!("unresolvable worker address `{addr}`: {e}")))?
+        .next()
+        .ok_or_else(|| {
+            TransportError::Fatal(format!("worker address `{addr}` resolved to nothing"))
+        })
+}
+
+fn set_error(slot: &Mutex<Option<ApiError>>, err: ApiError) {
+    let mut guard = slot.lock().unwrap_or_else(|e| e.into_inner());
+    if guard.is_none() {
+        *guard = Some(err);
+    }
+}

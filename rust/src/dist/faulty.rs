@@ -1,0 +1,144 @@
+//! Seeded transport-fault injection for the distributed coordinator —
+//! the network-layer twin of `data::faulty` (PR 6). A
+//! [`TransportFaultPlan`] targets one worker connection and fires each
+//! configured fault exactly once, at a deterministic received-frame
+//! ordinal, so `tests/dist_fault_injection.rs` can pin that every
+//! failure mode either recovers to the exact fault-free bytes or
+//! surfaces a typed error — never a hang, partial result, or panic.
+//!
+//! Faults are injected on the **coordinator's receive path** (the only
+//! place the crate can see a worker's bytes without patching the OS):
+//!
+//! * **corrupt** — read the frame's real wire bytes, flip one seeded
+//!   bit in the payload/checksum region, then parse: the FNV-1a
+//!   checksum catches it and types it transient, exactly as on-the-wire
+//!   corruption would surface. (The header region is left alone on
+//!   purpose — a corrupted length would desynchronize the stream, which
+//!   the connection-drop fault already covers.)
+//! * **drop** — shut the socket down mid-conversation, modeling a
+//!   worker crash / network partition between frames.
+//! * **stall** — surface the read-timeout error a heartbeat-less worker
+//!   would cause, without spending wall-clock on a real timeout.
+
+use crate::dist::protocol::{parse_frame, read_frame_raw, Frame, TransportError};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// A deterministic plan of transport faults against one worker
+/// connection (by worker index in the coordinator's worker list).
+/// Ordinals count frames *received from* that worker, across
+/// reconnects; each fault fires exactly once.
+#[derive(Clone, Debug, Default)]
+pub struct TransportFaultPlan {
+    seed: u64,
+    worker: usize,
+    corrupt_at: Option<usize>,
+    drop_at: Option<usize>,
+    stall_at: Option<usize>,
+}
+
+impl TransportFaultPlan {
+    /// A plan with no faults, targeting worker 0. `seed` drives which
+    /// bit the corruption flips.
+    pub fn new(seed: u64) -> Self {
+        TransportFaultPlan { seed, ..TransportFaultPlan::default() }
+    }
+
+    /// Target worker `i` (index into `DistConfig::workers`).
+    pub fn on_worker(mut self, i: usize) -> Self {
+        self.worker = i;
+        self
+    }
+
+    /// Flip one seeded bit in the `n`-th received frame's
+    /// payload/checksum bytes.
+    pub fn with_corrupt_at(mut self, n: usize) -> Self {
+        self.corrupt_at = Some(n);
+        self
+    }
+
+    /// Kill the connection just before receiving the `n`-th frame.
+    pub fn with_drop_at(mut self, n: usize) -> Self {
+        self.drop_at = Some(n);
+        self
+    }
+
+    /// Simulate a stalled (heartbeat-silent) worker at the `n`-th
+    /// receive: the read times out without spending real wall-clock.
+    pub fn with_stall_at(mut self, n: usize) -> Self {
+        self.stall_at = Some(n);
+        self
+    }
+}
+
+/// Shared runtime state for one coordinator run: the frame ordinal
+/// counter plus once-only latches, so a re-executed range does not
+/// re-fire a fault that already did its damage.
+pub(crate) struct FaultState {
+    plan: TransportFaultPlan,
+    frames: AtomicUsize,
+    corrupt_done: AtomicBool,
+    drop_done: AtomicBool,
+    stall_done: AtomicBool,
+}
+
+impl FaultState {
+    pub(crate) fn new(plan: TransportFaultPlan) -> Self {
+        FaultState {
+            plan,
+            frames: AtomicUsize::new(0),
+            corrupt_done: AtomicBool::new(false),
+            drop_done: AtomicBool::new(false),
+            stall_done: AtomicBool::new(false),
+        }
+    }
+
+    /// Receive one frame from worker `widx`, injecting this plan's
+    /// faults at their ordinals. Non-targeted workers read normally.
+    pub(crate) fn recv(
+        &self,
+        stream: &mut TcpStream,
+        widx: usize,
+    ) -> Result<Frame, TransportError> {
+        if widx != self.plan.worker {
+            return parse_frame(&read_frame_raw(stream)?);
+        }
+        let ordinal = self.frames.fetch_add(1, Ordering::SeqCst);
+        if self.plan.drop_at == Some(ordinal) && !self.drop_done.swap(true, Ordering::SeqCst) {
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+            return Err(TransportError::Transient(
+                "injected connection drop (worker crash / partition)".into(),
+            ));
+        }
+        if self.plan.stall_at == Some(ordinal) && !self.stall_done.swap(true, Ordering::SeqCst) {
+            return Err(TransportError::Transient(
+                "injected worker stall: heartbeat read timed out".into(),
+            ));
+        }
+        let mut raw = read_frame_raw(stream)?;
+        if self.plan.corrupt_at == Some(ordinal) && !self.corrupt_done.swap(true, Ordering::SeqCst)
+        {
+            // flip a seeded bit anywhere in payload+crc: the checksum
+            // covers both, so the mismatch is caught and typed
+            // transient whichever side of the trailer the flip lands on
+            let span = raw.len() - 9; // payload + 8-byte crc
+            let off = 9 + (self.plan.seed as usize) % span;
+            raw[off] ^= 1 << ((self.plan.seed >> 32) % 8);
+        }
+        parse_frame(&raw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_builder_composes() {
+        let plan = TransportFaultPlan::new(7).on_worker(2).with_corrupt_at(1).with_drop_at(4);
+        assert_eq!(plan.worker, 2);
+        assert_eq!(plan.corrupt_at, Some(1));
+        assert_eq!(plan.drop_at, Some(4));
+        assert_eq!(plan.stall_at, None);
+    }
+}

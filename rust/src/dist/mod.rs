@@ -1,0 +1,40 @@
+//! Distributed Merge & Reduce (ROADMAP item 4): coordinator/worker
+//! sketching over a hand-rolled TCP protocol, built so that **failure
+//! recovery is invisible in the output**. The paper's merge-and-reduce
+//! construction is associative with per-shard seeding, which means a
+//! shard range is a pure function of `(dataset, seed, range)` — any
+//! worker, or a re-execution after a crash, produces the same leaf
+//! bytes. The coordinator exploits exactly that: an N-worker
+//! [`run_distributed`] is bit-identical to the in-process pipeline at
+//! `consumers = N`, and stays bit-identical when workers are killed
+//! mid-sketch and their ranges are reassigned.
+//!
+//! Module map:
+//!
+//! * [`protocol`] — length-prefixed FNV-1a-checksummed frames; sketch
+//!   payloads ride in the existing `Artifact::Sketch` serialization;
+//!   typed transient/fatal [`protocol::TransportError`].
+//! * [`worker`] — `mctm-coreset work --listen ADDR`: executes shard
+//!   ranges with exactly the in-process producer/consumer semantics,
+//!   heartbeating while it sketches.
+//! * [`coordinator`] — `mctm-coreset dist-fit --workers a,b,c`:
+//!   assigns ranges, bounded retry-with-backoff per worker, reassigns
+//!   dead workers' ranges, folds leaves in fixed sequence order.
+//! * [`faulty`] — seeded transport-fault injection (frame corruption,
+//!   connection drops, stalls) for `tests/dist_fault_injection.rs`.
+//!
+//! Every recovery is counted in
+//! [`Degradations`](crate::util::degrade::Degradations)
+//! (`worker_retries`, `range_reassignments`) and surfaced through
+//! `CoresetReport::degradations` — recovery is silent in the bytes,
+//! never in the accounting.
+
+pub mod coordinator;
+pub mod faulty;
+pub mod protocol;
+pub mod worker;
+
+pub use coordinator::{run_distributed, DistConfig};
+pub use faulty::TransportFaultPlan;
+pub use protocol::TransportError;
+pub use worker::{Worker, WorkerHandle};

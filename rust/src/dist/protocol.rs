@@ -1,0 +1,629 @@
+//! Length-prefixed, checksummed TCP framing for the coordinator/worker
+//! protocol — hand-rolled on `std::net`, zero dependencies, reusing the
+//! FNV-1a checksum idiom from `runtime::artifact` and `data::store`.
+//!
+//! Wire layout of one frame:
+//!
+//! ```text
+//! [ kind: u8 ][ len: u64 LE ][ payload: len bytes ][ crc: u64 LE ]
+//! ```
+//!
+//! where `crc = fnv1a64(kind ‖ len ‖ payload)` — the checksum covers
+//! the header too, so a corrupted kind or length cannot masquerade as
+//! a valid frame. Payloads are the same line-ASCII the artifact format
+//! uses (`f64` as 16-hex `to_bits`, so values round-trip bitwise); the
+//! `Leaf` payload embeds a full `Artifact::Sketch`, reusing its
+//! serialization and its own `end <crc>` trailer unchanged.
+//!
+//! Failure taxonomy ([`TransportError`]): connection-level problems —
+//! IO errors, timeouts, checksum mismatches, short reads — are
+//! **transient** (a reconnect + full-range re-execution can recover
+//! bit-identically); protocol violations — unknown frame kind, version
+//! mismatch, oversized frame, malformed payload schema — are **fatal**
+//! (retrying the same bytes cannot help). The coordinator folds these
+//! into the `ShardError`/`ApiError::Stream` taxonomy from PR 6.
+
+use crate::coreset::merge_reduce::WeightedRows;
+use crate::data::InvalidPolicy;
+use crate::runtime::artifact::{fnv1a64, Artifact, SketchArtifact};
+use crate::util::degrade::Degradations;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Protocol revision; both ends exchange it in the `Hello` handshake
+/// and a mismatch is a fatal (non-retryable) error.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Handshake payload (version-bearing).
+pub(crate) fn hello_payload() -> Vec<u8> {
+    format!("mctm-dist v{PROTOCOL_VERSION}").into_bytes()
+}
+
+/// Guard against a corrupted length field asking for an absurd
+/// allocation: no legitimate sketch payload approaches this.
+const MAX_FRAME_LEN: u64 = 1 << 30;
+
+/// Frame kinds on the wire (the `u8` tag is the wire value).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// version handshake, both directions
+    Hello = 1,
+    /// coordinator → worker: sketch this shard range
+    Job = 2,
+    /// worker → coordinator: one reduced leaf of the range
+    Leaf = 3,
+    /// worker → coordinator: range complete (degradation accounting)
+    Done = 4,
+    /// liveness heartbeat (worker → coordinator while sketching)
+    Ping = 5,
+    /// heartbeat response
+    Pong = 6,
+    /// coordinator → worker: no more jobs on this connection
+    Release = 7,
+    /// worker → coordinator: the job failed (typed transient/fatal)
+    Error = 8,
+}
+
+impl FrameKind {
+    fn from_wire(tag: u8) -> Option<FrameKind> {
+        Some(match tag {
+            1 => FrameKind::Hello,
+            2 => FrameKind::Job,
+            3 => FrameKind::Leaf,
+            4 => FrameKind::Done,
+            5 => FrameKind::Ping,
+            6 => FrameKind::Pong,
+            7 => FrameKind::Release,
+            8 => FrameKind::Error,
+            _ => return None,
+        })
+    }
+}
+
+/// One protocol frame (kind + raw payload bytes).
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub payload: Vec<u8>,
+}
+
+/// Typed transport failure: `Transient` means a reconnect + full-range
+/// re-execution may recover (IO error, timeout, checksum mismatch);
+/// `Fatal` means retrying cannot help (protocol violation, version
+/// mismatch, malformed schema, worker-reported fatal job error).
+#[derive(Clone, Debug)]
+pub enum TransportError {
+    Transient(String),
+    Fatal(String),
+}
+
+impl TransportError {
+    pub fn message(&self) -> &str {
+        match self {
+            TransportError::Transient(m) | TransportError::Fatal(m) => m,
+        }
+    }
+
+    pub fn is_fatal(&self) -> bool {
+        matches!(self, TransportError::Fatal(_))
+    }
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Transient(m) => write!(f, "transient transport error: {m}"),
+            TransportError::Fatal(m) => write!(f, "fatal transport error: {m}"),
+        }
+    }
+}
+
+fn transient(msg: impl Into<String>) -> TransportError {
+    TransportError::Transient(msg.into())
+}
+
+fn fatal(msg: impl Into<String>) -> TransportError {
+    TransportError::Fatal(msg.into())
+}
+
+/// Serialize one frame into its full wire bytes (header + payload +
+/// trailing checksum).
+pub fn frame_bytes(kind: FrameKind, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(9 + payload.len() + 8);
+    out.push(kind as u8);
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    let crc = fnv1a64(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Write one frame. IO failures are transient — the peer may simply
+/// have gone away, and the range is re-executable.
+pub fn write_frame(
+    stream: &mut TcpStream,
+    kind: FrameKind,
+    payload: &[u8],
+) -> Result<(), TransportError> {
+    let bytes = frame_bytes(kind, payload);
+    stream
+        .write_all(&bytes)
+        .and_then(|_| stream.flush())
+        .map_err(|e| transient(format!("writing {kind:?} frame: {e}")))
+}
+
+/// Read one frame's raw wire bytes (header + payload + checksum),
+/// without validating the checksum — [`parse_frame`] does that. Split
+/// out so the transport fault injector can corrupt the exact bytes a
+/// flaky wire would.
+pub fn read_frame_raw(stream: &mut TcpStream) -> Result<Vec<u8>, TransportError> {
+    let mut header = [0u8; 9];
+    stream
+        .read_exact(&mut header)
+        .map_err(|e| transient(format!("reading frame header: {e}")))?;
+    let len = u64::from_le_bytes([
+        header[1], header[2], header[3], header[4], header[5], header[6], header[7], header[8],
+    ]);
+    if len > MAX_FRAME_LEN {
+        // a length this large is a corrupted or hostile header, and
+        // the stream position is now unrecoverable on this connection
+        return Err(transient(format!(
+            "frame length {len} exceeds the {MAX_FRAME_LEN}-byte cap (corrupted header?)"
+        )));
+    }
+    let mut bytes = vec![0u8; 9 + len as usize + 8];
+    bytes[..9].copy_from_slice(&header);
+    stream
+        .read_exact(&mut bytes[9..])
+        .map_err(|e| transient(format!("reading frame body: {e}")))?;
+    Ok(bytes)
+}
+
+/// Validate and decode raw frame bytes: checksum first (mismatch is
+/// transient — wire corruption), then the kind tag (unknown is fatal —
+/// a protocol violation retrying cannot fix).
+pub fn parse_frame(bytes: &[u8]) -> Result<Frame, TransportError> {
+    if bytes.len() < 17 {
+        return Err(transient("frame shorter than header + checksum"));
+    }
+    let body = &bytes[..bytes.len() - 8];
+    let mut crc_bytes = [0u8; 8];
+    crc_bytes.copy_from_slice(&bytes[bytes.len() - 8..]);
+    if fnv1a64(body) != u64::from_le_bytes(crc_bytes) {
+        return Err(transient("frame checksum mismatch (corrupted on the wire)"));
+    }
+    let kind = FrameKind::from_wire(bytes[0])
+        .ok_or_else(|| fatal(format!("unknown frame kind {}", bytes[0])))?;
+    Ok(Frame { kind, payload: bytes[9..bytes.len() - 8].to_vec() })
+}
+
+/// Read + validate one frame.
+pub fn read_frame(stream: &mut TcpStream) -> Result<Frame, TransportError> {
+    parse_frame(&read_frame_raw(stream)?)
+}
+
+/// Check a received `Hello` payload against ours.
+pub(crate) fn check_hello(payload: &[u8]) -> Result<(), TransportError> {
+    if payload == hello_payload().as_slice() {
+        Ok(())
+    } else {
+        Err(fatal(format!(
+            "protocol version mismatch: peer sent `{}`, this build speaks `mctm-dist v{PROTOCOL_VERSION}`",
+            String::from_utf8_lossy(payload)
+        )))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Job payload
+// ---------------------------------------------------------------------
+
+/// Everything a worker needs to sketch one shard range bit-identically
+/// to the in-process pipeline: the dataset registry name, the stream
+/// geometry, the sketch knobs, and the half-open sequence range
+/// `[lo, hi)` this worker owns (`hi = usize::MAX` means "to the end of
+/// the stream").
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    pub dataset: String,
+    pub total: usize,
+    pub shard: usize,
+    pub lo: usize,
+    pub hi: usize,
+    /// method registry name (resolved through `Method::parse` on the
+    /// worker, so an unregistered name is a typed fatal error)
+    pub method: String,
+    pub k: usize,
+    pub d: usize,
+    pub eps: f64,
+    pub seed: u64,
+    pub buffer_factor: usize,
+    pub on_invalid: InvalidPolicy,
+    pub retry_limit: usize,
+    /// coordinator read-timeout in ms; the worker heartbeats at half
+    /// this period while sketching so a healthy slow range never trips
+    /// the coordinator's liveness check
+    pub heartbeat_ms: u64,
+}
+
+fn policy_name(p: InvalidPolicy) -> &'static str {
+    match p {
+        InvalidPolicy::Error => "error",
+        InvalidPolicy::MaskRow => "mask",
+        InvalidPolicy::DropRow => "drop",
+    }
+}
+
+fn policy_parse(s: &str) -> Result<InvalidPolicy, TransportError> {
+    match s {
+        "error" => Ok(InvalidPolicy::Error),
+        "mask" => Ok(InvalidPolicy::MaskRow),
+        "drop" => Ok(InvalidPolicy::DropRow),
+        other => Err(fatal(format!("unknown on_invalid policy `{other}` in job"))),
+    }
+}
+
+impl JobSpec {
+    pub fn to_payload(&self) -> Vec<u8> {
+        // the artifact idiom: line-ASCII, f64 as 16-hex to_bits so eps
+        // round-trips bitwise
+        format!(
+            "job v1\ndataset {}\ntotal {}\nshard {}\nlo {}\nhi {}\nmethod {}\nk {}\nd {}\n\
+             eps {:016x}\nseed {}\nbuffer_factor {}\non_invalid {}\nretry_limit {}\n\
+             heartbeat_ms {}\n",
+            self.dataset,
+            self.total,
+            self.shard,
+            self.lo,
+            self.hi,
+            self.method,
+            self.k,
+            self.d,
+            self.eps.to_bits(),
+            self.seed,
+            self.buffer_factor,
+            policy_name(self.on_invalid),
+            self.retry_limit,
+            self.heartbeat_ms,
+        )
+        .into_bytes()
+    }
+
+    pub fn from_payload(payload: &[u8]) -> Result<JobSpec, TransportError> {
+        let text = std::str::from_utf8(payload)
+            .map_err(|_| fatal("job payload is not valid UTF-8"))?;
+        let mut lines = text.lines();
+        if lines.next() != Some("job v1") {
+            return Err(fatal("job payload missing `job v1` header"));
+        }
+        let mut fields = std::collections::HashMap::new();
+        for line in lines {
+            if let Some((key, value)) = line.split_once(' ') {
+                fields.insert(key.to_string(), value.to_string());
+            }
+        }
+        let get = |key: &str| {
+            fields
+                .get(key)
+                .cloned()
+                .ok_or_else(|| fatal(format!("job payload missing `{key}`")))
+        };
+        let num = |key: &str| -> Result<usize, TransportError> {
+            get(key)?
+                .parse()
+                .map_err(|_| fatal(format!("job field `{key}` is not a number")))
+        };
+        let eps_bits = u64::from_str_radix(&get("eps")?, 16)
+            .map_err(|_| fatal("job field `eps` is not 16-hex f64 bits"))?;
+        Ok(JobSpec {
+            dataset: get("dataset")?,
+            total: num("total")?,
+            shard: num("shard")?,
+            lo: num("lo")?,
+            hi: num("hi")?,
+            method: get("method")?,
+            k: num("k")?,
+            d: num("d")?,
+            eps: f64::from_bits(eps_bits),
+            seed: get("seed")?
+                .parse()
+                .map_err(|_| fatal("job field `seed` is not a u64"))?,
+            buffer_factor: num("buffer_factor")?,
+            on_invalid: policy_parse(&get("on_invalid")?)?,
+            retry_limit: num("retry_limit")?,
+            heartbeat_ms: get("heartbeat_ms")?
+                .parse()
+                .map_err(|_| fatal("job field `heartbeat_ms` is not a u64"))?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Leaf payload
+// ---------------------------------------------------------------------
+
+/// Encode one reduced leaf: a `seq` line, then the leaf as a full
+/// `Artifact::Sketch` — the existing serialization (16-hex f64 rows
+/// and weights, `end <crc>` trailer) carries the payload bit-exactly,
+/// and `n_seen` doubles as the leaf's raw row count `n_raw`.
+pub fn leaf_payload(seq: usize, n_raw: usize, leaf: &WeightedRows, method: &str, k: usize) -> Vec<u8> {
+    let art = Artifact::Sketch(SketchArtifact {
+        method: method.to_string(),
+        requested: k,
+        n_hull: leaf.n_hull,
+        n_seen: n_raw,
+        rows: leaf.rows.clone(),
+        weights: leaf.weights.clone(),
+        scaler: None,
+    });
+    let mut out = format!("seq {seq}\n").into_bytes();
+    out.extend_from_slice(&art.to_bytes());
+    out
+}
+
+/// Decode a leaf payload back to `(seq, leaf, n_raw)`. Malformed
+/// artifact bytes inside a checksum-valid frame are still treated as
+/// transient: the leaf is re-executable, and the artifact parser's own
+/// trailer check is a second corruption line of defence.
+pub fn parse_leaf(payload: &[u8]) -> Result<(usize, WeightedRows, usize), TransportError> {
+    let newline = payload
+        .iter()
+        .position(|&b| b == b'\n')
+        .ok_or_else(|| transient("leaf payload missing seq line"))?;
+    let head = std::str::from_utf8(&payload[..newline])
+        .map_err(|_| transient("leaf seq line is not UTF-8"))?;
+    let seq: usize = head
+        .strip_prefix("seq ")
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| transient(format!("malformed leaf seq line `{head}`")))?;
+    match Artifact::from_bytes(&payload[newline + 1..]) {
+        Ok(Artifact::Sketch(a)) => Ok((
+            seq,
+            WeightedRows { n_hull: a.n_hull, rows: a.rows, weights: a.weights },
+            a.n_seen,
+        )),
+        Ok(Artifact::Model(_)) => Err(fatal("leaf frame carried a model artifact")),
+        Err(e) => Err(transient(format!("leaf artifact failed to parse: {e}"))),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Done payload
+// ---------------------------------------------------------------------
+
+/// Range-completion report: how many leaves the worker sent (the
+/// coordinator cross-checks its received count) and the range's
+/// degradation accounting, merged into the run's sink only here — at
+/// range completion — so a failed attempt records nothing (the PR-6
+/// success-only rule, extended to transport).
+#[derive(Clone, Debug, Default)]
+pub struct DoneReport {
+    pub leaves: usize,
+    pub degradations: Degradations,
+}
+
+/// Field order is the struct's declaration order; both ends are built
+/// from this crate, so the codec and the struct cannot drift apart.
+const DEGRADE_FIELDS: usize = 14;
+
+fn degrade_counters(d: &Degradations) -> [usize; DEGRADE_FIELDS] {
+    [
+        d.gram_ridge_recoveries,
+        d.gram_ridge_max_rung,
+        d.mvee_nonconverged,
+        d.mvee_factor_breaks,
+        d.score_fallbacks,
+        d.line_search_failures,
+        d.nonfinite_starts,
+        d.invalid_cells,
+        d.rows_masked,
+        d.rows_dropped,
+        d.shard_retries,
+        d.empty_shards_skipped,
+        d.worker_retries,
+        d.range_reassignments,
+    ]
+}
+
+impl DoneReport {
+    pub fn to_payload(&self) -> Vec<u8> {
+        let counters = degrade_counters(&self.degradations)
+            .iter()
+            .map(|c| c.to_string())
+            .collect::<Vec<_>>()
+            .join(" ");
+        format!("done v1\nleaves {}\ndegrade {}\n", self.leaves, counters).into_bytes()
+    }
+
+    pub fn from_payload(payload: &[u8]) -> Result<DoneReport, TransportError> {
+        let text = std::str::from_utf8(payload)
+            .map_err(|_| fatal("done payload is not valid UTF-8"))?;
+        let mut lines = text.lines();
+        if lines.next() != Some("done v1") {
+            return Err(fatal("done payload missing `done v1` header"));
+        }
+        let leaves: usize = lines
+            .next()
+            .and_then(|l| l.strip_prefix("leaves "))
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| fatal("done payload missing `leaves`"))?;
+        let counters: Vec<usize> = lines
+            .next()
+            .and_then(|l| l.strip_prefix("degrade "))
+            .map(|s| s.split(' ').filter_map(|t| t.parse().ok()).collect())
+            .ok_or_else(|| fatal("done payload missing `degrade`"))?;
+        if counters.len() != DEGRADE_FIELDS {
+            return Err(fatal(format!(
+                "done payload has {} degradation counters, this build expects {DEGRADE_FIELDS}",
+                counters.len()
+            )));
+        }
+        let mut d = Degradations::default();
+        [
+            &mut d.gram_ridge_recoveries,
+            &mut d.gram_ridge_max_rung,
+            &mut d.mvee_nonconverged,
+            &mut d.mvee_factor_breaks,
+            &mut d.score_fallbacks,
+            &mut d.line_search_failures,
+            &mut d.nonfinite_starts,
+            &mut d.invalid_cells,
+            &mut d.rows_masked,
+            &mut d.rows_dropped,
+            &mut d.shard_retries,
+            &mut d.empty_shards_skipped,
+            &mut d.worker_retries,
+            &mut d.range_reassignments,
+        ]
+        .into_iter()
+        .zip(&counters)
+        .for_each(|(slot, &v)| *slot = v);
+        Ok(DoneReport { leaves, degradations: d })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Error payload
+// ---------------------------------------------------------------------
+
+/// A worker-side job failure, carried back typed: transient failures
+/// invite a retry/reassignment, fatal ones fail the run with the
+/// worker's shard-sequence provenance attached.
+#[derive(Clone, Debug)]
+pub struct WireError {
+    pub fatal: bool,
+    /// shard sequence the worker was handling, when attributable
+    pub seq: Option<usize>,
+    pub message: String,
+}
+
+impl WireError {
+    pub fn to_payload(&self) -> Vec<u8> {
+        format!(
+            "{}\nseq {}\n{}",
+            if self.fatal { "fatal" } else { "transient" },
+            self.seq.map_or_else(|| "-".to_string(), |s| s.to_string()),
+            self.message
+        )
+        .into_bytes()
+    }
+
+    pub fn from_payload(payload: &[u8]) -> Result<WireError, TransportError> {
+        let text = std::str::from_utf8(payload)
+            .map_err(|_| fatal("error payload is not valid UTF-8"))?;
+        let mut lines = text.splitn(3, '\n');
+        let fatal_flag = match lines.next() {
+            Some("fatal") => true,
+            Some("transient") => false,
+            _ => return Err(fatal("error payload missing transient|fatal line")),
+        };
+        let seq = match lines.next().and_then(|l| l.strip_prefix("seq ")) {
+            Some("-") => None,
+            Some(s) => Some(
+                s.parse()
+                    .map_err(|_| fatal("error payload has malformed seq"))?,
+            ),
+            None => return Err(fatal("error payload missing seq line")),
+        };
+        Ok(WireError {
+            fatal: fatal_flag,
+            seq,
+            message: lines.next().unwrap_or("").to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn frame_roundtrip_and_corruption_is_transient() {
+        let bytes = frame_bytes(FrameKind::Job, b"payload bytes");
+        let f = parse_frame(&bytes).unwrap();
+        assert_eq!(f.kind, FrameKind::Job);
+        assert_eq!(f.payload, b"payload bytes");
+
+        // flip one payload bit: checksum catches it, typed transient
+        let mut corrupted = bytes.clone();
+        corrupted[10] ^= 0x40;
+        match parse_frame(&corrupted) {
+            Err(TransportError::Transient(m)) => assert!(m.contains("checksum"), "{m}"),
+            other => panic!("expected transient checksum error, got {other:?}"),
+        }
+
+        // unknown kind is a protocol violation — fatal, not retryable
+        let mut bad_kind = frame_bytes(FrameKind::Ping, b"");
+        bad_kind[0] = 99;
+        let crc = fnv1a64(&bad_kind[..bad_kind.len() - 8]);
+        let n = bad_kind.len();
+        bad_kind[n - 8..].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(parse_frame(&bad_kind), Err(TransportError::Fatal(_))));
+    }
+
+    #[test]
+    fn job_spec_roundtrips_bitwise() {
+        let spec = JobSpec {
+            dataset: "store:/tmp/x.store".into(),
+            total: 12_345,
+            shard: 678,
+            lo: 3,
+            hi: usize::MAX,
+            method: "l2-hull".into(),
+            k: 40,
+            d: 6,
+            eps: 0.012_345_678_9,
+            seed: 0xDEAD_BEEF_CAFE,
+            buffer_factor: 4,
+            on_invalid: InvalidPolicy::DropRow,
+            retry_limit: 5,
+            heartbeat_ms: 10_000,
+        };
+        let back = JobSpec::from_payload(&spec.to_payload()).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.eps.to_bits(), spec.eps.to_bits());
+    }
+
+    #[test]
+    fn leaf_payload_roundtrips_bitwise() {
+        let rows = Mat::from_vec(3, 2, vec![0.1, -2.5, 3.25, 1e-300, f64::MIN_POSITIVE, 7.0]);
+        let mut leaf = WeightedRows::new(rows, vec![1.5, 2.5, 0.25]);
+        leaf.n_hull = 2;
+        let payload = leaf_payload(17, 1_000, &leaf, "l2-hull", 40);
+        let (seq, back, n_raw) = parse_leaf(&payload).unwrap();
+        assert_eq!(seq, 17);
+        assert_eq!(n_raw, 1_000);
+        assert_eq!(back.n_hull, 2);
+        for (a, b) in back.rows.data.iter().zip(&leaf.rows.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in back.weights.iter().zip(&leaf.weights) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn done_and_error_payloads_roundtrip() {
+        let d = Degradations {
+            shard_retries: 3,
+            empty_shards_skipped: 1,
+            rows_dropped: 7,
+            ..Degradations::default()
+        };
+        let done = DoneReport { leaves: 12, degradations: d.clone() };
+        let back = DoneReport::from_payload(&done.to_payload()).unwrap();
+        assert_eq!(back.leaves, 12);
+        assert_eq!(back.degradations, d);
+
+        let err = WireError { fatal: true, seq: Some(5), message: "boom\nwith detail".into() };
+        let back = WireError::from_payload(&err.to_payload()).unwrap();
+        assert!(back.fatal);
+        assert_eq!(back.seq, Some(5));
+        assert_eq!(back.message, "boom\nwith detail");
+
+        let err = WireError { fatal: false, seq: None, message: "flaky".into() };
+        let back = WireError::from_payload(&err.to_payload()).unwrap();
+        assert!(!back.fatal && back.seq.is_none());
+    }
+}

@@ -1,0 +1,374 @@
+//! Distributed sketching worker: binds a TCP listener, accepts one
+//! coordinator connection at a time, and executes [`JobSpec`] shard
+//! ranges **bit-identically to the in-process pipeline producer +
+//! consumer**. The worker walks the dataset's shard stream from the
+//! start (generator streams are sequential), assigns sequence numbers
+//! with exactly the producer's rules — empty and fully-scrubbed shards
+//! are skipped without consuming a number, transient reads are retried
+//! up to the job's budget without consuming a number — and leaf-reduces
+//! only the shards whose sequence falls in its `[lo, hi)` range, each
+//! with `Rng::new(shard_seed(seed, seq))` and a width-1 pool. Because
+//! seq assignment and leaf RNGs depend only on the data and the seed,
+//! any worker (or a re-execution after a crash) reproduces exactly the
+//! bytes the in-process run would have produced for that range.
+//!
+//! Degradation accounting is **range-gated for exactly-once totals**:
+//! producer-side events (empty shards, scrubbed cells, shard retries)
+//! are recorded only when the current sequence counter lies in
+//! `[lo, hi)`, so an event seen by every worker walking the shared
+//! stream prefix is attributed to exactly one range and the run total
+//! equals the single-process run's. The per-range record travels back
+//! in the `Done` frame and is merged by the coordinator **only at
+//! range completion** — a failed or abandoned attempt records nothing
+//! (the PR-6 success-only rule, extended across the network).
+//!
+//! While sketching, a scoped heartbeat thread sends `Ping` frames at
+//! half the coordinator's read-timeout period, so a healthy worker on
+//! a slow range never gets declared dead.
+
+use crate::api::error::ApiError;
+use crate::api::session::source_seed;
+use crate::api::source::{DataSource, NamedSource, SourceInput};
+use crate::coordinator::pipeline::shard_seed;
+use crate::coreset::merge_reduce::{reduce_with, WeightedRows};
+use crate::coreset::Method;
+use crate::data::{scrub_invalid, ShardError};
+use crate::dist::protocol::{
+    check_hello, hello_payload, read_frame, write_frame, DoneReport, FrameKind, JobSpec, WireError,
+};
+use crate::util::degrade::DegradeSink;
+use crate::util::parallel::Pool;
+use crate::util::rng::Rng;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// How long an idle connection may sit between frames before the
+/// worker gives up on it and returns to `accept` (a vanished
+/// coordinator must not wedge the worker forever).
+const IDLE_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// A job failed before completing its range.
+enum JobFail {
+    /// The connection died mid-range (a leaf write failed). There is
+    /// nobody to report to — abandon silently; the coordinator's own
+    /// read failure types this as transient and re-executes the range.
+    ConnectionLost,
+    /// The job itself failed; reported back as a typed `Error` frame
+    /// with the worker's shard-sequence provenance.
+    Fault { fatal: bool, seq: Option<usize>, message: String },
+}
+
+fn fault(fatal: bool, seq: Option<usize>, message: String) -> JobFail {
+    JobFail::Fault { fatal, seq, message }
+}
+
+/// A bound-but-not-yet-running worker. [`Worker::run`] serves forever
+/// on the calling thread (the `mctm-coreset work` subcommand);
+/// [`Worker::spawn`] serves on a background thread and returns a
+/// stoppable [`WorkerHandle`] (tests, smoke scripts).
+pub struct Worker {
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+}
+
+impl Worker {
+    /// Bind the listening socket (use port 0 for an OS-assigned port;
+    /// read it back via [`Worker::local_addr`]).
+    pub fn bind(addr: &str) -> Result<Worker, ApiError> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| ApiError::Server(format!("binding worker listener on {addr}: {e}")))?;
+        Ok(Worker { listener, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    /// The bound address (resolves port 0 to the real port).
+    pub fn local_addr(&self) -> Result<SocketAddr, ApiError> {
+        self.listener
+            .local_addr()
+            .map_err(|e| ApiError::Server(format!("reading worker listener address: {e}")))
+    }
+
+    /// Accept-and-serve loop: one coordinator connection at a time
+    /// (each coordinator thread drives exactly one worker, so there is
+    /// nothing to multiplex). Returns only once [`WorkerHandle::stop`]
+    /// has been called.
+    pub fn run(&self) {
+        loop {
+            let conn = self.listener.accept();
+            if self.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            match conn {
+                Ok((stream, _)) => serve_connection(stream),
+                // transient accept failure (e.g. EMFILE): keep serving
+                Err(_) => std::thread::sleep(Duration::from_millis(10)),
+            }
+        }
+    }
+
+    /// Serve on a background thread; the returned handle stops the
+    /// worker (and joins the thread) on [`WorkerHandle::stop`] or drop.
+    pub fn spawn(self) -> Result<WorkerHandle, ApiError> {
+        let addr = self.local_addr()?;
+        let stop = Arc::clone(&self.stop);
+        let thread = std::thread::spawn(move || self.run());
+        Ok(WorkerHandle { addr, stop, thread: Some(thread) })
+    }
+}
+
+/// Handle to a background [`Worker`]; stopping is idempotent and also
+/// runs on drop, so tests cannot leak serving threads.
+pub struct WorkerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Signal the accept loop and join the serving thread. A self-
+    /// connection unblocks a worker parked in `accept` (the same idiom
+    /// `server::ServerHandle` uses).
+    pub fn stop(&mut self) {
+        if let Some(thread) = self.thread.take() {
+            self.stop.store(true, Ordering::SeqCst);
+            let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
+            let _ = thread.join();
+        }
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Serve one coordinator connection until `Release`, EOF, idle
+/// timeout, or a protocol violation. All writes go through a shared
+/// `Mutex<TcpStream>` so mid-job heartbeats never interleave bytes
+/// with leaf frames; reads only ever happen between jobs, when no
+/// heartbeat is running.
+fn serve_connection(stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(IDLE_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let mut reader = stream;
+    let writer = match reader.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    let send = |kind: FrameKind, payload: &[u8]| -> bool {
+        let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
+        write_frame(&mut w, kind, payload).is_ok()
+    };
+    loop {
+        let frame = match read_frame(&mut reader) {
+            Ok(f) => f,
+            // EOF / timeout / corruption: nothing useful to answer on
+            // this connection — close it and let the coordinator's
+            // typed transport error drive the retry
+            Err(_) => return,
+        };
+        match frame.kind {
+            FrameKind::Hello => {
+                if let Err(e) = check_hello(&frame.payload) {
+                    let err = WireError { fatal: true, seq: None, message: e.message().to_string() };
+                    send(FrameKind::Error, &err.to_payload());
+                    return;
+                }
+                if !send(FrameKind::Hello, &hello_payload()) {
+                    return;
+                }
+            }
+            FrameKind::Ping => {
+                if !send(FrameKind::Pong, &[]) {
+                    return;
+                }
+            }
+            FrameKind::Release => return,
+            FrameKind::Job => {
+                let spec = match JobSpec::from_payload(&frame.payload) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        let err =
+                            WireError { fatal: true, seq: None, message: e.message().to_string() };
+                        send(FrameKind::Error, &err.to_payload());
+                        return;
+                    }
+                };
+                if !run_job(&writer, &spec) {
+                    return;
+                }
+            }
+            // Leaf/Done/Pong/Error arriving at a worker is a protocol
+            // violation; drop the connection rather than guess
+            _ => return,
+        }
+    }
+}
+
+/// Execute one job with a heartbeat running, then report `Done` or a
+/// typed `Error`. Returns false when the connection is dead.
+fn run_job(writer: &Arc<Mutex<TcpStream>>, spec: &JobSpec) -> bool {
+    let running = AtomicBool::new(true);
+    let result = std::thread::scope(|s| {
+        // heartbeat at half the coordinator's read-timeout period, in
+        // 50 ms slices so job completion stops it promptly
+        s.spawn(|| {
+            let period = Duration::from_millis(spec.heartbeat_ms.max(2) / 2);
+            loop {
+                let start = Instant::now();
+                while start.elapsed() < period {
+                    if !running.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
+                if write_frame(&mut w, FrameKind::Ping, &[]).is_err() {
+                    // peer gone; the job's own leaf/done write will
+                    // discover the same thing and abandon
+                    return;
+                }
+            }
+        });
+        let result = sketch_range(spec, writer);
+        running.store(false, Ordering::SeqCst);
+        result
+    });
+    match result {
+        Ok(done) => {
+            let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
+            write_frame(&mut w, FrameKind::Done, &done.to_payload()).is_ok()
+        }
+        Err(JobFail::ConnectionLost) => false,
+        Err(JobFail::Fault { fatal, seq, message }) => {
+            let err = WireError { fatal, seq, message };
+            let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
+            write_frame(&mut w, FrameKind::Error, &err.to_payload()).is_ok()
+        }
+    }
+}
+
+/// Walk the dataset's shard stream and leaf-reduce the `[lo, hi)`
+/// slice of sequence numbers, streaming each leaf back as it is
+/// reduced. This mirrors the in-process producer loop statement for
+/// statement (retry budget, empty-shard skips, sequence-order
+/// scrubbing, per-seq RNGs) — the mirror IS the determinism guarantee.
+fn sketch_range(spec: &JobSpec, writer: &Arc<Mutex<TcpStream>>) -> Result<DoneReport, JobFail> {
+    let method = Method::parse(&spec.method)
+        .map_err(|e| fault(true, None, format!("unknown sketch method in job: {e:#}")))?;
+    let input = NamedSource::stream(&spec.dataset, spec.total, spec.shard)
+        .into_input(source_seed(spec.seed))
+        .map_err(|e| fault(true, None, format!("resolving dataset `{}`: {e}", spec.dataset)))?;
+    let mut source = match input {
+        SourceInput::Stream(s) => s,
+        SourceInput::Batch(_) => {
+            return Err(fault(
+                true,
+                None,
+                format!("dataset `{}` did not resolve to a shard stream", spec.dataset),
+            ))
+        }
+    };
+    let j = source.dim();
+    let k_buffer = spec.buffer_factor * spec.k;
+    let pool = Pool::new(1);
+    // in-range events land in the job sink (travels back in `Done`);
+    // off-range events were already attributed to another range's
+    // worker, so they drain into a throwaway sink
+    let sink = DegradeSink::new();
+    let off_range = DegradeSink::new();
+    let mut leaves = 0usize;
+    let mut seq = 0usize;
+    loop {
+        if seq >= spec.hi {
+            break;
+        }
+        let in_range = seq >= spec.lo;
+        let gate = if in_range { &sink } else { &off_range };
+        let mut attempts = 0usize;
+        let shard = loop {
+            match source.next_shard() {
+                Ok(s) => {
+                    if attempts > 0 {
+                        gate.shard_retries(attempts);
+                    }
+                    break s;
+                }
+                Err(ShardError::Transient(_)) if attempts < spec.retry_limit => {
+                    attempts += 1;
+                }
+                Err(e) => {
+                    let kind = match e {
+                        ShardError::Transient(_) => "transient (retries exhausted)",
+                        ShardError::Fatal(_) => "fatal",
+                    };
+                    return Err(fault(
+                        true,
+                        Some(seq),
+                        format!("{kind} shard read error: {}", e.message()),
+                    ));
+                }
+            }
+        };
+        let Some(shard) = shard else { break };
+        if shard.rows == 0 {
+            gate.empty_shard_skipped();
+            continue;
+        }
+        if shard.cols != j {
+            return Err(fault(
+                true,
+                Some(seq),
+                format!("shard dimension mismatch: {} columns, source dim {j}", shard.cols),
+            ));
+        }
+        let shard = match scrub_invalid(shard, spec.on_invalid, gate) {
+            Ok(m) => m,
+            Err((row, col)) => {
+                return Err(fault(
+                    true,
+                    Some(seq),
+                    format!(
+                        "non-finite value at shard {seq}, row {row}, column {col} \
+                         (policy: error; set on_invalid to mask or drop)"
+                    ),
+                ));
+            }
+        };
+        if shard.rows == 0 {
+            gate.empty_shard_skipped();
+            continue;
+        }
+        if in_range {
+            let n_raw = shard.rows;
+            let mut rng = Rng::new(shard_seed(spec.seed, seq));
+            let leaf = reduce_with(
+                &WeightedRows::new(shard, vec![1.0; n_raw]),
+                method,
+                k_buffer,
+                spec.d,
+                spec.eps,
+                &mut rng,
+                &pool,
+                gate,
+            )
+            .map_err(|e| fault(true, Some(seq), format!("leaf reduce failed: {e:#}")))?;
+            let payload =
+                crate::dist::protocol::leaf_payload(seq, n_raw, &leaf, &spec.method, spec.k);
+            let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
+            if write_frame(&mut w, FrameKind::Leaf, &payload).is_err() {
+                return Err(JobFail::ConnectionLost);
+            }
+            drop(w);
+            leaves += 1;
+        }
+        seq += 1;
+    }
+    Ok(DoneReport { leaves, degradations: sink.snapshot() })
+}

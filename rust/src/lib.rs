@@ -15,6 +15,7 @@ pub mod benchsupport;
 pub mod coordinator;
 pub mod coreset;
 pub mod data;
+pub mod dist;
 pub mod fit;
 pub mod linalg;
 pub mod mctm;
@@ -53,6 +54,9 @@ pub mod prelude {
     pub use crate::data::sparse::SparseMat;
     pub use crate::data::store::{StoreReader, StoreWriter};
     pub use crate::data::{GenShards, InvalidPolicy, MatShards, ShardError, ShardSource};
+    pub use crate::dist::{
+        run_distributed, DistConfig, TransportError, TransportFaultPlan, Worker, WorkerHandle,
+    };
     pub use crate::fit::{FitOptions, FitResult, OptimizerKind};
     pub use crate::linalg::simd::{simd_available, KernelBackend};
     pub use crate::linalg::Mat;

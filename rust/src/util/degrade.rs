@@ -56,6 +56,16 @@ pub struct Degradations {
     /// Zero-row shards skipped by the producer without consuming a
     /// sequence number (so determinism is unaffected).
     pub empty_shards_skipped: usize,
+    /// Distributed-mode transport retries (reconnect + full-range
+    /// re-execution) after which the SAME worker delivered its range.
+    /// Recorded only when the range eventually completes — a failed run
+    /// leaves this at its pre-attempt value.
+    pub worker_retries: usize,
+    /// Distributed-mode ranges completed by a DIFFERENT worker after
+    /// their original owner was declared dead. Re-executed ranges
+    /// reproduce identical bytes, so each reassignment is a recovery,
+    /// never a perturbation. Recorded only on range completion.
+    pub range_reassignments: usize,
 }
 
 impl Degradations {
@@ -79,6 +89,8 @@ impl Degradations {
         self.rows_dropped += other.rows_dropped;
         self.shard_retries += other.shard_retries;
         self.empty_shards_skipped += other.empty_shards_skipped;
+        self.worker_retries += other.worker_retries;
+        self.range_reassignments += other.range_reassignments;
     }
 }
 
@@ -105,6 +117,8 @@ impl fmt::Display for Degradations {
         push("rows_dropped", self.rows_dropped);
         push("shard_retries", self.shard_retries);
         push("empty_shards_skipped", self.empty_shards_skipped);
+        push("worker_retries", self.worker_retries);
+        push("range_reassignments", self.range_reassignments);
         write!(f, "{}", parts.join(" "))
     }
 }
@@ -184,6 +198,25 @@ impl DegradeSink {
 
     pub fn empty_shard_skipped(&self) {
         self.with(|d| d.empty_shards_skipped += 1);
+    }
+
+    /// `n` transport retries after which the same worker delivered its
+    /// range. The distributed coordinator calls this once per completed
+    /// range — ranges lost with the run record nothing.
+    pub fn worker_retries(&self, n: usize) {
+        self.with(|d| d.worker_retries += n);
+    }
+
+    /// `n` times a range changed owners before the owner that finally
+    /// completed it. Called only at range completion.
+    pub fn range_reassignments(&self, n: usize) {
+        self.with(|d| d.range_reassignments += n);
+    }
+
+    /// Fold a whole record in (used by the distributed coordinator to
+    /// absorb a worker's per-range accounting at range completion).
+    pub fn merge_record(&self, other: &Degradations) {
+        self.with(|d| d.merge(other));
     }
 }
 

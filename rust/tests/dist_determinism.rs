@@ -1,0 +1,211 @@
+//! Distributed Merge & Reduce determinism suite (ISSUE 10): an
+//! N-worker `dist_coreset`/`dist_fit` run must be **bit-identical** to
+//! the single-process streaming run of the same session — pinned on
+//! the saved `Artifact` bytes, so recovery correctness is testable as
+//! plain byte equality — and must stay bit-identical when a worker in
+//! the list is dead and its range has to be reassigned.
+
+use mctm_coreset::prelude::*;
+use std::time::Duration;
+
+const TOTAL: usize = 6_000;
+const SHARD: usize = 500;
+const DATASET: &str = "bivariate-normal";
+
+fn session(consumers: usize, threads: usize) -> Session {
+    SessionBuilder::new()
+        .method("l2-hull")
+        .budget(40)
+        .basis_size(5)
+        .seed(23)
+        .consumers(consumers)
+        .threads(threads)
+        .max_iters(60)
+        .build()
+        .unwrap()
+}
+
+/// Fail the test if `f` does not finish within `secs` — the "no hang"
+/// half of the failure-semantics contract.
+fn with_timeout<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    rx.recv_timeout(Duration::from_secs(secs))
+        .expect("distributed run did not finish within the timeout")
+}
+
+fn spawn_workers(n: usize) -> Vec<WorkerHandle> {
+    (0..n)
+        .map(|_| Worker::bind("127.0.0.1:0").unwrap().spawn().unwrap())
+        .collect()
+}
+
+fn addrs(handles: &[WorkerHandle]) -> Vec<String> {
+    handles.iter().map(|h| h.addr().to_string()).collect()
+}
+
+/// An address that is guaranteed dead: bind a listener to learn a free
+/// port, then drop it — connections are refused from then on.
+fn dead_addr() -> String {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = l.local_addr().unwrap().to_string();
+    drop(l);
+    addr
+}
+
+fn sketch_bytes(report: &CoresetReport) -> Vec<u8> {
+    Artifact::Sketch(report.to_artifact()).to_bytes()
+}
+
+fn model_bytes(model: &FittedModel) -> Vec<u8> {
+    Artifact::Model(model.to_artifact()).to_bytes()
+}
+
+// ---------------------------------------------------------------- (a)
+// N workers ≡ one process, byte for byte
+
+#[test]
+fn dist_coreset_matches_in_process_at_every_worker_count() {
+    let baseline = session(2, 2).coreset(NamedSource::stream(DATASET, TOTAL, SHARD)).unwrap();
+    assert_eq!(baseline.n_seen, TOTAL);
+    let want = sketch_bytes(&baseline);
+
+    for n_workers in [1usize, 2, 4] {
+        let got = with_timeout(120, move || {
+            let handles = spawn_workers(n_workers);
+            let report = session(n_workers, 1)
+                .dist_coreset(&addrs(&handles), DATASET, TOTAL, SHARD)
+                .unwrap();
+            // spinning down the workers here keeps the handles' Drop
+            // out of the timing path of the next iteration
+            drop(handles);
+            report
+        });
+        assert_eq!(
+            sketch_bytes(&got),
+            want,
+            "distributed sketch bytes differ from in-process at {n_workers} workers"
+        );
+        assert!(
+            got.degradations.is_clean(),
+            "clean run recorded degradations at {n_workers} workers: {}",
+            got.degradations
+        );
+        // stream accounting survives the hop: same rows, same fixed
+        // fold tree
+        let stats = got.stream.expect("distributed report carries stream stats");
+        assert_eq!(stats.n_seen, TOTAL);
+        assert_eq!(stats.n_shards, baseline.stream.as_ref().unwrap().n_shards);
+        assert_eq!(stats.n_reduces, baseline.stream.as_ref().unwrap().n_reduces);
+    }
+}
+
+// ---------------------------------------------------------------- (b)
+// dead worker in the list: range reassigns, bytes unchanged —
+// at workers {1, 2, 4} × threads {1, 8}
+
+#[test]
+fn dead_worker_reassignment_is_invisible_in_the_artifact_bytes() {
+    for n_workers in [1usize, 2, 4] {
+        for threads in [1usize, 8] {
+            let clean = session(n_workers, threads)
+                .fit(NamedSource::stream(DATASET, TOTAL, SHARD))
+                .unwrap();
+            let (got_model, got_report) = with_timeout(180, move || {
+                let handles = spawn_workers(n_workers);
+                // the dead address is first, so at least one range is
+                // tried on it, exhausts its transport budget, and gets
+                // reassigned to a live worker
+                let mut workers = vec![dead_addr()];
+                workers.extend(addrs(&handles));
+                let model = session(n_workers, threads)
+                    .dist_fit(&workers, DATASET, TOTAL, SHARD)
+                    .unwrap();
+                drop(handles);
+                let report = model.diagnostics().coreset.clone();
+                (model, report)
+            });
+            assert_eq!(
+                model_bytes(&got_model),
+                model_bytes(&clean),
+                "model bytes differ under reassignment at workers={n_workers} threads={threads}"
+            );
+            // ϑ, bitwise
+            let got_x: Vec<u64> = got_model.params().x.iter().map(|v| v.to_bits()).collect();
+            let want_x: Vec<u64> = clean.params().x.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(got_x, want_x);
+            assert_eq!(
+                sketch_bytes(&got_report),
+                sketch_bytes(&clean.diagnostics().coreset),
+                "sketch bytes differ under reassignment at workers={n_workers} threads={threads}"
+            );
+            // ... and the recovery is on the record, not silent
+            assert!(
+                got_report.degradations.range_reassignments >= 1,
+                "expected a recorded reassignment at workers={n_workers} threads={threads}: {}",
+                got_report.degradations
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- (c)
+// saved artifacts round-trip: dist-fit's file equals stream's file
+
+#[test]
+fn saved_dist_artifacts_equal_saved_stream_artifacts() {
+    let dir = std::env::temp_dir().join(format!("mctm_dist_artifacts_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let clean = session(2, 2).fit(NamedSource::stream(DATASET, TOTAL, SHARD)).unwrap();
+    let a = dir.join("stream.sketch.mctm");
+    clean.diagnostics().coreset.save(&a).unwrap();
+
+    let b = dir.join("dist.sketch.mctm");
+    let dist = with_timeout(120, move || {
+        let handles = spawn_workers(2);
+        let model = session(2, 2).dist_fit(&addrs(&handles), DATASET, TOTAL, SHARD).unwrap();
+        drop(handles);
+        model
+    });
+    dist.diagnostics().coreset.save(&b).unwrap();
+
+    assert_eq!(
+        std::fs::read(&a).unwrap(),
+        std::fs::read(&b).unwrap(),
+        "persisted sketch artifacts differ between stream and dist-fit"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------- (d)
+// sanity: the shard_retry_limit knob reaches the transport budget path
+// (a 1-retry budget still recovers a refused-then-reassigned range)
+
+#[test]
+fn minimal_retry_budget_still_recovers_via_reassignment() {
+    let clean = session(2, 1).coreset(NamedSource::stream(DATASET, TOTAL, SHARD)).unwrap();
+    let got = with_timeout(120, move || {
+        let handles = spawn_workers(2);
+        let mut workers = vec![dead_addr()];
+        workers.extend(addrs(&handles));
+        let report = SessionBuilder::new()
+            .method("l2-hull")
+            .budget(40)
+            .basis_size(5)
+            .seed(23)
+            .consumers(2)
+            .threads(1)
+            .max_iters(60)
+            .shard_retry_limit(1)
+            .build()
+            .unwrap()
+            .dist_coreset(&workers, DATASET, TOTAL, SHARD)
+            .unwrap();
+        drop(handles);
+        report
+    });
+    assert_eq!(sketch_bytes(&got), sketch_bytes(&clean));
+    assert!(got.degradations.range_reassignments >= 1);
+}

@@ -1,0 +1,251 @@
+//! Transport fault injection for the distributed coordinator (ISSUE
+//! 10 acceptance): every injected failure mode — frame corruption,
+//! connection drop, worker stall, a killed worker process, every
+//! worker dead, an unresolvable job — either **recovers to the exact
+//! fault-free bytes** or **surfaces a typed error**. Never a hang
+//! (every run sits under a watchdog timeout), never a partial result,
+//! never a panic.
+
+use mctm_coreset::prelude::*;
+use std::io::BufRead;
+use std::time::Duration;
+
+const TOTAL: usize = 6_000;
+const SHARD: usize = 500;
+const DATASET: &str = "bivariate-normal";
+
+fn with_timeout<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    rx.recv_timeout(Duration::from_secs(secs))
+        .expect("distributed run did not finish within the timeout")
+}
+
+fn spawn_workers(n: usize) -> Vec<WorkerHandle> {
+    (0..n)
+        .map(|_| Worker::bind("127.0.0.1:0").unwrap().spawn().unwrap())
+        .collect()
+}
+
+fn addrs(handles: &[WorkerHandle]) -> Vec<String> {
+    handles.iter().map(|h| h.addr().to_string()).collect()
+}
+
+fn dead_addr() -> String {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = l.local_addr().unwrap().to_string();
+    drop(l);
+    addr
+}
+
+fn config(workers: Vec<String>) -> DistConfig {
+    let mut cfg = DistConfig::new(workers, DATASET, TOTAL, SHARD, Method::L2Hull, 40, 5, 0.01);
+    cfg.seed = 23;
+    cfg
+}
+
+/// The full bit pattern of a coreset: row data, weights, provenance.
+fn coreset_bits(c: &mctm_coreset::coreset::merge_reduce::WeightedRows) -> Vec<u64> {
+    let mut out: Vec<u64> = c.rows.data.iter().map(|v| v.to_bits()).collect();
+    out.extend(c.weights.iter().map(|v| v.to_bits()));
+    out.push(c.n_hull as u64);
+    out
+}
+
+// --------------------------------------------------------------------
+// injected transport faults recover to the exact fault-free bytes
+
+#[test]
+fn injected_faults_recover_to_the_exact_fault_free_bytes() {
+    // fault-free reference, computed once over the same worker pool
+    let (want, want_stats, want_record) = with_timeout(120, || {
+        let handles = spawn_workers(2);
+        let sink = DegradeSink::new();
+        let out = run_distributed(&config(addrs(&handles)), &sink).unwrap();
+        (coreset_bits(&out.0), out.1, sink.snapshot())
+    });
+    assert!(want_record.is_clean(), "fault-free run recorded degradations: {want_record}");
+
+    // ordinal 1 is the first frame after the Hello reply — mid-range,
+    // a Leaf (or a heartbeat Ping) already in flight
+    let plans: [(&str, TransportFaultPlan); 3] = [
+        ("corrupt", TransportFaultPlan::new(0xDEAD_BEEF_0BAD_CAFE).with_corrupt_at(1)),
+        ("drop", TransportFaultPlan::new(7).with_drop_at(1)),
+        ("stall", TransportFaultPlan::new(7).with_stall_at(1)),
+    ];
+    for (name, plan) in plans {
+        let (got, got_stats, record) = with_timeout(120, move || {
+            let handles = spawn_workers(2);
+            let mut cfg = config(addrs(&handles));
+            cfg.fault = Some(plan);
+            let sink = DegradeSink::new();
+            let out = run_distributed(&cfg, &sink).unwrap();
+            (coreset_bits(&out.0), out.1, sink.snapshot())
+        });
+        assert_eq!(got, want, "{name}: recovered coreset differs from fault-free bytes");
+        assert_eq!(got_stats.n_seen, want_stats.n_seen, "{name}");
+        assert_eq!(got_stats.n_shards, want_stats.n_shards, "{name}");
+        assert_eq!(got_stats.n_reduces, want_stats.n_reduces, "{name}");
+        // the recovery is on the record: the range that hit the fault
+        // was retried (and possibly reassigned), and data-level
+        // counters stayed exactly-once across the re-execution
+        assert!(
+            record.worker_retries >= 1 || record.range_reassignments >= 1,
+            "{name}: no recovery recorded despite an injected fault: {record}"
+        );
+        assert_eq!(record.empty_shards_skipped, want_record.empty_shards_skipped, "{name}");
+        assert_eq!(record.shard_retries, want_record.shard_retries, "{name}");
+    }
+}
+
+// --------------------------------------------------------------------
+// a worker process killed mid-sketch: its range re-executes elsewhere,
+// and the result is byte-identical to the in-process run — whatever
+// instant the kill lands at
+
+#[test]
+fn killed_worker_process_recovers_bit_identically() {
+    let session = |consumers: usize| {
+        SessionBuilder::new()
+            .method("l2-hull")
+            .budget(40)
+            .basis_size(5)
+            .seed(23)
+            .consumers(consumers)
+            .threads(1)
+            .build()
+            .unwrap()
+    };
+    let baseline = session(2).coreset(NamedSource::stream(DATASET, TOTAL, SHARD)).unwrap();
+    let want = Artifact::Sketch(baseline.to_artifact()).to_bytes();
+
+    let mut children: Vec<std::process::Child> = (0..2)
+        .map(|_| {
+            std::process::Command::new(env!("CARGO_BIN_EXE_mctm-coreset"))
+                .args(["work", "--listen", "127.0.0.1:0"])
+                .stdout(std::process::Stdio::piped())
+                .stderr(std::process::Stdio::null())
+                .spawn()
+                .expect("spawning worker process")
+        })
+        .collect();
+    let workers: Vec<String> = children
+        .iter_mut()
+        .map(|child| {
+            let stdout = child.stdout.take().expect("worker stdout is piped");
+            let mut line = String::new();
+            std::io::BufReader::new(stdout)
+                .read_line(&mut line)
+                .expect("reading worker announce line");
+            line.trim()
+                .strip_prefix("worker listening on ")
+                .unwrap_or_else(|| panic!("unexpected announce line: {line:?}"))
+                .to_string()
+        })
+        .collect();
+
+    let runner = {
+        let workers = workers.clone();
+        std::thread::spawn(move || session(2).dist_coreset(&workers, DATASET, TOTAL, SHARD))
+    };
+    // let the run get going, then kill one worker process outright
+    // (SIGKILL: no goodbye frame, sockets torn down by the kernel)
+    std::thread::sleep(Duration::from_millis(150));
+    children[0].kill().expect("killing worker 0");
+    let _ = children[0].wait();
+
+    let report = with_timeout(120, move || runner.join().expect("coordinator thread panicked"))
+        .expect("run did not recover from the killed worker");
+    assert_eq!(
+        Artifact::Sketch(report.to_artifact()).to_bytes(),
+        want,
+        "recovered sketch differs from the in-process bytes"
+    );
+
+    for child in &mut children {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+}
+
+// --------------------------------------------------------------------
+// every worker dead: a typed error naming the failure, within the
+// timeout — and the failed run leaves the sink untouched (the PR-6
+// success-only accounting rule, extended to the transport level)
+
+#[test]
+fn all_workers_dead_is_a_typed_error_and_records_nothing() {
+    let (err, record) = with_timeout(60, || {
+        let sink = DegradeSink::new();
+        let err = run_distributed(&config(vec![dead_addr()]), &sink).unwrap_err();
+        (err, sink.snapshot())
+    });
+    match &err {
+        ApiError::Stream { shard_seq, consumer, .. } => {
+            assert_eq!(*shard_seq, Some(0));
+            assert_eq!(*consumer, Some(0));
+        }
+        other => panic!("expected ApiError::Stream, got {other:?}"),
+    }
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("exhausted its transport retry budget"),
+        "error should name the exhausted budget: {msg}"
+    );
+    // exhausted attempts are failures, not recoveries: nothing counted
+    assert!(record.is_clean(), "failed run leaked degradation counts: {record}");
+}
+
+// --------------------------------------------------------------------
+// a job the worker cannot run (unknown dataset) comes back as a typed
+// fatal error with worker provenance — not a retry loop, not a hang
+
+#[test]
+fn unknown_dataset_is_a_typed_fatal_error_with_provenance() {
+    let err = with_timeout(60, || {
+        let handles = spawn_workers(1);
+        let sink = DegradeSink::new();
+        let mut cfg = config(addrs(&handles));
+        cfg.dataset = "no-such-dataset".into();
+        let err = run_distributed(&cfg, &sink).unwrap_err();
+        assert!(sink.snapshot().is_clean());
+        drop(handles);
+        err
+    });
+    match &err {
+        ApiError::Stream { consumer, .. } => assert_eq!(*consumer, Some(0)),
+        other => panic!("expected ApiError::Stream, got {other:?}"),
+    }
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("no-such-dataset"),
+        "error should name the dataset that failed to resolve: {msg}"
+    );
+}
+
+// --------------------------------------------------------------------
+// config validation stays typed at the distributed entrypoint
+
+#[test]
+fn empty_worker_list_and_zero_knobs_are_typed_config_errors() {
+    let sink = DegradeSink::new();
+    assert!(matches!(
+        run_distributed(&config(vec![]), &sink).unwrap_err(),
+        ApiError::Config { .. }
+    ));
+    let mut zero_shard = config(vec![dead_addr()]);
+    zero_shard.shard = 0;
+    assert!(matches!(
+        run_distributed(&zero_shard, &sink).unwrap_err(),
+        ApiError::Config { .. }
+    ));
+    let mut zero_retry = config(vec![dead_addr()]);
+    zero_retry.retry_limit = 0;
+    assert!(matches!(
+        run_distributed(&zero_retry, &sink).unwrap_err(),
+        ApiError::Config { .. }
+    ));
+    assert!(sink.snapshot().is_clean());
+}
